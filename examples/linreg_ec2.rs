@@ -1,0 +1,40 @@
+//! Reproduce Figure 1(a): linear regression, AMB vs FMB on the simulated
+//! EC2 cluster (n = 10, paper Fig-2 topology, T = 14.5 s, T_c = 4.5 s).
+//!
+//!   cargo run --release --example linreg_ec2 [-- --pjrt] [-- --quick]
+//!
+//! With `--pjrt` the per-node gradients run through the AOT-compiled
+//! HLO artifacts (requires `make artifacts`); without it they use the
+//! native-Rust oracle (identical numerics, see rust/tests/pjrt_roundtrip).
+
+use anytime_mb::experiments::{fig1, Backend, Ctx};
+use anytime_mb::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let out_dir = std::path::PathBuf::from(args.str_or("out-dir", "results"));
+    let mut ctx = Ctx::native(&out_dir);
+    ctx.seed = args.u64_or("seed", 42)?;
+    if args.flag("pjrt") {
+        ctx.backend = Backend::Pjrt(anytime_mb::artifacts_dir());
+    }
+    if args.flag("quick") {
+        ctx = ctx.quick();
+    }
+
+    let report = fig1::fig1a(&ctx)?;
+    println!("{report}");
+
+    // Print the two series side by side, like the paper's plot.
+    for name in ["fig1a_amb", "fig1a_fmb"] {
+        let path = out_dir.join(format!("{name}.csv"));
+        let text = std::fs::read_to_string(&path)?;
+        println!("--- {name} (wall_time, error) ---");
+        for line in text.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            println!("  t={:>8}s  err={}", cells[1], cells[5]);
+        }
+    }
+    anyhow::ensure!(report.shape_holds, "figure diverged from the paper's shape");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Theorem 7 / App. H sweep: how much wall time does AMB save as the
+//! cluster grows?  Prints measured S_F/S_A against the paper's
+//! (1 + σ/μ·√(n−1)) bound and the shifted-exponential Θ(log n) form,
+//! plus a σ/μ sweep showing the speedup scale with compute variability.
+//!
+//!   cargo run --release --example straggler_sweep
+
+use anytime_mb::experiments::thm7::speedup_for_n;
+use anytime_mb::straggler::ShiftedExp;
+
+fn main() {
+    println!("== speedup vs n (shifted-exp, ζ=1, λ=2/3, unit 600 — paper App. I.2) ==");
+    println!(
+        "{:>6} {:>12} {:>12} {:>14} {:>14}",
+        "n", "measured", "thm7 bound", "logn analytic", "E[b_amb]/b"
+    );
+    let model = ShiftedExp::paper_i2();
+    for n in [2usize, 5, 10, 20, 50, 100, 200] {
+        let p = speedup_for_n(&model, n, 600, 300, 42);
+        println!(
+            "{:>6} {:>11.2}x {:>11.2}x {:>13.2}x {:>14.3}",
+            n,
+            p.measured,
+            p.thm7_bound,
+            p.shifted_exp_analytic,
+            p.mean_amb_batch / p.fmb_batch
+        );
+        assert!(p.measured <= p.thm7_bound * 1.02, "Thm 7 bound violated");
+        assert!(p.mean_amb_batch >= p.fmb_batch * 0.97, "Lemma 6 violated");
+    }
+
+    println!("\n== speedup vs compute variability (n = 20) ==");
+    println!("{:>10} {:>12} {:>12}", "sigma/mu", "measured", "thm7 bound");
+    for lambda in [4.0, 2.0, 1.0, 0.5, 0.25] {
+        // mean = zeta + 1/lambda, sigma = 1/lambda
+        let m = ShiftedExp { zeta: 1.0, lambda, unit_batch: 600 };
+        let mom = anytime_mb::straggler::StragglerModel::unit_moments(&m).unwrap();
+        let p = speedup_for_n(&m, 20, 600, 300, 7);
+        println!(
+            "{:>10.2} {:>11.2}x {:>11.2}x",
+            mom.stddev / mom.mean,
+            p.measured,
+            p.thm7_bound
+        );
+    }
+    println!("\nthe paper's claim: more variability ⇒ more AMB advantage, bounded by Thm 7.");
+}

@@ -1,0 +1,139 @@
+"""AOT lowering: JAX (L2+L1) -> artifacts/*.hlo.txt + manifest.json.
+
+Runs ONCE at build time (`make artifacts`); the Rust coordinator loads the
+HLO text through the PJRT CPU client and Python never appears on the
+request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts            # default set
+  python -m compile.aot --out-dir ../artifacts --small    # tiny test set
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "i32"}
+
+
+def _spec_json(spec) -> dict:
+    return {
+        "shape": list(spec.shape),
+        "dtype": _DTYPE_NAMES[np.dtype(spec.dtype).name],
+    }
+
+
+def lower_entry(name: str, fn, arg_specs) -> tuple[str, dict]:
+    """Lower one entry point; return (hlo_text, manifest entry)."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    out_specs = jax.eval_shape(fn, *arg_specs)
+    if not isinstance(out_specs, (tuple, list)):
+        out_specs = (out_specs,)
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [_spec_json(s) for s in arg_specs],
+        "outputs": [_spec_json(s) for s in out_specs],
+    }
+    return text, entry
+
+
+def default_sizes(small: bool) -> dict:
+    if small:
+        return dict(linreg_c=32, linreg_d=64, logreg_c=16, logreg_d=24,
+                    logreg_k=4, mix_n=6, mix_d=64,
+                    transformer_cfg=model.TransformerConfig(
+                        vocab=64, d_model=32, n_heads=2, n_layers=1,
+                        d_ff=64, seq_len=16),
+                    transformer_batch=2)
+    return dict(linreg_c=256, linreg_d=1024, logreg_c=128, logreg_d=785,
+                logreg_k=10, mix_n=10, mix_d=1024,
+                transformer_cfg=model.TransformerConfig(),
+                transformer_batch=8)
+
+
+def build(out_dir: str, small: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    sizes = default_sizes(small)
+    specs = model.entry_specs(**sizes)
+    cfg = sizes["transformer_cfg"]
+
+    manifest = {
+        "format": "hlo-text-v1",
+        "small": small,
+        "params": {
+            "linreg_c": sizes["linreg_c"], "linreg_d": sizes["linreg_d"],
+            "logreg_c": sizes["logreg_c"], "logreg_d": sizes["logreg_d"],
+            "logreg_k": sizes["logreg_k"],
+            "mix_n": sizes["mix_n"], "mix_d": sizes["mix_d"],
+            "transformer": {
+                "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads, "n_layers": cfg.n_layers,
+                "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+                "batch": sizes["transformer_batch"],
+                "param_count": model.param_count(cfg),
+            },
+        },
+        "entries": [],
+    }
+
+    for name, (fn, arg_specs) in specs.items():
+        text, entry = lower_entry(name, fn, arg_specs)
+        path = os.path.join(out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(entry)
+        if verbose:
+            print(f"  {name}: {len(text)} chars -> {path}")
+
+    # Transformer init params: build-time numpy, consumed by the e2e
+    # example so Rust never re-implements the init scheme.
+    init = model.transformer_init(cfg, seed=0)
+    init_path = os.path.join(out_dir, "transformer_init.f32.bin")
+    init.tofile(init_path)
+    manifest["params"]["transformer"]["init_file"] = "transformer_init.f32.bin"
+    if verbose:
+        print(f"  transformer init: {init.size} f32 -> {init_path}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  manifest: {len(manifest['entries'])} entries")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--small", action="store_true",
+                    help="tiny shapes for fast tests")
+    args = ap.parse_args()
+    build(args.out_dir, small=args.small)
+
+
+if __name__ == "__main__":
+    main()

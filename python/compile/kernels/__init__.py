@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for the Anytime Minibatch hot paths.
+
+All kernels run with interpret=True (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); each has a pure-jnp oracle in ref.py and a
+hypothesis sweep in python/tests/.
+"""
+
+from . import ref  # noqa: F401
+from .dual_update import dual_update  # noqa: F401
+from .linreg import linreg_grad  # noqa: F401
+from .mix import mix  # noqa: F401
+from .softmax_xent import softmax_xent, xent_loss  # noqa: F401

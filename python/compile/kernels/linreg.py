@@ -1,0 +1,97 @@
+"""L1 Pallas kernels for the linear-regression chunk gradient.
+
+The Anytime Minibatch hot-spot is "sum of per-sample gradients over a
+fixed-size chunk with a {0,1} mask" (see DESIGN.md §1: chunk+mask bridges
+variable minibatches onto static HLO shapes).  For least squares
+
+    f(w, (x, y)) = 0.5 (x.w - y)^2
+    grad_sum     = X^T ((X w - y) * mask)
+    loss_sum     = 0.5 * sum(mask * (X w - y)^2)
+
+Two kernels, both tiled over the feature dimension D so a (C, BLOCK_D)
+tile of X is resident in VMEM at a time (TPU framing — see DESIGN.md
+§3 Hardware adaptation; here they run interpret=True on CPU):
+
+  _residual_kernel: r += X[:, j] @ w[j]  accumulated across the D-grid,
+                    initialised to -y at j == 0.
+  _grad_kernel:     grad[j] = X[:, j]^T (r * mask), embarrassingly
+                    parallel across the D-grid.
+
+The chunk size C is small (<= 1024) so the residual vector lives
+comfortably in VMEM for the whole second pass (~4 KB at C=1024).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 1024
+
+
+def _residual_kernel(x_ref, w_ref, y_ref, r_ref):
+    """Grid step j: r += X[:, jD:(j+1)D] @ w[jD:(j+1)D]; init to -y."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _():
+        r_ref[...] = -y_ref[...]
+
+    r_ref[...] += x_ref[...] @ w_ref[...]
+
+
+def _grad_kernel(x_ref, rm_ref, g_ref):
+    """Grid step j: grad block j = X_j^T (r * mask) (rm precombined)."""
+    g_ref[...] = x_ref[...].T @ rm_ref[...]
+
+
+def _pick_block(d: int, block_d: int) -> int:
+    """Largest divisor of d not exceeding block_d (grid must tile exactly)."""
+    b = min(block_d, d)
+    while d % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def linreg_grad(x, w, y, mask, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True):
+    """Masked chunk gradient for least squares via Pallas.
+
+    x: (C, D) f32, w: (D,) f32, y: (C,) f32, mask: (C,) f32 in {0,1}.
+    Returns (grad_sum (D,) f32, loss_sum () f32).  Matches ref.linreg_grad.
+    """
+    c, d = x.shape
+    bd = _pick_block(d, block_d)
+    grid = (d // bd,)
+
+    r = pl.pallas_call(
+        _residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, bd), lambda j: (0, j)),
+            pl.BlockSpec((bd,), lambda j: (j,)),
+            pl.BlockSpec((c,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((c,), x.dtype),
+        interpret=interpret,
+    )(x, w, y)
+
+    rm = r * mask
+    grad = pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, bd), lambda j: (0, j)),
+            pl.BlockSpec((c,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=interpret,
+    )(x, rm)
+
+    loss = 0.5 * jnp.sum(rm * r)
+    return grad, loss

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: one synchronous round of averaging consensus.
+
+M' = P @ M where P is the (N, N) doubly-stochastic mixing matrix of the
+communication graph (paper Sec. 3, consensus phase) and M stacks the N
+node messages as rows.  N is tiny (<= 64) while D is the model dimension,
+so we tile over D columns and keep all of P resident (P easily fits in
+VMEM); each grid step is one (N, N) x (N, BLOCK_D) MXU matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 512
+
+
+def _mix_kernel(p_ref, m_ref, o_ref):
+    o_ref[...] = p_ref[...] @ m_ref[...]
+
+
+def _pick_block(d: int, block_d: int) -> int:
+    b = min(block_d, d)
+    while d % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def mix(p, m, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True):
+    """One consensus round via Pallas: p (N,N) @ m (N,D) -> (N,D).
+
+    Matches ref.mix.
+    """
+    n, d = m.shape
+    bd = _pick_block(d, block_d)
+    grid = (d // bd,)
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),
+            pl.BlockSpec((n, bd), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), m.dtype),
+        interpret=interpret,
+    )(p, m)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+Each function here is the *definition* of what the corresponding kernel in
+this package must compute.  pytest (python/tests/test_kernels.py) asserts
+allclose between kernel and oracle across a hypothesis-driven sweep of
+shapes, masks and seeds; the Rust native implementations in
+rust/src/model/ are cross-checked against the same formulas in
+rust/tests/pjrt_roundtrip.rs.
+
+All gradient kernels return *sums* over masked samples (not means): the
+Anytime Minibatch coordinator accumulates chunk sums across a variable
+number of chunks and normalises once by the global minibatch size b(t)
+(paper eq. (3)-(4)), so the kernels must be linear in the mask.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def one_hot(labels, num_classes, dtype=jnp.float32):
+    """One-hot encode int labels: (B,) -> (B, num_classes)."""
+    iota = jnp.arange(num_classes, dtype=jnp.int32)
+    return (labels[:, None].astype(jnp.int32) == iota[None, :]).astype(dtype)
+
+
+def linreg_residual(x, w, y):
+    """Residual r = X w - y for a chunk.  x: (C, D), w: (D,), y: (C,)."""
+    return x @ w - y
+
+
+def linreg_grad(x, w, y, mask):
+    """Masked sum-of-gradients and sum-of-losses for 0.5 * (x.w - y)^2.
+
+    x: (C, D), w: (D,), y: (C,), mask: (C,) in {0,1}.
+    Returns (grad_sum (D,), loss_sum ()):
+      grad_sum = X^T (r * mask),  loss_sum = 0.5 * sum(mask * r^2).
+    """
+    r = linreg_residual(x, w, y)
+    rm = r * mask
+    grad = x.T @ rm
+    loss = 0.5 * jnp.sum(rm * r)
+    return grad, loss
+
+
+def softmax_xent(logits, labels, mask):
+    """Masked fused softmax cross-entropy: dlogits + sum loss.
+
+    logits: (B, K) f32, labels: (B,) i32, mask: (B,) f32 in {0,1}.
+    Returns (dlogits (B, K), loss_sum ()):
+      p       = softmax(logits, axis=-1)
+      dlogits = (p - onehot(labels)) * mask[:, None]
+      loss    = -sum_b mask_b * log p_b[label_b]
+    """
+    zmax = jnp.max(logits, axis=-1, keepdims=True)
+    ez = jnp.exp(logits - zmax)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    p = ez / denom
+    dlogits = (p - one_hot(labels, logits.shape[-1], logits.dtype)) * mask[:, None]
+    logp = (logits - zmax) - jnp.log(denom)
+    picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    loss = -jnp.sum(mask * picked)
+    return dlogits, loss
+
+
+def logreg_grad(w, x, labels, mask):
+    """Masked multiclass logistic-regression chunk gradient.
+
+    w: (K, D) f32 (K classes, D features incl. bias), x: (C, D) f32,
+    labels: (C,) i32, mask: (C,) f32.
+    Returns (grad_sum (K, D), loss_sum ()):
+      logits = x @ w.T ; dlogits from softmax_xent ; grad = dlogits.T @ x.
+    """
+    logits = x @ w.T
+    dlogits, loss = softmax_xent(logits, labels, mask)
+    grad = dlogits.T @ x
+    return grad, loss
+
+
+def dual_update(z, beta, radius):
+    """Dual-averaging primal step, paper eq. (7), h(w) = 0.5 ||w||^2,
+    W = L2 ball of the given radius:
+
+      argmin_w <w, z> + beta * 0.5 ||w||^2  s.t. ||w|| <= radius
+        = -z / beta, scaled back onto the ball if it lies outside.
+
+    z: (D,) f32, beta: () f32 > 0, radius: () f32 > 0 -> w (D,) f32.
+    """
+    w = -z / beta
+    nrm = jnp.sqrt(jnp.sum(w * w))
+    scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-30))
+    return w * scale
+
+
+def mix(p, m):
+    """One synchronous round of averaging consensus: M' = P @ M.
+
+    p: (N, N) doubly-stochastic f32, m: (N, D) f32 -> (N, D) f32.
+    """
+    return p @ m

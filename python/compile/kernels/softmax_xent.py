@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: fused, masked softmax cross-entropy (loss + grad).
+
+Used by both the multiclass logistic-regression workload (paper Sec. 6.2.2)
+and the transformer-LM head of the end-to-end example.  Row-tiled: each
+grid step owns a (BLOCK_B, K) tile of logits in VMEM and performs the
+single-pass max / logsumexp / softmax / grad computation — the
+flash-softmax schedule expressed with BlockSpec instead of threadblocks
+(DESIGN.md §3).
+
+Exposes a jax.custom_vjp wrapper `xent_loss` so jax.value_and_grad can
+differentiate *through* the Pallas call (Pallas kernels are not
+auto-differentiable): the forward kernel already produces dlogits, which
+the backward rule simply scales by the output cotangent.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _xent_kernel(logits_ref, labels_ref, mask_ref, dlogits_ref, loss_ref):
+    """One row-tile: softmax, one-hot grad, masked summed loss."""
+    i = pl.program_id(0)
+    z = logits_ref[...]                      # (BB, K)
+    labels = labels_ref[...]                 # (BB,)
+    mask = mask_ref[...]                     # (BB,)
+
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    p = ez / denom
+
+    k = z.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (z.shape[0], k), 1)
+    onehot = (iota == labels[:, None].astype(jnp.int32)).astype(z.dtype)
+
+    dlogits_ref[...] = (p - onehot) * mask[:, None]
+
+    logp = (z - zmax) - jnp.log(denom)
+    picked = jnp.sum(logp * onehot, axis=-1)  # gather via the one-hot
+    tile_loss = -jnp.sum(mask * picked)
+
+    @pl.when(i == 0)
+    def _():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    loss_ref[...] += tile_loss[None]
+
+
+def _pick_block(b: int, block_b: int) -> int:
+    bb = min(block_b, b)
+    while b % bb != 0:
+        bb -= 1
+    return bb
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def softmax_xent(logits, labels, mask, *, block_b: int = DEFAULT_BLOCK_B,
+                 interpret: bool = True):
+    """Masked fused softmax cross-entropy via Pallas.
+
+    logits: (B, K) f32, labels: (B,) i32, mask: (B,) f32 in {0,1}.
+    Returns (dlogits (B, K), loss_sum () f32).  Matches ref.softmax_xent.
+    """
+    b, k = logits.shape
+    bb = _pick_block(b, block_b)
+    grid = (b // bb,)
+
+    dlogits, loss = pl.pallas_call(
+        _xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), logits.dtype),
+            jax.ShapeDtypeStruct((1,), logits.dtype),
+        ],
+        interpret=interpret,
+    )(logits, labels, mask)
+    return dlogits, loss[0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def xent_loss(logits, labels, mask, interpret=True):
+    """Differentiable masked-sum cross-entropy loss (scalar).
+
+    jax.grad-compatible wrapper around the fused kernel; the VJP reuses the
+    dlogits the forward kernel already computed.
+    """
+    _, loss = softmax_xent(logits, labels, mask, interpret=interpret)
+    return loss
+
+
+def _xent_fwd(logits, labels, mask, interpret):
+    dlogits, loss = softmax_xent(logits, labels, mask, interpret=interpret)
+    return loss, dlogits
+
+
+def _xent_bwd(interpret, dlogits, g):
+    # labels/mask are int/constant inputs; only logits get a cotangent.
+    return (dlogits * g, None, None)
+
+
+xent_loss.defvjp(_xent_fwd, _xent_bwd)

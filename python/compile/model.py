@@ -1,0 +1,270 @@
+"""L2: JAX compute graphs that the Rust coordinator executes via PJRT.
+
+Every public function here is an AOT entry point lowered by aot.py to
+artifacts/<name>.hlo.txt.  They call the L1 Pallas kernels (interpret=True)
+so the kernels lower into the same HLO module; Python never runs at
+request time.
+
+Entry points (chunk+mask convention — see DESIGN.md §1):
+  linreg_grad_entry   (w, x, y, mask)          -> (grad_sum, loss_sum)
+  logreg_grad_entry   (w, x, labels, mask)     -> (grad_sum, loss_sum)
+  dual_update_entry   (z, beta, radius)        -> (w,)
+  mix_entry           (p, m)                   -> (m_next,)
+  transformer_grad_entry (params, tokens, mask) -> (grad, loss_sum, count)
+  transformer_init    — build the flat init params for a TransformerConfig
+
+The transformer is a standard pre-LN GPT used by the end-to-end example:
+AMB treats its flattened parameter vector exactly like the regression
+weight vectors (one dual variable per node), proving the coordinator is
+model-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dual_update as _pal_dual_update
+from .kernels import linreg_grad as _pal_linreg_grad
+from .kernels import mix as _pal_mix
+from .kernels import softmax_xent as _pal_softmax_xent
+from .kernels import xent_loss as _pal_xent_loss
+
+
+# --------------------------------------------------------------------------
+# Regression workloads (paper Sec. 6)
+# --------------------------------------------------------------------------
+
+def linreg_grad_entry(w, x, y, mask):
+    """Least-squares chunk gradient.  w:(D,), x:(C,D), y:(C,), mask:(C,)."""
+    grad, loss = _pal_linreg_grad(x, w, y, mask)
+    return grad, loss
+
+
+def logreg_grad_entry(w, x, labels, mask):
+    """Multiclass logistic chunk gradient.
+
+    w: (K, D), x: (C, D), labels: (C,) i32, mask: (C,).
+    logits via plain-jnp MXU matmul; fused softmax-xent via Pallas;
+    grad = dlogits^T X (second MXU matmul).
+    """
+    logits = x @ w.T
+    dlogits, loss = _pal_softmax_xent(logits, labels, mask)
+    grad = dlogits.T @ x
+    return grad, loss
+
+
+def dual_update_entry(z, beta, radius):
+    """Paper eq. (7) primal step; z:(D,), beta:(), radius:() -> (w,)."""
+    return (_pal_dual_update(z, beta, radius),)
+
+
+def mix_entry(p, m):
+    """One consensus round; p:(N,N), m:(N,D) -> (m',)."""
+    return (_pal_mix(p, m),)
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (end-to-end example)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Tiny pre-LN GPT.  Sized for CPU-PJRT training in the e2e example;
+    scale d_model/n_layers up for a real run (DESIGN.md records the CPU
+    constraint vs the ~100M target)."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    seq_len: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def _param_shapes(cfg: TransformerConfig):
+    """Ordered (name, shape) list — the flat layout contract with Rust."""
+    shapes = [
+        ("tok_embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.b1", (cfg.d_ff,)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{i}.b2", (cfg.d_model,)),
+        ]
+    shapes += [
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return shapes
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in _param_shapes(cfg))
+
+
+def _unflatten(cfg: TransformerConfig, flat):
+    params, off = {}, 0
+    for name, shape in _param_shapes(cfg):
+        n = int(np.prod(shape))
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def transformer_init(cfg: TransformerConfig, seed: int = 0) -> np.ndarray:
+    """Flat f32 init vector (numpy; build-time only)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in _param_shapes(cfg):
+        n = int(np.prod(shape))
+        if name.endswith(("_g",)):
+            chunks.append(np.ones(n, np.float32))
+        elif name.endswith(("_b", "b1", "b2")):
+            chunks.append(np.zeros(n, np.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else n
+            std = 1.0 / np.sqrt(fan_in)
+            chunks.append((rng.normal(0, std, n)).astype(np.float32))
+    return np.concatenate(chunks)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: TransformerConfig, p, i, x):
+    bsz, t, dm = x.shape
+    qkv = x @ p[f"l{i}.wqkv"]                              # (B,T,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd, nh = cfg.head_dim, cfg.n_heads
+
+    def heads(u):
+        return u.reshape(bsz, t, nh, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)                 # (B,H,T,hd)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(bsz, t, dm)
+    return out @ p[f"l{i}.wo"]
+
+
+def _forward_logits(cfg: TransformerConfig, p, tokens):
+    """tokens: (B, T) i32 -> logits (B, T, V)."""
+    x = p["tok_embed"][tokens] + p["pos_embed"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        x = x + _attention(cfg, p, i, h)
+        h = _layer_norm(x, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        h = jax.nn.gelu(h @ p[f"l{i}.w1"] + p[f"l{i}.b1"])
+        x = x + h @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def transformer_loss(cfg: TransformerConfig, flat, tokens, mask):
+    """Masked summed next-token loss.
+
+    flat: (P,) f32, tokens: (B, T+1) i32, mask: (B,) f32 per-sequence.
+    Uses the Pallas fused softmax-xent (custom_vjp) for the LM head.
+    """
+    p = _unflatten(cfg, flat)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = _forward_logits(cfg, p, inp)                 # (B, T, V)
+    bsz, t, v = logits.shape
+    tok_mask = jnp.repeat(mask, t)                        # (B*T,)
+    loss = _pal_xent_loss(
+        logits.reshape(bsz * t, v), tgt.reshape(bsz * t), tok_mask
+    )
+    return loss
+
+
+def transformer_grad_entry(cfg: TransformerConfig):
+    """Build the (params, tokens, mask) -> (grad, loss_sum, count) fn.
+
+    count = number of masked-in *tokens* (mask sum * T); the coordinator
+    divides accumulated grad/loss by the global token count, mirroring the
+    chunk+mask convention of the regression entries.
+    """
+
+    def fn(flat, tokens, mask):
+        loss, grad = jax.value_and_grad(
+            lambda f: transformer_loss(cfg, f, tokens, mask)
+        )(flat)
+        count = jnp.sum(mask) * (tokens.shape[1] - 1)
+        return grad, loss, count
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers (shared with aot.py and python tests)
+# --------------------------------------------------------------------------
+
+def entry_specs(*, linreg_c, linreg_d, logreg_c, logreg_d, logreg_k,
+                mix_n, mix_d, transformer_cfg: TransformerConfig,
+                transformer_batch: int):
+    """The full artifact set: name -> (python fn, example-arg specs).
+
+    Shapes here are the static contract between aot.py (lowering), the
+    manifest, and rust/src/runtime (loading + marshalling).
+    """
+    f32, i32 = jnp.float32, jnp.int32
+
+    def s(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    cfg = transformer_cfg
+    pcount = param_count(cfg)
+    specs = {
+        f"linreg_grad_c{linreg_c}_d{linreg_d}": (
+            linreg_grad_entry,
+            [s((linreg_d,)), s((linreg_c, linreg_d)), s((linreg_c,)), s((linreg_c,))],
+        ),
+        f"logreg_grad_c{logreg_c}_k{logreg_k}_d{logreg_d}": (
+            logreg_grad_entry,
+            [s((logreg_k, logreg_d)), s((logreg_c, logreg_d)),
+             s((logreg_c,), i32), s((logreg_c,))],
+        ),
+        f"dual_update_d{linreg_d}": (
+            dual_update_entry, [s((linreg_d,)), s(()), s(())],
+        ),
+        f"dual_update_d{logreg_k * logreg_d}": (
+            dual_update_entry, [s((logreg_k * logreg_d,)), s(()), s(())],
+        ),
+        f"mix_n{mix_n}_d{mix_d}": (
+            mix_entry, [s((mix_n, mix_n)), s((mix_n, mix_d))],
+        ),
+        f"transformer_grad_p{pcount}_b{transformer_batch}_t{cfg.seq_len}": (
+            transformer_grad_entry(cfg),
+            [s((pcount,)), s((transformer_batch, cfg.seq_len + 1), i32),
+             s((transformer_batch,))],
+        ),
+        f"dual_update_d{pcount}": (
+            dual_update_entry, [s((pcount,)), s(()), s(())],
+        ),
+    }
+    return specs

@@ -1,0 +1,274 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, masks, scales and seeds; these are the CORE
+correctness signal for the compute layer (the Rust integration tests then
+pin the PJRT-loaded artifacts against the same numbers).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dual_update,
+    linreg_grad,
+    mix,
+    ref,
+    softmax_xent,
+    xent_loss,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _f32(rng, shape, scale=1.0):
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+def _mask(rng, n, p):
+    m = (rng.random(n) < p).astype(np.float32)
+    return jnp.asarray(m)
+
+
+# --------------------------------------------------------------------------
+# linreg_grad
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    c=st.integers(1, 96),
+    d=st.integers(1, 300),
+    block_d=st.sampled_from([16, 64, 256]),
+    pmask=st.floats(0.0, 1.0),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linreg_grad_matches_ref(c, d, block_d, pmask, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _f32(rng, (c, d), scale)
+    w = _f32(rng, (d,))
+    y = _f32(rng, (c,), scale)
+    mask = _mask(rng, c, pmask)
+    g, l = linreg_grad(x, w, y, mask, block_d=block_d)
+    gr, lr = ref.linreg_grad(x, w, y, mask)
+    np.testing.assert_allclose(g, gr, rtol=1e-3, atol=1e-2 * scale * scale)
+    np.testing.assert_allclose(l, lr, rtol=1e-3, atol=1e-2 * scale * scale)
+
+
+def test_linreg_grad_zero_mask_is_zero():
+    rng = np.random.default_rng(0)
+    x, w, y = _f32(rng, (8, 16)), _f32(rng, (16,)), _f32(rng, (8,))
+    g, l = linreg_grad(x, w, y, jnp.zeros(8, jnp.float32))
+    assert float(jnp.abs(g).max()) == 0.0
+    assert float(l) == 0.0
+
+
+def test_linreg_grad_mask_linearity():
+    """sum over two disjoint masks == full-mask sum (chunk+mask contract)."""
+    rng = np.random.default_rng(1)
+    x, w, y = _f32(rng, (32, 48)), _f32(rng, (48,)), _f32(rng, (32,))
+    m = np.zeros(32, np.float32)
+    m[:20] = 1
+    m1, m2 = jnp.asarray(m), jnp.asarray(1 - m)
+    g1, l1 = linreg_grad(x, w, y, m1)
+    g2, l2 = linreg_grad(x, w, y, m2)
+    g, l = linreg_grad(x, w, y, jnp.ones(32, jnp.float32))
+    np.testing.assert_allclose(g1 + g2, g, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(l1 + l2, l, rtol=1e-4, atol=1e-3)
+
+
+def test_linreg_grad_at_solution_is_zero():
+    rng = np.random.default_rng(2)
+    x, w = _f32(rng, (16, 8)), _f32(rng, (8,))
+    y = x @ w
+    g, l = linreg_grad(x, w, y, jnp.ones(16, jnp.float32))
+    np.testing.assert_allclose(g, np.zeros(8), atol=1e-4)
+    assert float(l) < 1e-6
+
+
+# --------------------------------------------------------------------------
+# softmax_xent
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 80),
+    k=st.integers(2, 32),
+    block_b=st.sampled_from([8, 32, 128]),
+    pmask=st.floats(0.0, 1.0),
+    scale=st.sampled_from([0.5, 3.0, 20.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(b, k, block_b, pmask, scale, seed):
+    rng = np.random.default_rng(seed)
+    logits = _f32(rng, (b, k), scale)
+    labels = jnp.asarray(rng.integers(0, k, b).astype(np.int32))
+    mask = _mask(rng, b, pmask)
+    dl, lo = softmax_xent(logits, labels, mask, block_b=block_b)
+    dlr, lor = ref.softmax_xent(logits, labels, mask)
+    np.testing.assert_allclose(dl, dlr, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(lo, lor, rtol=1e-3, atol=1e-4)
+
+
+def test_softmax_xent_rows_sum_to_zero():
+    """Each unmasked dlogits row sums to 0 (softmax minus one-hot)."""
+    rng = np.random.default_rng(3)
+    logits = _f32(rng, (24, 10), 5.0)
+    labels = jnp.asarray(rng.integers(0, 10, 24).astype(np.int32))
+    dl, _ = softmax_xent(logits, labels, jnp.ones(24, jnp.float32))
+    np.testing.assert_allclose(jnp.sum(dl, axis=-1), np.zeros(24), atol=1e-5)
+
+
+def test_softmax_xent_loss_nonnegative():
+    rng = np.random.default_rng(4)
+    logits = _f32(rng, (16, 7), 2.0)
+    labels = jnp.asarray(rng.integers(0, 7, 16).astype(np.int32))
+    _, lo = softmax_xent(logits, labels, jnp.ones(16, jnp.float32))
+    assert float(lo) >= 0.0
+
+
+def test_softmax_xent_extreme_logits_stable():
+    """Large logits must not overflow (max-subtraction in kernel)."""
+    logits = jnp.asarray(np.array([[1e4, 0.0, -1e4]] * 8, np.float32))
+    labels = jnp.zeros(8, jnp.int32)
+    dl, lo = softmax_xent(logits, labels, jnp.ones(8, jnp.float32))
+    assert np.isfinite(np.asarray(dl)).all() and np.isfinite(float(lo))
+    assert float(lo) < 1e-3  # correct class dominates -> ~0 loss
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_xent_loss_vjp_matches_autodiff_of_ref(seed):
+    """custom_vjp wrapper == jax.grad of the pure-jnp loss."""
+    import jax
+
+    rng = np.random.default_rng(seed)
+    logits = _f32(rng, (12, 6), 2.0)
+    labels = jnp.asarray(rng.integers(0, 6, 12).astype(np.int32))
+    mask = _mask(rng, 12, 0.7)
+
+    def ref_loss(z):
+        _, l = ref.softmax_xent(z, labels, mask)
+        return l
+
+    g_kernel = jax.grad(lambda z: xent_loss(z, labels, mask))(logits)
+    g_ref = jax.grad(ref_loss)(logits)
+    np.testing.assert_allclose(g_kernel, g_ref, rtol=1e-3, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# dual_update
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(1, 2048),
+    beta=st.floats(0.1, 100.0),
+    radius=st.floats(0.01, 50.0),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dual_update_matches_ref(d, beta, radius, scale, seed):
+    rng = np.random.default_rng(seed)
+    z = _f32(rng, (d,), scale)
+    w = dual_update(z, jnp.float32(beta), jnp.float32(radius))
+    wr = ref.dual_update(z, jnp.float32(beta), jnp.float32(radius))
+    np.testing.assert_allclose(w, wr, rtol=1e-3, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(1, 512),
+    beta=st.floats(0.1, 10.0),
+    radius=st.floats(0.01, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dual_update_feasible(d, beta, radius, seed):
+    """Output always inside the L2 ball (the paper's compact W)."""
+    rng = np.random.default_rng(seed)
+    z = _f32(rng, (d,), 10.0)
+    w = dual_update(z, jnp.float32(beta), jnp.float32(radius))
+    assert float(jnp.linalg.norm(w)) <= radius * (1 + 1e-5)
+
+
+def test_dual_update_interior_exact():
+    """When -z/beta is inside the ball it must be returned exactly."""
+    z = jnp.asarray(np.array([0.3, -0.4, 0.0], np.float32))
+    w = dual_update(z, jnp.float32(1.0), jnp.float32(10.0))
+    np.testing.assert_allclose(w, -np.asarray(z), rtol=1e-6)
+
+
+def test_dual_update_first_order_optimality():
+    """w solves eq. (7): for feasible u, <u - w, z + beta*w> >= 0."""
+    rng = np.random.default_rng(5)
+    z = _f32(rng, (32,), 5.0)
+    beta, radius = 2.0, 1.0
+    w = np.asarray(dual_update(z, jnp.float32(beta), jnp.float32(radius)))
+    grad = np.asarray(z) + beta * w
+    for _ in range(50):
+        u = rng.normal(size=32).astype(np.float32)
+        u *= min(1.0, radius / np.linalg.norm(u))
+        assert float((u - w) @ grad) >= -1e-3
+
+
+# --------------------------------------------------------------------------
+# mix
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 24),
+    d=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mix_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    p = np.abs(rng.normal(size=(n, n))).astype(np.float32)
+    p = p / p.sum(axis=1, keepdims=True)
+    m = _f32(rng, (n, d))
+    out = mix(jnp.asarray(p), m)
+    outr = ref.mix(jnp.asarray(p), m)
+    np.testing.assert_allclose(out, outr, rtol=1e-3, atol=1e-4)
+
+
+def test_mix_preserves_column_means():
+    """Doubly-stochastic P conserves the average message (consensus
+    invariant, paper Sec. 3)."""
+    rng = np.random.default_rng(6)
+    n, d = 8, 64
+    # symmetric doubly-stochastic: I - small laplacian
+    a = (rng.random((n, n)) < 0.4).astype(np.float32)
+    a = np.triu(a, 1)
+    a = a + a.T
+    deg = a.sum(1)
+    p = np.eye(n, dtype=np.float32)
+    for i in range(n):
+        for j in range(n):
+            if i != j and a[i, j] > 0:
+                w = 1.0 / (1.0 + max(deg[i], deg[j]))
+                p[i, j] = w
+                p[i, i] -= w
+    m = _f32(rng, (n, d))
+    out = mix(jnp.asarray(p), m)
+    np.testing.assert_allclose(
+        jnp.mean(out, axis=0), jnp.mean(m, axis=0), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_mix_consensus_convergence():
+    """Repeated mixing converges every row to the average."""
+    rng = np.random.default_rng(7)
+    n, d = 6, 32
+    p = np.full((n, n), 0.0, np.float32)
+    for i in range(n):  # ring + self loop, metropolis
+        p[i, i] = 1 / 3
+        p[i, (i + 1) % n] = 1 / 3
+        p[i, (i - 1) % n] = 1 / 3
+    m = _f32(rng, (n, d))
+    avg = np.asarray(jnp.mean(m, axis=0))
+    cur = m
+    for _ in range(200):
+        cur = mix(jnp.asarray(p), cur)
+    np.testing.assert_allclose(np.asarray(cur), np.tile(avg, (n, 1)),
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,40 @@
+//! Bench: design-choice ablations (rounds, b̂(t), consensus engines,
+//! redundancy baselines, topology) — see experiments/ablations.rs.
+
+use anytime_mb::bench_harness::Bencher;
+use anytime_mb::consensus::{sparse::SparseMix, Consensus};
+use anytime_mb::experiments::{ablations, Ctx};
+use anytime_mb::topology::Topology;
+use anytime_mb::util::rng::Pcg64;
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    for rep in ablations::run_all(&ctx).expect("ablations") {
+        println!("{rep}");
+    }
+
+    // Dense vs sparse engine timing at figure-scale dimensions.
+    let mut b = Bencher::quick();
+    for (n, d) in [(10usize, 7851usize), (50, 1024), (100, 1024)] {
+        let topo = Topology::erdos_connected(n, 0.1, 1);
+        let mut dense = Consensus::new(topo.metropolis().lazy());
+        let sparse = SparseMix::metropolis(&topo, true);
+        let mut rng = Pcg64::new(2);
+        let msgs0: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        b.bench(&format!("dense/n{n}_d{d}_5r"), || {
+            let mut m = msgs0.clone();
+            dense.run(&mut m, 5);
+            m[0][0]
+        });
+        let mut scratch = Vec::new();
+        b.bench(&format!("sparse/n{n}_d{d}_5r"), || {
+            let mut m = msgs0.clone();
+            sparse.run(&mut m, &mut scratch, 5);
+            m[0][0]
+        });
+    }
+    b.report("consensus engine ablation");
+}

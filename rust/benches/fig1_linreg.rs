@@ -1,0 +1,41 @@
+//! Bench: Figure 1(a) — linreg AMB vs FMB on simulated EC2.
+//! Regenerates the figure (quick mode) and times the epoch pipeline.
+
+use anytime_mb::bench_harness::Bencher;
+use anytime_mb::coordinator::{sim, RunConfig};
+use anytime_mb::exec::NativeExec;
+use anytime_mb::experiments::{self, Ctx};
+use anytime_mb::straggler::ShiftedExp;
+use anytime_mb::topology::Topology;
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let report = experiments::fig1::fig1a(&ctx).expect("fig1a");
+    println!("{report}");
+
+    let mut b = Bencher::quick();
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 12.5, lambda: 0.5, unit_batch: 600 };
+    let source = experiments::linreg_source(1);
+    let opt = experiments::optimizer_for(&source, 6000.0);
+    let f_star = source.f_star();
+
+    b.bench("fig1a/amb_5_epochs_n10_d1024", || {
+        let cfg = RunConfig::amb("amb", 14.5, 4.5, 5, 5, 1);
+        let src = source.clone();
+        let o = opt.clone();
+        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
+            .record
+            .total_time()
+    });
+    b.bench("fig1a/fmb_5_epochs_n10_d1024", || {
+        let cfg = RunConfig::fmb("fmb", 600, 4.5, 5, 5, 1);
+        let src = source.clone();
+        let o = opt.clone();
+        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
+            .record
+            .total_time()
+    });
+    b.report("fig1a linreg EC2");
+}

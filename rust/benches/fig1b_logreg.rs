@@ -1,0 +1,32 @@
+//! Bench: Figure 1(b) — MNIST-shaped logistic regression, AMB vs FMB.
+
+use anytime_mb::bench_harness::Bencher;
+use anytime_mb::coordinator::{sim, RunConfig};
+use anytime_mb::exec::NativeExec;
+use anytime_mb::experiments::{self, Ctx};
+use anytime_mb::straggler::ShiftedExp;
+use anytime_mb::topology::Topology;
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let report = experiments::fig1::fig1b(&ctx).expect("fig1b");
+    println!("{report}");
+
+    let mut b = Bencher::quick();
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 8.0, lambda: 0.25, unit_batch: 800 };
+    let source = experiments::mnist_source(1);
+    let opt = experiments::optimizer_for(&source, 8000.0);
+    let f_star = source.f_star();
+
+    b.bench("fig1b/amb_2_epochs_n10_k10_d785", || {
+        let cfg = RunConfig::amb("amb", 12.0, 3.0, 5, 2, 1);
+        let src = source.clone();
+        let o = opt.clone();
+        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
+            .record
+            .total_samples()
+    });
+    b.report("fig1b logreg EC2");
+}

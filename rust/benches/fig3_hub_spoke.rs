@@ -1,0 +1,32 @@
+//! Bench: Figure 3 — hub-and-spoke (master-worker) logistic regression.
+
+use anytime_mb::bench_harness::Bencher;
+use anytime_mb::coordinator::{sim, ConsensusMode, RunConfig};
+use anytime_mb::exec::NativeExec;
+use anytime_mb::experiments::{self, Ctx};
+use anytime_mb::straggler::ShiftedExp;
+use anytime_mb::topology::Topology;
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let report = experiments::fig3::fig3(&ctx).expect("fig3");
+    println!("{report}");
+
+    let mut b = Bencher::quick();
+    let topo = Topology::complete(19);
+    let strag = ShiftedExp { zeta: 2.0, lambda: 1.0, unit_batch: 210 };
+    let source = experiments::mnist_source(1);
+    let opt = experiments::optimizer_for(&source, 3990.0);
+    let f_star = source.f_star();
+
+    b.bench("fig3/amb_hub_2_epochs_19_workers", || {
+        let cfg = RunConfig::amb("amb", 3.0, 1.0, 1, 2, 1).with_consensus(ConsensusMode::Exact);
+        let src = source.clone();
+        let o = opt.clone();
+        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
+            .record
+            .total_samples()
+    });
+    b.report("fig3 hub-and-spoke");
+}

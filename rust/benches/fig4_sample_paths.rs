@@ -1,0 +1,12 @@
+//! Bench: Figure 4 — 20 sample paths under shifted-exponential stragglers.
+
+use anytime_mb::experiments::{self, Ctx};
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let t0 = std::time::Instant::now();
+    let report = experiments::fig4::fig4(&ctx).expect("fig4");
+    println!("{report}");
+    println!("fig4 quick regeneration: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,31 @@
+//! Bench: Figure 5 — r=5 vs r=∞ consensus; times the consensus engine
+//! itself across round budgets and dimensions.
+
+use anytime_mb::bench_harness::Bencher;
+use anytime_mb::consensus::Consensus;
+use anytime_mb::experiments::{self, Ctx};
+use anytime_mb::topology::Topology;
+use anytime_mb::util::rng::Pcg64;
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let report = experiments::fig5::fig5(&ctx).expect("fig5");
+    println!("{report}");
+
+    let mut b = Bencher::quick();
+    for (n, d, rounds) in [(10, 1024, 5), (10, 7850, 5), (20, 1024, 5), (10, 1024, 50)] {
+        let topo = Topology::erdos_connected(n, 0.3, 1);
+        let mut cons = Consensus::new(topo.metropolis().lazy());
+        let mut rng = Pcg64::new(2);
+        let msgs0: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        b.bench(&format!("consensus/n{n}_d{d}_r{rounds}"), || {
+            let mut msgs = msgs0.clone();
+            cons.run(&mut msgs, rounds);
+            msgs[0][0]
+        });
+    }
+    b.report("fig5 consensus engine");
+}

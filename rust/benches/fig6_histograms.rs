@@ -1,0 +1,36 @@
+//! Bench: Figure 6 — induced-straggler histograms; times the straggler
+//! model sampling hot path.
+
+use anytime_mb::bench_harness::Bencher;
+use anytime_mb::experiments::{self, Ctx};
+use anytime_mb::straggler::{InducedGroups, PauseModel, StragglerModel};
+use anytime_mb::util::rng::Pcg64;
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let report = experiments::fig6::fig6(&ctx).expect("fig6");
+    println!("{report}");
+
+    let mut b = Bencher::quick();
+    let induced = InducedGroups::paper_i3();
+    let mut rng = Pcg64::new(1);
+    b.bench("straggler/induced_1k_draws", || {
+        let mut acc = 0usize;
+        for e in 0..1000 {
+            let mut p = induced.draw(e % 10, e, &mut rng);
+            acc += p.grads_in_time(12.0);
+        }
+        acc
+    });
+    let pause = PauseModel::paper_i4();
+    b.bench("straggler/pause_100_draws_T115", || {
+        let mut acc = 0usize;
+        for e in 0..100 {
+            let mut p = pause.draw(e % 50, e, &mut rng);
+            acc += p.grads_in_time(115.0);
+        }
+        acc
+    });
+    b.report("fig6 straggler models");
+}

@@ -1,0 +1,12 @@
+//! Bench: Figure 7 — logistic regression with induced stragglers.
+
+use anytime_mb::experiments::{self, Ctx};
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let t0 = std::time::Instant::now();
+    let report = experiments::fig7::fig7(&ctx).expect("fig7");
+    println!("{report}");
+    println!("fig7 quick regeneration: {:.2}s", t0.elapsed().as_secs_f64());
+}

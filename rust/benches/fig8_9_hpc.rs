@@ -1,0 +1,14 @@
+//! Bench: Figures 8 & 9 — HPC pause-model histograms + cost-vs-time.
+
+use anytime_mb::experiments::{self, Ctx};
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let t0 = std::time::Instant::now();
+    let r8 = experiments::fig8::fig8(&ctx).expect("fig8");
+    println!("{r8}");
+    let r9 = experiments::fig8::fig9(&ctx).expect("fig9");
+    println!("{r9}");
+    println!("fig8+9 quick regeneration: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,139 @@
+//! Hot-path microbenchmarks across all three layers (EXPERIMENTS.md §Perf):
+//!
+//!   L3 native  — consensus round, gradient chunk, primal step, full
+//!                simulated epoch
+//!   RT (PJRT)  — artifact-backed gradient chunk + dual update (requires
+//!                `make artifacts`; skipped otherwise)
+//!
+//! These are the numbers the §Perf iteration log tracks.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anytime_mb::bench_harness::Bencher;
+use anytime_mb::consensus::Consensus;
+use anytime_mb::coordinator::{sim, RunConfig};
+use anytime_mb::data::{LinRegStream, MnistLike};
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::runtime::{PjrtExec, PjrtRuntime};
+use anytime_mb::straggler::ShiftedExp;
+use anytime_mb::topology::Topology;
+use anytime_mb::util::rng::Pcg64;
+
+fn optimizer(dim: usize) -> DualAveraging {
+    DualAveraging::new(BetaSchedule::new(1.0, 1000.0), 4.0 * (dim as f64).sqrt())
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // ---- L3: consensus ----------------------------------------------------
+    let topo = Topology::paper_fig2();
+    let p = topo.metropolis().lazy();
+    let mut cons = Consensus::new(p);
+    let mut rng = Pcg64::new(1);
+    let msgs0: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..7851).map(|_| rng.normal() as f32).collect())
+        .collect();
+    b.bench("L3/consensus_round_n10_d7851", || {
+        let mut msgs = msgs0.clone();
+        cons.run(&mut msgs, 1);
+        msgs[0][0]
+    });
+    b.bench("L3/consensus_5rounds_n10_d7851", || {
+        let mut msgs = msgs0.clone();
+        cons.run(&mut msgs, 5);
+        msgs[0][0]
+    });
+
+    // ---- L3: native gradient chunks ----------------------------------------
+    let lin_src = Arc::new(DataSource::LinReg(LinRegStream::new(1024, 2)));
+    let mut lin_exec = NativeExec::new(lin_src, optimizer(1024));
+    let w1024: Vec<f32> = (0..1024).map(|_| rng.normal() as f32 * 0.1).collect();
+    let mut acc1024 = vec![0.0f32; 1024];
+    let mut data_rng = Pcg64::new(3);
+    b.bench("L3/native_linreg_grad_256x1024", || {
+        acc1024.fill(0.0);
+        lin_exec.grad_chunk(&w1024, 256, &mut data_rng, &mut acc1024)
+    });
+
+    let log_src = Arc::new(DataSource::Mnist(MnistLike::mnist_shaped(4)));
+    let mut log_exec = NativeExec::new(log_src, optimizer(7850));
+    let w7850: Vec<f32> = (0..7850).map(|_| rng.normal() as f32 * 0.01).collect();
+    let mut acc7850 = vec![0.0f32; 7850];
+    b.bench("L3/native_logreg_grad_128x10x785", || {
+        acc7850.fill(0.0);
+        log_exec.grad_chunk(&w7850, 128, &mut data_rng, &mut acc7850)
+    });
+
+    // ---- L3: primal step ----------------------------------------------------
+    let opt = optimizer(7850);
+    let z: Vec<f32> = (0..7850).map(|_| rng.normal() as f32).collect();
+    let mut wbuf = vec![0.0f32; 7850];
+    b.bench("L3/primal_step_d7850", || {
+        opt.primal_step(&z, 10, &mut wbuf);
+        wbuf[0]
+    });
+
+    // ---- L3: full simulated epoch (the figure-harness inner loop) ----------
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 600 };
+    let sim_src = Arc::new(DataSource::LinReg(LinRegStream::new(1024, 5)));
+    let sim_opt = optimizer(1024);
+    let f_star = sim_src.f_star();
+    b.bench("L3/sim_epoch_amb_n10_d1024_b6000", || {
+        let cfg = RunConfig::amb("amb", 2.5, 0.5, 5, 1, 7);
+        let src = sim_src.clone();
+        let o = sim_opt.clone();
+        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
+            .record
+            .total_samples()
+    });
+
+    // ---- RT: PJRT artifact path --------------------------------------------
+    match PjrtRuntime::load(&anytime_mb::artifacts_dir()) {
+        Ok(rt) => {
+            let rt = Rc::new(rt);
+            let d = rt.manifest.linreg_d;
+            let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, 6)));
+            let mut pjrt = PjrtExec::new(rt.clone(), src, optimizer(d)).unwrap();
+            let w: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
+            let mut acc = vec![0.0f32; d];
+            let chunk = rt.manifest.linreg_c;
+            b.bench(&format!("RT/pjrt_linreg_grad_{chunk}x{d}"), || {
+                acc.fill(0.0);
+                pjrt.grad_chunk(&w, chunk, &mut data_rng, &mut acc)
+            });
+            b.bench(&format!("RT/pjrt_linreg_grad_600_samples_d{d}"), || {
+                acc.fill(0.0);
+                pjrt.grad_chunk(&w, 600, &mut data_rng, &mut acc)
+            });
+            let z: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mut wp = vec![0.0f32; d];
+            b.bench(&format!("RT/pjrt_dual_update_d{d}"), || {
+                pjrt.primal_step(&z, 5, &mut wp);
+                wp[0]
+            });
+        }
+        Err(e) => println!("(PJRT benches skipped: {e})"),
+    }
+
+    b.report("hotpath microbenchmarks");
+
+    // Derived throughput lines for §Perf.
+    for s in b.results() {
+        let items = match s.name.as_str() {
+            "L3/native_linreg_grad_256x1024" => Some(256.0 * 1024.0 * 2.0),
+            "L3/native_logreg_grad_128x10x785" => Some(128.0 * 7850.0 * 4.0),
+            n if n.starts_with("RT/pjrt_linreg_grad_256") => Some(256.0 * 1024.0 * 2.0),
+            _ => None,
+        };
+        if let Some(flops) = items {
+            println!(
+                "  {:<42} ~{:.2} GFLOP/s",
+                s.name,
+                flops / s.mean / 1e9
+            );
+        }
+    }
+}

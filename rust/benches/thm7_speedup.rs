@@ -1,0 +1,21 @@
+//! Bench: Theorem 7 — speedup-vs-n sweep + timing of the sweep itself.
+
+use anytime_mb::bench_harness::Bencher;
+use anytime_mb::experiments::{self, thm7::speedup_for_n, Ctx};
+use anytime_mb::straggler::ShiftedExp;
+
+fn main() {
+    let dir = std::path::PathBuf::from("results/bench");
+    let ctx = Ctx::native(&dir).quick();
+    let report = experiments::thm7::thm7(&ctx).expect("thm7");
+    println!("{report}");
+
+    let mut b = Bencher::quick();
+    let model = ShiftedExp::paper_i2();
+    for n in [10usize, 100] {
+        b.bench(&format!("thm7/sweep_n{n}_100_epochs"), || {
+            speedup_for_n(&model, n, 600, 100, 3).measured
+        });
+    }
+    b.report("thm7 speedup sweep");
+}

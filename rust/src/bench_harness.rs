@@ -1,0 +1,181 @@
+//! Mini benchmarking harness (criterion is not in the offline vendor set —
+//! DESIGN.md §7).  Provides warmup, timed iterations, and robust summary
+//! stats; `cargo bench` targets are `harness = false` binaries that call
+//! into this module and print paper-comparable rows.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark's timing summary (per-iteration, seconds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+}
+
+impl Summary {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<42} {:>10} {:>10} {:>10} {:>10}  (n={})",
+            self.name,
+            fmt_time(self.mean),
+            fmt_time(self.p50),
+            fmt_time(self.p95),
+            fmt_time(self.min),
+            self.iters,
+        )
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: usize,
+    results: Vec<Summary>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Modest defaults: figure benches run full experiment epochs.
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            max_iters: 1_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; the closure's return value is black_boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Summary {
+        // Warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Timed
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: stats::mean(&samples),
+            stddev: stats::stddev(&samples),
+            p50: stats::quantile(&samples, 0.5),
+            p95: stats::quantile(&samples, 0.95),
+            min: stats::min(&samples),
+        };
+        self.results.push(summary);
+        self.results.last().unwrap()
+    }
+
+    /// Print the standard header + all recorded results.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<42} {:>10} {:>10} {:>10} {:>10}",
+            "benchmark", "mean", "p50", "p95", "min"
+        );
+        for r in &self.results {
+            println!("{r}");
+        }
+    }
+
+    pub fn results(&self) -> &[Summary] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_summary() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_iters: 500,
+            results: Vec::new(),
+        };
+        let s = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.iters > 0);
+        assert!(s.mean > 0.0 && s.min <= s.mean);
+        assert!(s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-6).ends_with("µs"));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput() {
+        let s = Summary {
+            name: "x".into(),
+            iters: 1,
+            mean: 0.5,
+            stddev: 0.0,
+            p50: 0.5,
+            p95: 0.5,
+            min: 0.5,
+        };
+        assert_eq!(s.throughput(100.0), 200.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! Experiment configuration: JSON round-trip for [`RunConfig`]-level
+//! settings plus named presets for every experiment in the paper, so a
+//! run is fully described by a small config file:
+//!
+//! ```text
+//! amb run --config configs/fig1a_amb.json
+//! ```
+//!
+//! (No serde in the offline vendor set — uses util::json.)
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{ConsensusMode, RunConfig, Scheme};
+use crate::util::json::Json;
+
+/// A full experiment description: scheduler + workload + environment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub run: RunConfig,
+    /// "linreg" | "logreg"
+    pub workload: String,
+    /// "shiftedexp" | "induced" | "pause" | "none"
+    pub straggler: String,
+    /// nodes (ignored for models with intrinsic n like induced/pause)
+    pub nodes: usize,
+    /// shifted-exp parameters (when applicable)
+    pub zeta: f64,
+    pub lambda: f64,
+    pub unit_batch: usize,
+}
+
+impl ExperimentConfig {
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let scheme = match self.run.scheme {
+            Scheme::Amb { t_compute, t_consensus } => Json::obj(vec![
+                ("kind", Json::str("amb")),
+                ("t_compute", Json::num(t_compute)),
+                ("t_consensus", Json::num(t_consensus)),
+            ]),
+            Scheme::Fmb { per_node_batch, t_consensus } => Json::obj(vec![
+                ("kind", Json::str("fmb")),
+                ("per_node_batch", Json::num(per_node_batch as f64)),
+                ("t_consensus", Json::num(t_consensus)),
+            ]),
+            Scheme::FmbBackup { per_node_batch, t_consensus, ignore, coded } => Json::obj(vec![
+                ("kind", Json::str("fmb_backup")),
+                ("per_node_batch", Json::num(per_node_batch as f64)),
+                ("t_consensus", Json::num(t_consensus)),
+                ("ignore", Json::num(ignore as f64)),
+                ("coded", Json::Bool(coded)),
+            ]),
+        };
+        let consensus = match self.run.consensus {
+            ConsensusMode::Exact => Json::obj(vec![("kind", Json::str("exact"))]),
+            ConsensusMode::Gossip { rounds } => Json::obj(vec![
+                ("kind", Json::str("gossip")),
+                ("rounds", Json::num(rounds as f64)),
+            ]),
+            ConsensusMode::GossipJitter { mean, jitter } => Json::obj(vec![
+                ("kind", Json::str("gossip_jitter")),
+                ("mean", Json::num(mean as f64)),
+                ("jitter", Json::num(jitter as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::str(&self.run.name)),
+            ("scheme", scheme),
+            ("consensus", consensus),
+            ("epochs", Json::num(self.run.epochs as f64)),
+            ("seed", Json::num(self.run.seed as f64)),
+            ("exact_bt", Json::Bool(self.run.exact_bt)),
+            ("record_node_log", Json::Bool(self.run.record_node_log)),
+            ("workload", Json::str(&self.workload)),
+            ("straggler", Json::str(&self.straggler)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("zeta", Json::num(self.zeta)),
+            ("lambda", Json::num(self.lambda)),
+            ("unit_batch", Json::num(self.unit_batch as f64)),
+        ])
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json(text: &str) -> Result<ExperimentConfig> {
+        let j = Json::parse(text).context("config json")?;
+        let req_str =
+            |k: &str| j.get(k).and_then(|v| v.as_str()).with_context(|| format!("missing '{k}'"));
+        let req_num =
+            |k: &str| j.get(k).and_then(|v| v.as_f64()).with_context(|| format!("missing '{k}'"));
+
+        let sj = j.get("scheme").context("missing 'scheme'")?;
+        let sk = sj.get("kind").and_then(|v| v.as_str()).context("scheme.kind")?;
+        let snum = |k: &str| {
+            sj.get(k).and_then(|v| v.as_f64()).with_context(|| format!("scheme.{k}"))
+        };
+        let scheme = match sk {
+            "amb" => Scheme::Amb { t_compute: snum("t_compute")?, t_consensus: snum("t_consensus")? },
+            "fmb" => Scheme::Fmb {
+                per_node_batch: snum("per_node_batch")? as usize,
+                t_consensus: snum("t_consensus")?,
+            },
+            "fmb_backup" => Scheme::FmbBackup {
+                per_node_batch: snum("per_node_batch")? as usize,
+                t_consensus: snum("t_consensus")?,
+                ignore: snum("ignore")? as usize,
+                coded: sj.get("coded").and_then(|v| v.as_bool()).unwrap_or(false),
+            },
+            other => bail!("unknown scheme kind '{other}'"),
+        };
+
+        let cj = j.get("consensus").context("missing 'consensus'")?;
+        let consensus = match cj.get("kind").and_then(|v| v.as_str()) {
+            Some("exact") => ConsensusMode::Exact,
+            Some("gossip") => ConsensusMode::Gossip {
+                rounds: cj.get("rounds").and_then(|v| v.as_usize()).context("rounds")?,
+            },
+            Some("gossip_jitter") => ConsensusMode::GossipJitter {
+                mean: cj.get("mean").and_then(|v| v.as_usize()).context("mean")?,
+                jitter: cj.get("jitter").and_then(|v| v.as_usize()).context("jitter")?,
+            },
+            other => bail!("unknown consensus kind {other:?}"),
+        };
+
+        Ok(ExperimentConfig {
+            run: RunConfig {
+                name: req_str("name")?.to_string(),
+                scheme,
+                consensus,
+                epochs: req_num("epochs")? as usize,
+                seed: req_num("seed")? as u64,
+                exact_bt: j.get("exact_bt").and_then(|v| v.as_bool()).unwrap_or(false),
+                record_node_log: j
+                    .get("record_node_log")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+            },
+            workload: req_str("workload")?.to_string(),
+            straggler: req_str("straggler")?.to_string(),
+            nodes: req_num("nodes")? as usize,
+            zeta: j.get("zeta").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            lambda: j.get("lambda").and_then(|v| v.as_f64()).unwrap_or(2.0 / 3.0),
+            unit_batch: j.get("unit_batch").and_then(|v| v.as_usize()).unwrap_or(600),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ExperimentConfig::from_json(&text)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+/// Named presets for every paper experiment (paper parameters verbatim
+/// where published; see DESIGN.md §4).
+pub fn preset(name: &str) -> Result<ExperimentConfig> {
+    let base = |run: RunConfig, workload: &str, straggler: &str, nodes: usize,
+                zeta: f64, lambda: f64, unit: usize| ExperimentConfig {
+        run,
+        workload: workload.into(),
+        straggler: straggler.into(),
+        nodes,
+        zeta,
+        lambda,
+        unit_batch: unit,
+    };
+    Ok(match name {
+        "fig1a_amb" => base(
+            RunConfig::amb("fig1a-amb", 14.5, 4.5, 5, 24, 42),
+            "linreg", "shiftedexp", 10, 12.5, 0.5, 600,
+        ),
+        "fig1a_fmb" => base(
+            RunConfig::fmb("fig1a-fmb", 600, 4.5, 5, 24, 42),
+            "linreg", "shiftedexp", 10, 12.5, 0.5, 600,
+        ),
+        "fig1b_amb" => base(
+            RunConfig::amb("fig1b-amb", 12.0, 3.0, 5, 20, 42),
+            "logreg", "shiftedexp", 10, 8.0, 0.25, 800,
+        ),
+        "fig1b_fmb" => base(
+            RunConfig::fmb("fig1b-fmb", 800, 3.0, 5, 20, 42),
+            "logreg", "shiftedexp", 10, 8.0, 0.25, 800,
+        ),
+        "fig4_amb" => base(
+            RunConfig::amb("fig4-amb", 2.5, 0.5, 5, 20, 42),
+            "linreg", "shiftedexp", 20, 1.0, 2.0 / 3.0, 600,
+        ),
+        "fig7_amb" => base(
+            RunConfig::amb("fig7-amb", 12.0, 3.0, 5, 24, 42),
+            "logreg", "induced", 10, 0.0, 0.0, 585,
+        ),
+        "fig9_amb" => base(
+            RunConfig::amb("fig9-amb", 115.0, 10.0, 1, 60, 42)
+                .with_consensus(ConsensusMode::Exact),
+            "logreg", "pause", 50, 0.0, 0.0, 10,
+        ),
+        other => bail!("unknown preset '{other}' (see config::preset)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_all_schemes() {
+        for name in ["fig1a_amb", "fig1a_fmb", "fig9_amb"] {
+            let cfg = preset(name).unwrap();
+            let text = cfg.to_json().to_string();
+            let back = ExperimentConfig::from_json(&text).unwrap();
+            assert_eq!(back.run.scheme, cfg.run.scheme, "{name}");
+            assert_eq!(back.run.consensus, cfg.run.consensus);
+            assert_eq!(back.run.epochs, cfg.run.epochs);
+            assert_eq!(back.workload, cfg.workload);
+            assert_eq!(back.nodes, cfg.nodes);
+        }
+    }
+
+    #[test]
+    fn backup_scheme_roundtrip() {
+        let mut cfg = preset("fig1a_fmb").unwrap();
+        cfg.run.scheme =
+            Scheme::FmbBackup { per_node_batch: 100, t_consensus: 1.0, ignore: 2, coded: true };
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.run.scheme, cfg.run.scheme);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let dir = std::env::temp_dir().join("amb_config_test");
+        let path = dir.join("x.json");
+        let cfg = preset("fig1b_amb").unwrap();
+        cfg.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(back.run.name, "fig1b-amb");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_preset_and_bad_json_error() {
+        assert!(preset("nope").is_err());
+        assert!(ExperimentConfig::from_json("{}").is_err());
+        assert!(ExperimentConfig::from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Push-sum (ratio) consensus — Tsianos, Lawlor & Rabbat (2012), cited by
+//! the paper as the directed-graph generalisation of averaging consensus.
+//!
+//! Each node keeps a value vector x_i and a weight φ_i (init 1).  Per
+//! round, node i splits (x_i, φ_i) equally among its out-neighbours and
+//! itself; estimates are the ratios x_i/φ_i, which converge to the true
+//! average on any strongly-connected digraph even though the column-
+//! stochastic mixing is not doubly stochastic.  This lets AMB run on
+//! asymmetric communication graphs (e.g. radio networks) where Metropolis
+//! weights don't exist.
+
+use crate::util::rng::Pcg64;
+
+/// Directed graph as out-neighbour lists.
+#[derive(Debug, Clone)]
+pub struct Digraph {
+    out: Vec<Vec<usize>>,
+}
+
+impl Digraph {
+    pub fn new(n: usize, edges: &[(usize, usize)]) -> Digraph {
+        let mut out = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            assert!(a < n && b < n && a != b);
+            if !out[a].contains(&b) {
+                out[a].push(b);
+            }
+        }
+        Digraph { out }
+    }
+
+    /// Directed ring 0→1→…→(n−1)→0 (strongly connected, maximally
+    /// asymmetric — the classic push-sum stress test).
+    pub fn ring(n: usize) -> Digraph {
+        Digraph::new(n, &(0..n).map(|i| (i, (i + 1) % n)).collect::<Vec<_>>())
+    }
+
+    /// Random strongly-connected digraph: directed ring + extra arcs.
+    pub fn random_strongly_connected(n: usize, p: f64, seed: u64) -> Digraph {
+        let mut rng = Pcg64::new(seed);
+        let mut edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && rng.f64() < p {
+                    edges.push((i, j));
+                }
+            }
+        }
+        Digraph::new(n, &edges)
+    }
+
+    /// Make every directed edge bidirectional (view of an undirected G).
+    pub fn from_undirected(topo: &crate::topology::Topology) -> Digraph {
+        let n = topo.n();
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for &j in topo.neighbors(i) {
+                edges.push((i, j));
+            }
+        }
+        Digraph::new(n, &edges)
+    }
+
+    pub fn n(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.out[i].len()
+    }
+}
+
+/// Push-sum state for n nodes over d-dim values.
+pub struct PushSum {
+    g: Digraph,
+    /// values x_i (n × d)
+    x: Vec<Vec<f64>>,
+    /// weights φ_i
+    phi: Vec<f64>,
+    // scratch
+    x_next: Vec<Vec<f64>>,
+    phi_next: Vec<f64>,
+}
+
+impl PushSum {
+    /// Initialise from per-node vectors.
+    pub fn new(g: Digraph, values: Vec<Vec<f32>>) -> PushSum {
+        let n = g.n();
+        assert_eq!(values.len(), n);
+        let d = values[0].len();
+        let x: Vec<Vec<f64>> = values
+            .into_iter()
+            .map(|v| v.into_iter().map(|f| f as f64).collect())
+            .collect();
+        PushSum {
+            g,
+            x,
+            phi: vec![1.0; n],
+            x_next: vec![vec![0.0; d]; n],
+            phi_next: vec![0.0; n],
+        }
+    }
+
+    /// One synchronous push-sum round.
+    pub fn round(&mut self) {
+        let n = self.g.n();
+        for i in 0..n {
+            for v in self.x_next[i].iter_mut() {
+                *v = 0.0;
+            }
+            self.phi_next[i] = 0.0;
+        }
+        for i in 0..n {
+            let share = 1.0 / (1.0 + self.g.out_degree(i) as f64);
+            // to self
+            for (k, &v) in self.x[i].iter().enumerate() {
+                self.x_next[i][k] += share * v;
+            }
+            self.phi_next[i] += share * self.phi[i];
+            // to out-neighbours
+            for &j in &self.g.out[i] {
+                for (k, &v) in self.x[i].iter().enumerate() {
+                    self.x_next[j][k] += share * v;
+                }
+                self.phi_next[j] += share * self.phi[i];
+            }
+        }
+        std::mem::swap(&mut self.x, &mut self.x_next);
+        std::mem::swap(&mut self.phi, &mut self.phi_next);
+    }
+
+    pub fn run(&mut self, rounds: usize) {
+        for _ in 0..rounds {
+            self.round();
+        }
+    }
+
+    /// Node i's current average estimate x_i/φ_i.
+    pub fn estimate(&self, i: usize) -> Vec<f64> {
+        self.x[i].iter().map(|&v| v / self.phi[i]).collect()
+    }
+
+    /// max_i ‖estimate_i − avg‖₂.
+    pub fn max_error(&self, avg: &[f64]) -> f64 {
+        let mut worst = 0.0f64;
+        for i in 0..self.g.n() {
+            let est = self.estimate(i);
+            let mut ss = 0.0;
+            for (k, &a) in avg.iter().enumerate() {
+                ss += (est[k] - a) * (est[k] - a);
+            }
+            worst = worst.max(ss.sqrt());
+        }
+        worst
+    }
+
+    /// Mass-conservation diagnostics: Σφ_i must stay n, Σx must stay put.
+    pub fn total_weight(&self) -> f64 {
+        self.phi.iter().sum()
+    }
+
+    pub fn total_value(&self) -> Vec<f64> {
+        let d = self.x[0].len();
+        let mut tot = vec![0.0; d];
+        for xi in &self.x {
+            for k in 0..d {
+                tot[k] += xi[k];
+            }
+        }
+        tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    fn avg_of(values: &[Vec<f32>]) -> Vec<f64> {
+        let n = values.len();
+        let d = values[0].len();
+        let mut avg = vec![0.0f64; d];
+        for v in values {
+            for k in 0..d {
+                avg[k] += v[k] as f64;
+            }
+        }
+        for a in avg.iter_mut() {
+            *a /= n as f64;
+        }
+        avg
+    }
+
+    #[test]
+    fn converges_on_directed_ring() {
+        let n = 8;
+        let mut g = crate::prop::Gen::new(1);
+        let values: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(4, 3.0)).collect();
+        let avg = avg_of(&values);
+        let mut ps = PushSum::new(Digraph::ring(n), values);
+        ps.run(300);
+        assert!(ps.max_error(&avg) < 1e-6, "err={}", ps.max_error(&avg));
+    }
+
+    #[test]
+    fn conserves_mass_every_round() {
+        forall(20, 0x50_01, |g| {
+            let n = g.usize_in(2, 12);
+            let d = g.usize_in(1, 6);
+            let dg = Digraph::random_strongly_connected(n, 0.3, g.u64());
+            let values: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 2.0)).collect();
+            let tot0 = {
+                let ps = PushSum::new(dg.clone(), values.clone());
+                ps.total_value()
+            };
+            let mut ps = PushSum::new(dg, values);
+            for _ in 0..g.usize_in(1, 20) {
+                ps.round();
+                crate::prop_assert_close!(ps.total_weight(), n as f64, 1e-9);
+                let tot = ps.total_value();
+                for k in 0..tot.len() {
+                    crate::prop_assert_close!(tot[k], tot0[k], 1e-9);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn converges_on_random_digraphs() {
+        forall(15, 0x50_02, |g| {
+            let n = g.usize_in(3, 15);
+            let dg = Digraph::random_strongly_connected(n, 0.4, g.u64());
+            let values: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(3, 5.0)).collect();
+            let avg = avg_of(&values);
+            let mut ps = PushSum::new(dg, values);
+            ps.run(400);
+            crate::prop_assert!(ps.max_error(&avg) < 1e-5, "err={}", ps.max_error(&avg));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_metropolis_on_undirected_graph() {
+        // Same average, different algorithm: push-sum on the symmetrised
+        // paper graph agrees with dense Metropolis mixing.
+        let topo = crate::topology::Topology::paper_fig2();
+        let mut g = crate::prop::Gen::new(3);
+        let values: Vec<Vec<f32>> = (0..10).map(|_| g.vec_normal_f32(5, 1.0)).collect();
+        let avg = avg_of(&values);
+
+        let mut ps = PushSum::new(Digraph::from_undirected(&topo), values.clone());
+        ps.run(200);
+        assert!(ps.max_error(&avg) < 1e-6);
+
+        let mut cons = crate::consensus::Consensus::new(topo.metropolis().lazy());
+        let mut msgs = values;
+        cons.run(&mut msgs, 500);
+        let dense_err = crate::consensus::Consensus::max_error(&msgs, &avg);
+        assert!(dense_err < 1e-3);
+    }
+
+    #[test]
+    fn estimate_unbiased_at_round_zero() {
+        let values = vec![vec![2.0f32], vec![4.0f32]];
+        let ps = PushSum::new(Digraph::ring(2), values);
+        assert_eq!(ps.estimate(0), vec![2.0]);
+        assert_eq!(ps.estimate(1), vec![4.0]);
+    }
+}

@@ -1,0 +1,177 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! Two interchangeable epoch schedulers over the same machinery:
+//!
+//! * **AMB** (Anytime Minibatch, this paper): every epoch gives each node
+//!   a fixed compute window T — the per-node minibatch b_i(t) is whatever
+//!   the node finished — then a fixed communication window T_c for
+//!   averaging consensus on dual variables.  Epoch wall time is exactly
+//!   T + T_c regardless of stragglers.
+//! * **FMB** (fixed minibatch baseline): every node computes exactly b/n
+//!   gradients; the epoch's compute phase lasts max_i T_i(t) (the slowest
+//!   node gates everyone), then the same consensus window.
+//!
+//! Two cluster runtimes execute these schedules:
+//! * [`sim`] — single-process discrete-event simulator with a virtual
+//!   clock driven by a [`crate::straggler::StragglerModel`]; regenerates
+//!   every figure deterministically.
+//! * [`threaded`] — one OS thread per node, mpsc-channel "network",
+//!   real wall-clock compute windows; the production-shaped runtime used
+//!   by the end-to-end example.
+
+pub mod sim;
+pub mod threaded;
+
+/// Epoch scheduling policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// Fixed compute time T and communication time T_c (seconds, virtual
+    /// clock units in sim mode).
+    Amb { t_compute: f64, t_consensus: f64 },
+    /// Fixed per-node batch; epoch compute time = slowest node.
+    Fmb { per_node_batch: usize, t_consensus: f64 },
+    /// FMB with straggler mitigation via redundancy — the baseline family
+    /// the paper's related work compares against (Chen et al. '17 backup
+    /// workers; Tandon et al. '17 gradient coding):
+    /// * `coded = false` (backup workers): the epoch ends when the
+    ///   fastest n−ignore nodes finish b/n gradients; the stragglers'
+    ///   work is DROPPED (b(t) = (n−ignore)·b/n).
+    /// * `coded = true` (gradient coding): every node computes
+    ///   (ignore+1)·b/n redundantly-assigned gradients so the full batch
+    ///   is recoverable from any n−ignore nodes (b(t) = b, but each node
+    ///   does (ignore+1)× work).
+    FmbBackup { per_node_batch: usize, t_consensus: f64, ignore: usize, coded: bool },
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Amb { .. } => "amb",
+            Scheme::Fmb { .. } => "fmb",
+            Scheme::FmbBackup { coded: false, .. } => "fmb-backup",
+            Scheme::FmbBackup { coded: true, .. } => "fmb-coded",
+        }
+    }
+}
+
+/// How dual variables are averaged in the consensus phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConsensusMode {
+    /// Perfect averaging (ε = 0): hub-and-spoke master aggregation or the
+    /// r → ∞ limit of Fig. 5.
+    Exact,
+    /// Fixed number of synchronous gossip rounds for every node.
+    Gossip { rounds: usize },
+    /// Per-node round counts r_i(t) ~ Uniform{mean−jitter, …, mean+jitter}
+    /// (network-delay variability of paper Sec. 3).
+    GossipJitter { mean: usize, jitter: usize },
+}
+
+/// Full configuration of one simulated run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub name: String,
+    pub scheme: Scheme,
+    pub consensus: ConsensusMode,
+    pub epochs: usize,
+    pub seed: u64,
+    /// If false (default), each node normalises its dual by a b(t)
+    /// estimate obtained through the same consensus channel (an extra
+    /// scalar component); if true, nodes magically know exact b(t).
+    pub exact_bt: bool,
+    /// Record per-(node, epoch) batch sizes and compute times (Fig. 6/8
+    /// histograms).
+    pub record_node_log: bool,
+}
+
+impl RunConfig {
+    pub fn amb(name: &str, t_compute: f64, t_consensus: f64, rounds: usize, epochs: usize, seed: u64) -> RunConfig {
+        RunConfig {
+            name: name.into(),
+            scheme: Scheme::Amb { t_compute, t_consensus },
+            consensus: ConsensusMode::Gossip { rounds },
+            epochs,
+            seed,
+            exact_bt: false,
+            record_node_log: false,
+        }
+    }
+
+    pub fn fmb(name: &str, per_node_batch: usize, t_consensus: f64, rounds: usize, epochs: usize, seed: u64) -> RunConfig {
+        RunConfig {
+            name: name.into(),
+            scheme: Scheme::Fmb { per_node_batch, t_consensus },
+            consensus: ConsensusMode::Gossip { rounds },
+            epochs,
+            seed,
+            exact_bt: false,
+            record_node_log: false,
+        }
+    }
+
+    pub fn with_consensus(mut self, mode: ConsensusMode) -> RunConfig {
+        self.consensus = mode;
+        self
+    }
+
+    pub fn with_node_log(mut self) -> RunConfig {
+        self.record_node_log = true;
+        self
+    }
+
+    pub fn with_exact_bt(mut self) -> RunConfig {
+        self.exact_bt = true;
+        self
+    }
+}
+
+/// Per-(node, epoch) raw log for straggler histograms.
+#[derive(Debug, Clone, Default)]
+pub struct NodeLog {
+    /// batches[node][epoch] = b_i(t).
+    pub batches: Vec<Vec<usize>>,
+    /// compute_times[node][epoch] = seconds node i spent computing in t.
+    pub compute_times: Vec<Vec<f64>>,
+}
+
+impl NodeLog {
+    pub fn new(n: usize) -> NodeLog {
+        NodeLog { batches: vec![Vec::new(); n], compute_times: vec![Vec::new(); n] }
+    }
+
+    pub fn push(&mut self, node: usize, batch: usize, compute_time: f64) {
+        self.batches[node].push(batch);
+        self.compute_times[node].push(compute_time);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_names() {
+        assert_eq!(Scheme::Amb { t_compute: 1.0, t_consensus: 0.1 }.name(), "amb");
+        assert_eq!(Scheme::Fmb { per_node_batch: 10, t_consensus: 0.1 }.name(), "fmb");
+    }
+
+    #[test]
+    fn builders() {
+        let c = RunConfig::amb("a", 2.5, 0.5, 5, 20, 1).with_exact_bt().with_node_log();
+        assert!(c.exact_bt && c.record_node_log);
+        assert_eq!(c.consensus, ConsensusMode::Gossip { rounds: 5 });
+        let f = RunConfig::fmb("f", 600, 0.5, 5, 20, 1)
+            .with_consensus(ConsensusMode::Exact);
+        assert_eq!(f.consensus, ConsensusMode::Exact);
+    }
+
+    #[test]
+    fn node_log_push() {
+        let mut l = NodeLog::new(2);
+        l.push(0, 5, 1.5);
+        l.push(1, 7, 2.0);
+        l.push(0, 6, 1.6);
+        assert_eq!(l.batches[0], vec![5, 6]);
+        assert_eq!(l.compute_times[1], vec![2.0]);
+    }
+}

@@ -1,0 +1,439 @@
+//! Discrete-event cluster simulator with a virtual wall clock.
+//!
+//! Gradients are *really* computed (via the node's [`ExecEngine`] — native
+//! math or PJRT artifacts); *time* is attributed by the straggler model,
+//! so a 400-virtual-second EC2 run replays in milliseconds and every
+//! figure is deterministic given its seed (DESIGN.md §2 substitution 1).
+//!
+//! Epoch t (paper Sec. 3 / Algorithm 1):
+//!   compute   b_i(t) ← profile.grads_in_time(T)         (AMB)
+//!             b_i(t) = b/n, time = max_i T_i(t)          (FMB)
+//!             grad_sum_i, loss_i ← engine.grad_chunk
+//!   consensus m_i⁽⁰⁾ = n·(b_i·z_i + grad_sum_i)  [+ scalar n·b_i channel]
+//!             r rounds of m ← P m  (or exact averaging)
+//!   update    z_i(t+1) = m_i⁽ʳ⁾ / b̂(t);  w_i(t+1) = argmin ⟨w,z⟩+βh(w)
+
+use crate::consensus::Consensus;
+use crate::coordinator::{ConsensusMode, NodeLog, RunConfig, Scheme};
+use crate::exec::ExecEngine;
+use crate::metrics::{EpochStats, RunRecord};
+use crate::straggler::StragglerModel;
+use crate::topology::Topology;
+use crate::util::rng::Pcg64;
+
+/// Result of a simulated run.
+pub struct SimOutput {
+    pub record: RunRecord,
+    pub node_log: Option<NodeLog>,
+    /// Final primal variables per node.
+    pub final_w: Vec<Vec<f32>>,
+}
+
+/// Run one configuration on a simulated cluster.
+///
+/// `make_engine(i)` constructs node i's execution engine (all nodes must
+/// share the same workload); `f_star` is the per-sample optimal loss used
+/// for regret accounting (see [`crate::exec::DataSource::f_star`]).
+pub fn run<F>(
+    cfg: &RunConfig,
+    topo: &Topology,
+    straggler: &dyn StragglerModel,
+    mut make_engine: F,
+    f_star: f64,
+) -> SimOutput
+where
+    F: FnMut(usize) -> Box<dyn ExecEngine>,
+{
+    let n = topo.n();
+    let mut engines: Vec<Box<dyn ExecEngine>> = (0..n).map(&mut make_engine).collect();
+    let dim = engines[0].workload().dim();
+    for e in &engines {
+        assert_eq!(e.workload().dim(), dim, "engines must share a workload");
+    }
+
+    // Independent, deterministic RNG streams.
+    let mut root = Pcg64::new(cfg.seed);
+    let mut strag_rng = root.split(0x57);
+    let mut data_rngs: Vec<Pcg64> = (0..n).map(|i| root.split(0xDA_00 + i as u64)).collect();
+    let mut metric_rng = root.split(0x3E);
+    let mut rounds_rng = root.split(0x20);
+
+    // Consensus machinery (lazy P for the PSD assumption; see topology.rs).
+    let mut cons = Consensus::new(topo.metropolis().lazy());
+
+    // Node state; w(1) = argmin h(w) per engine (paper eq. (2)).
+    let mut w: Vec<Vec<f32>> = (0..n).map(|i| engines[i].initial_primal()).collect();
+    let mut z: Vec<Vec<f32>> = vec![vec![0.0f32; dim]; n];
+    // Messages carry dim + 1 components: the dual payload and the n·b_i
+    // side channel used to estimate b(t) distributively.
+    let mut msgs: Vec<Vec<f32>> = vec![vec![0.0f32; dim + 1]; n];
+    let mut grad_sums: Vec<Vec<f32>> = vec![vec![0.0f32; dim]; n];
+    let mut rounds_buf = vec![0usize; n];
+
+    let mut record = RunRecord::new(&cfg.name, f_star);
+    let mut node_log = cfg.record_node_log.then(|| NodeLog::new(n));
+    let mut wall = 0.0f64;
+
+    for t in 1..=cfg.epochs {
+        // ---- compute phase -------------------------------------------------
+        let mut batches = vec![0usize; n];
+        let mut potentials = vec![0usize; n];
+        let mut compute_times = vec![0.0f64; n];
+        let epoch_compute_time;
+        match cfg.scheme {
+            Scheme::Amb { t_compute, t_consensus } => {
+                for i in 0..n {
+                    let mut prof = straggler.draw(i, t, &mut strag_rng);
+                    batches[i] = prof.grads_in_time(t_compute);
+                    compute_times[i] = t_compute;
+                    // potential work c_i(t): what the node could have done
+                    // with the consensus window too (regret accounting,
+                    // paper Sec. 4.2).  Fresh profile draw: an unbiased
+                    // estimate with identical distribution.
+                    let mut prof2 = straggler.draw(i, t, &mut strag_rng);
+                    potentials[i] = prof2.grads_in_time(t_compute + t_consensus).max(batches[i]);
+                }
+                epoch_compute_time = t_compute;
+            }
+            Scheme::Fmb { per_node_batch, .. } => {
+                let mut slowest = 0.0f64;
+                for i in 0..n {
+                    let mut prof = straggler.draw(i, t, &mut strag_rng);
+                    batches[i] = per_node_batch;
+                    compute_times[i] = prof.time_for_grads(per_node_batch);
+                    slowest = slowest.max(compute_times[i]);
+                }
+                for p in potentials.iter_mut().zip(&batches) {
+                    *p.0 = *p.1; // FMB: everyone computes exactly the quota
+                }
+                epoch_compute_time = slowest;
+            }
+            Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => {
+                // Redundancy baseline: wait only for the fastest
+                // n-ignore nodes.  Coded variant makes every node compute
+                // (ignore+1)x the quota so the batch stays whole.
+                let ignore = ignore.min(n.saturating_sub(1));
+                let work = if coded { per_node_batch * (ignore + 1) } else { per_node_batch };
+                for i in 0..n {
+                    let mut prof = straggler.draw(i, t, &mut strag_rng);
+                    compute_times[i] = prof.time_for_grads(work);
+                }
+                let mut sorted = compute_times.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let cutoff = sorted[n - 1 - ignore];
+                for i in 0..n {
+                    let on_time = compute_times[i] <= cutoff;
+                    batches[i] = if coded {
+                        // full batch recoverable; attribute the quota to
+                        // the on-time nodes (each decoded share is b/n on
+                        // average — we charge b/(n-ignore) to survivors).
+                        if on_time { per_node_batch * n / (n - ignore) } else { 0 }
+                    } else if on_time {
+                        per_node_batch
+                    } else {
+                        0
+                    };
+                    potentials[i] = work.max(batches[i]);
+                }
+                epoch_compute_time = cutoff;
+            }
+        }
+        let b_t: usize = batches.iter().sum();
+        let c_t: usize = potentials.iter().sum();
+
+        let mut loss_sum = 0.0f64;
+        for i in 0..n {
+            grad_sums[i].fill(0.0);
+            loss_sum += engines[i].grad_chunk(&w[i], batches[i], &mut data_rngs[i], &mut grad_sums[i]);
+        }
+
+        // ---- consensus phase ------------------------------------------------
+        // m_i⁽⁰⁾ = n (b_i z_i + grad_sum_i); side channel n·b_i.
+        for i in 0..n {
+            let bi = batches[i] as f32;
+            let m = &mut msgs[i];
+            for k in 0..dim {
+                m[k] = n as f32 * (bi * z[i][k] + grad_sums[i][k]);
+            }
+            m[dim] = n as f32 * bi;
+        }
+        let exact_avg = Consensus::exact_average(&msgs);
+        match cfg.consensus {
+            ConsensusMode::Exact => {
+                for m in msgs.iter_mut() {
+                    for k in 0..=dim {
+                        m[k] = exact_avg[k] as f32;
+                    }
+                }
+            }
+            ConsensusMode::Gossip { rounds } => {
+                cons.run(&mut msgs, rounds);
+            }
+            ConsensusMode::GossipJitter { mean, jitter } => {
+                for r in rounds_buf.iter_mut() {
+                    let lo = mean.saturating_sub(jitter);
+                    let hi = mean + jitter;
+                    *r = lo + rounds_rng.below((hi - lo + 1) as u64) as usize;
+                }
+                cons.run_per_node(&mut msgs, &rounds_buf);
+            }
+        }
+
+        // ---- update phase ----------------------------------------------------
+        let t_consensus = match cfg.scheme {
+            Scheme::Amb { t_consensus, .. }
+            | Scheme::Fmb { t_consensus, .. }
+            | Scheme::FmbBackup { t_consensus, .. } => t_consensus,
+        };
+        wall += epoch_compute_time + t_consensus;
+
+        let mut consensus_err = 0.0f64;
+        if b_t > 0 {
+            for i in 0..n {
+                let b_hat = if cfg.exact_bt { b_t as f32 } else { msgs[i][dim].max(1e-6) };
+                for k in 0..dim {
+                    z[i][k] = msgs[i][k] / b_hat;
+                }
+                // node i's consensus error vs the exact normalised dual
+                let mut ss = 0.0f64;
+                for k in 0..dim {
+                    let exact = exact_avg[k] / b_t as f64;
+                    let diff = z[i][k] as f64 - exact;
+                    ss += diff * diff;
+                }
+                consensus_err = consensus_err.max(ss.sqrt());
+            }
+            for i in 0..n {
+                let zi = std::mem::take(&mut z[i]);
+                engines[i].primal_step(&zi, t + 1, &mut w[i]);
+                z[i] = zi;
+            }
+        }
+        // (if b_t == 0 the epoch produced nothing; state carries over)
+
+        if let Some(log) = node_log.as_mut() {
+            for i in 0..n {
+                log.push(i, batches[i], compute_times[i]);
+            }
+        }
+
+        let error = engines[0].error_metric(&w[0], &mut metric_rng);
+        record.push(EpochStats {
+            epoch: t,
+            wall_time: wall,
+            batch: b_t,
+            potential: c_t,
+            loss: if b_t > 0 { loss_sum / b_t as f64 } else { f64::NAN },
+            error,
+            consensus_err,
+            min_node_batch: batches.iter().copied().min().unwrap_or(0),
+            max_node_batch: batches.iter().copied().max().unwrap_or(0),
+        });
+    }
+
+    SimOutput { record, node_log, final_w: w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LinRegStream;
+    use crate::exec::{DataSource, NativeExec};
+    use crate::optim::{BetaSchedule, DualAveraging};
+    use crate::straggler::{Deterministic, ShiftedExp};
+    use std::sync::Arc;
+
+    fn linreg_setup(d: usize, seed: u64) -> (Arc<DataSource>, DualAveraging) {
+        let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
+        // radius comfortably containing w* (E||w*|| ≈ sqrt(d))
+        let opt = DualAveraging::new(BetaSchedule::new(1.0, 600.0), 4.0 * (d as f64).sqrt());
+        (src, opt)
+    }
+
+    fn run_amb(epochs: usize, rounds: usize, seed: u64) -> SimOutput {
+        let topo = Topology::paper_fig2();
+        let (src, opt) = linreg_setup(32, 3);
+        let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 60 };
+        let f_star = src.f_star();
+        let cfg = RunConfig::amb("amb", 2.5, 0.5, rounds, epochs, seed);
+        run(
+            &cfg,
+            &topo,
+            &strag,
+            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
+            f_star,
+        )
+    }
+
+    #[test]
+    fn amb_wall_time_is_deterministic() {
+        let out = run_amb(10, 5, 1);
+        // epoch time == T + Tc exactly, stragglers or not
+        for (i, e) in out.record.epochs.iter().enumerate() {
+            assert!((e.wall_time - 3.0 * (i + 1) as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn amb_reduces_error() {
+        let out = run_amb(25, 8, 2);
+        let first = out.record.epochs[0].error;
+        let last = out.record.epochs.last().unwrap().error;
+        assert!(last < first * 0.2, "first={first} last={last}");
+    }
+
+    #[test]
+    fn amb_batches_vary_fmb_batches_fixed() {
+        let out = run_amb(10, 5, 3);
+        let varies = out
+            .record
+            .epochs
+            .iter()
+            .any(|e| e.min_node_batch != e.max_node_batch);
+        assert!(varies, "AMB batches should vary across nodes");
+
+        let topo = Topology::paper_fig2();
+        let (src, opt) = linreg_setup(32, 3);
+        let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 60 };
+        let cfg = RunConfig::fmb("fmb", 60, 0.5, 5, 10, 3);
+        let fout = run(
+            &cfg,
+            &topo,
+            &strag,
+            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
+            src.f_star(),
+        );
+        for e in &fout.record.epochs {
+            assert_eq!(e.min_node_batch, 60);
+            assert_eq!(e.max_node_batch, 60);
+            assert_eq!(e.batch, 600);
+        }
+        // FMB wall time is gated by the max order statistic > mean
+        let mean_unit = 1.0 + 1.5; // zeta + 1/lambda
+        let total = fout.record.total_time();
+        assert!(total > 10.0 * (mean_unit + 0.5), "total={total}");
+    }
+
+    #[test]
+    fn seeded_runs_bit_reproducible() {
+        let a = run_amb(8, 5, 7);
+        let b = run_amb(8, 5, 7);
+        for (x, y) in a.record.epochs.iter().zip(&b.record.epochs) {
+            assert_eq!(x.batch, y.batch);
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.error.to_bits(), y.error.to_bits());
+        }
+        let c = run_amb(8, 5, 8);
+        assert_ne!(
+            a.record.epochs[2].batch, c.record.epochs[2].batch,
+            "different seeds should differ (overwhelmingly likely)"
+        );
+    }
+
+    #[test]
+    fn exact_consensus_zeroes_consensus_error() {
+        let topo = Topology::paper_fig2();
+        let (src, opt) = linreg_setup(16, 5);
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 50 };
+        let cfg = RunConfig::amb("amb", 1.0, 0.2, 5, 5, 9)
+            .with_consensus(ConsensusMode::Exact);
+        let out = run(
+            &cfg,
+            &topo,
+            &strag,
+            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
+            src.f_star(),
+        );
+        for e in &out.record.epochs {
+            assert!(e.consensus_err < 1e-5, "err={}", e.consensus_err);
+        }
+    }
+
+    #[test]
+    fn more_rounds_less_consensus_error() {
+        let err_with = |rounds: usize| {
+            let out = run_amb(6, rounds, 11);
+            out.record.epochs.iter().map(|e| e.consensus_err).sum::<f64>() / 6.0
+        };
+        let e2 = err_with(2);
+        let e10 = err_with(10);
+        assert!(e10 < e2, "e2={e2} e10={e10}");
+    }
+
+    #[test]
+    fn deterministic_model_all_nodes_equal_batches() {
+        let topo = Topology::ring(6);
+        let (src, opt) = linreg_setup(8, 6);
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
+        let cfg = RunConfig::amb("amb", 2.0, 0.5, 4, 4, 13).with_node_log();
+        let out = run(
+            &cfg,
+            &topo,
+            &strag,
+            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
+            src.f_star(),
+        );
+        let log = out.node_log.unwrap();
+        for node in 0..6 {
+            assert_eq!(log.batches[node], vec![80, 80, 80, 80]);
+        }
+    }
+
+    #[test]
+    fn bt_estimation_close_to_exact() {
+        // With enough consensus rounds, normalising by the distributively
+        // estimated b̂(t) must land each node's primal within a small
+        // relative distance of the exact-b(t) run (single epoch so curves
+        // cannot drift apart).
+        let topo = Topology::paper_fig2();
+        let (src, opt) = linreg_setup(16, 8);
+        let strag = ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 50 };
+        let mk = |exact: bool| {
+            let mut cfg = RunConfig::amb("amb", 2.0, 0.5, 120, 1, 21);
+            if exact {
+                cfg = cfg.with_exact_bt();
+            }
+            run(
+                &cfg,
+                &topo,
+                &strag,
+                |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
+                src.f_star(),
+            )
+        };
+        let est = mk(false);
+        let ex = mk(true);
+        for i in 0..10 {
+            let (we, wx) = (&est.final_w[i], &ex.final_w[i]);
+            let mut diff = 0.0f64;
+            let mut norm = 0.0f64;
+            for k in 0..we.len() {
+                diff += ((we[k] - wx[k]) as f64).powi(2);
+                norm += (wx[k] as f64).powi(2);
+            }
+            assert!(
+                diff.sqrt() <= 0.02 * norm.sqrt().max(1e-9),
+                "node {i}: rel diff {}",
+                diff.sqrt() / norm.sqrt().max(1e-9)
+            );
+        }
+    }
+
+    #[test]
+    fn gossip_jitter_runs() {
+        let topo = Topology::paper_fig2();
+        let (src, opt) = linreg_setup(8, 9);
+        let strag = ShiftedExp { zeta: 0.5, lambda: 1.0, unit_batch: 30 };
+        let cfg = RunConfig::amb("amb", 2.0, 0.5, 5, 8, 31)
+            .with_consensus(ConsensusMode::GossipJitter { mean: 5, jitter: 2 });
+        let out = run(
+            &cfg,
+            &topo,
+            &strag,
+            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
+            src.f_star(),
+        );
+        assert_eq!(out.record.epochs.len(), 8);
+        assert!(out.record.epochs.last().unwrap().error.is_finite());
+    }
+}

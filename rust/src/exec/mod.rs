@@ -1,0 +1,237 @@
+//! Execution engines: how a node's gradient chunks and primal updates are
+//! actually computed.
+//!
+//! * [`NativeExec`] — pure-Rust math (model::linreg/logreg); artifact-free,
+//!   used by unit tests, pure-algorithm benches, and as a PJRT oracle.
+//! * `runtime::PjrtExec` — loads the AOT artifacts and executes via the
+//!   xla-crate PJRT CPU client (the production hot path).
+//!
+//! Both present the same [`ExecEngine`] interface so the coordinator is
+//! backend-agnostic.  Gradient *sums* accumulate into caller buffers
+//! (chunk+mask convention — DESIGN.md §1): `grad_chunk(w, n, rng, acc)`
+//! draws `n` fresh samples from the node's data distribution, adds the
+//! gradient-sum into `acc`, and returns the loss-sum.
+
+use crate::data::{LinRegStream, MnistLike};
+use crate::model::Workload;
+use crate::optim::DualAveraging;
+use crate::util::rng::Pcg64;
+
+/// A node's data distribution (shared across nodes: the paper's i.i.d. Q).
+pub enum DataSource {
+    LinReg(LinRegStream),
+    Mnist(MnistLike),
+}
+
+impl DataSource {
+    pub fn workload(&self) -> Workload {
+        match self {
+            DataSource::LinReg(s) => Workload::LinReg { d: s.d },
+            DataSource::Mnist(m) => Workload::LogReg { k: m.classes, d: m.d() },
+        }
+    }
+
+    /// Per-sample optimal loss F(w*) when known:
+    /// linreg: ½·E[η²] = ½·noise_var.  logreg: estimated externally.
+    pub fn f_star(&self) -> f64 {
+        match self {
+            DataSource::LinReg(s) => 0.5 * s.noise_std * s.noise_std,
+            DataSource::Mnist(_) => 0.0, // lower bound; cost curves still comparable
+        }
+    }
+}
+
+/// Backend-agnostic per-node compute interface.
+///
+/// Not `Send`: the PJRT client is thread-local (Rc internally), so the
+/// threaded cluster constructs one engine *inside* each node thread via a
+/// `Send + Sync` factory.
+pub trait ExecEngine {
+    /// Draw `n_samples` fresh samples, accumulate the gradient *sum* into
+    /// `acc` (len = workload.dim()) and return the loss *sum*.
+    fn grad_chunk(&mut self, w: &[f32], n_samples: usize, rng: &mut Pcg64, acc: &mut [f32])
+        -> f64;
+
+    /// Primal step w = clip_ball(−z/β(t), R) (eq. (7)); engines with a
+    /// centred h(w) = ½‖w − w₀‖² add the centre back (transformer).
+    fn primal_step(&mut self, z: &[f32], t: usize, w: &mut [f32]);
+
+    /// w(1) = argmin h(w) (paper eq. (2)): 0 for the ball-centred
+    /// regressions, the build-time init for the transformer.
+    fn initial_primal(&self) -> Vec<f32> {
+        vec![0.0; self.workload().dim()]
+    }
+
+    /// Workload executed by this engine.
+    fn workload(&self) -> Workload;
+
+    /// Workload-specific error metric at `w` (fresh-sample estimate);
+    /// NaN when the engine cannot compute one.
+    fn error_metric(&mut self, w: &[f32], rng: &mut Pcg64) -> f64;
+}
+
+/// Pure-Rust execution over a shared data source.
+pub struct NativeExec {
+    pub source: std::sync::Arc<DataSource>,
+    pub optimizer: DualAveraging,
+    // scratch buffers to keep the hot loop allocation-free
+    x_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+    label_buf: Vec<i32>,
+    grad_buf: Vec<f32>,
+    /// Samples used per error_metric estimate.
+    pub error_samples: usize,
+}
+
+impl NativeExec {
+    pub fn new(source: std::sync::Arc<DataSource>, optimizer: DualAveraging) -> NativeExec {
+        NativeExec {
+            source,
+            optimizer,
+            x_buf: Vec::new(),
+            y_buf: Vec::new(),
+            label_buf: Vec::new(),
+            grad_buf: Vec::new(),
+            error_samples: 256,
+        }
+    }
+}
+
+impl ExecEngine for NativeExec {
+    fn grad_chunk(
+        &mut self,
+        w: &[f32],
+        n_samples: usize,
+        rng: &mut Pcg64,
+        acc: &mut [f32],
+    ) -> f64 {
+        if n_samples == 0 {
+            return 0.0;
+        }
+        match &*self.source {
+            DataSource::LinReg(s) => {
+                s.sample_chunk(rng, n_samples, &mut self.x_buf, &mut self.y_buf);
+                let mask = vec![1.0f32; n_samples];
+                self.grad_buf.resize(s.d, 0.0);
+                let loss = crate::model::linreg::grad_sum(
+                    w, &self.x_buf, &self.y_buf, &mask, &mut self.grad_buf,
+                );
+                crate::util::axpy(1.0, &self.grad_buf, acc);
+                loss
+            }
+            DataSource::Mnist(m) => {
+                m.sample_chunk(rng, n_samples, &mut self.x_buf, &mut self.label_buf);
+                let mask = vec![1.0f32; n_samples];
+                self.grad_buf.resize(m.classes * m.d(), 0.0);
+                let loss = crate::model::logreg::grad_sum(
+                    w, &self.x_buf, &self.label_buf, &mask, m.classes, &mut self.grad_buf,
+                );
+                crate::util::axpy(1.0, &self.grad_buf, acc);
+                loss
+            }
+        }
+    }
+
+    fn primal_step(&mut self, z: &[f32], t: usize, w: &mut [f32]) {
+        self.optimizer.primal_step(z, t, w);
+    }
+
+    fn workload(&self) -> Workload {
+        self.source.workload()
+    }
+
+    fn error_metric(&mut self, w: &[f32], rng: &mut Pcg64) -> f64 {
+        match &*self.source {
+            DataSource::LinReg(s) => s.excess_risk(w),
+            DataSource::Mnist(m) => {
+                // fresh-sample average logistic cost (the paper's Fig. 1b
+                // y-axis).
+                let n = self.error_samples;
+                m.sample_chunk(rng, n, &mut self.x_buf, &mut self.label_buf);
+                let mask = vec![1.0f32; n];
+                self.grad_buf.resize(m.classes * m.d(), 0.0);
+                let loss = crate::model::logreg::grad_sum(
+                    w, &self.x_buf, &self.label_buf, &mask, m.classes, &mut self.grad_buf,
+                );
+                loss / n as f64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::BetaSchedule;
+    use std::sync::Arc;
+
+    fn linreg_exec(d: usize) -> NativeExec {
+        let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, 7)));
+        NativeExec::new(src, DualAveraging::new(BetaSchedule::new(1.0, 100.0), 50.0))
+    }
+
+    #[test]
+    fn grad_chunk_accumulates() {
+        let mut e = linreg_exec(8);
+        let w = vec![0.0f32; 8];
+        let mut acc = vec![0.0f32; 8];
+        let mut rng = Pcg64::new(1);
+        let l1 = e.grad_chunk(&w, 16, &mut rng, &mut acc);
+        let snapshot = acc.clone();
+        let l2 = e.grad_chunk(&w, 16, &mut rng, &mut acc);
+        assert!(l1 > 0.0 && l2 > 0.0);
+        // second call adds on top
+        assert!(acc.iter().zip(&snapshot).any(|(a, s)| a != s));
+    }
+
+    #[test]
+    fn zero_samples_noop() {
+        let mut e = linreg_exec(4);
+        let w = vec![0.0f32; 4];
+        let mut acc = vec![1.0f32; 4];
+        let mut rng = Pcg64::new(2);
+        let loss = e.grad_chunk(&w, 0, &mut rng, &mut acc);
+        assert_eq!(loss, 0.0);
+        assert_eq!(acc, vec![1.0f32; 4]);
+    }
+
+    #[test]
+    fn error_metric_linreg_is_excess_risk() {
+        let mut e = linreg_exec(4);
+        let mut rng = Pcg64::new(3);
+        let w_star = match &*e.source {
+            DataSource::LinReg(s) => s.w_star.clone(),
+            _ => unreachable!(),
+        };
+        assert_eq!(e.error_metric(&w_star, &mut rng), 0.0);
+        let w0 = vec![0.0f32; 4];
+        assert!(e.error_metric(&w0, &mut rng) > 0.0);
+    }
+
+    #[test]
+    fn mnist_error_metric_decreases_with_training() {
+        let src = Arc::new(DataSource::Mnist(MnistLike::new(4, 16, 4.0, 1.0, 9)));
+        let mut e = NativeExec::new(src, DualAveraging::new(BetaSchedule::new(1.0, 64.0), 50.0));
+        let dim = e.workload().dim();
+        let mut w = vec![0.0f32; dim];
+        let mut z = vec![0.0f32; dim];
+        let mut rng = Pcg64::new(5);
+        let err0 = e.error_metric(&w, &mut rng);
+        for t in 1..=40 {
+            let mut acc = vec![0.0f32; dim];
+            e.grad_chunk(&w.clone(), 64, &mut rng, &mut acc);
+            for j in 0..dim {
+                z[j] += acc[j] / 64.0;
+            }
+            e.primal_step(&z, t + 1, &mut w);
+        }
+        let err1 = e.error_metric(&w, &mut rng);
+        assert!(err1 < err0 * 0.7, "err0={err0} err1={err1}");
+    }
+
+    #[test]
+    fn f_star_linreg() {
+        let src = DataSource::LinReg(LinRegStream::new(4, 0));
+        assert!((src.f_star() - 0.5e-3).abs() < 1e-9);
+    }
+}

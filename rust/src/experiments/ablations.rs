@@ -1,0 +1,354 @@
+//! Ablations over the design choices DESIGN.md calls out — beyond the
+//! paper's own figures:
+//!
+//! * A1 consensus rounds r: error vs r (Lemma 1's knob) at fixed T_c cost.
+//! * A2 b(t) normalisation: consensus-estimated b̂(t) vs oracle b(t).
+//! * A3 consensus engine: dense P-matmul vs sparse neighbour-list vs
+//!   push-sum (timing + accuracy at equal rounds).
+//! * A4 baseline family: AMB vs FMB vs backup-workers vs gradient coding
+//!   under induced stragglers (the related-work comparison — AMB uses
+//!   ALL completed work, redundancy schemes pay for it).
+//! * A5 topology: time-to-target vs λ₂(P) at fixed round budget.
+
+use anyhow::Result;
+
+use super::{Ctx, FigReport};
+use crate::consensus::{push_sum::Digraph, push_sum::PushSum, sparse::SparseMix, Consensus};
+use crate::coordinator::{sim, RunConfig, Scheme};
+use crate::metrics::RunRecord;
+use crate::straggler::{InducedGroups, ShiftedExp};
+use crate::topology::Topology;
+use crate::util::csv::Csv;
+
+/// A1: consensus-round sweep.
+pub fn ablate_rounds(ctx: &Ctx) -> Result<FigReport> {
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 600 };
+    let source = super::linreg_source(ctx.seed);
+    let opt = super::optimizer_for(&source, 6000.0);
+    let epochs = ctx.scaled(16);
+
+    let mut csv = Csv::new(&["rounds", "final_error", "mean_consensus_err"]);
+    let mut errs = Vec::new();
+    for rounds in [1usize, 2, 5, 10, 20, 50] {
+        let cfg = RunConfig::amb(&format!("amb-r{rounds}"), 2.5, 0.5, rounds, epochs, ctx.seed);
+        let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
+        let rec = sim::run(&cfg, &topo, &strag, &mut *mk, source.f_star()).record;
+        let final_err = rec.epochs.last().unwrap().error;
+        let cons: f64 =
+            rec.epochs.iter().map(|e| e.consensus_err).sum::<f64>() / rec.epochs.len() as f64;
+        csv.push_nums(&[rounds as f64, final_err, cons]);
+        errs.push((rounds, final_err, cons));
+    }
+    let path = ctx.out_dir.join("ablation_rounds.csv");
+    csv.save(&path)?;
+
+    // consensus error must decay monotonically in r; optimization error
+    // should not degrade with more rounds.
+    let cons_monotone = errs.windows(2).all(|w| w[1].2 <= w[0].2 * 1.05);
+    Ok(FigReport {
+        id: "a1",
+        title: "ablation: consensus rounds r",
+        paper: "Lemma 1: more rounds ⇒ smaller ε; diminishing returns past r ≈ 5".into(),
+        measured: format!(
+            "r=1 cons-err {:.2e} → r=50 {:.2e}; final errors within {:.1}x",
+            errs[0].2,
+            errs.last().unwrap().2,
+            errs.iter().map(|e| e.1).fold(0.0f64, f64::max)
+                / errs.iter().map(|e| e.1).fold(f64::INFINITY, f64::min)
+        ),
+        shape_holds: cons_monotone,
+        outputs: vec![path],
+    })
+}
+
+/// A2: estimated vs oracle b(t).
+pub fn ablate_bt(ctx: &Ctx) -> Result<FigReport> {
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 600 };
+    let source = super::linreg_source(ctx.seed);
+    let opt = super::optimizer_for(&source, 6000.0);
+    let epochs = ctx.scaled(16);
+
+    let run = |exact: bool| -> Result<RunRecord> {
+        let mut cfg = RunConfig::amb(if exact { "bt-exact" } else { "bt-est" }, 2.5, 0.5, 8, epochs, ctx.seed);
+        if exact {
+            cfg = cfg.with_exact_bt();
+        }
+        let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
+        Ok(sim::run(&cfg, &topo, &strag, &mut *mk, source.f_star()).record)
+    };
+    let est = run(false)?;
+    let exact = run(true)?;
+    let mut csv = Csv::new(&["epoch", "err_estimated_bt", "err_exact_bt"]);
+    for (a, b) in est.epochs.iter().zip(&exact.epochs) {
+        csv.push_nums(&[a.epoch as f64, a.error, b.error]);
+    }
+    let path = ctx.out_dir.join("ablation_bt.csv");
+    csv.save(&path)?;
+
+    let ee = est.epochs.last().unwrap().error;
+    let ex = exact.epochs.last().unwrap().error;
+    Ok(FigReport {
+        id: "a2",
+        title: "ablation: consensus-estimated b̂(t) vs oracle b(t)",
+        paper: "(ours) the side-channel estimate should be free".into(),
+        measured: format!("final error est {ee:.3e} vs oracle {ex:.3e} (ratio {:.2})", ee / ex),
+        // Claim: estimation never makes things materially WORSE (being
+        // better is fine; on short, steeply-decaying error curves small
+        // normalisation differences produce large final-error ratios in
+        // either direction).
+        shape_holds: ee < ex * 10.0,
+        outputs: vec![path],
+    })
+}
+
+/// A3: consensus engine comparison (accuracy at equal rounds + relative
+/// cost measured here, timed properly in benches/hotpath.rs).
+pub fn ablate_engines(ctx: &Ctx) -> Result<FigReport> {
+    let topo = Topology::paper_fig2();
+    let n = topo.n();
+    let d = 512usize;
+    let mut g = crate::prop::Gen::new(ctx.seed);
+    let msgs0: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 2.0)).collect();
+    let avg = Consensus::exact_average(&msgs0);
+    let rounds = 20;
+
+    let mut dense = Consensus::new(topo.metropolis().lazy());
+    let mut a = msgs0.clone();
+    let t0 = std::time::Instant::now();
+    dense.run(&mut a, rounds);
+    let t_dense = t0.elapsed().as_secs_f64();
+    let e_dense = Consensus::max_error(&a, &avg);
+
+    let sp = SparseMix::metropolis(&topo, true);
+    let mut b = msgs0.clone();
+    let mut scratch = Vec::new();
+    let t0 = std::time::Instant::now();
+    sp.run(&mut b, &mut scratch, rounds);
+    let t_sparse = t0.elapsed().as_secs_f64();
+    let e_sparse = Consensus::max_error(&b, &avg);
+
+    let mut ps = PushSum::new(Digraph::from_undirected(&topo), msgs0.clone());
+    let t0 = std::time::Instant::now();
+    ps.run(rounds);
+    let t_push = t0.elapsed().as_secs_f64();
+    let e_push = ps.max_error(&avg);
+
+    let mut csv = Csv::new(&["engine", "rounds", "max_error", "seconds"]);
+    csv.push(&["dense".into(), rounds.to_string(), format!("{e_dense:e}"), format!("{t_dense:e}")]);
+    csv.push(&["sparse".into(), rounds.to_string(), format!("{e_sparse:e}"), format!("{t_sparse:e}")]);
+    csv.push(&["push_sum".into(), rounds.to_string(), format!("{e_push:e}"), format!("{t_push:e}")]);
+    let path = ctx.out_dir.join("ablation_engines.csv");
+    csv.save(&path)?;
+
+    Ok(FigReport {
+        id: "a3",
+        title: "ablation: dense vs sparse vs push-sum consensus",
+        paper: "(ours) same contraction; sparse pays O(|E|d) not O(n²d)".into(),
+        measured: format!(
+            "err@{rounds}r dense {e_dense:.2e} sparse {e_sparse:.2e} push {e_push:.2e}; \
+             time dense {:.0}µs sparse {:.0}µs push {:.0}µs",
+            t_dense * 1e6, t_sparse * 1e6, t_push * 1e6
+        ),
+        shape_holds: (e_dense - e_sparse).abs() < 1e-3 && e_push < e_dense * 10.0 + 1e-3,
+        outputs: vec![path],
+    })
+}
+
+/// A4: AMB vs the redundancy baselines under induced stragglers.
+pub fn ablate_baselines(ctx: &Ctx) -> Result<FigReport> {
+    let topo = Topology::paper_fig2();
+    let strag = InducedGroups::paper_i3();
+    let source = super::mnist_source(ctx.seed);
+    let opt = super::optimizer_for(&source, 5850.0);
+    let epochs = ctx.scaled(24);
+
+    let schemes: Vec<(&str, Scheme)> = vec![
+        ("amb", Scheme::Amb { t_compute: 12.0, t_consensus: 3.0 }),
+        ("fmb", Scheme::Fmb { per_node_batch: 585, t_consensus: 3.0 }),
+        (
+            "fmb-backup2",
+            Scheme::FmbBackup { per_node_batch: 585, t_consensus: 3.0, ignore: 2, coded: false },
+        ),
+        (
+            "fmb-coded2",
+            Scheme::FmbBackup { per_node_batch: 585, t_consensus: 3.0, ignore: 2, coded: true },
+        ),
+    ];
+    let mut csv = Csv::new(&["scheme", "total_time", "total_samples", "final_error"]);
+    let mut recs = Vec::new();
+    for (name, scheme) in schemes {
+        let cfg = RunConfig {
+            name: name.into(),
+            scheme,
+            consensus: crate::coordinator::ConsensusMode::Gossip { rounds: 5 },
+            epochs,
+            seed: ctx.seed,
+            exact_bt: false,
+            record_node_log: false,
+        };
+        let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
+        let rec = sim::run(&cfg, &topo, &strag, &mut *mk, source.f_star()).record;
+        csv.push(&[
+            name.to_string(),
+            format!("{:.1}", rec.total_time()),
+            rec.total_samples().to_string(),
+            format!("{:.4e}", rec.epochs.last().unwrap().error),
+        ]);
+        recs.push(rec);
+    }
+    let path = ctx.out_dir.join("ablation_baselines.csv");
+    csv.save(&path)?;
+
+    // AMB should dominate on time-to-target: compute the common target.
+    let target = recs
+        .iter()
+        .map(|r| r.epochs.last().unwrap().error)
+        .fold(0.0f64, f64::max)
+        * 1.5;
+    let times: Vec<Option<f64>> = recs.iter().map(|r| r.time_to_error(target)).collect();
+    let amb_t = times[0].unwrap_or(f64::INFINITY);
+    let best_other = times[1..]
+        .iter()
+        .map(|t| t.unwrap_or(f64::INFINITY))
+        .fold(f64::INFINITY, f64::min);
+    Ok(FigReport {
+        id: "a4",
+        title: "ablation: AMB vs FMB vs backup workers vs gradient coding",
+        paper: "related work: AMB uses all completed work; redundancy schemes discard or duplicate".into(),
+        measured: format!(
+            "time-to-error({target:.3}): amb {amb_t:.0}s vs best-redundancy {best_other:.0}s ({:.2}x)",
+            best_other / amb_t
+        ),
+        shape_holds: amb_t < best_other,
+        outputs: vec![path],
+    })
+}
+
+/// A5: topology sweep — λ₂ vs achieved consensus error in the full loop.
+pub fn ablate_topology(ctx: &Ctx) -> Result<FigReport> {
+    let strag = ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 200 };
+    let source = super::linreg_source(ctx.seed);
+    let opt = super::optimizer_for(&source, 2000.0);
+    let epochs = ctx.scaled(10);
+
+    let topos: Vec<(&str, Topology)> = vec![
+        ("ring", Topology::ring(10)),
+        ("paper_fig2", Topology::paper_fig2()),
+        ("erdos_p0.4", Topology::erdos_connected(10, 0.4, 3)),
+        ("complete", Topology::complete(10)),
+    ];
+    let mut csv = Csv::new(&["topology", "lambda2", "mean_consensus_err", "final_error"]);
+    let mut rows = Vec::new();
+    for (name, topo) in &topos {
+        let l2 = topo.metropolis().lazy().lambda2();
+        let cfg = RunConfig::amb(name, 2.0, 0.5, 5, epochs, ctx.seed);
+        let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
+        let rec = sim::run(&cfg, topo, &strag, &mut *mk, source.f_star()).record;
+        let cons: f64 =
+            rec.epochs.iter().map(|e| e.consensus_err).sum::<f64>() / rec.epochs.len() as f64;
+        csv.push(&[
+            name.to_string(),
+            format!("{l2:.4}"),
+            format!("{cons:.4e}"),
+            format!("{:.4e}", rec.epochs.last().unwrap().error),
+        ]);
+        rows.push((l2, cons));
+    }
+    let path = ctx.out_dir.join("ablation_topology.csv");
+    csv.save(&path)?;
+
+    // Smaller λ₂ ⇒ smaller consensus error (rank agreement).
+    let mut sorted = rows.clone();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let rank_ok = sorted.windows(2).all(|w| w[0].1 <= w[1].1 * 1.5);
+    Ok(FigReport {
+        id: "a5",
+        title: "ablation: topology λ₂ vs consensus error",
+        paper: "Lemma 1: contraction rate is λ₂(P)".into(),
+        measured: rows
+            .iter()
+            .zip(&topos)
+            .map(|((l2, c), (n, _))| format!("{n}: λ₂={l2:.3} err={c:.1e}"))
+            .collect::<Vec<_>>()
+            .join("; "),
+        shape_holds: rank_ok,
+        outputs: vec![path],
+    })
+}
+
+/// Run all ablations.
+pub fn run_all(ctx: &Ctx) -> Result<Vec<FigReport>> {
+    Ok(vec![
+        ablate_rounds(ctx)?,
+        ablate_bt(ctx)?,
+        ablate_engines(ctx)?,
+        ablate_baselines(ctx)?,
+        ablate_topology(ctx)?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn ablations_quick_all_hold() {
+        let dir = std::env::temp_dir().join("amb_ablations_test");
+        let ctx = Ctx::native(&dir).quick();
+        for rep in run_all(&ctx).unwrap() {
+            assert!(rep.shape_holds, "{rep}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn backup_scheme_drops_straggler_work() {
+        // backup (non-coded) processes fewer samples than plain FMB in
+        // the same epochs; coded keeps the full batch.
+        let dir = std::env::temp_dir().join("amb_backup_test");
+        let ctx = Ctx::native(Path::new(&dir)).quick();
+        let topo = Topology::paper_fig2();
+        let strag = InducedGroups::paper_i3();
+        let source = super::super::mnist_source(1);
+        let opt = super::super::optimizer_for(&source, 5850.0);
+        let run_scheme = |scheme: Scheme| {
+            let cfg = RunConfig {
+                name: "x".into(),
+                scheme,
+                consensus: crate::coordinator::ConsensusMode::Gossip { rounds: 3 },
+                epochs: 4,
+                seed: 5,
+                exact_bt: false,
+                record_node_log: false,
+            };
+            let mut mk = ctx.engine_factory(source.clone(), opt.clone()).unwrap();
+            sim::run(&cfg, &topo, &strag, &mut *mk, source.f_star()).record
+        };
+        let fmb = run_scheme(Scheme::Fmb { per_node_batch: 100, t_consensus: 1.0 });
+        let backup = run_scheme(Scheme::FmbBackup {
+            per_node_batch: 100,
+            t_consensus: 1.0,
+            ignore: 3,
+            coded: false,
+        });
+        let coded = run_scheme(Scheme::FmbBackup {
+            per_node_batch: 100,
+            t_consensus: 1.0,
+            ignore: 3,
+            coded: true,
+        });
+        assert!(backup.total_samples() < fmb.total_samples());
+        assert_eq!(fmb.total_samples(), 4 * 1000);
+        // coded keeps the whole batch up to integer-division rounding of
+        // the per-survivor attribution (≤ n samples per epoch).
+        assert!((coded.total_samples() as i64 - 4 * 1000).abs() <= 4 * 10, "{}", coded.total_samples());
+        // both mitigations finish epochs faster than vanilla FMB
+        assert!(backup.total_time() < fmb.total_time());
+        // coded pays more per-node work so it is slower than backup
+        assert!(coded.total_time() > backup.total_time());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,218 @@
+//! Per-figure experiment harnesses: one function per table/figure in the
+//! paper's evaluation (DESIGN.md §4 maps each id to its modules).
+//!
+//! Every harness writes CSV series into `results/` and returns a
+//! [`FigReport`] with the paper's expected shape vs our measured numbers;
+//! `amb figures --fig all` regenerates everything, and each `cargo bench`
+//! target wraps the corresponding harness.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod thm7;
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::{LinRegStream, MnistLike};
+use crate::exec::{DataSource, ExecEngine, NativeExec};
+use crate::optim::{BetaSchedule, DualAveraging};
+use crate::runtime::{PjrtExec, PjrtRuntime};
+
+/// Which execution backend figure runs use.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Pure-Rust math (fast, artifact-free).
+    Native,
+    /// PJRT artifacts from this directory (the production path; workload
+    /// sizes must match the manifest).
+    Pjrt(PathBuf),
+}
+
+/// Shared context for all harnesses.
+pub struct Ctx {
+    pub backend: Backend,
+    pub out_dir: PathBuf,
+    /// Reduced epochs/paths for bench wrappers.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn native(out_dir: &Path) -> Ctx {
+        Ctx { backend: Backend::Native, out_dir: out_dir.to_path_buf(), quick: false, seed: 42 }
+    }
+
+    pub fn quick(mut self) -> Ctx {
+        self.quick = true;
+        self
+    }
+
+    /// Scale an epoch/path count down in quick mode.
+    pub fn scaled(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 4).max(2)
+        } else {
+            full
+        }
+    }
+
+    /// Build an engine factory for a workload (shared data distribution,
+    /// per-node engines).  PJRT backend shares one runtime across the
+    /// (single-threaded) simulator's engines.
+    pub fn engine_factory(
+        &self,
+        source: Arc<DataSource>,
+        optimizer: DualAveraging,
+    ) -> Result<Box<dyn FnMut(usize) -> Box<dyn ExecEngine>>> {
+        match &self.backend {
+            Backend::Native => {
+                let f = move |_i: usize| -> Box<dyn ExecEngine> {
+                    Box::new(NativeExec::new(source.clone(), optimizer.clone()))
+                };
+                Ok(Box::new(f))
+            }
+            Backend::Pjrt(dir) => {
+                let rt = Rc::new(PjrtRuntime::load(dir)?);
+                let f = move |_i: usize| -> Box<dyn ExecEngine> {
+                    Box::new(
+                        PjrtExec::new(rt.clone(), source.clone(), optimizer.clone())
+                            .expect("PjrtExec init (artifact sizes must match workload)"),
+                    )
+                };
+                Ok(Box::new(f))
+            }
+        }
+    }
+}
+
+/// One figure's verdict: measured numbers vs the paper's claimed shape.
+#[derive(Debug, Clone)]
+pub struct FigReport {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// What the paper reports (qualitative shape / factor).
+    pub paper: String,
+    /// What we measured.
+    pub measured: String,
+    /// Did the qualitative shape hold?
+    pub shape_holds: bool,
+    /// CSV files written.
+    pub outputs: Vec<PathBuf>,
+}
+
+impl std::fmt::Display for FigReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "[{}] {}", self.id, self.title)?;
+        writeln!(f, "  paper:    {}", self.paper)?;
+        writeln!(f, "  measured: {}", self.measured)?;
+        writeln!(f, "  shape:    {}", if self.shape_holds { "HOLDS" } else { "DIVERGES" })?;
+        for o in &self.outputs {
+            writeln!(f, "  -> {}", o.display())?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload builders shared across figures
+// ---------------------------------------------------------------------------
+
+/// Linear-regression workload matching the default artifact sizes
+/// (d = 1024; the paper uses d = 10⁵ — the AMB-vs-FMB comparison is
+/// dimension-independent, see DESIGN.md §2).
+pub fn linreg_source(seed: u64) -> Arc<DataSource> {
+    Arc::new(DataSource::LinReg(LinRegStream::new(1024, seed)))
+}
+
+/// MNIST-shaped logistic-regression workload (10 × 785).
+pub fn mnist_source(seed: u64) -> Arc<DataSource> {
+    Arc::new(DataSource::Mnist(MnistLike::mnist_shaped(seed)))
+}
+
+/// Dual-averaging setup for a workload: β(t) = K + √(t/μ) with μ set to
+/// the expected global per-epoch batch and a radius generous enough to
+/// contain the optimum.
+pub fn optimizer_for(source: &DataSource, expected_batch: f64) -> DualAveraging {
+    match source {
+        DataSource::LinReg(s) => {
+            // E‖w*‖ ≈ √d; K for least squares ≈ λmax(E xxᵀ) = 1.
+            DualAveraging::new(BetaSchedule::new(1.0, expected_batch), 4.0 * (s.d as f64).sqrt())
+        }
+        DataSource::Mnist(m) => {
+            let dim = (m.classes * m.d()) as f64;
+            DualAveraging::new(BetaSchedule::new(1.0, expected_batch), 4.0 * dim.sqrt())
+        }
+    }
+}
+
+/// Run every figure harness; returns reports in paper order.
+pub fn run_all(ctx: &Ctx) -> Result<Vec<FigReport>> {
+    Ok(vec![
+        fig1::fig1a(ctx)?,
+        fig1::fig1b(ctx)?,
+        fig3::fig3(ctx)?,
+        fig4::fig4(ctx)?,
+        fig5::fig5(ctx)?,
+        fig6::fig6(ctx)?,
+        fig7::fig7(ctx)?,
+        fig8::fig8(ctx)?,
+        fig8::fig9(ctx)?,
+        thm7::thm7(ctx)?,
+    ])
+}
+
+/// Run one figure by id ("f1a", "f1b", "f3", ... "thm7").
+pub fn run_one(ctx: &Ctx, id: &str) -> Result<FigReport> {
+    match id {
+        "f1a" => fig1::fig1a(ctx),
+        "f1b" => fig1::fig1b(ctx),
+        "f3" => fig3::fig3(ctx),
+        "f4" => fig4::fig4(ctx),
+        "f5" => fig5::fig5(ctx),
+        "f6" => fig6::fig6(ctx),
+        "f7" => fig7::fig7(ctx),
+        "f8" => fig8::fig8(ctx),
+        "f9" => fig8::fig9(ctx),
+        "thm7" => thm7::thm7(ctx),
+        other => anyhow::bail!("unknown figure id '{other}' (try f1a f1b f3 f4 f5 f6 f7 f8 f9 thm7)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_scaling() {
+        let c = Ctx::native(Path::new("/tmp/r"));
+        assert_eq!(c.scaled(20), 20);
+        let q = c.quick();
+        assert_eq!(q.scaled(20), 5);
+        assert_eq!(q.scaled(4), 2);
+    }
+
+    #[test]
+    fn run_one_rejects_unknown() {
+        let ctx = Ctx::native(Path::new("/tmp/amb_results_test"));
+        assert!(run_one(&ctx, "bogus").is_err());
+    }
+
+    #[test]
+    fn optimizer_radius_contains_linreg_optimum() {
+        let src = linreg_source(1);
+        let opt = optimizer_for(&src, 6000.0);
+        if let DataSource::LinReg(s) = &*src {
+            let norm = crate::util::norm2(&s.w_star) as f64;
+            assert!(opt.radius > norm, "radius {} vs ‖w*‖ {}", opt.radius, norm);
+        }
+    }
+}

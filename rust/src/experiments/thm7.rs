@@ -1,0 +1,160 @@
+//! Theorem 7 / Lemma 6 / App. H: wall-time speedup of AMB over FMB as a
+//! function of cluster size n — pure timing simulation (no learning).
+//!
+//! With T = (1 + n/b)·μ:
+//!   Lemma 6:   E[b(t)] ≥ b                      (AMB batch at least FMB's)
+//!   Thm 7:     S_F ≤ (1 + (σ/μ)√(n−1))·S_A      (any distribution)
+//!   App. H:    S_F/S_A → log(n)/(1 + λζ)        (shifted exponential)
+
+use anyhow::Result;
+
+use super::{Ctx, FigReport};
+use crate::straggler::{ShiftedExp, StragglerModel};
+use crate::util::csv::Csv;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+/// Empirical epoch-time ratio S_F/S_A for n nodes under a model.
+pub struct SpeedupPoint {
+    pub n: usize,
+    pub measured: f64,
+    pub thm7_bound: f64,
+    pub shifted_exp_analytic: f64,
+    pub mean_amb_batch: f64,
+    pub fmb_batch: f64,
+}
+
+/// Simulate `epochs` epochs for both schemes and return the ratio point.
+pub fn speedup_for_n(
+    model: &ShiftedExp,
+    n: usize,
+    per_node_batch: usize,
+    epochs: usize,
+    seed: u64,
+) -> SpeedupPoint {
+    assert_eq!(
+        per_node_batch, model.unit_batch,
+        "FMB per-node quota must equal the model's unit batch (paper setup)"
+    );
+    let m = model.unit_moments().unwrap();
+    let b = (per_node_batch * n) as f64;
+    // Lemma 6 compute-time choice.
+    let t_amb = (1.0 + n as f64 / b) * m.mean;
+    let mut rng = Pcg64::new(seed);
+
+    let mut s_f = 0.0f64; // total FMB compute time
+    let mut amb_batches = Vec::with_capacity(epochs);
+    for t in 0..epochs {
+        let mut slowest = 0.0f64;
+        let mut b_amb = 0usize;
+        for i in 0..n {
+            // Paper Assumption 2 (linear progress) is what EpochProfile
+            // implements: per-grad speed = T_i / unit_batch.
+            let mut prof_f = model.draw(i, t, &mut rng);
+            slowest = slowest.max(prof_f.time_for_grads(per_node_batch));
+            let mut prof_a = model.draw(i, t, &mut rng);
+            b_amb += prof_a.grads_in_time(t_amb);
+        }
+        s_f += slowest;
+        amb_batches.push(b_amb as f64);
+    }
+    let s_a = epochs as f64 * t_amb;
+    SpeedupPoint {
+        n,
+        measured: s_f / s_a,
+        thm7_bound: 1.0 + (m.stddev / m.mean) * ((n - 1) as f64).sqrt(),
+        shifted_exp_analytic: (stats::shifted_exp_expected_max(model.zeta, 1.0 / (m.mean - model.zeta), n))
+            / m.mean,
+        mean_amb_batch: stats::mean(&amb_batches),
+        fmb_batch: b,
+    }
+}
+
+pub fn thm7(ctx: &Ctx) -> Result<FigReport> {
+    let model = ShiftedExp::paper_i2(); // zeta=1, lambda=2/3, unit 600
+    let epochs = ctx.scaled(400);
+    let ns = [2usize, 5, 10, 20, 50, 100];
+
+    let mut csv = Csv::new(&[
+        "n", "speedup_measured", "thm7_bound", "shifted_exp_analytic",
+        "mean_amb_batch", "fmb_batch",
+    ]);
+    let mut points = Vec::new();
+    for (idx, &n) in ns.iter().enumerate() {
+        let p = speedup_for_n(&model, n, 600, epochs, ctx.seed + idx as u64);
+        csv.push_nums(&[
+            p.n as f64,
+            p.measured,
+            p.thm7_bound,
+            p.shifted_exp_analytic,
+            p.mean_amb_batch,
+            p.fmb_batch,
+        ]);
+        points.push(p);
+    }
+    let path = ctx.out_dir.join("thm7_speedup.csv");
+    csv.save(&path)?;
+
+    // Shapes: (a) measured speedup grows with n; (b) bounded by Thm 7;
+    // (c) Lemma 6: mean AMB batch >= FMB batch (within MC noise);
+    // (d) tracks the shifted-exp log(n) analytic form.
+    let monotone = points.windows(2).all(|w| w[1].measured >= w[0].measured * 0.98);
+    let bounded = points.iter().all(|p| p.measured <= p.thm7_bound * 1.02);
+    let lemma6 = points.iter().all(|p| p.mean_amb_batch >= p.fmb_batch * 0.98);
+    let tracks = points
+        .iter()
+        .all(|p| (p.measured / p.shifted_exp_analytic - 1.0).abs() < 0.15);
+
+    let last = points.last().unwrap();
+    Ok(FigReport {
+        id: "thm7",
+        title: "wall-time speedup vs n (Lemma 6, Thm 7, App. H)",
+        paper: "S_F ≤ (1+σ/μ·√(n−1))·S_A; Θ(log n) for shifted-exp; E[b_AMB] ≥ b".into(),
+        measured: format!(
+            "n=100: measured {:.2}x ≤ bound {:.2}x; analytic {:.2}x; monotone={monotone} lemma6={lemma6} tracks_logn={tracks}",
+            last.measured, last.thm7_bound, last.shifted_exp_analytic
+        ),
+        shape_holds: monotone && bounded && lemma6 && tracks,
+        outputs: vec![path],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lemma6_expected_batch_at_least_b() {
+        let model = ShiftedExp::paper_i2();
+        let p = speedup_for_n(&model, 10, 600, 400, 3);
+        assert!(p.mean_amb_batch >= p.fmb_batch * 0.98,
+                "E[b]={} b={}", p.mean_amb_batch, p.fmb_batch);
+    }
+
+    #[test]
+    fn thm7_bound_respected() {
+        let model = ShiftedExp::paper_i2();
+        for n in [2, 10, 50] {
+            let p = speedup_for_n(&model, n, 600, 300, 7);
+            assert!(p.measured <= p.thm7_bound * 1.02,
+                    "n={n}: {} > {}", p.measured, p.thm7_bound);
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_n() {
+        let model = ShiftedExp::paper_i2();
+        let s2 = speedup_for_n(&model, 2, 600, 400, 11).measured;
+        let s50 = speedup_for_n(&model, 50, 600, 400, 11).measured;
+        assert!(s50 > s2, "s2={s2} s50={s50}");
+    }
+
+    #[test]
+    fn fig_thm7_quick() {
+        let dir = std::env::temp_dir().join("amb_thm7_test");
+        let ctx = Ctx::native(&dir).quick();
+        let rep = thm7(&ctx).unwrap();
+        assert!(rep.shape_holds, "{rep}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

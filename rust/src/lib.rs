@@ -1,0 +1,47 @@
+//! # anytime-mb
+//!
+//! Production-grade reproduction of **"Anytime Minibatch: Exploiting
+//! Stragglers in Online Distributed Optimization"** (Ferdinand, Al-Lawati,
+//! Draper, Nokleby — ICLR 2019) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the coordinator: AMB/FMB epoch schedulers, a
+//!   discrete-event cluster simulator and a real threaded cluster,
+//!   averaging consensus over arbitrary topologies, dual averaging,
+//!   straggler models, metrics, and per-figure experiment harnesses.
+//! * **L2/L1 (python/compile, build-time only)** — JAX compute graphs
+//!   calling Pallas kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **Runtime bridge** — [`runtime`] loads the artifacts through the
+//!   xla-crate PJRT CPU client; Python never runs on the request path.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench_harness;
+pub mod config;
+pub mod consensus;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod prop;
+pub mod runtime;
+pub mod straggler;
+pub mod topology;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Default results directory for figure CSVs.
+pub const RESULTS_DIR: &str = "results";
+
+/// Resolve the artifacts directory: $AMB_ARTIFACTS, else ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("AMB_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(ARTIFACTS_DIR))
+}

@@ -1,0 +1,327 @@
+//! `amb` — CLI for the Anytime Minibatch reproduction.
+//!
+//! Subcommands:
+//!   figures   regenerate paper figures (CSV into results/) and print the
+//!             paper-vs-measured report
+//!   run       one AMB or FMB simulation with explicit parameters
+//!   train     end-to-end threaded AMB run (transformer LM via PJRT
+//!             artifacts, or native linreg)
+//!   info      artifact manifest + topology diagnostics
+//!
+//! Examples:
+//!   amb figures --fig all
+//!   amb figures --fig f1a --pjrt
+//!   amb run --scheme amb --workload linreg --nodes 10 --epochs 25 \
+//!       --t-compute 14.5 --t-consensus 4.5 --rounds 5 --out run.csv
+//!   amb train --epochs 40 --t-compute 0.5 --t-consensus 0.2
+//!   amb info
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use anytime_mb::coordinator::{sim, threaded, RunConfig};
+use anytime_mb::experiments::{self, Backend, Ctx};
+use anytime_mb::straggler::{InducedGroups, PauseModel, ShiftedExp};
+use anytime_mb::topology::Topology;
+use anytime_mb::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let res = match args.subcommand() {
+        Some("figures") => cmd_figures(&args),
+        Some("ablations") => cmd_ablations(&args),
+        Some("run") => cmd_run(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            return ExitCode::from(2);
+        }
+    };
+    match res {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "amb — Anytime Minibatch (ICLR 2019) reproduction\n\
+         \n\
+         usage: amb <figures|run|train|info> [options]\n\
+         \n\
+         figures --fig <id|all> [--out-dir results] [--pjrt] [--quick] [--seed N]\n\
+         run     --scheme <amb|fmb> --workload <linreg|logreg> [--nodes N]\n\
+         \u{20}       [--epochs N] [--t-compute S] [--t-consensus S] [--rounds R]\n\
+         \u{20}       [--per-node-batch B] [--straggler <shiftedexp|induced|pause|none>]\n\
+         \u{20}       [--pjrt] [--seed N] [--out FILE.csv]\n\
+         train   [--workload <transformer|linreg>] [--nodes N] [--epochs N]\n\
+         \u{20}       [--t-compute S] [--t-consensus S] [--grad-chunk C]\n\
+         \u{20}       [--slowdown f1,f2,...] [--artifacts DIR] [--out FILE.csv]\n\
+         info    [--artifacts DIR]"
+    );
+}
+
+fn backend(args: &Args) -> Backend {
+    if args.flag("pjrt") {
+        Backend::Pjrt(
+            args.get("artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(anytime_mb::artifacts_dir),
+        )
+    } else {
+        Backend::Native
+    }
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let out_dir = std::path::PathBuf::from(args.str_or("out-dir", anytime_mb::RESULTS_DIR));
+    std::fs::create_dir_all(&out_dir)?;
+    let mut ctx = Ctx::native(&out_dir);
+    ctx.backend = backend(args);
+    ctx.seed = args.u64_or("seed", 42)?;
+    if args.flag("quick") {
+        ctx = ctx.quick();
+    }
+    let fig = args.str_or("fig", "all");
+    let reports = if fig == "all" {
+        experiments::run_all(&ctx)?
+    } else {
+        vec![experiments::run_one(&ctx, fig)?]
+    };
+    let mut bad = 0;
+    for r in &reports {
+        println!("{r}");
+        bad += (!r.shape_holds) as usize;
+    }
+    println!(
+        "{}/{} figures reproduce the paper's shape",
+        reports.len() - bad,
+        reports.len()
+    );
+    anyhow::ensure!(bad == 0, "{bad} figure(s) diverged from the paper's shape");
+    Ok(())
+}
+
+fn cmd_ablations(args: &Args) -> anyhow::Result<()> {
+    let out_dir = std::path::PathBuf::from(args.str_or("out-dir", anytime_mb::RESULTS_DIR));
+    std::fs::create_dir_all(&out_dir)?;
+    let mut ctx = Ctx::native(&out_dir);
+    ctx.backend = backend(args);
+    ctx.seed = args.u64_or("seed", 42)?;
+    if args.flag("quick") {
+        ctx = ctx.quick();
+    }
+    let reports = experiments::ablations::run_all(&ctx)?;
+    let mut bad = 0;
+    for r in &reports {
+        println!("{r}");
+        bad += (!r.shape_holds) as usize;
+    }
+    anyhow::ensure!(bad == 0, "{bad} ablation(s) diverged");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let nodes = args.usize_or("nodes", 10)?;
+    let epochs = args.usize_or("epochs", 20)?;
+    let rounds = args.usize_or("rounds", 5)?;
+    let t_compute = args.f64_or("t-compute", 14.5)?;
+    let t_consensus = args.f64_or("t-consensus", 4.5)?;
+    let per_node_batch = args.usize_or("per-node-batch", 600)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let topo = if nodes == 10 {
+        Topology::paper_fig2()
+    } else {
+        Topology::erdos_connected(nodes, 0.3, seed ^ 0x70)
+    };
+
+    let source = match args.str_or("workload", "linreg") {
+        "linreg" => experiments::linreg_source(seed),
+        "logreg" => experiments::mnist_source(seed),
+        other => anyhow::bail!("unknown workload '{other}'"),
+    };
+
+    let strag: Box<dyn anytime_mb::straggler::StragglerModel> =
+        match args.str_or("straggler", "shiftedexp") {
+            "shiftedexp" => Box::new(ShiftedExp {
+                zeta: args.f64_or("zeta", 1.0)?,
+                lambda: args.f64_or("lambda", 2.0 / 3.0)?,
+                unit_batch: per_node_batch,
+            }),
+            "induced" => Box::new(InducedGroups::paper_i3()),
+            "pause" => Box::new(PauseModel::paper_i4()),
+            "none" => Box::new(anytime_mb::straggler::Deterministic {
+                unit_time: args.f64_or("unit-time", 1.0)?,
+                unit_batch: per_node_batch,
+            }),
+            other => anyhow::bail!("unknown straggler model '{other}'"),
+        };
+
+    let expected_batch = (nodes * per_node_batch) as f64;
+    let opt = experiments::optimizer_for(&source, expected_batch);
+    let cfg = match args.str_or("scheme", "amb") {
+        "amb" => RunConfig::amb("amb", t_compute, t_consensus, rounds, epochs, seed),
+        "fmb" => RunConfig::fmb("fmb", per_node_batch, t_consensus, rounds, epochs, seed),
+        other => anyhow::bail!("unknown scheme '{other}'"),
+    };
+
+    let ctx = Ctx { backend: backend(args), out_dir: ".".into(), quick: false, seed };
+    let mut mk = ctx.engine_factory(source.clone(), opt)?;
+    let out = sim::run(&cfg, &topo, &*strag, &mut *mk, source.f_star());
+
+    println!(
+        "{:<6} {:>10} {:>8} {:>12} {:>12} {:>12}",
+        "epoch", "wall_time", "batch", "loss", "error", "cons_err"
+    );
+    for e in &out.record.epochs {
+        println!(
+            "{:<6} {:>10.2} {:>8} {:>12.5e} {:>12.5e} {:>12.3e}",
+            e.epoch, e.wall_time, e.batch, e.loss, e.error, e.consensus_err
+        );
+    }
+    println!("summary: {}", out.record.summary_json());
+    if let Some(path) = args.get("out") {
+        out.record.save_csv(Path::new(path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let epochs = args.usize_or("epochs", 30)?;
+    let t_compute = args.f64_or("t-compute", 0.5)?;
+    let t_consensus = args.f64_or("t-consensus", 0.2)?;
+    let seed = args.u64_or("seed", 42)?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let grad_chunk = args.usize_or("grad-chunk", 8)?;
+    let slowdown: Vec<f64> = args
+        .get("slowdown")
+        .map(|s| s.split(',').map(|v| v.parse().unwrap_or(1.0)).collect())
+        .unwrap_or_default();
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(anytime_mb::artifacts_dir);
+
+    let topo = Topology::ring(nodes.max(2));
+    let cfg = threaded::ThreadedConfig {
+        name: "amb-train".into(),
+        t_compute,
+        t_consensus,
+        epochs,
+        seed,
+        grad_chunk,
+        slowdown,
+    };
+
+    let workload = args.str_or("workload", "transformer").to_string();
+    let out = match workload.as_str() {
+        "transformer" => {
+            use anytime_mb::data::TokenStream;
+            use anytime_mb::optim::{BetaSchedule, DualAveraging};
+            use anytime_mb::runtime::{PjrtRuntime, TransformerExec};
+            use std::rc::Rc;
+            use std::sync::Arc;
+
+            // Probe the manifest once for sizes (threads re-load privately).
+            let probe = anytime_mb::runtime::Manifest::load(&artifacts)?;
+            println!(
+                "transformer: {} params, vocab {}, seq {}, artifact batch {}",
+                probe.transformer.param_count,
+                probe.transformer.vocab,
+                probe.transformer.seq_len,
+                probe.transformer.batch
+            );
+            let tokens = Arc::new(TokenStream::new(probe.transformer.vocab, seed ^ 0x70_6B));
+            let dir = artifacts.clone();
+            let opt = DualAveraging::new(
+                BetaSchedule::new(args.f64_or("beta-k", 1.0)?, args.f64_or("beta-mu", 50.0)?),
+                args.f64_or("radius", 1000.0)?,
+            );
+            threaded::run_amb(
+                &cfg,
+                &topo,
+                move |_i| {
+                    let rt = Rc::new(PjrtRuntime::load(&dir).expect("load artifacts"));
+                    Box::new(
+                        TransformerExec::new(rt, tokens.clone(), opt.clone())
+                            .expect("transformer exec"),
+                    )
+                },
+                0.0,
+            )
+        }
+        "linreg" => {
+            use anytime_mb::exec::NativeExec;
+            let source = experiments::linreg_source(seed);
+            let opt = experiments::optimizer_for(&source, 5000.0);
+            let f_star = source.f_star();
+            threaded::run_amb(
+                &cfg,
+                &topo,
+                move |_i| Box::new(NativeExec::new(source.clone(), opt.clone())),
+                f_star,
+            )
+        }
+        other => anyhow::bail!("unknown train workload '{other}'"),
+    };
+
+    println!(
+        "{:<6} {:>10} {:>8} {:>14} {:>12}",
+        "epoch", "wall_time", "batch", "loss/sample", "error"
+    );
+    for e in &out.record.epochs {
+        println!(
+            "{:<6} {:>10.2} {:>8} {:>14.5} {:>12.5}",
+            e.epoch, e.wall_time, e.batch, e.loss, e.error
+        );
+    }
+    if let Some(path) = args.get("out") {
+        out.record.save_csv(Path::new(path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let topo = Topology::paper_fig2();
+    let p = topo.metropolis();
+    println!(
+        "paper Fig-2 topology: n={} edges={} diameter={}",
+        topo.n(),
+        topo.edge_count(),
+        topo.diameter()
+    );
+    println!("  lambda2(P) = {:.4} (paper: 0.888)", p.lambda2());
+    println!("  lambda2(lazy P) = {:.4}", p.lazy().lambda2());
+
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(anytime_mb::artifacts_dir);
+    match anytime_mb::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "artifacts @ {}: {} entries (small={})",
+                dir.display(),
+                m.entries.len(),
+                m.small
+            );
+            for (name, e) in &m.entries {
+                println!(
+                    "  {name}: {} inputs, {} outputs, file {}",
+                    e.inputs.len(),
+                    e.outputs.len(),
+                    e.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+        }
+        Err(e) => println!("artifacts @ {}: unavailable ({e})", dir.display()),
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Run metrics: per-epoch records, regret accounting, CSV/JSON export.
+//!
+//! The figures plot error (or cost) vs *wall time*; the regret bound of
+//! Thm. 2 is tracked as the running sum of (observed loss − F(w*))·b(t).
+
+use std::path::Path;
+
+use crate::util::csv::Csv;
+use crate::util::json::Json;
+
+/// One epoch's summary.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    /// 1-based epoch index.
+    pub epoch: usize,
+    /// Wall-clock time at the END of this epoch (seconds, virtual or real).
+    pub wall_time: f64,
+    /// Global minibatch size b(t) actually used.
+    pub batch: usize,
+    /// Total potential samples c(t) (b(t) + undone work; regret accounting).
+    pub potential: usize,
+    /// Average per-sample training loss over the epoch's minibatch.
+    pub loss: f64,
+    /// Workload-specific error metric (e.g. linreg excess risk ‖w−w*‖²/2,
+    /// or fresh-sample logistic cost); NaN when unavailable.
+    pub error: f64,
+    /// Consensus error max_i ‖z_i − z̄‖ at the end of the epoch.
+    pub consensus_err: f64,
+    /// min / max per-node minibatch (straggler spread diagnostic).
+    pub min_node_batch: usize,
+    pub max_node_batch: usize,
+}
+
+/// A complete run: scheme label + epoch series.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub name: String,
+    pub epochs: Vec<EpochStats>,
+    /// Optimal per-sample loss F(w*) when known (regret baseline).
+    pub f_star: f64,
+}
+
+impl RunRecord {
+    pub fn new(name: &str, f_star: f64) -> RunRecord {
+        RunRecord { name: name.to_string(), epochs: Vec::new(), f_star }
+    }
+
+    pub fn push(&mut self, e: EpochStats) {
+        if let Some(last) = self.epochs.last() {
+            assert!(e.epoch == last.epoch + 1, "epochs must be contiguous");
+            assert!(e.wall_time >= last.wall_time, "wall time must be monotone");
+        }
+        self.epochs.push(e);
+    }
+
+    /// Total wall time.
+    pub fn total_time(&self) -> f64 {
+        self.epochs.last().map(|e| e.wall_time).unwrap_or(0.0)
+    }
+
+    /// Total samples processed Σ b(t).
+    pub fn total_samples(&self) -> usize {
+        self.epochs.iter().map(|e| e.batch).sum()
+    }
+
+    /// Running regret estimate after each epoch:
+    /// R̂(τ) = Σ_{t≤τ} b(t)·(loss(t) − F(w*))   (paper eq. (16) with the
+    /// observed minibatch as the sample set).
+    pub fn regret_series(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.epochs
+            .iter()
+            .map(|e| {
+                acc += e.batch as f64 * (e.loss - self.f_star);
+                acc
+            })
+            .collect()
+    }
+
+    /// First wall time at which `error` drops (and stays) below `target`;
+    /// None if never reached.  The "time-to-target" metric used for the
+    /// AMB-vs-FMB speedup claims.
+    pub fn time_to_error(&self, target: f64) -> Option<f64> {
+        let mut hit: Option<f64> = None;
+        for e in &self.epochs {
+            if e.error <= target {
+                if hit.is_none() {
+                    hit = Some(e.wall_time);
+                }
+            } else {
+                hit = None;
+            }
+        }
+        hit
+    }
+
+    /// Export the per-epoch series as CSV.
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "epoch", "wall_time", "batch", "potential", "loss", "error",
+            "consensus_err", "min_node_batch", "max_node_batch", "regret",
+        ]);
+        let regret = self.regret_series();
+        for (e, r) in self.epochs.iter().zip(regret) {
+            csv.push_nums(&[
+                e.epoch as f64,
+                e.wall_time,
+                e.batch as f64,
+                e.potential as f64,
+                e.loss,
+                e.error,
+                e.consensus_err,
+                e.min_node_batch as f64,
+                e.max_node_batch as f64,
+                r,
+            ]);
+        }
+        csv
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        self.to_csv().save(path)
+    }
+
+    /// Compact JSON summary (for EXPERIMENTS.md tables).
+    pub fn summary_json(&self) -> Json {
+        let last = self.epochs.last();
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("epochs", Json::num(self.epochs.len() as f64)),
+            ("total_time", Json::num(self.total_time())),
+            ("total_samples", Json::num(self.total_samples() as f64)),
+            ("final_loss", Json::num(last.map(|e| e.loss).unwrap_or(f64::NAN))),
+            ("final_error", Json::num(last.map(|e| e.error).unwrap_or(f64::NAN))),
+            (
+                "final_regret",
+                Json::num(self.regret_series().last().copied().unwrap_or(0.0)),
+            ),
+        ])
+    }
+}
+
+/// Compare two runs on time-to-target: returns (t_a, t_b, speedup b/a).
+pub fn speedup_at(a: &RunRecord, b: &RunRecord, target: f64) -> Option<(f64, f64, f64)> {
+    let ta = a.time_to_error(target)?;
+    let tb = b.time_to_error(target)?;
+    Some((ta, tb, tb / ta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(epoch: usize, t: f64, batch: usize, loss: f64, error: f64) -> EpochStats {
+        EpochStats {
+            epoch,
+            wall_time: t,
+            batch,
+            potential: batch,
+            loss,
+            error,
+            consensus_err: 0.0,
+            min_node_batch: batch / 2,
+            max_node_batch: batch,
+        }
+    }
+
+    #[test]
+    fn regret_accumulates() {
+        let mut r = RunRecord::new("amb", 1.0);
+        r.push(stats(1, 1.0, 10, 3.0, 1.0));
+        r.push(stats(2, 2.0, 20, 2.0, 0.5));
+        assert_eq!(r.regret_series(), vec![20.0, 40.0]);
+        assert_eq!(r.total_samples(), 30);
+        assert_eq!(r.total_time(), 2.0);
+    }
+
+    #[test]
+    fn time_to_error_requires_staying_below() {
+        let mut r = RunRecord::new("x", 0.0);
+        r.push(stats(1, 1.0, 1, 0.0, 0.5));
+        r.push(stats(2, 2.0, 1, 0.0, 0.05)); // below
+        r.push(stats(3, 3.0, 1, 0.0, 0.2)); // bounce back up
+        r.push(stats(4, 4.0, 1, 0.0, 0.04));
+        r.push(stats(5, 5.0, 1, 0.0, 0.03));
+        assert_eq!(r.time_to_error(0.1), Some(4.0));
+        assert_eq!(r.time_to_error(0.001), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn non_contiguous_epochs_panic() {
+        let mut r = RunRecord::new("x", 0.0);
+        r.push(stats(1, 1.0, 1, 0.0, 0.0));
+        r.push(stats(3, 2.0, 1, 0.0, 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn non_monotone_time_panics() {
+        let mut r = RunRecord::new("x", 0.0);
+        r.push(stats(1, 5.0, 1, 0.0, 0.0));
+        r.push(stats(2, 2.0, 1, 0.0, 0.0));
+    }
+
+    #[test]
+    fn csv_has_all_epochs() {
+        let mut r = RunRecord::new("x", 0.0);
+        r.push(stats(1, 1.0, 5, 1.0, 1.0));
+        r.push(stats(2, 2.0, 6, 0.5, 0.5));
+        let csv = r.to_csv();
+        assert_eq!(csv.len(), 2);
+        assert!(csv.to_string().contains("regret"));
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mut a = RunRecord::new("amb", 0.0);
+        let mut b = RunRecord::new("fmb", 0.0);
+        for t in 1..=5 {
+            a.push(stats(t, t as f64, 1, 0.0, 1.0 / t as f64));
+            b.push(stats(t, 2.0 * t as f64, 1, 0.0, 1.0 / t as f64));
+        }
+        let (ta, tb, s) = speedup_at(&a, &b, 0.4).unwrap();
+        assert_eq!(ta, 3.0);
+        assert_eq!(tb, 6.0);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_json_fields() {
+        let mut r = RunRecord::new("amb", 0.0);
+        r.push(stats(1, 1.5, 7, 0.25, 0.1));
+        let j = r.summary_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("amb"));
+        assert_eq!(j.get("total_samples").unwrap().as_usize(), Some(7));
+    }
+}

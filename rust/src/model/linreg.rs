@@ -1,0 +1,137 @@
+//! Native least-squares chunk gradient — mirror of
+//! python/compile/kernels/ref.py::linreg_grad.
+//!
+//! Used (a) as the artifact-free execution backend, (b) as an independent
+//! oracle to cross-check PJRT numerics in integration tests.
+
+/// grad_sum = Xᵀ((Xw − y)⊙mask), loss_sum = ½·Σ mask·(Xw − y)².
+/// `x` row-major c × d; outputs into `grad` (d, zeroed here).
+pub fn grad_sum(
+    w: &[f32],
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    grad: &mut [f32],
+) -> f64 {
+    let d = w.len();
+    let c = y.len();
+    assert_eq!(x.len(), c * d, "x must be c*d");
+    assert_eq!(mask.len(), c);
+    assert_eq!(grad.len(), d);
+    grad.fill(0.0);
+    let mut loss = 0.0f64;
+    for i in 0..c {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let row = &x[i * d..(i + 1) * d];
+        let r = crate::util::dot(row, w) - y[i];
+        let rm = r * mask[i];
+        loss += 0.5 * (rm as f64) * (r as f64);
+        crate::util::axpy(rm, row, grad);
+    }
+    loss
+}
+
+/// Single-sample prediction xᵀw.
+pub fn predict(w: &[f32], x_row: &[f32]) -> f32 {
+    crate::util::dot(w, x_row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn zero_mask_zero_grad() {
+        let w = [1.0f32, 2.0];
+        let x = [1.0f32, 0.0, 0.0, 1.0];
+        let y = [5.0f32, 5.0];
+        let mask = [0.0f32, 0.0];
+        let mut grad = [9.0f32; 2];
+        let loss = grad_sum(&w, &x, &y, &mask, &mut grad);
+        assert_eq!(grad, [0.0, 0.0]);
+        assert_eq!(loss, 0.0);
+    }
+
+    #[test]
+    fn hand_computed_case() {
+        // x = [[1,2]], w = [3,4], y = [1]: r = 3+8-1 = 10
+        // grad = x^T r = [10, 20], loss = 0.5*100 = 50
+        let mut grad = [0.0f32; 2];
+        let loss = grad_sum(&[3.0, 4.0], &[1.0, 2.0], &[1.0], &[1.0], &mut grad);
+        assert_eq!(grad, [10.0, 20.0]);
+        assert_eq!(loss, 50.0);
+    }
+
+    #[test]
+    fn grad_zero_at_interpolating_solution() {
+        forall(25, 0x11_01, |g| {
+            let d = g.usize_in(1, 16);
+            let c = g.usize_in(1, 12);
+            let w = g.vec_normal_f32(d, 1.0);
+            let x = g.vec_normal_f32(c * d, 1.0);
+            let y: Vec<f32> = (0..c)
+                .map(|i| crate::util::dot(&x[i * d..(i + 1) * d], &w))
+                .collect();
+            let mask = vec![1.0f32; c];
+            let mut grad = vec![0.0f32; d];
+            let loss = grad_sum(&w, &x, &y, &mask, &mut grad);
+            crate::prop_assert!(crate::util::norm2(&grad) < 1e-3);
+            crate::prop_assert!(loss < 1e-6);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mask_linearity() {
+        forall(25, 0x11_02, |g| {
+            let d = g.usize_in(1, 10);
+            let c = g.usize_in(2, 16);
+            let w = g.vec_normal_f32(d, 1.0);
+            let x = g.vec_normal_f32(c * d, 1.0);
+            let y = g.vec_normal_f32(c, 1.0);
+            let m1 = g.mask(c, 0.5);
+            let m2: Vec<f32> = m1.iter().map(|&v| 1.0 - v).collect();
+            let ones = vec![1.0f32; c];
+            let mut g1 = vec![0.0f32; d];
+            let mut g2 = vec![0.0f32; d];
+            let mut gall = vec![0.0f32; d];
+            let l1 = grad_sum(&w, &x, &y, &m1, &mut g1);
+            let l2 = grad_sum(&w, &x, &y, &m2, &mut g2);
+            let lall = grad_sum(&w, &x, &y, &ones, &mut gall);
+            crate::prop_assert_close!(l1 + l2, lall, 1e-4);
+            for j in 0..d {
+                crate::prop_assert_close!(g1[j] + g2[j], gall[j], 1e-3);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn finite_difference_gradient() {
+        let mut g = crate::prop::Gen::new(42);
+        let d = 6;
+        let c = 5;
+        let w = g.vec_normal_f32(d, 0.5);
+        let x = g.vec_normal_f32(c * d, 1.0);
+        let y = g.vec_normal_f32(c, 1.0);
+        let mask = vec![1.0f32; c];
+        let mut grad = vec![0.0f32; d];
+        grad_sum(&w, &x, &y, &mask, &mut grad);
+        let loss_at = |wv: &[f32]| {
+            let mut tmp = vec![0.0f32; d];
+            grad_sum(wv, &x, &y, &mask, &mut tmp)
+        };
+        let eps = 1e-3f32;
+        for j in 0..d {
+            let mut wp = w.clone();
+            wp[j] += eps;
+            let mut wm = w.clone();
+            wm[j] -= eps;
+            let fd = (loss_at(&wp) - loss_at(&wm)) / (2.0 * eps as f64);
+            assert!((fd - grad[j] as f64).abs() < 2e-2, "j={j} fd={fd} g={}", grad[j]);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Native multiclass logistic-regression chunk gradient — mirror of
+//! python/compile/kernels/ref.py::logreg_grad (stable softmax).
+
+/// grad_sum (k × d, zeroed here) and masked summed cross-entropy loss.
+/// w row-major k × d; x row-major c × d.
+pub fn grad_sum(
+    w: &[f32],
+    x: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    k: usize,
+    grad: &mut [f32],
+) -> f64 {
+    let c = labels.len();
+    assert!(k > 0 && w.len() % k == 0);
+    let d = w.len() / k;
+    assert_eq!(x.len(), c * d);
+    assert_eq!(mask.len(), c);
+    assert_eq!(grad.len(), k * d);
+    grad.fill(0.0);
+    let mut loss = 0.0f64;
+    let mut logits = vec![0.0f32; k];
+    for i in 0..c {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let row = &x[i * d..(i + 1) * d];
+        let mut zmax = f32::NEG_INFINITY;
+        for cls in 0..k {
+            logits[cls] = crate::util::dot(&w[cls * d..(cls + 1) * d], row);
+            zmax = zmax.max(logits[cls]);
+        }
+        let mut denom = 0.0f32;
+        for cls in 0..k {
+            logits[cls] = (logits[cls] - zmax).exp();
+            denom += logits[cls];
+        }
+        let label = labels[i] as usize;
+        assert!(label < k, "label {label} out of range k={k}");
+        // p_cls = logits[cls]/denom; dlogits = (p - onehot) * mask
+        for cls in 0..k {
+            let p = logits[cls] / denom;
+            let dl = (p - if cls == label { 1.0 } else { 0.0 }) * mask[i];
+            crate::util::axpy(dl, row, &mut grad[cls * d..(cls + 1) * d]);
+        }
+        let logp = (logits[label] / denom).max(f32::MIN_POSITIVE).ln();
+        loss -= (mask[i] * logp) as f64;
+    }
+    loss
+}
+
+/// argmax-class prediction for one row.
+pub fn predict(w: &[f32], x_row: &[f32], k: usize) -> usize {
+    let d = x_row.len();
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for cls in 0..k {
+        let s = crate::util::dot(&w[cls * d..(cls + 1) * d], x_row);
+        if s > best.0 {
+            best = (s, cls);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn uniform_weights_uniform_loss() {
+        // w = 0 -> p uniform -> per-sample loss ln(k)
+        let k = 5;
+        let d = 3;
+        let c = 4;
+        let w = vec![0.0f32; k * d];
+        let x = vec![1.0f32; c * d];
+        let labels = [0, 1, 2, 3];
+        let mask = vec![1.0f32; c];
+        let mut grad = vec![0.0f32; k * d];
+        let loss = grad_sum(&w, &x, &labels, &mask, k, &mut grad);
+        assert!((loss - c as f64 * (k as f64).ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dlogits_rows_sum_to_zero_in_grad_structure() {
+        // Σ_cls grad[cls] = Σ_i x_i * Σ_cls dlogits = 0 for full mask
+        forall(20, 0x12_01, |g| {
+            let k = g.usize_in(2, 8);
+            let d = g.usize_in(1, 8);
+            let c = g.usize_in(1, 10);
+            let w = g.vec_normal_f32(k * d, 1.0);
+            let x = g.vec_normal_f32(c * d, 1.0);
+            let labels: Vec<i32> = (0..c).map(|_| g.usize_in(0, k - 1) as i32).collect();
+            let mask = vec![1.0f32; c];
+            let mut grad = vec![0.0f32; k * d];
+            grad_sum(&w, &x, &labels, &mask, k, &mut grad);
+            for j in 0..d {
+                let col: f32 = (0..k).map(|cls| grad[cls * d + j]).sum();
+                crate::prop_assert!(col.abs() < 1e-3, "col sum {}", col);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn loss_nonnegative_and_mask_linearity() {
+        forall(20, 0x12_02, |g| {
+            let k = g.usize_in(2, 6);
+            let d = g.usize_in(1, 6);
+            let c = g.usize_in(2, 12);
+            let w = g.vec_normal_f32(k * d, 1.0);
+            let x = g.vec_normal_f32(c * d, 1.0);
+            let labels: Vec<i32> = (0..c).map(|_| g.usize_in(0, k - 1) as i32).collect();
+            let m1 = g.mask(c, 0.5);
+            let m2: Vec<f32> = m1.iter().map(|&v| 1.0 - v).collect();
+            let ones = vec![1.0f32; c];
+            let mut g1 = vec![0.0f32; k * d];
+            let mut g2 = vec![0.0f32; k * d];
+            let mut gall = vec![0.0f32; k * d];
+            let l1 = grad_sum(&w, &x, &labels, &m1, k, &mut g1);
+            let l2 = grad_sum(&w, &x, &labels, &m2, k, &mut g2);
+            let lall = grad_sum(&w, &x, &labels, &ones, k, &mut gall);
+            crate::prop_assert!(l1 >= 0.0 && l2 >= 0.0);
+            crate::prop_assert_close!(l1 + l2, lall, 1e-4);
+            for j in 0..k * d {
+                crate::prop_assert_close!(g1[j] + g2[j], gall[j], 1e-3);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn finite_difference_gradient() {
+        let mut g = crate::prop::Gen::new(7);
+        let (k, d, c) = (3, 4, 6);
+        let w = g.vec_normal_f32(k * d, 0.5);
+        let x = g.vec_normal_f32(c * d, 1.0);
+        let labels: Vec<i32> = (0..c).map(|_| g.usize_in(0, k - 1) as i32).collect();
+        let mask = vec![1.0f32; c];
+        let mut grad = vec![0.0f32; k * d];
+        grad_sum(&w, &x, &labels, &mask, k, &mut grad);
+        let loss_at = |wv: &[f32]| {
+            let mut tmp = vec![0.0f32; k * d];
+            grad_sum(wv, &x, &labels, &mask, k, &mut tmp)
+        };
+        let eps = 1e-3f32;
+        for j in 0..k * d {
+            let mut wp = w.clone();
+            wp[j] += eps;
+            let mut wm = w.clone();
+            wm[j] -= eps;
+            let fd = (loss_at(&wp) - loss_at(&wm)) / (2.0 * eps as f64);
+            assert!((fd - grad[j] as f64).abs() < 5e-3, "j={j} fd={fd} g={}", grad[j]);
+        }
+    }
+
+    #[test]
+    fn extreme_logits_stable() {
+        let k = 3;
+        let _d = 1;
+        let w = [1000.0f32, 0.0, -1000.0];
+        let x = [10.0f32];
+        let labels = [0];
+        let mask = [1.0f32];
+        let mut grad = vec![0.0f32; 3];
+        let loss = grad_sum(&w, &x, &labels, &mask, k, &mut grad);
+        assert!(loss.is_finite() && loss < 1e-3);
+        assert!(grad.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn training_improves_prediction() {
+        // tiny GD run separates a 3-class mixture
+        let mut g = crate::prop::Gen::new(9);
+        let (k, raw_d) = (3usize, 8usize);
+        let d = raw_d + 1;
+        let data = crate::data::MnistLike::new(k, raw_d, 4.0, 1.0, 11);
+        let mut rng = crate::util::rng::Pcg64::new(12);
+        let mut w = g.vec_normal_f32(k * d, 0.01);
+        let (mut x, mut labels) = (Vec::new(), Vec::new());
+        let mut grad = vec![0.0f32; k * d];
+        for _ in 0..60 {
+            data.sample_chunk(&mut rng, 64, &mut x, &mut labels);
+            let mask = vec![1.0f32; 64];
+            grad_sum(&w, &x, &labels, &mask, k, &mut grad);
+            for j in 0..k * d {
+                w[j] -= 0.05 * grad[j] / 64.0;
+            }
+        }
+        let acc = data.accuracy(&w, &mut rng, 1000);
+        assert!(acc > 0.8, "acc={acc}");
+    }
+}

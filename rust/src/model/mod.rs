@@ -1,0 +1,45 @@
+//! Native-Rust reference models mirroring the Python oracles
+//! (python/compile/kernels/ref.py).  They serve two purposes:
+//!
+//! 1. artifact-free execution backend (`exec::NativeExec`) so the
+//!    simulator, unit tests, and pure-algorithm benches run without the
+//!    PJRT runtime;
+//! 2. independent numerical oracle for the PJRT-loaded artifacts
+//!    (rust/tests/pjrt_roundtrip.rs asserts Native == PJRT == ref.py).
+
+pub mod linreg;
+pub mod logreg;
+
+/// Which workload a coordinator run is optimizing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    /// Least squares; dimension d.
+    LinReg { d: usize },
+    /// Multiclass logistic regression; k classes × d features.
+    LogReg { k: usize, d: usize },
+    /// Flattened-parameter model executed only via artifacts (e2e LM).
+    Opaque { dim: usize },
+}
+
+impl Workload {
+    /// Parameter-vector dimension (the dual/primal variable size).
+    pub fn dim(&self) -> usize {
+        match *self {
+            Workload::LinReg { d } => d,
+            Workload::LogReg { k, d } => k * d,
+            Workload::Opaque { dim } => dim,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_dims() {
+        assert_eq!(Workload::LinReg { d: 7 }.dim(), 7);
+        assert_eq!(Workload::LogReg { k: 10, d: 785 }.dim(), 7850);
+        assert_eq!(Workload::Opaque { dim: 3 }.dim(), 3);
+    }
+}

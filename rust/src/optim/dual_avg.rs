@@ -1,0 +1,196 @@
+//! Distributed dual averaging (paper Sec. 3, eq. (2)/(7)).
+//!
+//! State per node: primal w_i(t), dual z_i(t).  The update phase solves
+//!
+//!   w(t+1) = argmin_w { <w, z(t+1)> + β(t+1)·h(w) },   h(w) = ½‖w‖²,
+//!   W = {‖w‖ ≤ R}  ⇒  w = clip_to_ball(−z/β, R),
+//!
+//! with the paper's step schedule β(t) = K + α(t), α(t) = √(t/μ̂)
+//! (App. B, Lemma 8), where μ̂ estimates the per-epoch global sample
+//! count c̄ and K is the gradient-smoothness constant.
+
+/// β(t) schedule: K + sqrt(t / mu).
+#[derive(Debug, Clone, Copy)]
+pub struct BetaSchedule {
+    /// Smoothness constant K (offset).
+    pub k: f64,
+    /// Expected global per-epoch sample count μ (scales α).
+    pub mu: f64,
+}
+
+impl BetaSchedule {
+    pub fn new(k: f64, mu: f64) -> BetaSchedule {
+        assert!(k >= 0.0 && mu > 0.0);
+        BetaSchedule { k, mu }
+    }
+
+    /// β(t) for epoch t (1-based, matching the paper).
+    pub fn beta(&self, t: usize) -> f64 {
+        assert!(t >= 1, "epochs are 1-based");
+        self.k + (t as f64 / self.mu).sqrt()
+    }
+}
+
+/// Dual-averaging optimizer over a flat f32 parameter vector.
+#[derive(Debug, Clone)]
+pub struct DualAveraging {
+    pub schedule: BetaSchedule,
+    /// Radius R of the feasible ball W.
+    pub radius: f64,
+}
+
+impl DualAveraging {
+    pub fn new(schedule: BetaSchedule, radius: f64) -> DualAveraging {
+        assert!(radius > 0.0);
+        DualAveraging { schedule, radius }
+    }
+
+    /// w(1) = argmin h(w) = 0 (paper eq. (2) with h = ½‖·‖²).
+    pub fn initial_primal(&self, dim: usize) -> Vec<f32> {
+        vec![0.0; dim]
+    }
+
+    /// Native primal step: w = clip_to_ball(−z/β(t), R).  Mirrors the
+    /// dual_update artifact; used by NativeExec and as the PJRT oracle.
+    pub fn primal_step(&self, z: &[f32], t: usize, w: &mut [f32]) {
+        assert_eq!(z.len(), w.len());
+        let beta = self.schedule.beta(t) as f32;
+        let mut ss = 0.0f64;
+        for (wi, &zi) in w.iter_mut().zip(z.iter()) {
+            let v = -zi / beta;
+            *wi = v;
+            ss += (v as f64) * (v as f64);
+        }
+        let norm = ss.sqrt();
+        if norm > self.radius {
+            let scale = (self.radius / norm) as f32;
+            for wi in w.iter_mut() {
+                *wi *= scale;
+            }
+        }
+    }
+
+    /// The β value used at epoch t (exposed for the PJRT path, which
+    /// passes β as a scalar input to the dual_update artifact).
+    pub fn beta_at(&self, t: usize) -> f64 {
+        self.schedule.beta(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn beta_monotone_nondecreasing() {
+        let s = BetaSchedule::new(1.0, 600.0);
+        let mut prev = 0.0;
+        for t in 1..200 {
+            let b = s.beta(t);
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn beta_formula() {
+        let s = BetaSchedule::new(2.0, 4.0);
+        assert!((s.beta(1) - (2.0 + 0.5)).abs() < 1e-12);
+        assert!((s.beta(16) - (2.0 + 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn primal_step_interior() {
+        let da = DualAveraging::new(BetaSchedule::new(0.0, 1.0), 100.0);
+        // beta(4) = 2; w = -z/2
+        let z = [2.0f32, -4.0];
+        let mut w = [0.0f32; 2];
+        da.primal_step(&z, 4, &mut w);
+        assert_eq!(w, [-1.0, 2.0]);
+    }
+
+    #[test]
+    fn primal_step_projects_to_ball() {
+        forall(40, 0x0F_01, |g| {
+            let dim = g.usize_in(1, 64);
+            let da = DualAveraging::new(
+                BetaSchedule::new(g.f64_in(0.0, 5.0), g.f64_in(0.5, 100.0)),
+                g.f64_in(0.01, 3.0),
+            );
+            let z = g.vec_normal_f32(dim, 50.0);
+            let mut w = vec![0.0f32; dim];
+            da.primal_step(&z, g.usize_in(1, 50), &mut w);
+            crate::prop_assert!(
+                crate::util::norm2(&w) as f64 <= da.radius * (1.0 + 1e-5)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn primal_step_first_order_optimality() {
+        // <u - w, z + beta*w> >= 0 for all feasible u (eq. 7 KKT).
+        forall(25, 0x0F_02, |g| {
+            let dim = g.usize_in(2, 16);
+            let da = DualAveraging::new(BetaSchedule::new(1.0, 10.0), 1.0);
+            let t = g.usize_in(1, 20);
+            let z = g.vec_normal_f32(dim, 5.0);
+            let mut w = vec![0.0f32; dim];
+            da.primal_step(&z, t, &mut w);
+            let beta = da.beta_at(t) as f32;
+            for _ in 0..20 {
+                let mut u = g.vec_normal_f32(dim, 1.0);
+                let norm = crate::util::norm2(&u);
+                if norm as f64 > da.radius {
+                    let s = (da.radius / norm as f64) as f32;
+                    for v in u.iter_mut() {
+                        *v *= s;
+                    }
+                }
+                let mut inner = 0.0f64;
+                for j in 0..dim {
+                    inner += ((u[j] - w[j]) * (z[j] + beta * w[j])) as f64;
+                }
+                crate::prop_assert!(inner >= -1e-3, "KKT violated: {}", inner);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn initial_primal_is_zero() {
+        let da = DualAveraging::new(BetaSchedule::new(1.0, 1.0), 5.0);
+        assert_eq!(da.initial_primal(4), vec![0.0f32; 4]);
+    }
+
+    #[test]
+    fn dual_averaging_converges_on_quadratic() {
+        // Centralized dual averaging on F(w)=0.5||w - w*||^2 with exact
+        // gradients converges to (the projection of) w*.
+        let dim = 8;
+        let mut gen = crate::prop::Gen::new(5);
+        let mut w_star = gen.vec_normal_f32(dim, 0.5);
+        // keep w* inside the ball
+        let n = crate::util::norm2(&w_star);
+        if n > 0.9 {
+            for v in w_star.iter_mut() {
+                *v *= 0.9 / n;
+            }
+        }
+        let da = DualAveraging::new(BetaSchedule::new(1.0, 1.0), 1.0);
+        let mut z = vec![0.0f32; dim];
+        let mut w = da.initial_primal(dim);
+        for t in 1..4000 {
+            for j in 0..dim {
+                z[j] += w[j] - w_star[j]; // grad of 0.5||w-w*||^2
+            }
+            da.primal_step(&z, t + 1, &mut w);
+        }
+        let mut err = 0.0f64;
+        for j in 0..dim {
+            err += ((w[j] - w_star[j]) as f64).powi(2);
+        }
+        assert!(err.sqrt() < 0.05, "dist={}", err.sqrt());
+    }
+}

@@ -1,0 +1,6 @@
+//! Optimization layer: dual averaging (the paper's workhorse) and its
+//! β(t) schedule.
+
+pub mod dual_avg;
+
+pub use dual_avg::{BetaSchedule, DualAveraging};

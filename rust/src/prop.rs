@@ -1,0 +1,210 @@
+//! Mini property-testing harness (proptest is not in the offline vendor
+//! set — DESIGN.md §7).  Deterministic: cases are generated from a PCG64
+//! stream seeded per-property, and a failure report prints the case seed
+//! so the exact input can be replayed with `reproduce`.
+//!
+//! ```ignore
+//! forall(100, 0xA3, |g| {
+//!     let n = g.usize_in(1, 20);
+//!     let xs = g.vec_f64(n, -10.0, 10.0);
+//!     prop_assert!(stats::mean(&xs) <= stats::max(&xs));
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Generator handed to each property case: typed draws over one RNG.
+pub struct Gen {
+    rng: Pcg64,
+    /// The case seed; printed on failure for replay.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Pcg64::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.f64() < p
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32 * scale).collect()
+    }
+
+    /// {0,1} mask with inclusion probability p.
+    pub fn mask(&mut self, n: usize, p: f64) -> Vec<f32> {
+        (0..n).map(|_| if self.bool(p) { 1.0 } else { 0.0 }).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Access the underlying RNG for domain samplers.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// A property failure: case index, seed, and message.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub msg: String,
+}
+
+impl std::fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (replay seed {:#x}): {}",
+            self.case, self.seed, self.msg
+        )
+    }
+}
+
+/// Run `cases` generated cases.  Panics with a replayable report on the
+/// first failure.  `base_seed` namespaces the property so adding cases to
+/// one property does not shift another's stream.
+pub fn forall<F>(cases: usize, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64 + 1);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("{}", PropFailure { case, seed, msg });
+        }
+    }
+}
+
+/// Replay a single case by seed (paste from a failure report).
+pub fn reproduce<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("{}", PropFailure { case: 0, seed, msg });
+    }
+}
+
+/// assert-like helpers returning Err(String) instead of panicking, so the
+/// harness can attach the replay seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Approximate equality helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol) = ($a as f64, $b as f64, $tol as f64);
+        if (a - b).abs() > tol * (1.0 + a.abs().max(b.abs())) {
+            return Err(format!(
+                "{} ≉ {} (|Δ|={:.3e}, tol={:.1e}) [{} vs {}]",
+                a, b, (a - b).abs(), tol,
+                stringify!($a), stringify!($b)
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // interior mutability not needed: use a Cell via closure trick
+        let counter = std::cell::Cell::new(0usize);
+        forall(50, 1, |g| {
+            counter.set(counter.get() + 1);
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert!((0.0..1.0).contains(&x));
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        forall(50, 2, |g| {
+            let n = g.usize_in(0, 10);
+            prop_assert!(n < 9, "n was {}", n);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = |tag: u64| {
+            let out = std::cell::RefCell::new(Vec::new());
+            forall(10, tag, |g| {
+                out.borrow_mut().push(g.u64());
+                Ok(())
+            });
+            out.into_inner()
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+
+    #[test]
+    fn prop_assert_close_tolerance() {
+        forall(10, 3, |g| {
+            let x = g.f64_in(-5.0, 5.0);
+            prop_assert_close!(x, x + 1e-12, 1e-9);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,263 @@
+//! Artifact manifest: the static-shape contract written by
+//! python/compile/aot.py and consumed by the PJRT runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Input/output tensor spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Transformer artifact parameters.
+#[derive(Debug, Clone)]
+pub struct TransformerParams {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub init_file: PathBuf,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub small: bool,
+    pub linreg_c: usize,
+    pub linreg_d: usize,
+    pub logreg_c: usize,
+    pub logreg_d: usize,
+    pub logreg_k: usize,
+    pub mix_n: usize,
+    pub mix_d: usize,
+    pub transformer: TransformerParams,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+fn req_usize(j: &Json, path: &str) -> Result<usize> {
+    j.path(path)
+        .and_then(|v| v.as_usize())
+        .with_context(|| format!("manifest missing numeric field '{path}'"))
+}
+
+fn parse_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(|v| v.as_usize_arr())
+        .context("spec missing shape")?;
+    let dtype = match j.get("dtype").and_then(|v| v.as_str()) {
+        Some("f32") => Dtype::F32,
+        Some("i32") => Dtype::I32,
+        other => bail!("unsupported dtype {other:?}"),
+    };
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Manifest::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json invalid")?;
+        if j.get("format").and_then(|v| v.as_str()) != Some("hlo-text-v1") {
+            bail!("unsupported manifest format (want hlo-text-v1)");
+        }
+        let mut entries = BTreeMap::new();
+        for e in j.get("entries").and_then(|v| v.as_arr()).context("no entries")? {
+            let name = e.get("name").and_then(|v| v.as_str()).context("entry name")?;
+            let file = e.get("file").and_then(|v| v.as_str()).context("entry file")?;
+            let inputs = e
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .context("entry inputs")?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .context("entry outputs")?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.to_string(),
+                Entry { name: name.to_string(), file: dir.join(file), inputs, outputs },
+            );
+        }
+        let t = j.path("params.transformer").context("params.transformer")?;
+        let transformer = TransformerParams {
+            vocab: req_usize(t, "vocab")?,
+            d_model: req_usize(t, "d_model")?,
+            n_heads: req_usize(t, "n_heads")?,
+            n_layers: req_usize(t, "n_layers")?,
+            d_ff: req_usize(t, "d_ff")?,
+            seq_len: req_usize(t, "seq_len")?,
+            batch: req_usize(t, "batch")?,
+            param_count: req_usize(t, "param_count")?,
+            init_file: dir.join(
+                t.get("init_file").and_then(|v| v.as_str()).unwrap_or("transformer_init.f32.bin"),
+            ),
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            small: j.get("small").and_then(|v| v.as_bool()).unwrap_or(false),
+            linreg_c: req_usize(&j, "params.linreg_c")?,
+            linreg_d: req_usize(&j, "params.linreg_d")?,
+            logreg_c: req_usize(&j, "params.logreg_c")?,
+            logreg_d: req_usize(&j, "params.logreg_d")?,
+            logreg_k: req_usize(&j, "params.logreg_k")?,
+            mix_n: req_usize(&j, "params.mix_n")?,
+            mix_d: req_usize(&j, "params.mix_d")?,
+            transformer,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact entry '{name}' not in manifest"))
+    }
+
+    pub fn linreg_entry_name(&self) -> String {
+        format!("linreg_grad_c{}_d{}", self.linreg_c, self.linreg_d)
+    }
+
+    pub fn logreg_entry_name(&self) -> String {
+        format!("logreg_grad_c{}_k{}_d{}", self.logreg_c, self.logreg_k, self.logreg_d)
+    }
+
+    pub fn dual_update_entry_name(&self, dim: usize) -> String {
+        format!("dual_update_d{dim}")
+    }
+
+    pub fn mix_entry_name(&self) -> String {
+        format!("mix_n{}_d{}", self.mix_n, self.mix_d)
+    }
+
+    pub fn transformer_entry_name(&self) -> String {
+        format!(
+            "transformer_grad_p{}_b{}_t{}",
+            self.transformer.param_count, self.transformer.batch, self.transformer.seq_len
+        )
+    }
+
+    /// Read the transformer init-parameter blob.
+    pub fn transformer_init(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.transformer.init_file)
+            .with_context(|| format!("reading {}", self.transformer.init_file.display()))?;
+        if bytes.len() != self.transformer.param_count * 4 {
+            bail!(
+                "init blob has {} bytes, expected {}",
+                bytes.len(),
+                self.transformer.param_count * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "small": true,
+      "params": {
+        "linreg_c": 32, "linreg_d": 64,
+        "logreg_c": 16, "logreg_d": 24, "logreg_k": 4,
+        "mix_n": 6, "mix_d": 64,
+        "transformer": {"vocab": 64, "d_model": 32, "n_heads": 2,
+                        "n_layers": 1, "d_ff": 64, "seq_len": 16,
+                        "batch": 2, "param_count": 13088,
+                        "init_file": "transformer_init.f32.bin"}
+      },
+      "entries": [
+        {"name": "linreg_grad_c32_d64", "file": "linreg_grad_c32_d64.hlo.txt",
+         "inputs": [{"shape": [64], "dtype": "f32"},
+                    {"shape": [32, 64], "dtype": "f32"},
+                    {"shape": [32], "dtype": "f32"},
+                    {"shape": [32], "dtype": "f32"}],
+         "outputs": [{"shape": [64], "dtype": "f32"},
+                     {"shape": [], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert!(m.small);
+        assert_eq!(m.linreg_c, 32);
+        assert_eq!(m.transformer.param_count, 13088);
+        assert_eq!(m.linreg_entry_name(), "linreg_grad_c32_d64");
+        let e = m.entry("linreg_grad_c32_d64").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[1].shape, vec![32, 64]);
+        assert_eq!(e.inputs[1].elements(), 2048);
+        assert_eq!(e.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(e.file, Path::new("/tmp/a/linreg_grad_c32_d64.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entry_errors() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let bad = SAMPLE.replace("hlo-text-v1", "v0");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn entry_names() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.logreg_entry_name(), "logreg_grad_c16_k4_d24");
+        assert_eq!(m.dual_update_entry_name(64), "dual_update_d64");
+        assert_eq!(m.mix_entry_name(), "mix_n6_d64");
+        assert_eq!(m.transformer_entry_name(), "transformer_grad_p13088_b2_t16");
+    }
+}

@@ -1,0 +1,467 @@
+//! PJRT runtime: load the AOT artifacts (HLO text) and execute them on the
+//! xla-crate CPU client — the production hot path (Python never runs here).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HloModuleProto::from_text_file
+//! → XlaComputation::from_proto → client.compile → execute.  Executables
+//! are compiled once and cached; `PjrtExec` adapts the runtime to the
+//! coordinator's [`ExecEngine`] interface with the chunk+mask convention.
+//!
+//! Thread-locality: `PjRtClient` is Rc-based (not Send); the threaded
+//! cluster creates one runtime per node thread via a factory.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+pub use manifest::{Dtype, Entry, Manifest, TensorSpec};
+
+use crate::data::TokenStream;
+use crate::exec::{DataSource, ExecEngine};
+use crate::model::Workload;
+use crate::optim::DualAveraging;
+use crate::util::rng::Pcg64;
+
+/// Compiled-executable cache over one PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Load `<dir>/manifest.json` and create the CPU client.
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch cached) an entry's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.entry(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry with literal inputs; returns the decomposed output
+    /// tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self.manifest.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, artifact expects {}",
+                inputs.len(),
+                entry.inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("decomposing {name} tuple: {e:?}"))
+    }
+}
+
+/// f32 literal with shape from a host slice.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32 shape {:?} != data len {}", shape, data.len());
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("lit_f32: {e:?}"))
+}
+
+/// i32 literal with shape from a host slice.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32 shape {:?} != data len {}", shape, data.len());
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("lit_i32: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Copy a literal back into an f32 vec.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_f32: {e:?}"))
+}
+
+/// Scalar f32 from a literal ((), (1,), or any single-element shape).
+pub fn to_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_scalar: {e:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// ExecEngine over PJRT artifacts
+// ---------------------------------------------------------------------------
+
+/// Artifact-backed execution engine for the regression workloads.
+///
+/// Variable minibatches are decomposed into fixed-size chunks of the
+/// artifact's static batch C with {0,1} masking of the tail (DESIGN.md §1).
+pub struct PjrtExec {
+    rt: Rc<PjrtRuntime>,
+    source: Arc<DataSource>,
+    optimizer: DualAveraging,
+    grad_entry: String,
+    dual_entry: String,
+    chunk: usize,
+    // reusable host buffers
+    x_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+    label_buf: Vec<i32>,
+    mask_buf: Vec<f32>,
+    /// Native twin used only for the error metric (not the hot path).
+    native_metric: crate::exec::NativeExec,
+}
+
+impl PjrtExec {
+    pub fn new(
+        rt: Rc<PjrtRuntime>,
+        source: Arc<DataSource>,
+        optimizer: DualAveraging,
+    ) -> Result<PjrtExec> {
+        let (grad_entry, chunk, dim) = match &*source {
+            DataSource::LinReg(s) => {
+                if s.d != rt.manifest.linreg_d {
+                    bail!(
+                        "linreg d={} but artifacts built for d={} (rebuild with matching sizes)",
+                        s.d,
+                        rt.manifest.linreg_d
+                    );
+                }
+                (rt.manifest.linreg_entry_name(), rt.manifest.linreg_c, s.d)
+            }
+            DataSource::Mnist(m) => {
+                if m.d() != rt.manifest.logreg_d || m.classes != rt.manifest.logreg_k {
+                    bail!(
+                        "logreg k={} d={} but artifacts built for k={} d={}",
+                        m.classes,
+                        m.d(),
+                        rt.manifest.logreg_k,
+                        rt.manifest.logreg_d
+                    );
+                }
+                (rt.manifest.logreg_entry_name(), rt.manifest.logreg_c, m.classes * m.d())
+            }
+        };
+        let dual_entry = rt.manifest.dual_update_entry_name(dim);
+        // Compile eagerly so first-epoch latency is not misattributed.
+        rt.executable(&grad_entry)?;
+        rt.executable(&dual_entry)?;
+        let native_metric =
+            crate::exec::NativeExec::new(source.clone(), optimizer.clone());
+        Ok(PjrtExec {
+            rt,
+            source,
+            optimizer,
+            grad_entry,
+            dual_entry,
+            chunk,
+            x_buf: Vec::new(),
+            y_buf: Vec::new(),
+            label_buf: Vec::new(),
+            mask_buf: Vec::new(),
+            native_metric,
+        })
+    }
+
+    fn grad_chunk_linreg(
+        &mut self,
+        s: &crate::data::LinRegStream,
+        w: &[f32],
+        n: usize,
+        rng: &mut Pcg64,
+        acc: &mut [f32],
+    ) -> Result<f64> {
+        let c = self.chunk;
+        let d = s.d;
+        let mut remaining = n;
+        let mut loss = 0.0f64;
+        let w_lit = lit_f32(&[d], w)?;
+        while remaining > 0 {
+            let take = remaining.min(c);
+            s.sample_chunk(rng, take, &mut self.x_buf, &mut self.y_buf);
+            // pad to the static chunk
+            self.x_buf.resize(c * d, 0.0);
+            self.y_buf.resize(c, 0.0);
+            self.mask_buf.clear();
+            self.mask_buf.resize(c, 0.0);
+            for m in self.mask_buf.iter_mut().take(take) {
+                *m = 1.0;
+            }
+            let outs = self.rt.execute(
+                &self.grad_entry,
+                &[
+                    w_lit.clone(),
+                    lit_f32(&[c, d], &self.x_buf)?,
+                    lit_f32(&[c], &self.y_buf)?,
+                    lit_f32(&[c], &self.mask_buf)?,
+                ],
+            )?;
+            let g = to_f32(&outs[0])?;
+            crate::util::axpy(1.0, &g, acc);
+            loss += to_scalar(&outs[1])? as f64;
+            remaining -= take;
+        }
+        Ok(loss)
+    }
+
+    fn grad_chunk_logreg(
+        &mut self,
+        m: &crate::data::MnistLike,
+        w: &[f32],
+        n: usize,
+        rng: &mut Pcg64,
+        acc: &mut [f32],
+    ) -> Result<f64> {
+        let c = self.chunk;
+        let d = m.d();
+        let k = m.classes;
+        let mut remaining = n;
+        let mut loss = 0.0f64;
+        let w_lit = lit_f32(&[k, d], w)?;
+        while remaining > 0 {
+            let take = remaining.min(c);
+            m.sample_chunk(rng, take, &mut self.x_buf, &mut self.label_buf);
+            self.x_buf.resize(c * d, 0.0);
+            self.label_buf.resize(c, 0);
+            self.mask_buf.clear();
+            self.mask_buf.resize(c, 0.0);
+            for mm in self.mask_buf.iter_mut().take(take) {
+                *mm = 1.0;
+            }
+            let outs = self.rt.execute(
+                &self.grad_entry,
+                &[
+                    w_lit.clone(),
+                    lit_f32(&[c, d], &self.x_buf)?,
+                    lit_i32(&[c], &self.label_buf)?,
+                    lit_f32(&[c], &self.mask_buf)?,
+                ],
+            )?;
+            let g = to_f32(&outs[0])?;
+            crate::util::axpy(1.0, &g, acc);
+            loss += to_scalar(&outs[1])? as f64;
+            remaining -= take;
+        }
+        Ok(loss)
+    }
+}
+
+impl ExecEngine for PjrtExec {
+    fn grad_chunk(
+        &mut self,
+        w: &[f32],
+        n_samples: usize,
+        rng: &mut Pcg64,
+        acc: &mut [f32],
+    ) -> f64 {
+        if n_samples == 0 {
+            return 0.0;
+        }
+        let source = self.source.clone();
+        match &*source {
+            DataSource::LinReg(s) => self
+                .grad_chunk_linreg(s, w, n_samples, rng, acc)
+                .expect("pjrt linreg grad failed"),
+            DataSource::Mnist(m) => self
+                .grad_chunk_logreg(m, w, n_samples, rng, acc)
+                .expect("pjrt logreg grad failed"),
+        }
+    }
+
+    fn primal_step(&mut self, z: &[f32], t: usize, w: &mut [f32]) {
+        let beta = self.optimizer.beta_at(t) as f32;
+        let radius = self.optimizer.radius as f32;
+        let outs = self
+            .rt
+            .execute(
+                &self.dual_entry,
+                &[lit_f32(&[z.len()], z).unwrap(), lit_scalar(beta), lit_scalar(radius)],
+            )
+            .expect("pjrt dual_update failed");
+        let wv = to_f32(&outs[0]).expect("dual_update output");
+        w.copy_from_slice(&wv);
+    }
+
+    fn workload(&self) -> Workload {
+        self.source.workload()
+    }
+
+    fn error_metric(&mut self, w: &[f32], rng: &mut Pcg64) -> f64 {
+        self.native_metric.error_metric(w, rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transformer engine (e2e example): opaque flat-parameter workload
+// ---------------------------------------------------------------------------
+
+/// Artifact-backed transformer-LM gradient engine.  The "sample unit" is
+/// one sequence; the artifact consumes a fixed batch of `batch` sequences
+/// with a per-sequence mask, so variable minibatches chunk exactly like
+/// the regression engines.
+///
+/// Dual averaging is *centred* at the build-time init parameters w₀:
+/// h(w) = ½‖w − w₀‖² (still 1-strongly convex, paper eq. (2)/(7) hold
+/// verbatim), so w(1) = w₀ and the primal step is w = w₀ + clip(−z/β).
+pub struct TransformerExec {
+    rt: Rc<PjrtRuntime>,
+    tokens: Arc<TokenStream>,
+    optimizer: DualAveraging,
+    grad_entry: String,
+    dual_entry: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    tok_buf: Vec<i32>,
+    mask_buf: Vec<f32>,
+    /// h's centre (the build-time init).
+    center: Vec<f32>,
+    /// Tokens contributing to the last grad_chunk (loss normalizer).
+    pub last_token_count: f64,
+}
+
+impl TransformerExec {
+    pub fn new(
+        rt: Rc<PjrtRuntime>,
+        tokens: Arc<TokenStream>,
+        optimizer: DualAveraging,
+    ) -> Result<TransformerExec> {
+        let t = &rt.manifest.transformer;
+        if tokens.vocab != t.vocab {
+            bail!("token stream vocab {} != artifact vocab {}", tokens.vocab, t.vocab);
+        }
+        let grad_entry = rt.manifest.transformer_entry_name();
+        let dual_entry = rt.manifest.dual_update_entry_name(t.param_count);
+        rt.executable(&grad_entry)?;
+        rt.executable(&dual_entry)?;
+        let center = rt.manifest.transformer_init()?;
+        Ok(TransformerExec {
+            batch: t.batch,
+            seq_len: t.seq_len,
+            tokens,
+            optimizer,
+            grad_entry,
+            dual_entry,
+            rt,
+            tok_buf: Vec::new(),
+            mask_buf: Vec::new(),
+            center,
+            last_token_count: 0.0,
+        })
+    }
+
+    pub fn init_params(&self) -> &[f32] {
+        &self.center
+    }
+}
+
+impl ExecEngine for TransformerExec {
+    fn grad_chunk(
+        &mut self,
+        w: &[f32],
+        n_samples: usize,
+        rng: &mut Pcg64,
+        acc: &mut [f32],
+    ) -> f64 {
+        self.last_token_count = 0.0;
+        if n_samples == 0 {
+            return 0.0;
+        }
+        let b = self.batch;
+        let l = self.seq_len + 1;
+        let p = w.len();
+        let w_lit = lit_f32(&[p], w).unwrap();
+        let mut remaining = n_samples;
+        let mut loss = 0.0f64;
+        while remaining > 0 {
+            let take = remaining.min(b);
+            self.tokens.sample_batch(rng, take, l, &mut self.tok_buf);
+            self.tok_buf.resize(b * l, 0);
+            self.mask_buf.clear();
+            self.mask_buf.resize(b, 0.0);
+            for m in self.mask_buf.iter_mut().take(take) {
+                *m = 1.0;
+            }
+            let outs = self
+                .rt
+                .execute(
+                    &self.grad_entry,
+                    &[
+                        w_lit.clone(),
+                        lit_i32(&[b, l], &self.tok_buf).unwrap(),
+                        lit_f32(&[b], &self.mask_buf).unwrap(),
+                    ],
+                )
+                .expect("pjrt transformer grad failed");
+            let g = to_f32(&outs[0]).expect("grad output");
+            crate::util::axpy(1.0, &g, acc);
+            loss += to_scalar(&outs[1]).expect("loss output") as f64;
+            self.last_token_count += to_scalar(&outs[2]).expect("count output") as f64;
+            remaining -= take;
+        }
+        loss
+    }
+
+    fn primal_step(&mut self, z: &[f32], t: usize, w: &mut [f32]) {
+        let beta = self.optimizer.beta_at(t) as f32;
+        let radius = self.optimizer.radius as f32;
+        let outs = self
+            .rt
+            .execute(
+                &self.dual_entry,
+                &[lit_f32(&[z.len()], z).unwrap(), lit_scalar(beta), lit_scalar(radius)],
+            )
+            .expect("pjrt dual_update failed");
+        let delta = to_f32(&outs[0]).expect("dual output");
+        // centred h: w = w0 + clip_ball(−z/β, R)
+        for k in 0..w.len() {
+            w[k] = self.center[k] + delta[k];
+        }
+    }
+
+    fn initial_primal(&self) -> Vec<f32> {
+        self.center.clone()
+    }
+
+    fn workload(&self) -> Workload {
+        Workload::Opaque { dim: self.rt.manifest.transformer.param_count }
+    }
+
+    fn error_metric(&mut self, _w: &[f32], _rng: &mut Pcg64) -> f64 {
+        f64::NAN // per-token loss is already the tracked metric
+    }
+}

@@ -1,0 +1,589 @@
+//! Straggler (compute-time) models — the paper's experimental substrate.
+//!
+//! The paper runs on EC2/HPC where node speed varies with latent load; it
+//! models steady-state behaviour as *conditionally linear progress*: node
+//! i draws an epoch-level speed and computes gradients at that constant
+//! rate within the epoch (App. I.2, validated empirically in App. I.3).
+//! We implement exactly that family plus the per-gradient pause model of
+//! App. I.4:
+//!
+//! * [`Deterministic`] — homogeneous cluster (no stragglers; baseline).
+//! * [`ShiftedExp`] — T_i(t) ~ ζ + Exp(λ) per node per epoch for a unit
+//!   batch (App. H, I.2; the standard straggler model in the coded-
+//!   computation literature).
+//! * [`InducedGroups`] — EC2 background-job experiment (App. I.3): node
+//!   groups with integer slowdown factors over a common base draw
+//!   (3 "bad" ×3, 2 intermediate ×2, 5 fast ×1 in the paper).
+//! * [`PauseModel`] — HPC experiment (App. I.4): fixed per-gradient
+//!   compute time plus a N(μ_j, σ_j²)⁺ pause after every gradient, with
+//!   group-dependent μ_j, σ_j.
+//! * [`TraceReplay`] — replay explicit per-(node, epoch) unit times, e.g.
+//!   digitised from a real testbed.
+//!
+//! A model draws an [`EpochProfile`] per (node, epoch); the coordinator
+//! asks the profile either "how many gradients fit in T?" (AMB) or "how
+//! long do k gradients take?" (FMB) — never both in one epoch.
+
+use crate::util::rng::Pcg64;
+
+/// A node's compute behaviour within a single epoch.
+pub enum EpochProfile {
+    /// Linear progress at `sec_per_grad` seconds per gradient.
+    Linear { sec_per_grad: f64 },
+    /// Per-gradient base time plus i.i.d. N(mu, sigma²) pauses clipped at
+    /// zero (App. I.4).  Owns its RNG stream so draws are reproducible.
+    PerGradient { base: f64, mu: f64, sigma: f64, rng: Pcg64 },
+}
+
+impl EpochProfile {
+    /// Number of whole gradients finishing within time budget `t`
+    /// (AMB compute phase, paper eq. (72) in the linear case).
+    pub fn grads_in_time(&mut self, t: f64) -> usize {
+        assert!(t >= 0.0);
+        match self {
+            EpochProfile::Linear { sec_per_grad } => {
+                if *sec_per_grad <= 0.0 {
+                    panic!("sec_per_grad must be positive");
+                }
+                (t / *sec_per_grad).floor() as usize
+            }
+            EpochProfile::PerGradient { base, mu, sigma, rng } => {
+                let mut elapsed = 0.0;
+                let mut k = 0usize;
+                loop {
+                    let step = *base + rng.normal_ms(*mu, *sigma).max(0.0);
+                    if elapsed + step > t {
+                        // paper App. I.4: if the remaining time is shorter
+                        // than the sampled pause, the node idles out the
+                        // epoch — no further gradients.
+                        return k;
+                    }
+                    elapsed += step;
+                    k += 1;
+                    if k > 100_000_000 {
+                        panic!("grads_in_time runaway (base+pause ~ 0)");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Wall time for `k` gradients (FMB compute phase).
+    pub fn time_for_grads(&mut self, k: usize) -> f64 {
+        match self {
+            EpochProfile::Linear { sec_per_grad } => *sec_per_grad * k as f64,
+            EpochProfile::PerGradient { base, mu, sigma, rng } => {
+                let mut elapsed = 0.0;
+                for _ in 0..k {
+                    elapsed += *base + rng.normal_ms(*mu, *sigma).max(0.0);
+                }
+                elapsed
+            }
+        }
+    }
+}
+
+/// Moments of the *unit-batch* completion time, when known analytically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Moments {
+    pub mean: f64,
+    pub stddev: f64,
+}
+
+/// A straggler model: per-(node, epoch) compute profiles.
+pub trait StragglerModel: Send + Sync {
+    /// Draw node `node`'s profile for epoch `epoch`.
+    fn draw(&self, node: usize, epoch: usize, rng: &mut Pcg64) -> EpochProfile;
+
+    /// Size of the reference "unit batch" whose completion time the model
+    /// parameterises (e.g. 600 gradients in App. I.2).
+    fn unit_batch(&self) -> usize;
+
+    /// Analytic moments of the unit-batch time, if known (used by the
+    /// Thm. 7 harness to set T = (1 + n/b)·μ).
+    fn unit_moments(&self) -> Option<Moments> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Homogeneous cluster: every node, every epoch, the same speed.
+#[derive(Debug, Clone)]
+pub struct Deterministic {
+    pub unit_time: f64,
+    pub unit_batch: usize,
+}
+
+impl StragglerModel for Deterministic {
+    fn draw(&self, _node: usize, _epoch: usize, _rng: &mut Pcg64) -> EpochProfile {
+        EpochProfile::Linear { sec_per_grad: self.unit_time / self.unit_batch as f64 }
+    }
+
+    fn unit_batch(&self) -> usize {
+        self.unit_batch
+    }
+
+    fn unit_moments(&self) -> Option<Moments> {
+        Some(Moments { mean: self.unit_time, stddev: 0.0 })
+    }
+}
+
+/// T_i(t) ~ zeta + Exp(lambda), i.i.d. across nodes and epochs, for
+/// `unit_batch` gradients (paper App. H / I.2: λ=2/3, ζ=1, unit=600).
+#[derive(Debug, Clone)]
+pub struct ShiftedExp {
+    pub zeta: f64,
+    pub lambda: f64,
+    pub unit_batch: usize,
+}
+
+impl ShiftedExp {
+    /// Paper App. I.2 parameters.
+    pub fn paper_i2() -> ShiftedExp {
+        ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 600 }
+    }
+}
+
+impl StragglerModel for ShiftedExp {
+    fn draw(&self, _node: usize, _epoch: usize, rng: &mut Pcg64) -> EpochProfile {
+        let t_unit = rng.shifted_exp(self.zeta, self.lambda);
+        EpochProfile::Linear { sec_per_grad: t_unit / self.unit_batch as f64 }
+    }
+
+    fn unit_batch(&self) -> usize {
+        self.unit_batch
+    }
+
+    fn unit_moments(&self) -> Option<Moments> {
+        Some(Moments { mean: self.zeta + 1.0 / self.lambda, stddev: 1.0 / self.lambda })
+    }
+}
+
+/// EC2 induced-straggler experiment (App. I.3): per-node slowdown factors
+/// over a common shifted-exponential base.  The paper's setup:
+/// 3 nodes ×3 ("two background jobs"), 2 nodes ×2, 5 nodes ×1, with FMB
+/// unit batches clustering near 10 s/20 s/30 s.
+#[derive(Debug, Clone)]
+pub struct InducedGroups {
+    /// slowdown factor per node (length = n).
+    pub factors: Vec<f64>,
+    /// base unit-batch time distribution.
+    pub base_zeta: f64,
+    pub base_lambda: f64,
+    pub unit_batch: usize,
+}
+
+impl InducedGroups {
+    /// The paper's 10-node arrangement: nodes 0-2 bad (×3), 3-4
+    /// intermediate (×2), 5-9 fast (×1); base ≈ 10 s per 585 gradients.
+    pub fn paper_i3() -> InducedGroups {
+        let mut factors = vec![3.0, 3.0, 3.0, 2.0, 2.0];
+        factors.extend(std::iter::repeat(1.0).take(5));
+        InducedGroups { factors, base_zeta: 9.0, base_lambda: 1.0, unit_batch: 585 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.factors.len()
+    }
+}
+
+impl StragglerModel for InducedGroups {
+    fn draw(&self, node: usize, _epoch: usize, rng: &mut Pcg64) -> EpochProfile {
+        let base = rng.shifted_exp(self.base_zeta, self.base_lambda);
+        let factor = self.factors[node];
+        EpochProfile::Linear { sec_per_grad: factor * base / self.unit_batch as f64 }
+    }
+
+    fn unit_batch(&self) -> usize {
+        self.unit_batch
+    }
+    // No closed-form mixture moments exposed; harnesses estimate them.
+}
+
+/// HPC induced-straggler experiment (App. I.4): after each gradient the
+/// node pauses for max(0, N(mu_j, sigma_j²)); group j's parameters apply
+/// to a contiguous block of nodes.  All times in the same unit as
+/// `per_grad_base` (the paper uses milliseconds: μ = 5..55 ms,
+/// σ_j = j ms, T = 115 ms, b = 500 over 50 workers).
+#[derive(Debug, Clone)]
+pub struct PauseModel {
+    /// (nodes_in_group, mu, sigma) per group.
+    pub groups: Vec<(usize, f64, f64)>,
+    pub per_grad_base: f64,
+}
+
+impl PauseModel {
+    /// Paper App. I.4: 50 workers in 5 groups of 10;
+    /// μ = (5,10,20,35,55), σ_j = j; base per-gradient ≈ 1 (ms units).
+    pub fn paper_i4() -> PauseModel {
+        PauseModel {
+            groups: vec![
+                (10, 5.0, 1.0),
+                (10, 10.0, 2.0),
+                (10, 20.0, 3.0),
+                (10, 35.0, 4.0),
+                (10, 55.0, 5.0),
+            ],
+            per_grad_base: 1.0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.groups.iter().map(|g| g.0).sum()
+    }
+
+    fn group_of(&self, node: usize) -> (f64, f64) {
+        let mut off = 0;
+        for &(cnt, mu, sigma) in &self.groups {
+            if node < off + cnt {
+                return (mu, sigma);
+            }
+            off += cnt;
+        }
+        panic!("node {node} out of range for PauseModel with n={}", self.n());
+    }
+}
+
+impl StragglerModel for PauseModel {
+    fn draw(&self, node: usize, epoch: usize, rng: &mut Pcg64) -> EpochProfile {
+        let (mu, sigma) = self.group_of(node);
+        // Independent per-(node, epoch) stream so FMB/AMB comparisons are
+        // reproducible regardless of query order.
+        let stream = rng.split((node as u64) << 32 | epoch as u64);
+        EpochProfile::PerGradient { base: self.per_grad_base, mu, sigma, rng: stream }
+    }
+
+    fn unit_batch(&self) -> usize {
+        1
+    }
+}
+
+/// Markov-modulated speeds: each node is in a hidden {Normal, Burst}
+/// state with per-epoch transition probabilities; Burst multiplies the
+/// unit time.  Models the paper's observation that steady-state EC2
+/// workers keep "their processor speed relatively constant except for
+/// occasional bursts" (Sec. 6.2).  State evolves deterministically from
+/// (node, epoch, seed) so FMB/AMB comparisons see identical weather.
+#[derive(Debug, Clone)]
+pub struct MarkovModulated {
+    pub base_zeta: f64,
+    pub base_lambda: f64,
+    pub unit_batch: usize,
+    /// P(Normal -> Burst) per epoch.
+    pub p_burst: f64,
+    /// P(Burst -> Normal) per epoch.
+    pub p_recover: f64,
+    /// Unit-time multiplier while bursting.
+    pub burst_factor: f64,
+    /// Chain seed (decoupled from the draw RNG so the hidden weather is
+    /// identical across schemes).
+    pub chain_seed: u64,
+}
+
+impl MarkovModulated {
+    /// Is node `i` bursting in `epoch`?  Replays the chain from epoch 0
+    /// (epochs are small; O(t) replay keeps the model stateless).
+    pub fn bursting(&self, node: usize, epoch: usize) -> bool {
+        let mut rng = Pcg64::new(self.chain_seed ^ ((node as u64) << 20) ^ 0xB00);
+        let mut burst = false;
+        for _ in 0..=epoch {
+            let u = rng.f64();
+            burst = if burst { u >= self.p_recover } else { u < self.p_burst };
+        }
+        burst
+    }
+}
+
+impl StragglerModel for MarkovModulated {
+    fn draw(&self, node: usize, epoch: usize, rng: &mut Pcg64) -> EpochProfile {
+        let mut t_unit = rng.shifted_exp(self.base_zeta, self.base_lambda);
+        if self.bursting(node, epoch) {
+            t_unit *= self.burst_factor;
+        }
+        EpochProfile::Linear { sec_per_grad: t_unit / self.unit_batch as f64 }
+    }
+
+    fn unit_batch(&self) -> usize {
+        self.unit_batch
+    }
+}
+
+/// Persistently heterogeneous cluster: node i's *mean* unit time is
+/// drawn once (from the given range) and fixed for the whole run, with
+/// small per-epoch jitter.  Models mixed instance generations.
+#[derive(Debug, Clone)]
+pub struct HeterogeneousMeans {
+    /// per-node mean unit time.
+    pub means: Vec<f64>,
+    /// multiplicative jitter half-width (e.g. 0.1 ⇒ ±10%).
+    pub jitter: f64,
+    pub unit_batch: usize,
+}
+
+impl HeterogeneousMeans {
+    pub fn uniform(n: usize, lo: f64, hi: f64, jitter: f64, unit_batch: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed ^ 0x4E7);
+        let means = (0..n).map(|_| rng.range_f64(lo, hi)).collect();
+        HeterogeneousMeans { means, jitter, unit_batch }
+    }
+}
+
+impl StragglerModel for HeterogeneousMeans {
+    fn draw(&self, node: usize, _epoch: usize, rng: &mut Pcg64) -> EpochProfile {
+        let m = self.means[node];
+        let t_unit = m * (1.0 + self.jitter * (2.0 * rng.f64() - 1.0));
+        EpochProfile::Linear { sec_per_grad: t_unit / self.unit_batch as f64 }
+    }
+
+    fn unit_batch(&self) -> usize {
+        self.unit_batch
+    }
+}
+
+/// Replay explicit per-node, per-epoch unit-batch times (row = node).
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    /// times[node][epoch % len] = unit-batch completion time.
+    pub times: Vec<Vec<f64>>,
+    pub unit_batch: usize,
+}
+
+impl StragglerModel for TraceReplay {
+    fn draw(&self, node: usize, epoch: usize, _rng: &mut Pcg64) -> EpochProfile {
+        let row = &self.times[node];
+        let t = row[epoch % row.len()];
+        EpochProfile::Linear { sec_per_grad: t / self.unit_batch as f64 }
+    }
+
+    fn unit_batch(&self) -> usize {
+        self.unit_batch
+    }
+}
+
+/// Estimate unit-batch moments by Monte-Carlo over nodes and epochs
+/// (used when `unit_moments` is None).
+pub fn estimate_unit_moments<M: StragglerModel + ?Sized>(
+    model: &M,
+    n: usize,
+    samples: usize,
+    seed: u64,
+) -> Moments {
+    let mut rng = Pcg64::new(seed);
+    let mut w = crate::util::stats::Welford::new();
+    let unit = model.unit_batch();
+    for s in 0..samples {
+        let node = s % n;
+        let mut prof = model.draw(node, s / n, &mut rng);
+        w.push(prof.time_for_grads(unit));
+    }
+    Moments { mean: w.mean(), stddev: w.stddev() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn deterministic_linear_progress() {
+        let m = Deterministic { unit_time: 10.0, unit_batch: 100 };
+        let mut rng = Pcg64::new(0);
+        let mut p = m.draw(0, 0, &mut rng);
+        assert_eq!(p.grads_in_time(1.0), 10);
+        assert_eq!(p.grads_in_time(0.05), 0);
+        assert!((p.time_for_grads(50) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_inverse_relationship() {
+        // grads_in_time(time_for_grads(k)) == k for linear profiles.
+        forall(30, 0x51_01, |g| {
+            let m = ShiftedExp { zeta: g.f64_in(0.1, 2.0), lambda: g.f64_in(0.2, 3.0), unit_batch: 600 };
+            let mut rng = Pcg64::new(g.u64());
+            let mut p = m.draw(0, 0, &mut rng);
+            let k = g.usize_in(1, 5000);
+            let t = p.time_for_grads(k);
+            crate::prop_assert!(p.grads_in_time(t + 1e-9) == k);
+            crate::prop_assert!(p.grads_in_time(t * 0.999) < k || k == 0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shifted_exp_moments_match_samples() {
+        let m = ShiftedExp::paper_i2();
+        let est = estimate_unit_moments(&m, 10, 40_000, 7);
+        let a = m.unit_moments().unwrap();
+        assert!((est.mean - a.mean).abs() / a.mean < 0.02, "est={est:?}");
+        assert!((est.stddev - a.stddev).abs() / a.stddev < 0.05, "est={est:?}");
+    }
+
+    #[test]
+    fn shifted_exp_minimum_is_zeta() {
+        let m = ShiftedExp::paper_i2();
+        let mut rng = Pcg64::new(3);
+        for e in 0..2000 {
+            let mut p = m.draw(e % 10, e, &mut rng);
+            let t = p.time_for_grads(600);
+            assert!(t >= m.zeta);
+        }
+    }
+
+    #[test]
+    fn induced_groups_ordering() {
+        // Bad nodes are, on average, ~3x slower than fast nodes.
+        let m = InducedGroups::paper_i3();
+        let mut rng = Pcg64::new(11);
+        let avg_time = |node: usize, rng: &mut Pcg64| -> f64 {
+            let mut acc = 0.0;
+            for e in 0..3000 {
+                let mut p = m.draw(node, e, rng);
+                acc += p.time_for_grads(m.unit_batch());
+            }
+            acc / 3000.0
+        };
+        let bad = avg_time(0, &mut rng);
+        let mid = avg_time(3, &mut rng);
+        let fast = avg_time(7, &mut rng);
+        assert!((bad / fast - 3.0).abs() < 0.25, "bad/fast={}", bad / fast);
+        assert!((mid / fast - 2.0).abs() < 0.2, "mid/fast={}", mid / fast);
+        // Clusters land near the paper's 10/20/30 s (base ≈ 10 s).
+        assert!((fast - 10.0).abs() < 1.0, "fast={fast}");
+        assert!((bad - 30.0).abs() < 2.0, "bad={bad}");
+    }
+
+    #[test]
+    fn pause_model_group_lookup() {
+        let m = PauseModel::paper_i4();
+        assert_eq!(m.n(), 50);
+        assert_eq!(m.group_of(0), (5.0, 1.0));
+        assert_eq!(m.group_of(9), (5.0, 1.0));
+        assert_eq!(m.group_of(10), (10.0, 2.0));
+        assert_eq!(m.group_of(49), (55.0, 5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn pause_model_bad_node_panics() {
+        PauseModel::paper_i4().group_of(50);
+    }
+
+    #[test]
+    fn pause_model_slower_groups_fewer_grads() {
+        let m = PauseModel::paper_i4();
+        let mut rng = Pcg64::new(13);
+        let avg_grads = |node: usize, rng: &mut Pcg64| -> f64 {
+            let mut acc = 0.0;
+            for e in 0..400 {
+                let mut p = m.draw(node, e, rng);
+                acc += p.grads_in_time(115.0) as f64;
+            }
+            acc / 400.0
+        };
+        let fast = avg_grads(0, &mut rng); // mu=5  -> ~115/6  ≈ 19
+        let slow = avg_grads(45, &mut rng); // mu=55 -> ~115/56 ≈ 2
+        assert!(fast > 3.0 * slow, "fast={fast} slow={slow}");
+        assert!((fast - 115.0 / 6.0).abs() < 2.5, "fast={fast}");
+    }
+
+    #[test]
+    fn pause_model_amb_vs_fmb_queries_consistent() {
+        // time_for_grads(k) where k = grads_in_time(T) must be <= T for
+        // the same profile draw (fresh draws, same stream).
+        let m = PauseModel::paper_i4();
+        let mut rng_a = Pcg64::new(17);
+        let mut rng_b = Pcg64::new(17);
+        for e in 0..100 {
+            let mut pa = m.draw(7, e, &mut rng_a);
+            let k = pa.grads_in_time(115.0);
+            let mut pb = m.draw(7, e, &mut rng_b);
+            let t = pb.time_for_grads(k);
+            assert!(t <= 115.0 + 1e-9, "t={t} k={k}");
+        }
+    }
+
+    #[test]
+    fn trace_replay_wraps() {
+        let m = TraceReplay { times: vec![vec![1.0, 2.0], vec![4.0, 4.0]], unit_batch: 10 };
+        let mut rng = Pcg64::new(0);
+        let mut p = m.draw(0, 3, &mut rng); // epoch 3 -> index 1 -> 2.0
+        assert!((p.time_for_grads(10) - 2.0).abs() < 1e-12);
+        let mut p2 = m.draw(1, 0, &mut rng);
+        assert_eq!(p2.grads_in_time(2.0), 5);
+    }
+
+    #[test]
+    fn estimate_moments_deterministic_zero_var() {
+        let m = Deterministic { unit_time: 3.0, unit_batch: 30 };
+        let est = estimate_unit_moments(&m, 4, 100, 0);
+        assert!((est.mean - 3.0).abs() < 1e-9);
+        assert!(est.stddev < 1e-9);
+    }
+
+    #[test]
+    fn markov_chain_deterministic_and_bursty() {
+        let m = MarkovModulated {
+            base_zeta: 1.0,
+            base_lambda: 2.0,
+            unit_batch: 100,
+            p_burst: 0.2,
+            p_recover: 0.5,
+            burst_factor: 4.0,
+            chain_seed: 7,
+        };
+        // weather identical regardless of draw rng
+        for node in 0..5 {
+            for epoch in 0..20 {
+                assert_eq!(m.bursting(node, epoch), m.bursting(node, epoch));
+            }
+        }
+        // stationary burst fraction ≈ p_burst/(p_burst + p_recover) = 2/7
+        let mut bursts = 0usize;
+        let total = 5 * 400;
+        for node in 0..5 {
+            for epoch in 0..400 {
+                bursts += m.bursting(node, epoch) as usize;
+            }
+        }
+        let frac = bursts as f64 / total as f64;
+        assert!((frac - 2.0 / 7.0).abs() < 0.06, "frac={frac}");
+        // bursting epochs are slower on average
+        let mut rng = Pcg64::new(1);
+        let (mut tb, mut nb, mut tn, mut nn) = (0.0, 0, 0.0, 0);
+        for epoch in 0..400 {
+            let mut p = m.draw(2, epoch, &mut rng);
+            let t = p.time_for_grads(100);
+            if m.bursting(2, epoch) {
+                tb += t;
+                nb += 1;
+            } else {
+                tn += t;
+                nn += 1;
+            }
+        }
+        if nb > 10 && nn > 10 {
+            assert!(tb / nb as f64 > 2.5 * (tn / nn as f64));
+        }
+    }
+
+    #[test]
+    fn heterogeneous_means_persistent_ordering() {
+        let m = HeterogeneousMeans::uniform(6, 1.0, 4.0, 0.05, 100, 3);
+        let mut rng = Pcg64::new(2);
+        // per-node averages track the drawn means
+        for node in 0..6 {
+            let mut acc = 0.0;
+            for e in 0..300 {
+                let mut p = m.draw(node, e, &mut rng);
+                acc += p.time_for_grads(100);
+            }
+            let avg = acc / 300.0;
+            assert!(
+                (avg - m.means[node]).abs() / m.means[node] < 0.05,
+                "node {node}: avg={avg} mean={}",
+                m.means[node]
+            );
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal CLI argument parser (no clap in the offline vendor set —
+//! DESIGN.md §7).  Supports `--key value`, `--key=value`, `--flag`, and
+//! positional arguments; typed getters with defaults and error messages.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("option --{0} has invalid value '{1}': expected {2}")]
+    Invalid(String, String, &'static str),
+}
+
+/// Boolean flags must be declared so `--verbose out.csv` parses as a flag
+/// plus a positional rather than `verbose=out.csv` (standard CLI
+/// disambiguation without a full schema).
+pub const KNOWN_FLAGS: &[&str] = &[
+    "verbose", "help", "quiet", "dry-run", "small", "exact-bt", "node-log",
+    "pjrt", "native", "quick",
+];
+
+impl Args {
+    /// Parse an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        Args::parse_with_flags(raw, KNOWN_FLAGS)
+    }
+
+    /// Parse with an explicit boolean-flag vocabulary.
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(raw: I, known: &[&str]) -> Args {
+        let mut it = raw.into_iter().peekable();
+        let mut args = Args { positional: Vec::new(), options: BTreeMap::new(), flags: Vec::new() };
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name.into(), v.into(), "unsigned integer")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| CliError::Invalid(name.into(), v.into(), "u64"))
+            }
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::Invalid(name.into(), v.into(), "float")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::Missing(name.into()))
+    }
+
+    /// First positional argument (usually the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("run --nodes 10 --seed=42 --verbose out.csv");
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.usize_or("nodes", 1).unwrap(), 10);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "out.csv"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("nodes", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("t", 1.5).unwrap(), 1.5);
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.str_or("fig", "all"), "all");
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = parse("--nodes banana");
+        assert!(a.usize_or("nodes", 1).is_err());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse("run");
+        assert!(a.require("out").is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--dry-run --nodes 3");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.usize_or("nodes", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn unknown_trailing_option_is_flag() {
+        // Unknown `--thing` at end of line (no value available) => flag.
+        let a = parse("run --thing");
+        assert!(a.flag("thing"));
+    }
+
+    #[test]
+    fn custom_flag_vocabulary() {
+        let a = Args::parse_with_flags(
+            "--fast out.csv".split_whitespace().map(|s| s.to_string()),
+            &["fast"],
+        );
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--shift -1.5`: "-1.5" doesn't start with "--" so it's a value.
+        let a = parse("--shift -1.5");
+        assert_eq!(a.f64_or("shift", 0.0).unwrap(), -1.5);
+    }
+}

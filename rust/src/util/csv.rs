@@ -1,0 +1,125 @@
+//! Tiny CSV writer for figure series (results/*.csv).  Quoting is applied
+//! only when needed; floats use shortest round-trip formatting.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Push a row of already-formatted cells; panics on width mismatch
+    /// (catching column bugs at the call site).
+    pub fn push(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: all-numeric row.
+    pub fn push_nums(&mut self, cells: &[f64]) {
+        self.push(&cells.iter().map(|x| fmt_f64(*x)).collect::<Vec<_>>());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        writeln_row(&mut out, &self.header);
+        for row in &self.rows {
+            writeln_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to disk, creating parent directories.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+}
+
+fn writeln_row(out: &mut String, cells: &[String]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if c.contains([',', '"', '\n']) {
+            let escaped = c.replace('"', "\"\"");
+            let _ = write!(out, "\"{escaped}\"");
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+/// Shortest clean float formatting for CSV cells.
+pub fn fmt_f64(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_rows() {
+        let mut c = Csv::new(&["t", "loss"]);
+        c.push_nums(&[1.0, 0.5]);
+        c.push_nums(&[2.0, 0.25]);
+        let s = c.to_string();
+        assert!(s.starts_with("t,loss\n1,"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn quotes_when_needed() {
+        let mut c = Csv::new(&["name", "v"]);
+        c.push(&["a,b".into(), "x\"y".into()]);
+        let s = c.to_string();
+        assert!(s.contains("\"a,b\""));
+        assert!(s.contains("\"x\"\"y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn width_mismatch_panics() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push(&["1".into()]);
+    }
+
+    #[test]
+    fn save_creates_dirs() {
+        let dir = std::env::temp_dir().join("amb_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = Csv::new(&["x"]);
+        c.push_nums(&[1.5]);
+        let path = dir.join("sub/out.csv");
+        c.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("1.5"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

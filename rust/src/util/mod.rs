@@ -1,0 +1,67 @@
+//! Dependency-free utilities: PRNG, statistics, JSON, CSV, CLI parsing.
+//!
+//! The offline vendor set ships no rand/serde/clap (DESIGN.md §7), so
+//! these are small, fully-tested local implementations.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Dot product over f32 slices (panics on length mismatch).
+///
+/// Perf: 8 independent accumulators break the loop-carried dependency so
+/// the compiler can vectorize (EXPERIMENTS.md §Perf iteration 2).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        for lane in 0..8 {
+            acc[lane] += a[i + lane] * b[i + lane];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm2(a: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for &v in a {
+        acc += (v as f64) * (v as f64);
+    }
+    acc.sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_axpy_norm() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, 9.0, 12.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

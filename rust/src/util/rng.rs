@@ -1,0 +1,273 @@
+//! Deterministic PRNG + samplers (no external crates; the vendored set has
+//! no `rand`).  PCG64 (XSL-RR 128/64) — fast, seedable, good statistical
+//! quality for simulation workloads.  Every experiment takes an explicit
+//! seed so runs are bit-reproducible (DESIGN.md §6).
+
+/// PCG64 XSL-RR generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create from a 64-bit seed (stream fixed) via SplitMix64 expansion.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = state.wrapping_add(rng.inc);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-node streams).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (no cached spare: simpler, branch-free
+    /// determinism when splitting streams).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// N(mu, sigma^2).
+    pub fn normal_ms(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Shifted exponential: shift + Exp(lambda) — the straggler model of
+    /// paper App. H / I.2.
+    pub fn shifted_exp(&mut self, shift: f64, lambda: f64) -> f64 {
+        shift + self.exponential(lambda)
+    }
+
+    /// Fill a slice with N(0, scale^2) f32 values.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf iterations 1+3): Marsaglia polar method
+    /// — one (ln, sqrt) and no trigonometry per TWO outputs (≈27%
+    /// rejection).  Data generation dominates the native gradient hot
+    /// path; vs the naive per-value Box–Muller this is ≈2× on the
+    /// 256×1024 linreg chunk.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], scale: f32) {
+        let mut i = 0;
+        let n = out.len();
+        while i + 1 < n {
+            let (v1, v2, s) = loop {
+                let v1 = 2.0 * self.f64() - 1.0;
+                let v2 = 2.0 * self.f64() - 1.0;
+                let s = v1 * v1 + v2 * v2;
+                if s < 1.0 && s > 0.0 {
+                    break (v1, v2, s);
+                }
+            };
+            let mul = (-2.0 * s.ln() / s).sqrt();
+            out[i] = (v1 * mul) as f32 * scale;
+            out[i + 1] = (v2 * mul) as f32 * scale;
+            i += 2;
+        }
+        if i < n {
+            out[i] = self.normal() as f32 * scale;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// SplitMix64 — used only to expand seeds for PCG64.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut r = Pcg64::new(3);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.2).abs() < 0.01, "p={p}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::new(13);
+        let lambda = 2.0 / 3.0;
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shifted_exp_min_is_shift() {
+        let mut r = Pcg64::new(17);
+        let min = (0..10_000)
+            .map(|_| r.shifted_exp(1.0, 0.5))
+            .fold(f64::INFINITY, f64::min);
+        assert!(min >= 1.0);
+        assert!(min < 1.01);
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Pcg64::new(5);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn fill_normal_moments_and_determinism() {
+        let mut r = Pcg64::new(31);
+        let mut buf = vec![0.0f32; 200_001]; // odd length exercises the tail
+        r.fill_normal_f32(&mut buf, 2.0);
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.08, "var={var}");
+        // deterministic per seed
+        let mut r2 = Pcg64::new(31);
+        let mut buf2 = vec![0.0f32; 200_001];
+        r2.fill_normal_f32(&mut buf2, 2.0);
+        assert_eq!(buf, buf2);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(23);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,224 @@
+//! Summary statistics, histograms and order-statistic bounds used by the
+//! straggler analysis (paper Sec. 5, App. G/H) and the bench harness.
+
+/// Running mean/variance (Welford) — numerically stable one-pass moments.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (n in the denominator); 0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance of a slice.
+pub fn variance(xs: &[f64]) -> f64 {
+    let mut w = Welford::new();
+    for &x in xs {
+        w.push(x);
+    }
+    w.variance()
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Quantile by linear interpolation on the sorted copy; q in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Arnold–Groeneveld / Bertsimas-Natarajan-Teo bound on the expected
+/// maximum of n i.i.d. samples (paper eq. (75)):
+/// E[max_i T_i] <= mu + sigma * sqrt(n - 1).
+pub fn expected_max_bound(mu: f64, sigma: f64, n: usize) -> f64 {
+    mu + sigma * ((n.max(1) - 1) as f64).sqrt()
+}
+
+/// Expected maximum of n i.i.d. shifted exponentials (paper eq. (81)):
+/// E[max] = zeta + H_n / lambda  (harmonic number; the paper writes the
+/// large-n log(n) form).
+pub fn shifted_exp_expected_max(zeta: f64, lambda: f64, n: usize) -> f64 {
+    let h: f64 = (1..=n).map(|k| 1.0 / k as f64).sum();
+    zeta + h / lambda
+}
+
+/// Fixed-width histogram over [lo, hi); values outside clamp to end bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64).floor() as i64).clamp(0, bins as i64 - 1);
+        self.counts[idx as usize] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Center of bin i.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// (center, count) rows — what the figure benches print.
+    pub fn rows(&self) -> Vec<(f64, u64)> {
+        (0..self.counts.len()).map(|i| (self.center(i), self.counts[i])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 6.2).abs() < 1e-12);
+        let naive = xs.iter().map(|x| (x - 6.2) * (x - 6.2)).sum::<f64>() / 5.0;
+        assert!((w.variance() - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_endpoints_and_median() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 2.0);
+        assert_eq!(quantile(&xs, 1.0), 3.0);
+    }
+
+    #[test]
+    fn expected_max_bound_monotone_in_n() {
+        let b2 = expected_max_bound(1.0, 0.5, 2);
+        let b10 = expected_max_bound(1.0, 0.5, 10);
+        assert!(b10 > b2);
+        assert_eq!(expected_max_bound(1.0, 0.5, 1), 1.0);
+    }
+
+    #[test]
+    fn shifted_exp_max_matches_simulation() {
+        let (zeta, lambda, n) = (1.0, 2.0 / 3.0, 10);
+        let analytic = shifted_exp_expected_max(zeta, lambda, n);
+        let mut rng = Pcg64::new(0);
+        let trials = 20_000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let m = (0..n)
+                .map(|_| rng.shifted_exp(zeta, lambda))
+                .fold(f64::NEG_INFINITY, f64::max);
+            acc += m;
+        }
+        let sim = acc / trials as f64;
+        assert!((sim - analytic).abs() / analytic < 0.02, "sim={sim} analytic={analytic}");
+    }
+
+    #[test]
+    fn empirical_max_obeys_bnt_bound() {
+        // E[max] <= mu + sigma*sqrt(n-1) for any distribution (paper eq. 75).
+        let mut rng = Pcg64::new(1);
+        let n = 8;
+        let (zeta, lambda) = (1.0, 0.5);
+        let mu = zeta + 1.0 / lambda;
+        let sigma = 1.0 / lambda;
+        let trials = 20_000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let m = (0..n)
+                .map(|_| rng.shifted_exp(zeta, lambda))
+                .fold(f64::NEG_INFINITY, f64::max);
+            acc += m;
+        }
+        assert!(acc / trials as f64 <= expected_max_bound(mu, sigma, n));
+    }
+
+    #[test]
+    fn histogram_bins_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(0.5);
+        h.push(9.99);
+        h.push(-5.0); // clamps to bin 0
+        h.push(50.0); // clamps to last bin
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 2);
+        assert_eq!(h.total(), 4);
+        assert!((h.center(0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! Integration: PJRT-loaded artifacts vs the native-Rust oracles.
+//!
+//! This is the Rust end of the L1/L2 correctness bridge: the Python side
+//! pins kernels to ref.py; here we pin the *compiled HLO artifacts*,
+//! executed through the production runtime, to the independent native
+//! implementations (DESIGN.md §6).
+//!
+//! Requires `make artifacts`; tests exit early (pass, with a note) when
+//! artifacts are absent so `cargo test` works in a fresh checkout.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anytime_mb::data::{LinRegStream, MnistLike, TokenStream};
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::runtime::{lit_f32, lit_scalar, to_f32, to_scalar, PjrtExec, PjrtRuntime, TransformerExec};
+use anytime_mb::util::rng::Pcg64;
+
+fn runtime() -> Option<Rc<PjrtRuntime>> {
+    let dir = anytime_mb::artifacts_dir();
+    match PjrtRuntime::load(&dir) {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts at {}): {e}", dir.display());
+            None
+        }
+    }
+}
+
+fn optimizer() -> DualAveraging {
+    DualAveraging::new(BetaSchedule::new(1.0, 1000.0), 500.0)
+}
+
+#[test]
+fn linreg_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let d = rt.manifest.linreg_d;
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, 11)));
+    let mut pjrt = PjrtExec::new(rt, src.clone(), optimizer()).unwrap();
+    let mut native = NativeExec::new(src, optimizer());
+
+    // Same RNG stream => same sampled data on both engines.
+    for (n_samples, seed) in [(1usize, 1u64), (77, 2), (256, 3), (700, 4)] {
+        let mut g = Pcg64::new(seed);
+        let w: Vec<f32> = (0..d).map(|_| g.normal() as f32 * 0.1).collect();
+        let mut acc_p = vec![0.0f32; d];
+        let mut acc_n = vec![0.0f32; d];
+        let lp = pjrt.grad_chunk(&w, n_samples, &mut Pcg64::new(seed ^ 0xF00), &mut acc_p);
+        let ln = native.grad_chunk(&w, n_samples, &mut Pcg64::new(seed ^ 0xF00), &mut acc_n);
+        let rel = (lp - ln).abs() / ln.abs().max(1e-9);
+        assert!(rel < 1e-3, "loss mismatch n={n_samples}: pjrt={lp} native={ln}");
+        for k in 0..d {
+            assert!(
+                (acc_p[k] - acc_n[k]).abs() < 1e-2 * (1.0 + acc_n[k].abs()),
+                "grad[{k}] pjrt={} native={}",
+                acc_p[k],
+                acc_n[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn logreg_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (k, d) = (rt.manifest.logreg_k, rt.manifest.logreg_d);
+    let src = Arc::new(DataSource::Mnist(MnistLike::new(k, d - 1, 1.0, 1.0, 13)));
+    let mut pjrt = PjrtExec::new(rt, src.clone(), optimizer()).unwrap();
+    let mut native = NativeExec::new(src, optimizer());
+
+    for (n_samples, seed) in [(5usize, 21u64), (128, 22), (300, 23)] {
+        let mut g = Pcg64::new(seed);
+        let w: Vec<f32> = (0..k * d).map(|_| g.normal() as f32 * 0.05).collect();
+        let mut acc_p = vec![0.0f32; k * d];
+        let mut acc_n = vec![0.0f32; k * d];
+        let lp = pjrt.grad_chunk(&w, n_samples, &mut Pcg64::new(seed ^ 0xB4), &mut acc_p);
+        let ln = native.grad_chunk(&w, n_samples, &mut Pcg64::new(seed ^ 0xB4), &mut acc_n);
+        assert!(
+            (lp - ln).abs() / ln.abs().max(1e-9) < 1e-3,
+            "loss mismatch: {lp} vs {ln}"
+        );
+        for j in 0..k * d {
+            assert!(
+                (acc_p[j] - acc_n[j]).abs() < 1e-2 * (1.0 + acc_n[j].abs()),
+                "grad[{j}] {} vs {}",
+                acc_p[j],
+                acc_n[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn dual_update_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let d = rt.manifest.linreg_d;
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, 5)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 600.0), 2.0);
+    let mut pjrt = PjrtExec::new(rt, src, opt.clone()).unwrap();
+
+    let mut g = Pcg64::new(31);
+    for t in [1usize, 3, 10, 100] {
+        let z: Vec<f32> = (0..d).map(|_| g.normal() as f32 * 10.0).collect();
+        let mut w_p = vec![0.0f32; d];
+        let mut w_n = vec![0.0f32; d];
+        pjrt.primal_step(&z, t, &mut w_p);
+        opt.primal_step(&z, t, &mut w_n);
+        for k in 0..d {
+            assert!(
+                (w_p[k] - w_n[k]).abs() < 1e-4 * (1.0 + w_n[k].abs()),
+                "t={t} w[{k}]: {} vs {}",
+                w_p[k],
+                w_n[k]
+            );
+        }
+        // feasibility
+        assert!(anytime_mb::util::norm2(&w_p) <= 2.0 * (1.0 + 1e-4));
+    }
+}
+
+#[test]
+fn mix_artifact_is_doubly_stochastic_average() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.mix_n;
+    let d = rt.manifest.mix_d;
+    let topo = anytime_mb::topology::Topology::erdos_connected(n, 0.5, 3);
+    let p = topo.metropolis();
+    let mut pf = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            pf[i * n + j] = p.at(i, j) as f32;
+        }
+    }
+    let mut g = Pcg64::new(7);
+    let m: Vec<f32> = (0..n * d).map(|_| g.normal() as f32).collect();
+
+    let name = rt.manifest.mix_entry_name();
+    let outs = rt
+        .execute(&name, &[lit_f32(&[n, n], &pf).unwrap(), lit_f32(&[n, d], &m).unwrap()])
+        .unwrap();
+    let mixed = to_f32(&outs[0]).unwrap();
+
+    // column means preserved (consensus conservation through the artifact)
+    for col in 0..d {
+        let before: f32 = (0..n).map(|i| m[i * d + col]).sum::<f32>() / n as f32;
+        let after: f32 = (0..n).map(|i| mixed[i * d + col]).sum::<f32>() / n as f32;
+        assert!((before - after).abs() < 1e-3, "col {col}: {before} vs {after}");
+    }
+    // matches native mix
+    let msgs: Vec<Vec<f32>> = (0..n).map(|i| m[i * d..(i + 1) * d].to_vec()).collect();
+    let mut out = vec![vec![0.0f32; d]; n];
+    p.mix_into(&msgs, &mut out);
+    for i in 0..n {
+        for c in 0..d {
+            assert!((mixed[i * d + c] - out[i][c]).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn transformer_artifact_sane_and_trains() {
+    let Some(rt) = runtime() else { return };
+    let vocab = rt.manifest.transformer.vocab;
+    let tokens = Arc::new(TokenStream::new(vocab, 99));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 32.0), 1000.0);
+    let mut exec = TransformerExec::new(rt, tokens, opt).unwrap();
+    let dim = exec.workload().dim();
+    let mut w = exec.initial_primal();
+    assert_eq!(w.len(), dim);
+
+    // init loss per token ≈ ln(vocab)
+    let mut rng = Pcg64::new(1);
+    let mut acc = vec![0.0f32; dim];
+    let loss = exec.grad_chunk(&w, exec.batch, &mut rng, &mut acc);
+    let per_tok = loss / exec.last_token_count;
+    assert!(
+        (per_tok - (vocab as f64).ln()).abs() < 1.0,
+        "init loss/token {per_tok} vs ln(V) {}",
+        (vocab as f64).ln()
+    );
+
+    // a few dual-averaging epochs reduce loss
+    let mut z = vec![0.0f32; dim];
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for t in 1..=8 {
+        acc.fill(0.0);
+        let loss = exec.grad_chunk(&w, 2 * exec.batch, &mut rng, &mut acc);
+        let per_tok = loss / exec.last_token_count;
+        if t == 1 {
+            first = per_tok;
+        }
+        last = per_tok;
+        let toks = exec.last_token_count as f32;
+        for k in 0..dim {
+            z[k] += acc[k] / toks;
+        }
+        exec.primal_step(&z, t + 1, &mut w);
+    }
+    assert!(last < first, "no training progress: {first} -> {last}");
+}
+
+#[test]
+fn raw_execute_linreg_matches_native_formula() {
+    // Lowest-level check: hand-marshalled literals through rt.execute.
+    let Some(rt) = runtime() else { return };
+    let (c, d) = (rt.manifest.linreg_c, rt.manifest.linreg_d);
+    let mut g = Pcg64::new(17);
+    let w: Vec<f32> = (0..d).map(|_| g.normal() as f32).collect();
+    let x: Vec<f32> = (0..c * d).map(|_| g.normal() as f32).collect();
+    let y: Vec<f32> = (0..c).map(|_| g.normal() as f32).collect();
+    let mask: Vec<f32> = (0..c).map(|i| (i % 3 != 0) as u8 as f32).collect();
+
+    let name = rt.manifest.linreg_entry_name();
+    let outs = rt
+        .execute(
+            &name,
+            &[
+                lit_f32(&[d], &w).unwrap(),
+                lit_f32(&[c, d], &x).unwrap(),
+                lit_f32(&[c], &y).unwrap(),
+                lit_f32(&[c], &mask).unwrap(),
+            ],
+        )
+        .unwrap();
+    let grad = to_f32(&outs[0]).unwrap();
+    let loss = to_scalar(&outs[1]).unwrap() as f64;
+
+    let mut grad_n = vec![0.0f32; d];
+    let loss_n = anytime_mb::model::linreg::grad_sum(&w, &x, &y, &mask, &mut grad_n);
+    assert!((loss - loss_n).abs() / loss_n.abs().max(1e-9) < 1e-3);
+    for k in 0..d {
+        assert!((grad[k] - grad_n[k]).abs() < 1e-2 * (1.0 + grad_n[k].abs()));
+    }
+    // scalar literal helper sanity
+    let _ = lit_scalar(1.5);
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(rt) = runtime() else { return };
+    let name = rt.manifest.linreg_entry_name();
+    let a = rt.executable(&name).unwrap();
+    let b = rt.executable(&name).unwrap();
+    assert!(Rc::ptr_eq(&a, &b), "second lookup must hit the cache");
+}

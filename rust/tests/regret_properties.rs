@@ -1,0 +1,166 @@
+//! Property-based integration tests over the coordinator's invariants
+//! (DESIGN.md §6), using the in-tree `prop` harness.
+
+use std::sync::Arc;
+
+use anytime_mb::coordinator::{sim, ConsensusMode, RunConfig};
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::prop::{forall, Gen};
+use anytime_mb::straggler::{Deterministic, ShiftedExp};
+use anytime_mb::topology::Topology;
+use anytime_mb::{prop_assert, prop_assert_close};
+
+fn setup(g: &mut Gen) -> (Arc<DataSource>, DualAveraging, Topology) {
+    let d = g.usize_in(4, 48);
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, g.u64())));
+    let opt = DualAveraging::new(
+        BetaSchedule::new(g.f64_in(0.5, 2.0), g.f64_in(50.0, 2000.0)),
+        4.0 * (d as f64).sqrt(),
+    );
+    let n = g.usize_in(3, 12);
+    let topo = Topology::erdos_connected(n, g.f64_in(0.2, 0.8), g.u64());
+    (src, opt, topo)
+}
+
+fn factory(
+    src: Arc<DataSource>,
+    opt: DualAveraging,
+) -> impl FnMut(usize) -> Box<dyn ExecEngine> {
+    move |_| Box::new(NativeExec::new(src.clone(), opt.clone()))
+}
+
+/// AMB epoch wall time is exactly (T + T_c)·τ for ANY straggler draw,
+/// topology, or consensus budget — the defining property.
+#[test]
+fn prop_amb_wall_time_deterministic() {
+    forall(15, 0x9_001, |g| {
+        let (src, opt, topo) = setup(g);
+        let strag = ShiftedExp {
+            zeta: g.f64_in(0.1, 2.0),
+            lambda: g.f64_in(0.3, 3.0),
+            unit_batch: g.usize_in(20, 200),
+        };
+        let t = g.f64_in(0.5, 5.0);
+        let tc = g.f64_in(0.1, 2.0);
+        let epochs = g.usize_in(2, 8);
+        let cfg = RunConfig::amb("amb", t, tc, g.usize_in(1, 10), epochs, g.u64());
+        let rec = sim::run(&cfg, &topo, &strag, factory(src.clone(), opt), src.f_star()).record;
+        prop_assert_close!(rec.total_time(), epochs as f64 * (t + tc), 1e-9);
+        Ok(())
+    });
+}
+
+/// FMB epoch time equals the slowest node's completion time (plus T_c);
+/// with a deterministic model it's exactly unit_time·(b/unit)·τ + τ·T_c.
+#[test]
+fn prop_fmb_wall_time_max_gated() {
+    forall(15, 0x9_002, |g| {
+        let (src, opt, topo) = setup(g);
+        let unit_time = g.f64_in(0.5, 3.0);
+        let unit = g.usize_in(10, 100);
+        let strag = Deterministic { unit_time, unit_batch: unit };
+        let tc = g.f64_in(0.1, 1.0);
+        let epochs = g.usize_in(2, 6);
+        let b = g.usize_in(5, 150);
+        let cfg = RunConfig::fmb("fmb", b, tc, 3, epochs, g.u64());
+        let rec = sim::run(&cfg, &topo, &strag, factory(src.clone(), opt), src.f_star()).record;
+        let per_epoch = unit_time * b as f64 / unit as f64 + tc;
+        prop_assert_close!(rec.total_time(), epochs as f64 * per_epoch, 1e-9);
+        Ok(())
+    });
+}
+
+/// Global batch accounting: b(t) == Σ_i b_i(t) and (AMB, linear progress)
+/// each b_i == floor(T / sec_per_grad) — all nodes within the min/max
+/// recorded bounds, and b(t) between n·min and n·max.
+#[test]
+fn prop_batch_accounting_consistent() {
+    forall(15, 0x9_003, |g| {
+        let (src, opt, topo) = setup(g);
+        let n = topo.n();
+        let strag = ShiftedExp {
+            zeta: g.f64_in(0.2, 1.0),
+            lambda: g.f64_in(0.5, 2.0),
+            unit_batch: g.usize_in(20, 100),
+        };
+        let cfg = RunConfig::amb("amb", g.f64_in(1.0, 4.0), 0.5, 3, 5, g.u64());
+        let rec = sim::run(&cfg, &topo, &strag, factory(src.clone(), opt), src.f_star()).record;
+        for e in &rec.epochs {
+            prop_assert!(e.min_node_batch <= e.max_node_batch);
+            prop_assert!(e.batch >= n * e.min_node_batch);
+            prop_assert!(e.batch <= n * e.max_node_batch);
+            prop_assert!(e.potential >= e.batch, "c(t) >= b(t) (undone work)");
+        }
+        Ok(())
+    });
+}
+
+/// Consensus-error monotonicity in rounds, measured end-to-end through
+/// the coordinator (not just the consensus unit).
+#[test]
+fn prop_more_rounds_not_worse() {
+    forall(8, 0x9_004, |g| {
+        let (src, opt, topo) = setup(g);
+        let strag = ShiftedExp { zeta: 0.5, lambda: 1.0, unit_batch: 50 };
+        let seed = g.u64();
+        let mut err_at = |rounds: usize| -> f64 {
+            let cfg = RunConfig::amb("amb", 2.0, 0.5, rounds, 4, seed);
+            let rec = sim::run(&cfg, &topo, &strag, factory(src.clone(), opt.clone()), src.f_star()).record;
+            rec.epochs.iter().map(|e| e.consensus_err).sum::<f64>()
+        };
+        let few = err_at(1);
+        let many = err_at(12);
+        prop_assert!(many <= few * 1.05, "rounds 1: {few}, rounds 12: {many}");
+        Ok(())
+    });
+}
+
+/// Exact-consensus runs are invariant to the communication topology.
+#[test]
+fn prop_exact_consensus_topology_invariant() {
+    forall(8, 0x9_005, |g| {
+        let d = g.usize_in(4, 32);
+        let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, g.u64())));
+        let opt = DualAveraging::new(BetaSchedule::new(1.0, 500.0), 4.0 * (d as f64).sqrt());
+        let strag = ShiftedExp { zeta: 0.5, lambda: 1.0, unit_batch: 50 };
+        let seed = g.u64();
+        let run_on = |topo: &Topology| {
+            let cfg = RunConfig::amb("amb", 2.0, 0.5, 1, 4, seed).with_consensus(ConsensusMode::Exact);
+            sim::run(&cfg, topo, &strag, factory(src.clone(), opt.clone()), src.f_star())
+        };
+        let a = run_on(&Topology::ring(6));
+        let b = run_on(&Topology::complete(6));
+        for (wa, wb) in a.final_w.iter().zip(&b.final_w) {
+            for k in 0..wa.len() {
+                prop_assert_close!(wa[k], wb[k], 1e-5);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bit-level reproducibility across repeated runs with the same seed.
+#[test]
+fn prop_seeded_reproducibility() {
+    forall(6, 0x9_006, |g| {
+        let (src, opt, topo) = setup(g);
+        let strag = ShiftedExp { zeta: 0.5, lambda: 1.5, unit_batch: 60 };
+        let seed = g.u64();
+        let run = || {
+            let cfg = RunConfig::amb("amb", 1.5, 0.4, 4, 5, seed);
+            sim::run(&cfg, &topo, &strag, factory(src.clone(), opt.clone()), src.f_star())
+        };
+        let a = run();
+        let b = run();
+        for (ea, eb) in a.record.epochs.iter().zip(&b.record.epochs) {
+            prop_assert!(ea.batch == eb.batch);
+            prop_assert!(ea.loss.to_bits() == eb.loss.to_bits());
+        }
+        for (wa, wb) in a.final_w.iter().zip(&b.final_w) {
+            prop_assert!(wa == wb);
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,110 @@
+//! Integration: the real-time threaded cluster (one thread per node,
+//! channel network) running the full AMB protocol.
+
+use std::sync::Arc;
+
+use anytime_mb::coordinator::threaded::{run_amb, ThreadedConfig};
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::topology::Topology;
+
+fn cfg(epochs: usize, t_compute: f64, t_consensus: f64, slowdown: Vec<f64>) -> ThreadedConfig {
+    ThreadedConfig {
+        name: "amb-threaded".into(),
+        t_compute,
+        t_consensus,
+        epochs,
+        seed: 9,
+        grad_chunk: 16,
+        slowdown,
+    }
+}
+
+fn linreg_factory(
+    d: usize,
+    seed: u64,
+) -> (
+    impl Fn(usize) -> Box<dyn anytime_mb::exec::ExecEngine> + Send + Sync,
+    f64,
+) {
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 500.0), 4.0 * (d as f64).sqrt());
+    let f_star = src.f_star();
+    (
+        move |_i: usize| -> Box<dyn anytime_mb::exec::ExecEngine> {
+            Box::new(NativeExec::new(src.clone(), opt.clone()))
+        },
+        f_star,
+    )
+}
+
+#[test]
+fn five_node_ring_trains() {
+    let topo = Topology::ring(5);
+    let (mk, f_star) = linreg_factory(24, 3);
+    let out = run_amb(&cfg(8, 0.05, 0.04, vec![]), &topo, mk, f_star);
+    assert_eq!(out.record.epochs.len(), 8);
+    let first = out.record.epochs[0].error;
+    let last = out.record.epochs.last().unwrap().error;
+    assert!(last < first, "no progress {first} -> {last}");
+    // consensus rounds were completed by every node in most epochs
+    let zero_round_epochs: usize = out
+        .rounds
+        .iter()
+        .flat_map(|r| r.iter())
+        .filter(|&&r| r == 0)
+        .count();
+    let total: usize = out.rounds.iter().map(|r| r.len()).sum();
+    assert!(
+        zero_round_epochs * 4 < total,
+        "too many zero-round node-epochs: {zero_round_epochs}/{total}"
+    );
+}
+
+#[test]
+fn epoch_wall_time_is_fixed_regardless_of_stragglers() {
+    // The defining AMB property, now in real time: epoch boundaries land
+    // on the absolute schedule even with a 4x-slowed node.
+    let topo = Topology::ring(4);
+    let (mk, f_star) = linreg_factory(16, 5);
+    let c = cfg(6, 0.05, 0.03, vec![4.0, 1.0, 1.0, 1.0]);
+    let t0 = std::time::Instant::now();
+    let out = run_amb(&c, &topo, mk, f_star);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let scheduled = 6.0 * (0.05 + 0.03);
+    assert!(
+        elapsed < scheduled * 1.8 + 0.5,
+        "cluster overran the fixed schedule: {elapsed}s vs {scheduled}s"
+    );
+    // the slowed node still contributed work every epoch
+    assert!(out.node_log.batches[0].iter().all(|&b| b > 0));
+    // and contributed less than the fast nodes
+    let slow: usize = out.node_log.batches[0].iter().sum();
+    let fast: usize = out.node_log.batches[2].iter().sum();
+    assert!(slow < fast, "slow={slow} fast={fast}");
+}
+
+#[test]
+fn nodes_converge_to_similar_models() {
+    // Consensus must keep node models close: compare node 0's final w
+    // against a fresh run's (deterministic data makes direct cross-node
+    // access unnecessary — instead check the leader's error is low AND
+    // batches from all nodes contributed).
+    let topo = Topology::complete(4);
+    let (mk, f_star) = linreg_factory(16, 7);
+    let out = run_amb(&cfg(10, 0.05, 0.04, vec![]), &topo, mk, f_star);
+    let last = out.record.epochs.last().unwrap();
+    assert!(last.error < out.record.epochs[0].error * 0.5);
+    assert!(last.min_node_batch > 0);
+}
+
+#[test]
+fn single_neighbor_line_topology() {
+    // Degenerate connectivity (path graph) still terminates and trains.
+    let topo = Topology::from_edges(3, &[(0, 1), (1, 2)]);
+    let (mk, f_star) = linreg_factory(8, 11);
+    let out = run_amb(&cfg(5, 0.04, 0.03, vec![]), &topo, mk, f_star);
+    assert_eq!(out.record.epochs.len(), 5);
+    assert!(out.record.epochs.iter().all(|e| e.batch > 0));
+}
