@@ -16,15 +16,15 @@
 //!   make artifacts && cargo run --release --example e2e_transformer
 //!   (options: --epochs N --t-compute S --t-consensus S --nodes N)
 
-use std::rc::Rc;
 use std::sync::Arc;
 
-use anytime_mb::coordinator::threaded::{run_amb, ThreadedConfig};
 use anytime_mb::data::TokenStream;
 use anytime_mb::optim::{BetaSchedule, DualAveraging};
 use anytime_mb::runtime::{Manifest, PjrtRuntime, TransformerExec};
 use anytime_mb::topology::Topology;
 use anytime_mb::util::cli::Args;
+use anytime_mb::coordinator::GOSSIP_UNTIL_DEADLINE;
+use anytime_mb::{RunSpec, ThreadedRuntime};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -63,31 +63,24 @@ fn main() -> anyhow::Result<()> {
     let mut slowdown = vec![1.0; nodes];
     slowdown[0] = 3.0; // induced straggler — AMB absorbs it by design
 
-    let cfg = ThreadedConfig {
-        name: "e2e-transformer".into(),
-        t_compute,
-        t_consensus,
-        epochs,
-        seed,
-        grad_chunk: probe.transformer.batch,
-        slowdown,
-    };
+    // As many gossip rounds as fit in T_c; per-(node, epoch) log on.
+    let spec = RunSpec::amb("e2e-transformer", t_compute, t_consensus, GOSSIP_UNTIL_DEADLINE, epochs, seed)
+        .with_grad_chunk(probe.transformer.batch)
+        .with_slowdown(slowdown)
+        .with_node_log();
     let topo = Topology::ring(nodes);
 
     let dir = artifacts.clone();
+    let mk = move |_i: usize| -> Box<dyn anytime_mb::exec::ExecEngine> {
+        // Per-thread cache: each node thread loads (at most) one runtime.
+        let rt = PjrtRuntime::load_shared(&dir).expect("load artifacts");
+        Box::new(
+            TransformerExec::new(rt, tokens.clone(), optimizer.clone())
+                .expect("transformer exec"),
+        )
+    };
     let t0 = std::time::Instant::now();
-    let out = run_amb(
-        &cfg,
-        &topo,
-        move |_i| {
-            let rt = Rc::new(PjrtRuntime::load(&dir).expect("load artifacts"));
-            Box::new(
-                TransformerExec::new(rt, tokens.clone(), optimizer.clone())
-                    .expect("transformer exec"),
-            )
-        },
-        0.0,
-    );
+    let out = anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, None);
     let elapsed = t0.elapsed().as_secs_f64();
 
     // loss column is summed-sequence-loss / sequences; convert to
@@ -127,11 +120,12 @@ fn main() -> anyhow::Result<()> {
          ({elapsed:.1}s wall, scheduled {:.1}s)",
         epochs as f64 * (t_compute + t_consensus)
     );
+    let log = out.node_log.as_ref().expect("spec requested a node log");
     println!(
         "straggler absorbed: node 0 batches {:?}... vs node {} batches {:?}...",
-        &out.node_log.batches[0][..3.min(out.node_log.batches[0].len())],
+        &log.batches[0][..3.min(log.batches[0].len())],
         nodes - 1,
-        &out.node_log.batches[nodes - 1][..3.min(out.node_log.batches[nodes - 1].len())],
+        &log.batches[nodes - 1][..3.min(log.batches[nodes - 1].len())],
     );
     anyhow::ensure!(last < first, "loss did not decrease: {first} -> {last}");
     Ok(())

@@ -2,25 +2,22 @@
 //! EC2 cluster (n = 10, paper Fig-2 topology, T = 14.5 s, T_c = 4.5 s).
 //!
 //!   cargo run --release --example linreg_ec2 [-- --pjrt] [-- --quick]
+//!   cargo run --release --example linreg_ec2 -- --runtime threaded --time-scale 0.002
 //!
 //! With `--pjrt` the per-node gradients run through the AOT-compiled
 //! HLO artifacts (requires `make artifacts`); without it they use the
 //! native-Rust oracle (identical numerics, see rust/tests/pjrt_roundtrip).
+//! With `--runtime threaded` the same RunSpecs execute on the real
+//! threaded cluster (windows compressed by `--time-scale`).
 
-use anytime_mb::experiments::{fig1, Backend, Ctx};
+use anytime_mb::experiments::{fig1, Ctx};
 use anytime_mb::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let out_dir = std::path::PathBuf::from(args.str_or("out-dir", "results"));
-    let mut ctx = Ctx::native(&out_dir);
-    ctx.seed = args.u64_or("seed", 42)?;
-    if args.flag("pjrt") {
-        ctx.backend = Backend::Pjrt(anytime_mb::artifacts_dir());
-    }
-    if args.flag("quick") {
-        ctx = ctx.quick();
-    }
+    // Shared flag parsing (--pjrt, --quick, --seed, --runtime, --time-scale).
+    let ctx = Ctx::from_args(&out_dir, &args)?;
 
     let report = fig1::fig1a(&ctx)?;
     println!("{report}");

@@ -5,21 +5,16 @@
 //! variability: ≈1.5-1.7× → ≈2× → ≈5× in the paper.
 //!
 //!   cargo run --release --example logreg_mnist [-- --pjrt] [-- --quick]
+//!   cargo run --release --example logreg_mnist -- --runtime threaded --time-scale 0.002
 
-use anytime_mb::experiments::{fig1, fig7, fig8, Backend, Ctx};
+use anytime_mb::experiments::{fig1, fig7, fig8, Ctx};
 use anytime_mb::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let out_dir = std::path::PathBuf::from(args.str_or("out-dir", "results"));
-    let mut ctx = Ctx::native(&out_dir);
-    ctx.seed = args.u64_or("seed", 42)?;
-    if args.flag("pjrt") {
-        ctx.backend = Backend::Pjrt(anytime_mb::artifacts_dir());
-    }
-    if args.flag("quick") {
-        ctx = ctx.quick();
-    }
+    // Shared flag parsing (--pjrt, --quick, --seed, --runtime, --time-scale).
+    let ctx = Ctx::from_args(&out_dir, &args)?;
 
     println!("== clean EC2 (Fig 1b) ==");
     let r1 = fig1::fig1b(&ctx)?;

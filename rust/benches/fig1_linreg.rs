@@ -1,12 +1,16 @@
 //! Bench: Figure 1(a) — linreg AMB vs FMB on simulated EC2.
-//! Regenerates the figure (quick mode) and times the epoch pipeline.
+//! Regenerates the figure (quick mode) and times the epoch pipeline via
+//! the unified `RunSpec` → `amb::run` API.
+
+use std::sync::Arc;
 
 use anytime_mb::bench_harness::Bencher;
-use anytime_mb::coordinator::{sim, RunConfig};
-use anytime_mb::exec::NativeExec;
+use anytime_mb::coordinator::RunSpec;
+use anytime_mb::exec::{ExecEngine, NativeExec};
 use anytime_mb::experiments::{self, Ctx};
 use anytime_mb::straggler::ShiftedExp;
 use anytime_mb::topology::Topology;
+use anytime_mb::SimRuntime;
 
 fn main() {
     let dir = std::path::PathBuf::from("results/bench");
@@ -20,22 +24,15 @@ fn main() {
     let source = experiments::linreg_source(1);
     let opt = experiments::optimizer_for(&source, 6000.0);
     let f_star = source.f_star();
+    let src = Arc::clone(&source);
+    let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+        Box::new(NativeExec::new(src.clone(), opt.clone()))
+    };
+    let sim = SimRuntime::new(&strag);
 
-    b.bench("fig1a/amb_5_epochs_n10_d1024", || {
-        let cfg = RunConfig::amb("amb", 14.5, 4.5, 5, 5, 1);
-        let src = source.clone();
-        let o = opt.clone();
-        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
-            .record
-            .total_time()
-    });
-    b.bench("fig1a/fmb_5_epochs_n10_d1024", || {
-        let cfg = RunConfig::fmb("fmb", 600, 4.5, 5, 5, 1);
-        let src = source.clone();
-        let o = opt.clone();
-        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
-            .record
-            .total_time()
-    });
+    let amb = RunSpec::amb("amb", 14.5, 4.5, 5, 5, 1);
+    b.bench_run("fig1a/amb_5_epochs_n10_d1024", &sim, &amb, &topo, &mk, f_star);
+    let fmb = RunSpec::fmb("fmb", 600, 4.5, 5, 5, 1);
+    b.bench_run("fig1a/fmb_5_epochs_n10_d1024", &sim, &fmb, &topo, &mk, f_star);
     b.report("fig1a linreg EC2");
 }

@@ -1,11 +1,14 @@
 //! Bench: Figure 1(b) — MNIST-shaped logistic regression, AMB vs FMB.
 
+use std::sync::Arc;
+
 use anytime_mb::bench_harness::Bencher;
-use anytime_mb::coordinator::{sim, RunConfig};
-use anytime_mb::exec::NativeExec;
+use anytime_mb::coordinator::RunSpec;
+use anytime_mb::exec::{ExecEngine, NativeExec};
 use anytime_mb::experiments::{self, Ctx};
 use anytime_mb::straggler::ShiftedExp;
 use anytime_mb::topology::Topology;
+use anytime_mb::SimRuntime;
 
 fn main() {
     let dir = std::path::PathBuf::from("results/bench");
@@ -19,14 +22,13 @@ fn main() {
     let source = experiments::mnist_source(1);
     let opt = experiments::optimizer_for(&source, 8000.0);
     let f_star = source.f_star();
+    let src = Arc::clone(&source);
+    let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+        Box::new(NativeExec::new(src.clone(), opt.clone()))
+    };
+    let sim = SimRuntime::new(&strag);
 
-    b.bench("fig1b/amb_2_epochs_n10_k10_d785", || {
-        let cfg = RunConfig::amb("amb", 12.0, 3.0, 5, 2, 1);
-        let src = source.clone();
-        let o = opt.clone();
-        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
-            .record
-            .total_samples()
-    });
+    let amb = RunSpec::amb("amb", 12.0, 3.0, 5, 2, 1);
+    b.bench_run("fig1b/amb_2_epochs_n10_k10_d785", &sim, &amb, &topo, &mk, f_star);
     b.report("fig1b logreg EC2");
 }

@@ -1,11 +1,14 @@
 //! Bench: Figure 3 — hub-and-spoke (master-worker) logistic regression.
 
+use std::sync::Arc;
+
 use anytime_mb::bench_harness::Bencher;
-use anytime_mb::coordinator::{sim, ConsensusMode, RunConfig};
-use anytime_mb::exec::NativeExec;
+use anytime_mb::coordinator::{ConsensusMode, RunSpec};
+use anytime_mb::exec::{ExecEngine, NativeExec};
 use anytime_mb::experiments::{self, Ctx};
 use anytime_mb::straggler::ShiftedExp;
 use anytime_mb::topology::Topology;
+use anytime_mb::SimRuntime;
 
 fn main() {
     let dir = std::path::PathBuf::from("results/bench");
@@ -19,14 +22,13 @@ fn main() {
     let source = experiments::mnist_source(1);
     let opt = experiments::optimizer_for(&source, 3990.0);
     let f_star = source.f_star();
+    let src = Arc::clone(&source);
+    let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+        Box::new(NativeExec::new(src.clone(), opt.clone()))
+    };
+    let sim = SimRuntime::new(&strag);
 
-    b.bench("fig3/amb_hub_2_epochs_19_workers", || {
-        let cfg = RunConfig::amb("amb", 3.0, 1.0, 1, 2, 1).with_consensus(ConsensusMode::Exact);
-        let src = source.clone();
-        let o = opt.clone();
-        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
-            .record
-            .total_samples()
-    });
+    let spec = RunSpec::amb("amb", 3.0, 1.0, 1, 2, 1).with_consensus(ConsensusMode::Exact);
+    b.bench_run("fig3/amb_hub_2_epochs_19_workers", &sim, &spec, &topo, &mk, f_star);
     b.report("fig3 hub-and-spoke");
 }

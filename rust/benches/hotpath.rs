@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use anytime_mb::bench_harness::Bencher;
 use anytime_mb::consensus::Consensus;
-use anytime_mb::coordinator::{sim, RunConfig};
+use anytime_mb::coordinator::RunSpec;
 use anytime_mb::data::{LinRegStream, MnistLike};
 use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
 use anytime_mb::optim::{BetaSchedule, DualAveraging};
@@ -20,6 +20,7 @@ use anytime_mb::runtime::{PjrtExec, PjrtRuntime};
 use anytime_mb::straggler::ShiftedExp;
 use anytime_mb::topology::Topology;
 use anytime_mb::util::rng::Pcg64;
+use anytime_mb::SimRuntime;
 
 fn optimizer(dim: usize) -> DualAveraging {
     DualAveraging::new(BetaSchedule::new(1.0, 1000.0), 4.0 * (dim as f64).sqrt())
@@ -81,14 +82,19 @@ fn main() {
     let sim_src = Arc::new(DataSource::LinReg(LinRegStream::new(1024, 5)));
     let sim_opt = optimizer(1024);
     let f_star = sim_src.f_star();
-    b.bench("L3/sim_epoch_amb_n10_d1024_b6000", || {
-        let cfg = RunConfig::amb("amb", 2.5, 0.5, 5, 1, 7);
-        let src = sim_src.clone();
-        let o = sim_opt.clone();
-        sim::run(&cfg, &topo, &strag, move |_| Box::new(NativeExec::new(src.clone(), o.clone())), f_star)
-            .record
-            .total_samples()
-    });
+    let epoch_src = sim_src.clone();
+    let epoch_mk = move |_i: usize| -> Box<dyn ExecEngine> {
+        Box::new(NativeExec::new(epoch_src.clone(), sim_opt.clone()))
+    };
+    let epoch_spec = RunSpec::amb("amb", 2.5, 0.5, 5, 1, 7);
+    b.bench_run(
+        "L3/sim_epoch_amb_n10_d1024_b6000",
+        &SimRuntime::new(&strag),
+        &epoch_spec,
+        &topo,
+        &epoch_mk,
+        f_star,
+    );
 
     // ---- RT: PJRT artifact path --------------------------------------------
     match PjrtRuntime::load(&anytime_mb::artifacts_dir()) {

@@ -6,6 +6,8 @@
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::{EngineFactory, RunSpec, Runtime};
+use crate::topology::Topology;
 use crate::util::stats;
 
 /// One benchmark's timing summary (per-iteration, seconds).
@@ -114,6 +116,24 @@ impl Bencher {
         };
         self.results.push(summary);
         self.results.last().unwrap()
+    }
+
+    /// Time a full [`crate::run`] invocation — the standard row every
+    /// figure bench records, identical for either runtime.
+    pub fn bench_run(
+        &mut self,
+        name: &str,
+        runtime: &dyn Runtime,
+        spec: &RunSpec,
+        topo: &Topology,
+        make_engine: EngineFactory<'_>,
+        f_star: Option<f64>,
+    ) -> &Summary {
+        self.bench(name, || {
+            crate::run(runtime, spec, topo, make_engine, f_star)
+                .record
+                .total_samples()
+        })
     }
 
     /// Print the standard header + all recorded results.

@@ -1,4 +1,4 @@
-//! Experiment configuration: JSON round-trip for [`RunConfig`]-level
+//! Experiment configuration: JSON round-trip for [`RunSpec`]-level
 //! settings plus named presets for every experiment in the paper, so a
 //! run is fully described by a small config file:
 //!
@@ -12,13 +12,13 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{ConsensusMode, RunConfig, Scheme};
+use crate::coordinator::{ConsensusMode, RunSpec, Scheme};
 use crate::util::json::Json;
 
 /// A full experiment description: scheduler + workload + environment.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    pub run: RunConfig,
+    pub run: RunSpec,
     /// "linreg" | "logreg"
     pub workload: String,
     /// "shiftedexp" | "induced" | "pause" | "none"
@@ -73,6 +73,12 @@ impl ExperimentConfig {
             ("seed", Json::num(self.run.seed as f64)),
             ("exact_bt", Json::Bool(self.run.exact_bt)),
             ("record_node_log", Json::Bool(self.run.record_node_log)),
+            ("grad_chunk", Json::num(self.run.grad_chunk as f64)),
+            (
+                "slowdown",
+                Json::arr(self.run.slowdown.iter().map(|&f| Json::num(f))),
+            ),
+            ("time_scale", Json::num(self.run.time_scale)),
             ("workload", Json::str(&self.workload)),
             ("straggler", Json::str(&self.straggler)),
             ("nodes", Json::num(self.nodes as f64)),
@@ -123,8 +129,18 @@ impl ExperimentConfig {
             other => bail!("unknown consensus kind {other:?}"),
         };
 
+        let slowdown: Vec<f64> = match j.get("slowdown") {
+            Some(Json::Arr(v)) => v
+                .iter()
+                .map(|x| x.as_f64().context("slowdown entries must be numbers"))
+                .collect::<Result<_>>()?,
+            _ => Vec::new(),
+        };
+        if !slowdown.iter().all(|f| f.is_finite() && *f >= 1.0) {
+            bail!("slowdown factors must be finite and >= 1.0 (got {slowdown:?})");
+        }
         Ok(ExperimentConfig {
-            run: RunConfig {
+            run: RunSpec {
                 name: req_str("name")?.to_string(),
                 scheme,
                 consensus,
@@ -135,6 +151,29 @@ impl ExperimentConfig {
                     .get("record_node_log")
                     .and_then(|v| v.as_bool())
                     .unwrap_or(false),
+                // validate like time_scale below: a zero chunk would
+                // stall the threaded quota loop
+                grad_chunk: match j.get("grad_chunk") {
+                    None => 16,
+                    Some(v) => {
+                        let gc = v.as_usize().context("grad_chunk must be a number")?;
+                        if gc == 0 {
+                            bail!("grad_chunk must be positive");
+                        }
+                        gc
+                    }
+                },
+                slowdown,
+                time_scale: match j.get("time_scale") {
+                    None => 1.0,
+                    Some(v) => {
+                        let ts = v.as_f64().context("time_scale must be a number")?;
+                        if ts <= 0.0 {
+                            bail!("time_scale must be positive (got {ts})");
+                        }
+                        ts
+                    }
+                },
             },
             workload: req_str("workload")?.to_string(),
             straggler: req_str("straggler")?.to_string(),
@@ -163,7 +202,7 @@ impl ExperimentConfig {
 /// Named presets for every paper experiment (paper parameters verbatim
 /// where published; see DESIGN.md §4).
 pub fn preset(name: &str) -> Result<ExperimentConfig> {
-    let base = |run: RunConfig, workload: &str, straggler: &str, nodes: usize,
+    let base = |run: RunSpec, workload: &str, straggler: &str, nodes: usize,
                 zeta: f64, lambda: f64, unit: usize| ExperimentConfig {
         run,
         workload: workload.into(),
@@ -175,31 +214,31 @@ pub fn preset(name: &str) -> Result<ExperimentConfig> {
     };
     Ok(match name {
         "fig1a_amb" => base(
-            RunConfig::amb("fig1a-amb", 14.5, 4.5, 5, 24, 42),
+            RunSpec::amb("fig1a-amb", 14.5, 4.5, 5, 24, 42),
             "linreg", "shiftedexp", 10, 12.5, 0.5, 600,
         ),
         "fig1a_fmb" => base(
-            RunConfig::fmb("fig1a-fmb", 600, 4.5, 5, 24, 42),
+            RunSpec::fmb("fig1a-fmb", 600, 4.5, 5, 24, 42),
             "linreg", "shiftedexp", 10, 12.5, 0.5, 600,
         ),
         "fig1b_amb" => base(
-            RunConfig::amb("fig1b-amb", 12.0, 3.0, 5, 20, 42),
+            RunSpec::amb("fig1b-amb", 12.0, 3.0, 5, 20, 42),
             "logreg", "shiftedexp", 10, 8.0, 0.25, 800,
         ),
         "fig1b_fmb" => base(
-            RunConfig::fmb("fig1b-fmb", 800, 3.0, 5, 20, 42),
+            RunSpec::fmb("fig1b-fmb", 800, 3.0, 5, 20, 42),
             "logreg", "shiftedexp", 10, 8.0, 0.25, 800,
         ),
         "fig4_amb" => base(
-            RunConfig::amb("fig4-amb", 2.5, 0.5, 5, 20, 42),
+            RunSpec::amb("fig4-amb", 2.5, 0.5, 5, 20, 42),
             "linreg", "shiftedexp", 20, 1.0, 2.0 / 3.0, 600,
         ),
         "fig7_amb" => base(
-            RunConfig::amb("fig7-amb", 12.0, 3.0, 5, 24, 42),
+            RunSpec::amb("fig7-amb", 12.0, 3.0, 5, 24, 42),
             "logreg", "induced", 10, 0.0, 0.0, 585,
         ),
         "fig9_amb" => base(
-            RunConfig::amb("fig9-amb", 115.0, 10.0, 1, 60, 42)
+            RunSpec::amb("fig9-amb", 115.0, 10.0, 1, 60, 42)
                 .with_consensus(ConsensusMode::Exact),
             "logreg", "pause", 50, 0.0, 0.0, 10,
         ),
@@ -222,6 +261,9 @@ mod tests {
             assert_eq!(back.run.epochs, cfg.run.epochs);
             assert_eq!(back.workload, cfg.workload);
             assert_eq!(back.nodes, cfg.nodes);
+            assert_eq!(back.run.grad_chunk, cfg.run.grad_chunk);
+            assert_eq!(back.run.slowdown, cfg.run.slowdown);
+            assert!((back.run.time_scale - cfg.run.time_scale).abs() < 1e-12);
         }
     }
 
@@ -230,8 +272,12 @@ mod tests {
         let mut cfg = preset("fig1a_fmb").unwrap();
         cfg.run.scheme =
             Scheme::FmbBackup { per_node_batch: 100, t_consensus: 1.0, ignore: 2, coded: true };
+        cfg.run = cfg.run.with_grad_chunk(64).with_slowdown(vec![3.0, 1.0]).with_time_scale(0.25);
         let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
         assert_eq!(back.run.scheme, cfg.run.scheme);
+        assert_eq!(back.run.grad_chunk, 64);
+        assert_eq!(back.run.slowdown, vec![3.0, 1.0]);
+        assert!((back.run.time_scale - 0.25).abs() < 1e-12);
     }
 
     #[test]
@@ -250,5 +296,17 @@ mod tests {
         assert!(preset("nope").is_err());
         assert!(ExperimentConfig::from_json("{}").is_err());
         assert!(ExperimentConfig::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn nonpositive_time_scale_rejected_at_parse() {
+        let text = preset("fig1a_amb").unwrap().to_json().to_string();
+        assert!(text.contains("\"time_scale\":1"));
+        let bad = text.replace("\"time_scale\":1", "\"time_scale\":-1");
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        let zero = text.replace("\"time_scale\":1", "\"time_scale\":0");
+        assert!(ExperimentConfig::from_json(&zero).is_err());
+        let badgc = text.replace("\"grad_chunk\":16", "\"grad_chunk\":0");
+        assert!(ExperimentConfig::from_json(&badgc).is_err());
     }
 }

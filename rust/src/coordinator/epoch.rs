@@ -1,0 +1,397 @@
+//! Runtime-agnostic per-epoch state machine (paper Sec. 3 / Algorithm 1).
+//!
+//! Both cluster runtimes execute the identical epoch algebra; they differ
+//! only in how *time* is attributed (virtual straggler draws vs real
+//! deadlines).  Everything time-independent lives here:
+//!
+//! * [`NodeState`] — a node's (w, z, grad-sum) triple with the message
+//!   encode/decode steps:
+//!     encode   m_i⁽⁰⁾ = n·(b_i·z_i + grad_sum_i), side channel n·b_i
+//!     decode   z_i(t+1) = m_i⁽ʳ⁾ / b̂(t);  w_i(t+1) = argmin ⟨w,z⟩+βh(w)
+//! * [`plan_compute`] — the per-scheme compute-window accounting the
+//!   simulator attributes from straggler draws ([`Scheme::Fmb`] /
+//!   [`Scheme::FmbBackup`] batch accounting included).
+//! * [`backup_attribution`] / [`work_quota`] — the redundancy-baseline
+//!   bookkeeping, shared so the threaded runtime attributes coded /
+//!   backup batches exactly like the simulator.
+//! * Canonical RNG stream derivations, so one
+//!   [`crate::coordinator::RunSpec`] replays the same data/metric sample
+//!   sequences on BOTH runtimes (the sim-vs-threaded parity tests rely
+//!   on this).
+
+use crate::coordinator::Scheme;
+use crate::exec::ExecEngine;
+use crate::straggler::StragglerModel;
+use crate::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Canonical RNG streams (shared by both runtimes)
+// ---------------------------------------------------------------------------
+
+/// Node `node`'s data-sampling stream for epoch `epoch`.  Derived per
+/// (node, epoch) — not one sequential stream — so a node that consumes
+/// a different number of draws in some epoch (e.g. a dropped backup
+/// straggler abandoning mid-quota, or AMB's runtime-dependent batch)
+/// cannot shift every later epoch's samples: both runtimes start each
+/// epoch at the identical stream position.
+pub fn data_rng(seed: u64, node: usize, epoch: usize) -> Pcg64 {
+    Pcg64::new(seed).split(0xDA7A_0000 ^ ((node as u64) << 24) ^ epoch as u64)
+}
+
+/// Node `node`'s error-metric stream (fresh-sample estimates).
+pub fn metric_rng(seed: u64, node: usize) -> Pcg64 {
+    Pcg64::new(seed).split(0x3E77_0000 + node as u64)
+}
+
+/// The simulator's straggler-draw stream.
+pub fn straggler_rng(seed: u64) -> Pcg64 {
+    Pcg64::new(seed).split(0x57)
+}
+
+/// Warm-up stream for the threaded runtime's engine priming; separate
+/// from [`data_rng`] so warm-up samples never shift the data sequence.
+pub fn warmup_rng(seed: u64, node: usize) -> Pcg64 {
+    Pcg64::new(seed).split(0x3A_0000 + node as u64)
+}
+
+/// Stream for the coded-redundancy gradients whose sums are never used
+/// (threaded `FmbBackup { coded: true }` computes (ignore+1)× the quota
+/// for time realism); separate from [`data_rng`] so the *attributed*
+/// sample sequence stays identical to the simulator's.
+pub fn redundancy_rng(seed: u64, node: usize) -> Pcg64 {
+    Pcg64::new(seed).split(0x0C0D_0000 + node as u64)
+}
+
+/// Per-(node, epoch) gossip-round draw for
+/// [`crate::coordinator::ConsensusMode::GossipJitter`] — derived, not
+/// sequential, so both runtimes draw identical r_i(t).
+pub fn gossip_jitter_rounds(seed: u64, node: usize, epoch: usize, mean: usize, jitter: usize) -> usize {
+    let lo = mean.saturating_sub(jitter);
+    let hi = mean + jitter;
+    let mut rng = Pcg64::new(seed).split(0x20_0000 ^ ((node as u64) << 24) ^ epoch as u64);
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+// ---------------------------------------------------------------------------
+// Node state: the optimisation variables + wire codec
+// ---------------------------------------------------------------------------
+
+/// A node's per-run optimisation state.  Messages carry `dim + 1`
+/// components: the dual payload and the n·b_i side channel used to
+/// estimate b(t) distributively.
+pub struct NodeState {
+    /// Primal variables; w(1) = argmin h(w) per engine (paper eq. (2)).
+    pub w: Vec<f32>,
+    /// Dual (averaged-gradient) variables.
+    pub z: Vec<f32>,
+    /// Gradient-sum accumulator for the current epoch's compute phase.
+    pub grad_sum: Vec<f32>,
+}
+
+impl NodeState {
+    pub fn new(engine: &dyn ExecEngine) -> NodeState {
+        let dim = engine.workload().dim();
+        NodeState { w: engine.initial_primal(), z: vec![0.0; dim], grad_sum: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Reset the epoch accumulator before the compute phase.
+    pub fn begin_epoch(&mut self) {
+        self.grad_sum.fill(0.0);
+    }
+
+    /// Encode the consensus message m⁽⁰⁾ = n·(b_i·z + grad_sum) with the
+    /// n·b_i side channel into `msg` (resized to dim + 1).
+    pub fn encode_into(&self, n: usize, b_i: usize, msg: &mut Vec<f32>) {
+        let dim = self.dim();
+        msg.resize(dim + 1, 0.0);
+        let bi = b_i as f32;
+        for k in 0..dim {
+            msg[k] = n as f32 * (bi * self.z[k] + self.grad_sum[k]);
+        }
+        msg[dim] = n as f32 * bi;
+    }
+
+    /// Decode the post-consensus message: z ← m / b̂.
+    pub fn set_dual(&mut self, msg: &[f32], b_hat: f32) {
+        let dim = self.dim();
+        for k in 0..dim {
+            self.z[k] = msg[k] / b_hat;
+        }
+    }
+
+    /// Dual-averaging primal step for epoch `t_next` (= t + 1).
+    pub fn primal(&mut self, engine: &mut dyn ExecEngine, t_next: usize) {
+        engine.primal_step(&self.z, t_next, &mut self.w);
+    }
+}
+
+/// The distributed b̂(t) estimate from a message's side channel, clamped
+/// away from zero so the dual update is always well-defined.
+pub fn side_channel_b_hat(msg: &[f32]) -> f32 {
+    msg[msg.len() - 1].max(1e-6)
+}
+
+// ---------------------------------------------------------------------------
+// Compute-phase accounting
+// ---------------------------------------------------------------------------
+
+/// One epoch's compute-phase accounting (per node + epoch aggregate).
+pub struct ComputePlan {
+    /// b_i(t) actually attributed per node.
+    pub batches: Vec<usize>,
+    /// Potential work c_i(t) ≥ b_i(t) (regret accounting, paper Sec. 4.2).
+    pub potentials: Vec<usize>,
+    /// Seconds node i spent computing in the epoch.
+    pub compute_times: Vec<f64>,
+    /// Epoch compute-phase duration (max over gating nodes).
+    pub epoch_compute_time: f64,
+}
+
+/// Attribute one epoch's compute phase from straggler draws — the
+/// simulator's time model (paper Sec. 3; Assumption 2's conditionally
+/// linear progress).  Draw order is fixed (node-major, AMB drawing a
+/// second "potential" profile) so runs are bit-reproducible per seed.
+pub fn plan_compute(
+    scheme: &Scheme,
+    n: usize,
+    epoch: usize,
+    straggler: &dyn StragglerModel,
+    rng: &mut Pcg64,
+) -> ComputePlan {
+    let mut batches = vec![0usize; n];
+    let mut potentials = vec![0usize; n];
+    let mut compute_times = vec![0.0f64; n];
+    let epoch_compute_time;
+    match *scheme {
+        Scheme::Amb { t_compute, t_consensus } => {
+            for i in 0..n {
+                let mut prof = straggler.draw(i, epoch, rng);
+                batches[i] = prof.grads_in_time(t_compute);
+                compute_times[i] = t_compute;
+                // potential work c_i(t): what the node could have done
+                // with the consensus window too.  Fresh profile draw: an
+                // unbiased estimate with identical distribution.
+                let mut prof2 = straggler.draw(i, epoch, rng);
+                potentials[i] = prof2.grads_in_time(t_compute + t_consensus).max(batches[i]);
+            }
+            epoch_compute_time = t_compute;
+        }
+        Scheme::Fmb { per_node_batch, .. } => {
+            let mut slowest = 0.0f64;
+            for i in 0..n {
+                let mut prof = straggler.draw(i, epoch, rng);
+                batches[i] = per_node_batch;
+                compute_times[i] = prof.time_for_grads(per_node_batch);
+                slowest = slowest.max(compute_times[i]);
+            }
+            for (p, &b) in potentials.iter_mut().zip(&batches) {
+                *p = b; // FMB: everyone computes exactly the quota
+            }
+            epoch_compute_time = slowest;
+        }
+        Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => {
+            // Redundancy baseline: wait only for the fastest n−ignore
+            // nodes.  Coded variant makes every node compute (ignore+1)×
+            // the quota so the batch stays whole.  EXACTLY n−ignore nodes
+            // survive — ties broken by node index, matching the threaded
+            // runtime's atomic finish-rank semantics (otherwise a
+            // deterministic model would mark everyone on-time and coded
+            // attribution would exceed the recoverable batch).
+            let ignore = ignore.min(n.saturating_sub(1));
+            let work = work_quota(scheme, n).unwrap();
+            for i in 0..n {
+                let mut prof = straggler.draw(i, epoch, rng);
+                compute_times[i] = prof.time_for_grads(work);
+            }
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                compute_times[a]
+                    .partial_cmp(&compute_times[b])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            let cutoff = compute_times[order[n - 1 - ignore]];
+            for (rank, &i) in order.iter().enumerate() {
+                let on_time = rank < n - ignore;
+                batches[i] = backup_attribution(on_time, coded, per_node_batch, n, ignore);
+                potentials[i] = work.max(batches[i]);
+            }
+            epoch_compute_time = cutoff;
+        }
+    }
+    ComputePlan { batches, potentials, compute_times, epoch_compute_time }
+}
+
+/// Gradients a node must *compute* in one epoch, when the scheme fixes
+/// that number (None for AMB's anytime window).  For the coded baseline
+/// this includes the (ignore+1)× redundancy.
+pub fn work_quota(scheme: &Scheme, n: usize) -> Option<usize> {
+    match *scheme {
+        Scheme::Amb { .. } => None,
+        Scheme::Fmb { per_node_batch, .. } => Some(per_node_batch),
+        Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => {
+            let ignore = ignore.min(n.saturating_sub(1));
+            Some(if coded { per_node_batch * (ignore + 1) } else { per_node_batch })
+        }
+    }
+}
+
+/// Batch attributed to a node under [`Scheme::FmbBackup`]:
+/// * uncoded on-time: the quota; uncoded late: work DROPPED (0);
+/// * coded on-time: the full batch is recoverable — each survivor is
+///   charged b/(n−ignore) of it; coded late: 0.
+pub fn backup_attribution(
+    on_time: bool,
+    coded: bool,
+    per_node_batch: usize,
+    n: usize,
+    ignore: usize,
+) -> usize {
+    let ignore = ignore.min(n.saturating_sub(1));
+    if !on_time {
+        0
+    } else if coded {
+        per_node_batch * n / (n - ignore)
+    } else {
+        per_node_batch
+    }
+}
+
+/// Max over nodes of ‖z_i − z̄‖ where z̄ is the exactly-normalised dual —
+/// the consensus-error diagnostic the simulator records.  `exact_bt`
+/// must match the run's normalisation so the diagnostic measures the
+/// dual the update actually used (oracle b(t) vs per-node side channel).
+pub fn consensus_error(msgs: &[Vec<f32>], exact_avg: &[f64], dim: usize, b_t: usize, exact_bt: bool) -> f64 {
+    let mut worst = 0.0f64;
+    for m in msgs {
+        let b_hat = if exact_bt { b_t as f64 } else { side_channel_b_hat(m) as f64 };
+        let mut ss = 0.0f64;
+        for k in 0..dim {
+            let exact = exact_avg[k] / b_t as f64;
+            let diff = m[k] as f64 / b_hat - exact;
+            ss += diff * diff;
+        }
+        worst = worst.max(ss.sqrt());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LinRegStream;
+    use crate::exec::{DataSource, NativeExec};
+    use crate::optim::{BetaSchedule, DualAveraging};
+    use crate::straggler::Deterministic;
+    use std::sync::Arc;
+
+    fn engine(d: usize) -> NativeExec {
+        let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, 3)));
+        NativeExec::new(src, DualAveraging::new(BetaSchedule::new(1.0, 100.0), 10.0))
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let e = engine(4);
+        let mut st = NodeState::new(&e);
+        st.z = vec![1.0, -2.0, 0.5, 0.0];
+        st.grad_sum = vec![4.0, 4.0, 4.0, 4.0];
+        let mut msg = Vec::new();
+        st.encode_into(5, 2, &mut msg);
+        // m = 5·(2·z + g), side = 5·2
+        assert_eq!(msg.len(), 5);
+        assert_eq!(msg[0], 5.0 * (2.0 * 1.0 + 4.0));
+        assert_eq!(msg[4], 10.0);
+        assert_eq!(side_channel_b_hat(&msg), 10.0);
+        st.set_dual(&msg, 10.0);
+        assert!((st.z[1] - (5.0 * (2.0 * -2.0 + 4.0)) / 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn side_channel_clamped() {
+        assert!(side_channel_b_hat(&[1.0, 0.0]) > 0.0);
+        assert!(side_channel_b_hat(&[1.0, -3.0]) > 0.0);
+    }
+
+    #[test]
+    fn rng_streams_distinct_and_reproducible() {
+        let mut a = data_rng(7, 0, 1);
+        let mut a2 = data_rng(7, 0, 1);
+        let mut b = data_rng(7, 1, 1);
+        let mut e = data_rng(7, 0, 2);
+        let mut m = metric_rng(7, 0);
+        let x = a.next_u64();
+        assert_eq!(x, a2.next_u64(), "same (seed, node, epoch) ⇒ same stream");
+        assert_ne!(x, b.next_u64(), "different node ⇒ different stream");
+        assert_ne!(x, e.next_u64(), "different epoch ⇒ different stream");
+        assert_ne!(x, m.next_u64(), "different purpose ⇒ different stream");
+    }
+
+    #[test]
+    fn gossip_jitter_in_range_and_deterministic() {
+        for epoch in 0..20 {
+            let r = gossip_jitter_rounds(5, 3, epoch, 5, 2);
+            assert!((3..=7).contains(&r), "r={r}");
+            assert_eq!(r, gossip_jitter_rounds(5, 3, epoch, 5, 2));
+        }
+    }
+
+    #[test]
+    fn plan_amb_deterministic_model() {
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
+        let scheme = Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 };
+        let mut rng = Pcg64::new(1);
+        let plan = plan_compute(&scheme, 3, 1, &strag, &mut rng);
+        assert_eq!(plan.batches, vec![80, 80, 80]);
+        assert!(plan.potentials.iter().all(|&p| p == 100));
+        assert!((plan.epoch_compute_time - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_fmb_gated_by_quota() {
+        let strag = Deterministic { unit_time: 2.0, unit_batch: 100 };
+        let scheme = Scheme::Fmb { per_node_batch: 50, t_consensus: 0.5 };
+        let mut rng = Pcg64::new(1);
+        let plan = plan_compute(&scheme, 4, 1, &strag, &mut rng);
+        assert_eq!(plan.batches, vec![50; 4]);
+        assert!((plan.epoch_compute_time - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backup_attribution_accounting() {
+        // uncoded: survivors keep the quota, stragglers dropped
+        assert_eq!(backup_attribution(true, false, 100, 10, 2), 100);
+        assert_eq!(backup_attribution(false, false, 100, 10, 2), 0);
+        // coded: survivors are charged b/(n-ignore) of the full batch
+        assert_eq!(backup_attribution(true, true, 100, 10, 2), 125);
+        assert_eq!(backup_attribution(false, true, 100, 10, 2), 0);
+    }
+
+    #[test]
+    fn work_quota_per_scheme() {
+        let n = 10;
+        assert_eq!(work_quota(&Scheme::Amb { t_compute: 1.0, t_consensus: 0.1 }, n), None);
+        assert_eq!(
+            work_quota(&Scheme::Fmb { per_node_batch: 60, t_consensus: 0.1 }, n),
+            Some(60)
+        );
+        assert_eq!(
+            work_quota(
+                &Scheme::FmbBackup { per_node_batch: 60, t_consensus: 0.1, ignore: 2, coded: true },
+                n
+            ),
+            Some(180)
+        );
+        assert_eq!(
+            work_quota(
+                &Scheme::FmbBackup { per_node_batch: 60, t_consensus: 0.1, ignore: 2, coded: false },
+                n
+            ),
+            Some(60)
+        );
+    }
+}

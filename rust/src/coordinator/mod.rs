@@ -1,4 +1,5 @@
-//! L3 coordinator — the paper's system contribution.
+//! L3 coordinator — the paper's system contribution, behind ONE runtime
+//! API.
 //!
 //! Two interchangeable epoch schedulers over the same machinery:
 //!
@@ -10,23 +11,38 @@
 //! * **FMB** (fixed minibatch baseline): every node computes exactly b/n
 //!   gradients; the epoch's compute phase lasts max_i T_i(t) (the slowest
 //!   node gates everyone), then the same consensus window.
+//! * **FMB + redundancy** ([`Scheme::FmbBackup`]): the related-work
+//!   straggler mitigations (backup workers / gradient coding).
 //!
-//! Two cluster runtimes execute these schedules:
-//! * [`sim`] — single-process discrete-event simulator with a virtual
-//!   clock driven by a [`crate::straggler::StragglerModel`]; regenerates
-//!   every figure deterministically.
-//! * [`threaded`] — one OS thread per node, mpsc-channel "network",
-//!   real wall-clock compute windows; the production-shaped runtime used
-//!   by the end-to-end example.
+//! One [`RunSpec`] describes a run; any [`Runtime`] executes it and
+//! returns the same [`RunOutput`]:
+//!
+//! * [`sim::SimRuntime`] — single-process discrete-event simulator with a
+//!   virtual clock driven by a [`crate::straggler::StragglerModel`];
+//!   regenerates every figure deterministically.
+//! * [`threaded::ThreadedRuntime`] — one OS thread per node,
+//!   mpsc-channel "network", real wall-clock compute windows; the
+//!   production-shaped runtime used by the end-to-end example.
+//!
+//! The shared per-epoch state machine (compute → consensus with the
+//! n·b_i side channel → dual-averaging update) lives in [`epoch`]; the
+//! runtimes differ only in how *time* is attributed.  Entry point:
+//! [`crate::run`] (`amb run --runtime sim|threaded` on the CLI).
 
+pub mod epoch;
 pub mod sim;
 pub mod threaded;
+
+use crate::exec::ExecEngine;
+use crate::metrics::RunRecord;
+use crate::topology::Topology;
 
 /// Epoch scheduling policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Scheme {
-    /// Fixed compute time T and communication time T_c (seconds, virtual
-    /// clock units in sim mode).
+    /// Fixed compute time T and communication time T_c (seconds: virtual
+    /// clock units in sim mode, real seconds × `time_scale` in threaded
+    /// mode).
     Amb { t_compute: f64, t_consensus: f64 },
     /// Fixed per-node batch; epoch compute time = slowest node.
     Fmb { per_node_batch: usize, t_consensus: f64 },
@@ -52,24 +68,72 @@ impl Scheme {
             Scheme::FmbBackup { coded: true, .. } => "fmb-coded",
         }
     }
+
+    /// The consensus window every variant carries.
+    pub fn t_consensus(&self) -> f64 {
+        match *self {
+            Scheme::Amb { t_consensus, .. }
+            | Scheme::Fmb { t_consensus, .. }
+            | Scheme::FmbBackup { t_consensus, .. } => t_consensus,
+        }
+    }
 }
 
 /// How dual variables are averaged in the consensus phase.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ConsensusMode {
     /// Perfect averaging (ε = 0): hub-and-spoke master aggregation or the
-    /// r → ∞ limit of Fig. 5.
+    /// r → ∞ limit of Fig. 5.  The threaded runtime realizes it as an
+    /// all-to-all exchange with f64 aggregation in node-index order, so
+    /// both runtimes compute the identical average.
     Exact,
-    /// Fixed number of synchronous gossip rounds for every node.
+    /// Fixed number of synchronous gossip rounds for every node (the
+    /// threaded runtime may complete fewer if T_c expires — the paper's
+    /// variable r_i(t)).
     Gossip { rounds: usize },
     /// Per-node round counts r_i(t) ~ Uniform{mean−jitter, …, mean+jitter}
     /// (network-delay variability of paper Sec. 3).
     GossipJitter { mean: usize, jitter: usize },
 }
 
-/// Full configuration of one simulated run.
+/// Gossip budget meaning "as many rounds as fit in T_c" — a
+/// threaded-runtime idiom (real deadline, variable r_i(t)).  The
+/// simulator executes `Gossip { rounds }` literally and rejects this
+/// sentinel with a clear panic (it has no per-round time model); specs
+/// meant to replay on both runtimes should use a finite budget.
+pub const GOSSIP_UNTIL_DEADLINE: usize = usize::MAX;
+
+/// Which runtime executes a [`RunSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// Discrete-event simulator, virtual clock.
+    Sim,
+    /// One OS thread per node, real clock.
+    Threaded,
+}
+
+impl RuntimeKind {
+    pub fn parse(s: &str) -> Option<RuntimeKind> {
+        match s {
+            "sim" => Some(RuntimeKind::Sim),
+            "threaded" => Some(RuntimeKind::Threaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RuntimeKind::Sim => "sim",
+            RuntimeKind::Threaded => "threaded",
+        }
+    }
+}
+
+/// Full configuration of one run — the single spec both runtimes consume
+/// (the union of the former sim-only `RunConfig` and threaded-only
+/// `ThreadedConfig`).
 #[derive(Debug, Clone)]
-pub struct RunConfig {
+pub struct RunSpec {
     pub name: String,
     pub scheme: Scheme,
     pub consensus: ConsensusMode,
@@ -78,49 +142,104 @@ pub struct RunConfig {
     /// If false (default), each node normalises its dual by a b(t)
     /// estimate obtained through the same consensus channel (an extra
     /// scalar component); if true, nodes magically know exact b(t).
+    /// (Sim only: threaded nodes have no oracle for global b(t).)
     pub exact_bt: bool,
     /// Record per-(node, epoch) batch sizes and compute times (Fig. 6/8
     /// histograms).
     pub record_node_log: bool,
+    /// Threaded: samples per engine call inside the compute window
+    /// (smaller => finer-grained anytime behaviour, more per-call
+    /// overhead).  Ignored by the simulator, whose compute phase is a
+    /// single attributed call.
+    pub grad_chunk: usize,
+    /// Threaded: per-node artificial slowdown factors (≥ 1.0); empty =
+    /// none.  Factor f makes the node ~f× slower by sleeping
+    /// (f−1)·chunk_time after each chunk (paper App. I.3's background
+    /// jobs).  The simulator expresses stragglers through its
+    /// `StragglerModel` instead.
+    pub slowdown: Vec<f64>,
+    /// Threaded: real seconds per spec second.  Figures quote windows in
+    /// paper units (e.g. T = 14.5 s); `time_scale = 0.01` replays them
+    /// 100× faster while the records stay in spec units.
+    pub time_scale: f64,
 }
 
-impl RunConfig {
-    pub fn amb(name: &str, t_compute: f64, t_consensus: f64, rounds: usize, epochs: usize, seed: u64) -> RunConfig {
-        RunConfig {
+impl RunSpec {
+    /// A spec with the project-wide defaults: 5 gossip rounds (the
+    /// paper's r ≈ 5), estimated b̂(t), no node log, 16-sample threaded
+    /// chunks, no slowdown, unscaled time.
+    pub fn new(name: &str, scheme: Scheme, epochs: usize, seed: u64) -> RunSpec {
+        RunSpec {
             name: name.into(),
-            scheme: Scheme::Amb { t_compute, t_consensus },
-            consensus: ConsensusMode::Gossip { rounds },
+            scheme,
+            consensus: ConsensusMode::Gossip { rounds: 5 },
             epochs,
             seed,
             exact_bt: false,
             record_node_log: false,
+            grad_chunk: 16,
+            slowdown: Vec::new(),
+            time_scale: 1.0,
         }
     }
 
-    pub fn fmb(name: &str, per_node_batch: usize, t_consensus: f64, rounds: usize, epochs: usize, seed: u64) -> RunConfig {
-        RunConfig {
-            name: name.into(),
-            scheme: Scheme::Fmb { per_node_batch, t_consensus },
-            consensus: ConsensusMode::Gossip { rounds },
-            epochs,
-            seed,
-            exact_bt: false,
-            record_node_log: false,
-        }
+    pub fn amb(
+        name: &str,
+        t_compute: f64,
+        t_consensus: f64,
+        rounds: usize,
+        epochs: usize,
+        seed: u64,
+    ) -> RunSpec {
+        RunSpec::new(name, Scheme::Amb { t_compute, t_consensus }, epochs, seed)
+            .with_consensus(ConsensusMode::Gossip { rounds })
     }
 
-    pub fn with_consensus(mut self, mode: ConsensusMode) -> RunConfig {
+    pub fn fmb(
+        name: &str,
+        per_node_batch: usize,
+        t_consensus: f64,
+        rounds: usize,
+        epochs: usize,
+        seed: u64,
+    ) -> RunSpec {
+        RunSpec::new(name, Scheme::Fmb { per_node_batch, t_consensus }, epochs, seed)
+            .with_consensus(ConsensusMode::Gossip { rounds })
+    }
+
+    pub fn with_consensus(mut self, mode: ConsensusMode) -> RunSpec {
         self.consensus = mode;
         self
     }
 
-    pub fn with_node_log(mut self) -> RunConfig {
+    pub fn with_node_log(mut self) -> RunSpec {
         self.record_node_log = true;
         self
     }
 
-    pub fn with_exact_bt(mut self) -> RunConfig {
+    pub fn with_exact_bt(mut self) -> RunSpec {
         self.exact_bt = true;
+        self
+    }
+
+    pub fn with_grad_chunk(mut self, chunk: usize) -> RunSpec {
+        assert!(chunk > 0, "grad_chunk must be positive");
+        self.grad_chunk = chunk;
+        self
+    }
+
+    pub fn with_slowdown(mut self, factors: Vec<f64>) -> RunSpec {
+        assert!(
+            factors.iter().all(|f| f.is_finite() && *f >= 1.0),
+            "slowdown factors must be finite and ≥ 1.0 (got {factors:?})"
+        );
+        self.slowdown = factors;
+        self
+    }
+
+    pub fn with_time_scale(mut self, scale: f64) -> RunSpec {
+        assert!(scale > 0.0, "time_scale must be positive");
+        self.time_scale = scale;
         self
     }
 }
@@ -130,7 +249,8 @@ impl RunConfig {
 pub struct NodeLog {
     /// batches[node][epoch] = b_i(t).
     pub batches: Vec<Vec<usize>>,
-    /// compute_times[node][epoch] = seconds node i spent computing in t.
+    /// compute_times[node][epoch] = seconds node i spent computing in t
+    /// (spec units on both runtimes).
     pub compute_times: Vec<Vec<f64>>,
 }
 
@@ -145,6 +265,40 @@ impl NodeLog {
     }
 }
 
+/// What every runtime returns for a [`RunSpec`].
+pub struct RunOutput {
+    /// Per-epoch record (times in spec units on both runtimes).
+    pub record: RunRecord,
+    /// Per-(node, epoch) raw log when `spec.record_node_log`.
+    pub node_log: Option<NodeLog>,
+    /// Final primal variables per node.
+    pub final_w: Vec<Vec<f32>>,
+    /// Consensus rounds completed per (node, epoch); 0 under
+    /// [`ConsensusMode::Exact`] (exact aggregation is not gossip).
+    pub rounds: Vec<Vec<usize>>,
+}
+
+/// Engine factory shared by both runtimes.  The threaded runtime invokes
+/// it *inside* each node thread (engines themselves need not be `Send`;
+/// PJRT clients are thread-local), so the factory must be `Send + Sync`.
+pub type EngineFactory<'a> = &'a (dyn Fn(usize) -> Box<dyn ExecEngine> + Send + Sync);
+
+/// A cluster runtime: executes any [`RunSpec`] over a topology.
+///
+/// `f_star` is the per-sample optimal loss used for regret accounting
+/// when known (see [`crate::exec::DataSource::f_star`]).
+pub trait Runtime {
+    fn kind(&self) -> RuntimeKind;
+
+    fn run(
+        &self,
+        spec: &RunSpec,
+        topo: &Topology,
+        make_engine: EngineFactory<'_>,
+        f_star: Option<f64>,
+    ) -> RunOutput;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,16 +307,37 @@ mod tests {
     fn scheme_names() {
         assert_eq!(Scheme::Amb { t_compute: 1.0, t_consensus: 0.1 }.name(), "amb");
         assert_eq!(Scheme::Fmb { per_node_batch: 10, t_consensus: 0.1 }.name(), "fmb");
+        assert_eq!(
+            Scheme::FmbBackup { per_node_batch: 10, t_consensus: 0.1, ignore: 2, coded: true }
+                .name(),
+            "fmb-coded"
+        );
+        assert_eq!(Scheme::Fmb { per_node_batch: 10, t_consensus: 0.25 }.t_consensus(), 0.25);
     }
 
     #[test]
     fn builders() {
-        let c = RunConfig::amb("a", 2.5, 0.5, 5, 20, 1).with_exact_bt().with_node_log();
+        let c = RunSpec::amb("a", 2.5, 0.5, 5, 20, 1).with_exact_bt().with_node_log();
         assert!(c.exact_bt && c.record_node_log);
         assert_eq!(c.consensus, ConsensusMode::Gossip { rounds: 5 });
-        let f = RunConfig::fmb("f", 600, 0.5, 5, 20, 1)
-            .with_consensus(ConsensusMode::Exact);
+        let f = RunSpec::fmb("f", 600, 0.5, 5, 20, 1)
+            .with_consensus(ConsensusMode::Exact)
+            .with_grad_chunk(32)
+            .with_slowdown(vec![2.0, 1.0])
+            .with_time_scale(0.1);
         assert_eq!(f.consensus, ConsensusMode::Exact);
+        assert_eq!(f.grad_chunk, 32);
+        assert_eq!(f.slowdown, vec![2.0, 1.0]);
+        assert!((f.time_scale - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runtime_kind_parse() {
+        assert_eq!(RuntimeKind::parse("sim"), Some(RuntimeKind::Sim));
+        assert_eq!(RuntimeKind::parse("threaded"), Some(RuntimeKind::Threaded));
+        assert_eq!(RuntimeKind::parse("bogus"), None);
+        assert_eq!(RuntimeKind::Sim.name(), "sim");
+        assert_eq!(RuntimeKind::Threaded.name(), "threaded");
     }
 
     #[test]

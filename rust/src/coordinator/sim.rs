@@ -1,11 +1,12 @@
-//! Discrete-event cluster simulator with a virtual wall clock.
+//! Discrete-event cluster runtime with a virtual wall clock.
 //!
 //! Gradients are *really* computed (via the node's [`ExecEngine`] — native
 //! math or PJRT artifacts); *time* is attributed by the straggler model,
 //! so a 400-virtual-second EC2 run replays in milliseconds and every
 //! figure is deterministic given its seed (DESIGN.md §2 substitution 1).
 //!
-//! Epoch t (paper Sec. 3 / Algorithm 1):
+//! Epoch t (paper Sec. 3 / Algorithm 1) — the algebra lives in
+//! [`crate::coordinator::epoch`], shared with the threaded runtime:
 //!   compute   b_i(t) ← profile.grads_in_time(T)         (AMB)
 //!             b_i(t) = b/n, time = max_i T_i(t)          (FMB)
 //!             grad_sum_i, loss_i ← engine.grad_chunk
@@ -14,210 +15,157 @@
 //!   update    z_i(t+1) = m_i⁽ʳ⁾ / b̂(t);  w_i(t+1) = argmin ⟨w,z⟩+βh(w)
 
 use crate::consensus::Consensus;
-use crate::coordinator::{ConsensusMode, NodeLog, RunConfig, Scheme};
+use crate::coordinator::epoch::{self, NodeState};
+use crate::coordinator::{
+    ConsensusMode, EngineFactory, NodeLog, RunOutput, RunSpec, Runtime, RuntimeKind,
+};
 use crate::exec::ExecEngine;
 use crate::metrics::{EpochStats, RunRecord};
 use crate::straggler::StragglerModel;
 use crate::topology::Topology;
-use crate::util::rng::Pcg64;
 
-/// Result of a simulated run.
-pub struct SimOutput {
-    pub record: RunRecord,
-    pub node_log: Option<NodeLog>,
-    /// Final primal variables per node.
-    pub final_w: Vec<Vec<f32>>,
+/// Largest gossip-round budget the simulator will execute literally;
+/// anything above is assumed to be the threaded runtime's "as many
+/// rounds as fit in T_c" sentinel and rejected with a clear panic.
+pub const MAX_SIM_GOSSIP_ROUNDS: usize = 100_000;
+
+/// The simulated cluster: a straggler model supplies the virtual clock.
+pub struct SimRuntime<'a> {
+    straggler: &'a dyn StragglerModel,
 }
 
-/// Run one configuration on a simulated cluster.
-///
-/// `make_engine(i)` constructs node i's execution engine (all nodes must
-/// share the same workload); `f_star` is the per-sample optimal loss used
-/// for regret accounting (see [`crate::exec::DataSource::f_star`]).
-pub fn run<F>(
-    cfg: &RunConfig,
+impl<'a> SimRuntime<'a> {
+    pub fn new(straggler: &'a dyn StragglerModel) -> SimRuntime<'a> {
+        SimRuntime { straggler }
+    }
+}
+
+impl Runtime for SimRuntime<'_> {
+    fn kind(&self) -> RuntimeKind {
+        RuntimeKind::Sim
+    }
+
+    fn run(
+        &self,
+        spec: &RunSpec,
+        topo: &Topology,
+        make_engine: EngineFactory<'_>,
+        f_star: Option<f64>,
+    ) -> RunOutput {
+        run_sim(spec, topo, self.straggler, make_engine, f_star)
+    }
+}
+
+fn run_sim(
+    spec: &RunSpec,
     topo: &Topology,
     straggler: &dyn StragglerModel,
-    mut make_engine: F,
-    f_star: f64,
-) -> SimOutput
-where
-    F: FnMut(usize) -> Box<dyn ExecEngine>,
-{
+    make_engine: EngineFactory<'_>,
+    f_star: Option<f64>,
+) -> RunOutput {
     let n = topo.n();
-    let mut engines: Vec<Box<dyn ExecEngine>> = (0..n).map(&mut make_engine).collect();
+    let mut engines: Vec<Box<dyn ExecEngine>> = (0..n).map(make_engine).collect();
     let dim = engines[0].workload().dim();
     for e in &engines {
         assert_eq!(e.workload().dim(), dim, "engines must share a workload");
     }
 
-    // Independent, deterministic RNG streams.
-    let mut root = Pcg64::new(cfg.seed);
-    let mut strag_rng = root.split(0x57);
-    let mut data_rngs: Vec<Pcg64> = (0..n).map(|i| root.split(0xDA_00 + i as u64)).collect();
-    let mut metric_rng = root.split(0x3E);
-    let mut rounds_rng = root.split(0x20);
+    // Canonical per-purpose RNG streams (shared with the threaded
+    // runtime so one spec replays the same data everywhere).
+    let mut strag_rng = epoch::straggler_rng(spec.seed);
+    let mut metric_rng = epoch::metric_rng(spec.seed, 0);
 
     // Consensus machinery (lazy P for the PSD assumption; see topology.rs).
     let mut cons = Consensus::new(topo.metropolis().lazy());
 
-    // Node state; w(1) = argmin h(w) per engine (paper eq. (2)).
-    let mut w: Vec<Vec<f32>> = (0..n).map(|i| engines[i].initial_primal()).collect();
-    let mut z: Vec<Vec<f32>> = vec![vec![0.0f32; dim]; n];
-    // Messages carry dim + 1 components: the dual payload and the n·b_i
-    // side channel used to estimate b(t) distributively.
+    let mut states: Vec<NodeState> = engines.iter().map(|e| NodeState::new(&**e)).collect();
     let mut msgs: Vec<Vec<f32>> = vec![vec![0.0f32; dim + 1]; n];
-    let mut grad_sums: Vec<Vec<f32>> = vec![vec![0.0f32; dim]; n];
     let mut rounds_buf = vec![0usize; n];
 
-    let mut record = RunRecord::new(&cfg.name, f_star);
-    let mut node_log = cfg.record_node_log.then(|| NodeLog::new(n));
+    let mut record = RunRecord::new(&spec.name, f_star);
+    let mut node_log = spec.record_node_log.then(|| NodeLog::new(n));
+    let mut rounds_log: Vec<Vec<usize>> = vec![Vec::new(); n];
     let mut wall = 0.0f64;
 
-    for t in 1..=cfg.epochs {
+    for t in 1..=spec.epochs {
         // ---- compute phase -------------------------------------------------
-        let mut batches = vec![0usize; n];
-        let mut potentials = vec![0usize; n];
-        let mut compute_times = vec![0.0f64; n];
-        let epoch_compute_time;
-        match cfg.scheme {
-            Scheme::Amb { t_compute, t_consensus } => {
-                for i in 0..n {
-                    let mut prof = straggler.draw(i, t, &mut strag_rng);
-                    batches[i] = prof.grads_in_time(t_compute);
-                    compute_times[i] = t_compute;
-                    // potential work c_i(t): what the node could have done
-                    // with the consensus window too (regret accounting,
-                    // paper Sec. 4.2).  Fresh profile draw: an unbiased
-                    // estimate with identical distribution.
-                    let mut prof2 = straggler.draw(i, t, &mut strag_rng);
-                    potentials[i] = prof2.grads_in_time(t_compute + t_consensus).max(batches[i]);
-                }
-                epoch_compute_time = t_compute;
-            }
-            Scheme::Fmb { per_node_batch, .. } => {
-                let mut slowest = 0.0f64;
-                for i in 0..n {
-                    let mut prof = straggler.draw(i, t, &mut strag_rng);
-                    batches[i] = per_node_batch;
-                    compute_times[i] = prof.time_for_grads(per_node_batch);
-                    slowest = slowest.max(compute_times[i]);
-                }
-                for p in potentials.iter_mut().zip(&batches) {
-                    *p.0 = *p.1; // FMB: everyone computes exactly the quota
-                }
-                epoch_compute_time = slowest;
-            }
-            Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => {
-                // Redundancy baseline: wait only for the fastest
-                // n-ignore nodes.  Coded variant makes every node compute
-                // (ignore+1)x the quota so the batch stays whole.
-                let ignore = ignore.min(n.saturating_sub(1));
-                let work = if coded { per_node_batch * (ignore + 1) } else { per_node_batch };
-                for i in 0..n {
-                    let mut prof = straggler.draw(i, t, &mut strag_rng);
-                    compute_times[i] = prof.time_for_grads(work);
-                }
-                let mut sorted = compute_times.clone();
-                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                let cutoff = sorted[n - 1 - ignore];
-                for i in 0..n {
-                    let on_time = compute_times[i] <= cutoff;
-                    batches[i] = if coded {
-                        // full batch recoverable; attribute the quota to
-                        // the on-time nodes (each decoded share is b/n on
-                        // average — we charge b/(n-ignore) to survivors).
-                        if on_time { per_node_batch * n / (n - ignore) } else { 0 }
-                    } else if on_time {
-                        per_node_batch
-                    } else {
-                        0
-                    };
-                    potentials[i] = work.max(batches[i]);
-                }
-                epoch_compute_time = cutoff;
-            }
-        }
-        let b_t: usize = batches.iter().sum();
-        let c_t: usize = potentials.iter().sum();
+        let plan = epoch::plan_compute(&spec.scheme, n, t, straggler, &mut strag_rng);
+        let b_t: usize = plan.batches.iter().sum();
+        let c_t: usize = plan.potentials.iter().sum();
 
         let mut loss_sum = 0.0f64;
         for i in 0..n {
-            grad_sums[i].fill(0.0);
-            loss_sum += engines[i].grad_chunk(&w[i], batches[i], &mut data_rngs[i], &mut grad_sums[i]);
+            let st = &mut states[i];
+            st.begin_epoch();
+            let mut data_rng = epoch::data_rng(spec.seed, i, t);
+            loss_sum +=
+                engines[i].grad_chunk(&st.w, plan.batches[i], &mut data_rng, &mut st.grad_sum);
         }
 
         // ---- consensus phase ------------------------------------------------
-        // m_i⁽⁰⁾ = n (b_i z_i + grad_sum_i); side channel n·b_i.
         for i in 0..n {
-            let bi = batches[i] as f32;
-            let m = &mut msgs[i];
-            for k in 0..dim {
-                m[k] = n as f32 * (bi * z[i][k] + grad_sums[i][k]);
-            }
-            m[dim] = n as f32 * bi;
+            states[i].encode_into(n, plan.batches[i], &mut msgs[i]);
         }
         let exact_avg = Consensus::exact_average(&msgs);
-        match cfg.consensus {
+        match spec.consensus {
             ConsensusMode::Exact => {
                 for m in msgs.iter_mut() {
                     for k in 0..=dim {
                         m[k] = exact_avg[k] as f32;
                     }
                 }
+                rounds_buf.fill(0);
             }
             ConsensusMode::Gossip { rounds } => {
+                // The simulator executes EXACTLY `rounds` mixes; huge
+                // values are the threaded-only "as many rounds as fit in
+                // T_c" idiom and would loop for years here — fail loudly
+                // instead of hanging.
+                assert!(
+                    rounds <= MAX_SIM_GOSSIP_ROUNDS,
+                    "Gossip {{ rounds: {rounds} }} on the simulator: this looks like the \
+                     threaded-only GOSSIP_UNTIL_DEADLINE sentinel; the sim has no per-round \
+                     time model and runs exactly `rounds` mixes — use a finite budget"
+                );
                 cons.run(&mut msgs, rounds);
+                rounds_buf.fill(rounds);
             }
             ConsensusMode::GossipJitter { mean, jitter } => {
-                for r in rounds_buf.iter_mut() {
-                    let lo = mean.saturating_sub(jitter);
-                    let hi = mean + jitter;
-                    *r = lo + rounds_rng.below((hi - lo + 1) as u64) as usize;
+                for (i, r) in rounds_buf.iter_mut().enumerate() {
+                    *r = epoch::gossip_jitter_rounds(spec.seed, i, t, mean, jitter);
                 }
                 cons.run_per_node(&mut msgs, &rounds_buf);
             }
         }
+        for i in 0..n {
+            rounds_log[i].push(rounds_buf[i]);
+        }
 
         // ---- update phase ----------------------------------------------------
-        let t_consensus = match cfg.scheme {
-            Scheme::Amb { t_consensus, .. }
-            | Scheme::Fmb { t_consensus, .. }
-            | Scheme::FmbBackup { t_consensus, .. } => t_consensus,
-        };
-        wall += epoch_compute_time + t_consensus;
+        wall += plan.epoch_compute_time + spec.scheme.t_consensus();
 
         let mut consensus_err = 0.0f64;
         if b_t > 0 {
+            consensus_err = epoch::consensus_error(&msgs, &exact_avg, dim, b_t, spec.exact_bt);
             for i in 0..n {
-                let b_hat = if cfg.exact_bt { b_t as f32 } else { msgs[i][dim].max(1e-6) };
-                for k in 0..dim {
-                    z[i][k] = msgs[i][k] / b_hat;
-                }
-                // node i's consensus error vs the exact normalised dual
-                let mut ss = 0.0f64;
-                for k in 0..dim {
-                    let exact = exact_avg[k] / b_t as f64;
-                    let diff = z[i][k] as f64 - exact;
-                    ss += diff * diff;
-                }
-                consensus_err = consensus_err.max(ss.sqrt());
-            }
-            for i in 0..n {
-                let zi = std::mem::take(&mut z[i]);
-                engines[i].primal_step(&zi, t + 1, &mut w[i]);
-                z[i] = zi;
+                let b_hat = if spec.exact_bt {
+                    b_t as f32
+                } else {
+                    epoch::side_channel_b_hat(&msgs[i])
+                };
+                states[i].set_dual(&msgs[i], b_hat);
+                states[i].primal(&mut *engines[i], t + 1);
             }
         }
         // (if b_t == 0 the epoch produced nothing; state carries over)
 
         if let Some(log) = node_log.as_mut() {
             for i in 0..n {
-                log.push(i, batches[i], compute_times[i]);
+                log.push(i, plan.batches[i], plan.compute_times[i]);
             }
         }
 
-        let error = engines[0].error_metric(&w[0], &mut metric_rng);
+        let error = engines[0].error_metric(&states[0].w, &mut metric_rng);
         record.push(EpochStats {
             epoch: t,
             wall_time: wall,
@@ -226,12 +174,17 @@ where
             loss: if b_t > 0 { loss_sum / b_t as f64 } else { f64::NAN },
             error,
             consensus_err,
-            min_node_batch: batches.iter().copied().min().unwrap_or(0),
-            max_node_batch: batches.iter().copied().max().unwrap_or(0),
+            min_node_batch: plan.batches.iter().copied().min().unwrap_or(0),
+            max_node_batch: plan.batches.iter().copied().max().unwrap_or(0),
         });
     }
 
-    SimOutput { record, node_log, final_w: w }
+    RunOutput {
+        record,
+        node_log,
+        final_w: states.into_iter().map(|s| s.w).collect(),
+        rounds: rounds_log,
+    }
 }
 
 #[cfg(test)]
@@ -250,19 +203,26 @@ mod tests {
         (src, opt)
     }
 
-    fn run_amb(epochs: usize, rounds: usize, seed: u64) -> SimOutput {
+    fn run_on(
+        spec: &RunSpec,
+        topo: &Topology,
+        strag: &dyn StragglerModel,
+        src: Arc<DataSource>,
+        opt: DualAveraging,
+    ) -> RunOutput {
+        let f_star = src.f_star();
+        let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+            Box::new(NativeExec::new(src.clone(), opt.clone()))
+        };
+        SimRuntime::new(strag).run(spec, topo, &mk, f_star)
+    }
+
+    fn run_amb(epochs: usize, rounds: usize, seed: u64) -> RunOutput {
         let topo = Topology::paper_fig2();
         let (src, opt) = linreg_setup(32, 3);
         let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 60 };
-        let f_star = src.f_star();
-        let cfg = RunConfig::amb("amb", 2.5, 0.5, rounds, epochs, seed);
-        run(
-            &cfg,
-            &topo,
-            &strag,
-            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
-            f_star,
-        )
+        let spec = RunSpec::amb("amb", 2.5, 0.5, rounds, epochs, seed);
+        run_on(&spec, &topo, &strag, src, opt)
     }
 
     #[test]
@@ -272,6 +232,8 @@ mod tests {
         for (i, e) in out.record.epochs.iter().enumerate() {
             assert!((e.wall_time - 3.0 * (i + 1) as f64).abs() < 1e-9);
         }
+        // gossip rounds recorded for every (node, epoch)
+        assert!(out.rounds.iter().all(|r| r == &vec![5usize; 10]));
     }
 
     #[test]
@@ -295,14 +257,8 @@ mod tests {
         let topo = Topology::paper_fig2();
         let (src, opt) = linreg_setup(32, 3);
         let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 60 };
-        let cfg = RunConfig::fmb("fmb", 60, 0.5, 5, 10, 3);
-        let fout = run(
-            &cfg,
-            &topo,
-            &strag,
-            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
-            src.f_star(),
-        );
+        let spec = RunSpec::fmb("fmb", 60, 0.5, 5, 10, 3);
+        let fout = run_on(&spec, &topo, &strag, src, opt);
         for e in &fout.record.epochs {
             assert_eq!(e.min_node_batch, 60);
             assert_eq!(e.max_node_batch, 60);
@@ -335,18 +291,14 @@ mod tests {
         let topo = Topology::paper_fig2();
         let (src, opt) = linreg_setup(16, 5);
         let strag = Deterministic { unit_time: 1.0, unit_batch: 50 };
-        let cfg = RunConfig::amb("amb", 1.0, 0.2, 5, 5, 9)
+        let spec = RunSpec::amb("amb", 1.0, 0.2, 5, 5, 9)
             .with_consensus(ConsensusMode::Exact);
-        let out = run(
-            &cfg,
-            &topo,
-            &strag,
-            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
-            src.f_star(),
-        );
+        let out = run_on(&spec, &topo, &strag, src, opt);
         for e in &out.record.epochs {
             assert!(e.consensus_err < 1e-5, "err={}", e.consensus_err);
         }
+        // Exact aggregation records zero gossip rounds.
+        assert!(out.rounds.iter().flatten().all(|&r| r == 0));
     }
 
     #[test]
@@ -365,14 +317,8 @@ mod tests {
         let topo = Topology::ring(6);
         let (src, opt) = linreg_setup(8, 6);
         let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
-        let cfg = RunConfig::amb("amb", 2.0, 0.5, 4, 4, 13).with_node_log();
-        let out = run(
-            &cfg,
-            &topo,
-            &strag,
-            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
-            src.f_star(),
-        );
+        let spec = RunSpec::amb("amb", 2.0, 0.5, 4, 4, 13).with_node_log();
+        let out = run_on(&spec, &topo, &strag, src, opt);
         let log = out.node_log.unwrap();
         for node in 0..6 {
             assert_eq!(log.batches[node], vec![80, 80, 80, 80]);
@@ -389,17 +335,11 @@ mod tests {
         let (src, opt) = linreg_setup(16, 8);
         let strag = ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 50 };
         let mk = |exact: bool| {
-            let mut cfg = RunConfig::amb("amb", 2.0, 0.5, 120, 1, 21);
+            let mut spec = RunSpec::amb("amb", 2.0, 0.5, 120, 1, 21);
             if exact {
-                cfg = cfg.with_exact_bt();
+                spec = spec.with_exact_bt();
             }
-            run(
-                &cfg,
-                &topo,
-                &strag,
-                |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
-                src.f_star(),
-            )
+            run_on(&spec, &topo, &strag, src.clone(), opt.clone())
         };
         let est = mk(false);
         let ex = mk(true);
@@ -424,16 +364,39 @@ mod tests {
         let topo = Topology::paper_fig2();
         let (src, opt) = linreg_setup(8, 9);
         let strag = ShiftedExp { zeta: 0.5, lambda: 1.0, unit_batch: 30 };
-        let cfg = RunConfig::amb("amb", 2.0, 0.5, 5, 8, 31)
+        let spec = RunSpec::amb("amb", 2.0, 0.5, 5, 8, 31)
             .with_consensus(ConsensusMode::GossipJitter { mean: 5, jitter: 2 });
-        let out = run(
-            &cfg,
-            &topo,
-            &strag,
-            |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
-            src.f_star(),
-        );
+        let out = run_on(&spec, &topo, &strag, src, opt);
         assert_eq!(out.record.epochs.len(), 8);
         assert!(out.record.epochs.last().unwrap().error.is_finite());
+        // jitter draws stay inside the configured band
+        assert!(out.rounds.iter().flatten().all(|&r| (3..=7).contains(&r)));
+    }
+
+    #[test]
+    fn backup_and_coded_schemes_run() {
+        let topo = Topology::paper_fig2();
+        let (src, opt) = linreg_setup(16, 10);
+        let strag = ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 50 };
+        for coded in [false, true] {
+            let spec = RunSpec::new(
+                "bk",
+                crate::coordinator::Scheme::FmbBackup {
+                    per_node_batch: 50,
+                    t_consensus: 0.5,
+                    ignore: 3,
+                    coded,
+                },
+                5,
+                17,
+            );
+            let out = run_on(&spec, &topo, &strag, src.clone(), opt.clone());
+            assert_eq!(out.record.epochs.len(), 5);
+            for e in &out.record.epochs {
+                assert!(e.batch > 0);
+                // stragglers dropped => some node attributed 0
+                assert_eq!(e.min_node_batch, 0);
+            }
+        }
     }
 }

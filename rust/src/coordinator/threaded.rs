@@ -1,48 +1,65 @@
-//! Real-time threaded cluster: one OS thread per node, mpsc-channel
-//! "network", wall-clock compute windows — the production-shaped AMB
-//! runtime used by the end-to-end example (MPI → channels substitution,
-//! DESIGN.md §2).
+//! Real-time threaded cluster runtime: one OS thread per node,
+//! mpsc-channel "network", wall-clock compute windows — the
+//! production-shaped runtime (MPI → channels substitution, DESIGN.md §2).
 //!
-//! Protocol per epoch (absolute schedule; NO barrier — this is the point
-//! of AMB):
+//! Executes every [`Scheme`] of the unified [`RunSpec`]:
+//!
+//! * **AMB** (absolute schedule; NO barrier — this is the point of AMB):
 //!   epoch t owns the real-time window [t₀ + (t−1)·(T+T_c), t₀ + t·(T+T_c)).
-//!   compute:   loop gradient chunks until the T deadline; an optional
-//!              per-node slowdown factor sleeps after each chunk to induce
-//!              stragglers (paper App. I.3's background jobs).
-//!   consensus: send m⁽⁰⁾, then synchronous gossip rounds — a node waits
-//!              for all neighbours' round-k messages (paper Sec. 3) but
-//!              abandons consensus at the epoch deadline, keeping its last
-//!              completed round (variable r_i(t)).
-//!   update:    z ← m⁽ʳ⁾ / b̂(t) (b̂ from the scalar side channel),
-//!              w ← dual-averaging step.
+//!   Nodes loop gradient chunks until the T deadline (admission control
+//!   via an EWMA chunk-time estimate); an optional per-node slowdown
+//!   factor sleeps after each chunk to induce stragglers (paper App.
+//!   I.3's background jobs).
+//! * **FMB**: every node computes exactly b/n gradients, however long
+//!   that takes; a barrier marks the compute phase's end (the slowest
+//!   node gates everyone — the behaviour AMB exists to avoid), then the
+//!   T_c consensus window runs relative to the barrier.
+//! * **FMB + backup/coded**: nodes race to their (possibly redundant)
+//!   quota; an atomic finish counter determines the first n−ignore
+//!   survivors, stragglers abandon once the cutoff passes and their work
+//!   is dropped (uncoded) — attribution shared with the simulator via
+//!   [`epoch::backup_attribution`].
+//!
+//! Consensus realizes every [`ConsensusMode`]: synchronous gossip rounds
+//! (a node waits for all peers' round-k messages but abandons consensus
+//! at the window deadline, keeping its last completed round — variable
+//! r_i(t)), per-node jittered round targets, or exact averaging via an
+//! all-to-all exchange aggregated in f64 node-index order so it computes
+//! the identical average as the simulator's `Consensus::exact_average`.
+//!
+//! Update phase is the shared state machine: z ← m⁽ʳ⁾ / b̂(t) (b̂ from
+//! the scalar side channel), w ← dual-averaging step.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, OnceLock};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::NodeLog;
-use crate::exec::ExecEngine;
+use crate::coordinator::epoch::{self, NodeState};
+use crate::coordinator::{
+    ConsensusMode, EngineFactory, NodeLog, RunOutput, RunSpec, Runtime, RuntimeKind, Scheme,
+};
 use crate::metrics::{EpochStats, RunRecord};
-use crate::topology::Topology;
-use crate::util::rng::Pcg64;
+use crate::topology::{MixMatrix, Topology};
 
-/// Configuration for a threaded (real-time) AMB run.
-#[derive(Debug, Clone)]
-pub struct ThreadedConfig {
-    pub name: String,
-    /// Fixed compute window per epoch (real seconds).
-    pub t_compute: f64,
-    /// Fixed communication window per epoch (real seconds).
-    pub t_consensus: f64,
-    pub epochs: usize,
-    pub seed: u64,
-    /// Samples per engine call inside the compute window (smaller =>
-    /// finer-grained anytime behaviour, more per-call overhead).
-    pub grad_chunk: usize,
-    /// Per-node artificial slowdown factors (≥ 1.0); empty = none.
-    /// Factor f makes the node ~f× slower by sleeping (f−1)·chunk_time
-    /// after each chunk.
-    pub slowdown: Vec<f64>,
+/// The real-time cluster runtime.
+pub struct ThreadedRuntime;
+
+impl Runtime for ThreadedRuntime {
+    fn kind(&self) -> RuntimeKind {
+        RuntimeKind::Threaded
+    }
+
+    fn run(
+        &self,
+        spec: &RunSpec,
+        topo: &Topology,
+        make_engine: EngineFactory<'_>,
+        f_star: Option<f64>,
+    ) -> RunOutput {
+        run_threaded(spec, topo, make_engine, f_star)
+    }
 }
 
 /// One consensus message on the wire.
@@ -53,41 +70,68 @@ struct WireMsg {
     payload: Vec<f32>,
 }
 
+/// Per-(node, epoch) report.
+struct EpochRow {
+    b: usize,
+    loss: f64,
+    rounds: usize,
+    /// Real seconds spent in the compute phase.
+    compute_secs: f64,
+}
+
 /// Per-node output returned at join.
 struct NodeResult {
     node: usize,
-    /// (epoch, b_i, loss_sum_i, grads_done_in_window, rounds_done)
-    epochs: Vec<(usize, usize, f64, usize)>,
+    rows: Vec<EpochRow>,
     /// error metric per epoch (only node 0 fills this)
     errors: Vec<f64>,
     final_w: Vec<f32>,
 }
 
-/// Aggregated epoch view (leader side).
-pub struct ThreadedOutput {
-    pub record: RunRecord,
-    pub node_log: NodeLog,
-    pub final_w: Vec<f32>,
-    /// consensus rounds completed per (node, epoch)
-    pub rounds: Vec<Vec<usize>>,
+/// Everything a node thread needs (grouping keeps the spawn site sane).
+struct NodeCtx {
+    node: usize,
+    n: usize,
+    spec: RunSpec,
+    ready: Arc<Barrier>,
+    phase_barrier: Arc<Barrier>,
+    start_cell: Arc<OnceLock<Instant>>,
+    rx: Receiver<WireMsg>,
+    /// Senders index-aligned with `peers`.
+    peer_txs: Vec<Sender<WireMsg>>,
+    peers: Vec<usize>,
+    p: Arc<MixMatrix>,
+    /// Per-epoch finish counters (FmbBackup cutoff detection).
+    done_counts: Arc<Vec<AtomicUsize>>,
 }
 
-/// Run AMB on a real threaded cluster.
-///
-/// `make_engine` is called once inside each node thread (engines need not
-/// be `Send`; PJRT clients are thread-local).
-pub fn run_amb<F>(
-    cfg: &ThreadedConfig,
+fn run_threaded(
+    spec: &RunSpec,
     topo: &Topology,
-    make_engine: F,
-    f_star: f64,
-) -> ThreadedOutput
-where
-    F: Fn(usize) -> Box<dyn ExecEngine> + Send + Sync,
-{
+    make_engine: EngineFactory<'_>,
+    f_star: Option<f64>,
+) -> RunOutput {
     let n = topo.n();
-    assert!(cfg.slowdown.is_empty() || cfg.slowdown.len() == n);
+    assert!(n >= 2, "threaded runtime needs at least 2 nodes");
+    assert!(
+        spec.slowdown.is_empty() || spec.slowdown.len() == n,
+        "slowdown must be empty or one factor per node"
+    );
     let p = Arc::new(topo.metropolis().lazy());
+
+    // Under Exact consensus the communication graph is all-to-all
+    // (paper Remark 1: ε = 0 recovers master aggregation); otherwise the
+    // wire graph is the topology's neighbour lists.
+    let exact = spec.consensus == ConsensusMode::Exact;
+    let peer_ids: Vec<Vec<usize>> = (0..n)
+        .map(|i| {
+            if exact {
+                (0..n).filter(|&j| j != i).collect()
+            } else {
+                topo.neighbors(i).to_vec()
+            }
+        })
+        .collect();
 
     // Build the "network": one receiver per node, senders fanned out.
     let mut txs: Vec<Sender<WireMsg>> = Vec::with_capacity(n);
@@ -98,240 +142,498 @@ where
         rxs.push(Some(rx));
     }
 
-    let epoch_len = cfg.t_compute + cfg.t_consensus;
     // The common clock t0 is agreed on AFTER every node has built its
     // engine (PJRT compilation can take seconds) — otherwise the first
     // epochs would already be over before any node could compute.
     let ready = Arc::new(Barrier::new(n));
+    let phase_barrier = Arc::new(Barrier::new(n));
     let start_cell: Arc<OnceLock<Instant>> = Arc::new(OnceLock::new());
+    let done_counts: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..spec.epochs).map(|_| AtomicUsize::new(0)).collect());
 
     let results: Vec<NodeResult> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for i in 0..n {
-            let rx = rxs[i].take().unwrap();
-            let neighbor_txs: Vec<(usize, Sender<WireMsg>)> =
-                topo.neighbors(i).iter().map(|&j| (j, txs[j].clone())).collect();
-            let neighbors: Vec<usize> = topo.neighbors(i).to_vec();
-            let p = p.clone();
-            let make_engine = &make_engine;
-            let cfg = cfg.clone();
-            let ready = ready.clone();
-            let start_cell = start_cell.clone();
-            handles.push(scope.spawn(move || {
-                node_main(
-                    i, n, cfg, ready, start_cell, epoch_len, rx, neighbor_txs, neighbors, p,
-                    make_engine,
-                )
-            }));
+            let ctx = NodeCtx {
+                node: i,
+                n,
+                spec: spec.clone(),
+                ready: ready.clone(),
+                phase_barrier: phase_barrier.clone(),
+                start_cell: start_cell.clone(),
+                rx: rxs[i].take().unwrap(),
+                peer_txs: peer_ids[i].iter().map(|&j| txs[j].clone()).collect(),
+                peers: peer_ids[i].clone(),
+                p: p.clone(),
+                done_counts: done_counts.clone(),
+            };
+            handles.push(scope.spawn(move || node_main(ctx, make_engine)));
         }
         drop(txs);
         handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect()
     });
 
-    // Assemble the leader view.
-    let mut record = RunRecord::new(&cfg.name, f_star);
-    let mut node_log = NodeLog::new(n);
+    assemble(spec, n, results, f_star)
+}
+
+/// Leader-side assembly of the per-node reports into the common
+/// [`RunOutput`] (times converted back to spec units).
+fn assemble(spec: &RunSpec, n: usize, mut results: Vec<NodeResult>, f_star: Option<f64>) -> RunOutput {
+    results.sort_by_key(|r| r.node);
+    let scale = spec.time_scale;
+    let quota = epoch::work_quota(&spec.scheme, n);
+
+    let mut record = RunRecord::new(&spec.name, f_star);
+    let mut node_log = spec.record_node_log.then(|| NodeLog::new(n));
     let mut rounds = vec![Vec::new(); n];
-    let node0 = results.iter().find(|r| r.node == 0).unwrap();
-    for t in 1..=cfg.epochs {
+    let mut wall = 0.0f64;
+    for t in 1..=spec.epochs {
         let mut b_t = 0usize;
         let mut loss = 0.0f64;
         let mut min_b = usize::MAX;
         let mut max_b = 0usize;
+        let mut max_compute = 0.0f64;
         for r in &results {
-            let (_, b, l, rd) = r.epochs[t - 1];
-            b_t += b;
-            loss += l;
-            min_b = min_b.min(b);
-            max_b = max_b.max(b);
-            node_log.push(r.node, b, cfg.t_compute);
-            rounds[r.node].push(rd);
+            let row = &r.rows[t - 1];
+            b_t += row.b;
+            loss += row.loss;
+            min_b = min_b.min(row.b);
+            max_b = max_b.max(row.b);
+            // Dropped backup stragglers do not gate the epoch (the sim's
+            // epoch_compute_time is the survivors' cutoff); their late
+            // abandon time must not inflate the wall clock.
+            if quota.is_none() || row.b > 0 {
+                max_compute = max_compute.max(row.compute_secs);
+            }
+            if let Some(log) = node_log.as_mut() {
+                let ct = match spec.scheme {
+                    Scheme::Amb { t_compute, .. } => t_compute,
+                    _ => row.compute_secs / scale,
+                };
+                log.push(r.node, row.b, ct);
+            }
+            rounds[r.node].push(row.rounds);
         }
+        wall = match spec.scheme {
+            // AMB's epochs land on the absolute schedule by construction.
+            Scheme::Amb { t_compute, t_consensus } => t as f64 * (t_compute + t_consensus),
+            // Quota schemes are gated by the slowest (surviving) node.
+            _ => wall + max_compute / scale + spec.scheme.t_consensus(),
+        };
+        // Potential work c(t): the quota schemes know exactly what was
+        // assigned; AMB's undone work is unobservable in real time.
+        let potential = match quota {
+            None => b_t,
+            Some(work) => results.iter().map(|r| work.max(r.rows[t - 1].b)).sum(),
+        };
         record.push(EpochStats {
             epoch: t,
-            wall_time: t as f64 * epoch_len,
+            wall_time: wall,
             batch: b_t,
-            potential: b_t,
+            potential,
             loss: if b_t > 0 { loss / b_t as f64 } else { f64::NAN },
-            error: node0.errors[t - 1],
+            error: results[0].errors[t - 1],
             consensus_err: f64::NAN, // not observable without global state
             min_node_batch: min_b,
             max_node_batch: max_b,
         });
     }
-    ThreadedOutput { record, node_log, final_w: node0.final_w.clone(), rounds }
+    RunOutput {
+        record,
+        node_log,
+        final_w: results.into_iter().map(|r| r.final_w).collect(),
+        rounds,
+    }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn node_main<F>(
-    i: usize,
-    n: usize,
-    cfg: ThreadedConfig,
-    ready: Arc<Barrier>,
-    start_cell: Arc<OnceLock<Instant>>,
-    epoch_len: f64,
-    rx: Receiver<WireMsg>,
-    neighbor_txs: Vec<(usize, Sender<WireMsg>)>,
-    neighbors: Vec<usize>,
-    p: Arc<crate::topology::MixMatrix>,
-    make_engine: &F,
-) -> NodeResult
-where
-    F: Fn(usize) -> Box<dyn ExecEngine> + Send + Sync,
-{
+fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
+    let spec = &ctx.spec;
+    let (i, n) = (ctx.node, ctx.n);
+    let scale = spec.time_scale;
+    let t_consensus_real = spec.scheme.t_consensus() * scale;
+
     let mut engine = make_engine(i);
-    let dim = engine.workload().dim();
-    let mut w = engine.initial_primal();
-    let mut z = vec![0.0f32; dim];
-    let mut grad_acc = vec![0.0f32; dim];
-    let mut data_rng = Pcg64::new(cfg.seed ^ (0xDA7A << 16) ^ i as u64);
-    let mut metric_rng = Pcg64::new(cfg.seed ^ (0x3E77 << 16) ^ i as u64);
-    let slowdown = cfg.slowdown.get(i).copied().unwrap_or(1.0);
+    let mut st = NodeState::new(&*engine);
+    let dim = st.dim();
+    // Defensive clamp: a spec built without the builder (e.g. struct
+    // literal or JSON) could carry grad_chunk = 0, which would stall the
+    // quota loop forever.
+    let grad_chunk = spec.grad_chunk.max(1);
+    let mut metric_rng = epoch::metric_rng(spec.seed, i);
+    let mut warm_rng = epoch::warmup_rng(spec.seed, i);
+    let mut redundant_rng = epoch::redundancy_rng(spec.seed, i);
+    let slowdown = spec.slowdown.get(i).copied().unwrap_or(1.0);
 
     // Out-of-order message store: (epoch, round, from) -> payload.
-    let mut inbox: std::collections::HashMap<(usize, usize, usize), Vec<f32>> =
-        std::collections::HashMap::new();
+    let mut inbox: HashMap<(usize, usize, usize), Vec<f32>> = HashMap::new();
 
-    let mut epochs_out = Vec::with_capacity(cfg.epochs);
-    let mut errors = Vec::with_capacity(cfg.epochs);
+    let mut rows = Vec::with_capacity(spec.epochs);
+    let mut errors = Vec::with_capacity(spec.epochs);
 
-    // Warm up the engine (first PJRT execution pays lazy-init costs) and
-    // prime the chunk-duration estimate used for admission control.
+    // Warm up the engine and prime the chunk-duration estimate used for
+    // admission control.  The FIRST call pays lazy-init costs (PJRT
+    // compilation can take seconds) and must not poison the estimate —
+    // an estimate ≥ the compute window would admit no chunk and, since
+    // the EWMA only updates after an admitted chunk, could never
+    // correct — so a SECOND call measures the steady state.  Warm-up
+    // draws from a dedicated stream so the node's data sequence stays
+    // identical to the simulator's (runtime-parity invariant).
     let mut est_chunk = {
+        let mut scratch = vec![0.0f32; dim];
+        let _ = engine.grad_chunk(&st.w, grad_chunk, &mut warm_rng, &mut scratch);
         let t0 = Instant::now();
-        grad_acc.fill(0.0);
-        let _ = engine.grad_chunk(&w, cfg.grad_chunk, &mut data_rng, &mut grad_acc);
+        let _ = engine.grad_chunk(&st.w, grad_chunk, &mut warm_rng, &mut scratch);
         t0.elapsed()
     };
-    grad_acc.fill(0.0);
+
+    // FmbBackup bookkeeping shared with the simulator's attribution.
+    let (ignore, coded, per_node_batch) = match spec.scheme {
+        Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => {
+            (ignore.min(n.saturating_sub(1)), coded, per_node_batch)
+        }
+        Scheme::Fmb { per_node_batch, .. } => (0, false, per_node_batch),
+        Scheme::Amb { .. } => (0, false, 0),
+    };
+    let quota = epoch::work_quota(&spec.scheme, n);
 
     // Engine is built and warm; rendezvous, then agree on the common t0.
-    ready.wait();
-    let start = *start_cell.get_or_init(|| Instant::now() + Duration::from_millis(20));
+    ctx.ready.wait();
+    let start = *ctx.start_cell.get_or_init(|| Instant::now() + Duration::from_millis(20));
 
-    for t in 1..=cfg.epochs {
-        let epoch_start = start + Duration::from_secs_f64((t - 1) as f64 * epoch_len);
-        let compute_deadline = epoch_start + Duration::from_secs_f64(cfg.t_compute);
-        let epoch_deadline = epoch_start + Duration::from_secs_f64(epoch_len);
-
-        sleep_until(epoch_start);
-
-        // ---- compute phase: anytime gradient accumulation ----
-        // Admission control: only start a chunk expected to finish inside
-        // the window (a gradient that cannot finish by T is abandoned —
-        // Algorithm 1's `while current_time − T0 ≤ T`).  The estimate is
-        // an EWMA over observed chunk times, including the slowdown nap.
-        grad_acc.fill(0.0);
+    for t in 1..=spec.epochs {
+        st.begin_epoch();
+        // Per-(node, epoch) stream, identical to the simulator's.
+        let mut data_rng = epoch::data_rng(spec.seed, i, t);
         let mut b_i = 0usize;
         let mut loss_i = 0.0f64;
-        while Instant::now() + est_chunk.mul_f64(0.9) < compute_deadline {
-            let chunk_t0 = Instant::now();
-            loss_i += engine.grad_chunk(&w, cfg.grad_chunk, &mut data_rng, &mut grad_acc);
-            b_i += cfg.grad_chunk;
-            if slowdown > 1.0 {
-                let busy = chunk_t0.elapsed();
-                let nap = busy.mul_f64(slowdown - 1.0);
-                if Instant::now() + nap < compute_deadline + Duration::from_millis(2) {
-                    std::thread::sleep(nap);
-                } else {
-                    sleep_until(compute_deadline);
+        let compute_secs;
+        let consensus_deadline;
+
+        match spec.scheme {
+            Scheme::Amb { t_compute, t_consensus } => {
+                // ---- compute phase: anytime gradient accumulation ----
+                // Admission control: only start a chunk expected to finish
+                // inside the window (a gradient that cannot finish by T is
+                // abandoned — Algorithm 1's `while current_time − T0 ≤ T`).
+                let epoch_len = (t_compute + t_consensus) * scale;
+                let epoch_start = start + Duration::from_secs_f64((t - 1) as f64 * epoch_len);
+                let compute_deadline = epoch_start + Duration::from_secs_f64(t_compute * scale);
+                let epoch_deadline = epoch_start + Duration::from_secs_f64(epoch_len);
+                sleep_until(epoch_start);
+                while Instant::now() + est_chunk.mul_f64(0.9) < compute_deadline {
+                    let chunk_t0 = Instant::now();
+                    loss_i +=
+                        engine.grad_chunk(&st.w, grad_chunk, &mut data_rng, &mut st.grad_sum);
+                    b_i += grad_chunk;
+                    if slowdown > 1.0 {
+                        let busy = chunk_t0.elapsed();
+                        let nap = busy.mul_f64(slowdown - 1.0);
+                        if Instant::now() + nap < compute_deadline + Duration::from_millis(2) {
+                            std::thread::sleep(nap);
+                        } else {
+                            sleep_until(compute_deadline);
+                        }
+                    }
+                    // EWMA over observed chunk times, including the nap.
+                    let observed = chunk_t0.elapsed();
+                    est_chunk = est_chunk.mul_f64(0.5) + observed.mul_f64(0.5);
                 }
+                if b_i == 0 {
+                    // Nothing admitted: the estimate may be stale-high
+                    // (scheduler spike, paging); decay it so the node can
+                    // re-probe instead of starving forever.
+                    est_chunk = est_chunk.mul_f64(0.5);
+                }
+                sleep_until(compute_deadline);
+                compute_secs = t_compute * scale;
+                consensus_deadline = epoch_deadline;
             }
-            let observed = chunk_t0.elapsed();
-            est_chunk = est_chunk.mul_f64(0.5) + observed.mul_f64(0.5);
+            Scheme::Fmb { .. } | Scheme::FmbBackup { .. } => {
+                // ---- compute phase: race to the quota ----
+                let work = quota.unwrap();
+                // Gradients beyond this count are pure redundancy (coded):
+                // they cost real time but their sums are never used.
+                let attributed = epoch::backup_attribution(true, coded, per_node_batch, n, ignore);
+                let survivors = n - ignore;
+                let is_backup = matches!(spec.scheme, Scheme::FmbBackup { .. });
+                // Align the epoch start: without this, a node delayed in
+                // the PREVIOUS epoch's consensus window could find the
+                // finish counter already saturated and be dropped for
+                // lateness it didn't have (the sim drops the `ignore`
+                // slowest by compute time, never by consensus luck).
+                ctx.phase_barrier.wait();
+                let compute_t0 = Instant::now();
+                let mut done = 0usize;
+                let mut abandoned = false;
+                let mut scratch: Vec<f32> = Vec::new();
+                while done < work {
+                    if is_backup
+                        && ctx.done_counts[t - 1].load(Ordering::SeqCst) >= survivors
+                    {
+                        // Cutoff passed: this node is a dropped straggler.
+                        abandoned = true;
+                        break;
+                    }
+                    let chunk_t0 = Instant::now();
+                    let take = grad_chunk.min(work - done);
+                    let main_take = if done < attributed { take.min(attributed - done) } else { 0 };
+                    if main_take > 0 {
+                        loss_i += engine.grad_chunk(
+                            &st.w,
+                            main_take,
+                            &mut data_rng,
+                            &mut st.grad_sum,
+                        );
+                    }
+                    let redundant = take - main_take;
+                    if redundant > 0 {
+                        // Redundant work burns real compute time but its
+                        // gradients are never attributed; a dedicated RNG
+                        // stream keeps the attributed data sequence equal
+                        // to the simulator's.
+                        scratch.clear();
+                        scratch.resize(dim, 0.0);
+                        let _ =
+                            engine.grad_chunk(&st.w, redundant, &mut redundant_rng, &mut scratch);
+                    }
+                    done += take;
+                    if slowdown > 1.0 {
+                        std::thread::sleep(chunk_t0.elapsed().mul_f64(slowdown - 1.0));
+                    }
+                }
+                let on_time = if abandoned {
+                    false
+                } else {
+                    let rank = ctx.done_counts[t - 1].fetch_add(1, Ordering::SeqCst);
+                    !is_backup || rank < survivors
+                };
+                if on_time {
+                    b_i = attributed;
+                } else {
+                    // Straggler: work dropped (b_i = 0), state untouched.
+                    b_i = 0;
+                    loss_i = 0.0;
+                    st.grad_sum.fill(0.0);
+                }
+                compute_secs = compute_t0.elapsed().as_secs_f64();
+                // The epoch's compute phase ends for everyone together.
+                ctx.phase_barrier.wait();
+                consensus_deadline = Instant::now() + Duration::from_secs_f64(t_consensus_real);
+            }
         }
-        sleep_until(compute_deadline);
 
         // ---- consensus phase ----
-        // m⁽⁰⁾ = n (b_i z + grad_acc), side channel n·b_i.
         let mut m: Vec<f32> = Vec::with_capacity(dim + 1);
-        m.extend((0..dim).map(|k| n as f32 * (b_i as f32 * z[k] + grad_acc[k])));
-        m.push(n as f32 * b_i as f32);
-        for (_, tx) in &neighbor_txs {
-            let _ = tx.send(WireMsg { from: i, epoch: t, round: 0, payload: m.clone() });
-        }
-        let mut round = 0usize;
-        'rounds: loop {
-            // collect all neighbours' round-`round` messages
-            let mut have: Vec<Option<Vec<f32>>> = vec![None; neighbors.len()];
-            let mut missing = neighbors.len();
-            // drain anything already buffered
-            for (idx, &j) in neighbors.iter().enumerate() {
-                if let Some(pl) = inbox.remove(&(t, round, j)) {
-                    have[idx] = Some(pl);
-                    missing -= 1;
+        st.encode_into(n, b_i, &mut m);
+        let mut rounds_done = 0usize;
+        match spec.consensus {
+            ConsensusMode::Exact => {
+                // All-to-all exchange; aggregate in f64 node-index order so
+                // the result equals the simulator's exact average bit-for-bit
+                // given equal inputs.
+                for tx in &ctx.peer_txs {
+                    let _ = tx.send(WireMsg { from: i, epoch: t, round: 0, payload: m.clone() });
                 }
-            }
-            while missing > 0 {
-                let now = Instant::now();
-                if now >= epoch_deadline {
-                    break 'rounds; // T_c exhausted mid-round: keep m as-is
+                let mut have: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+                let mut missing = n - 1;
+                for j in 0..n {
+                    if j != i {
+                        if let Some(pl) = inbox.remove(&(t, 0, j)) {
+                            have[j] = Some(pl);
+                            missing -= 1;
+                        }
+                    }
                 }
-                match rx.recv_timeout(epoch_deadline - now) {
-                    Ok(msg) => {
-                        if msg.epoch == t && msg.round == round {
-                            if let Some(idx) = neighbors.iter().position(|&j| j == msg.from) {
-                                if have[idx].is_none() {
-                                    have[idx] = Some(msg.payload);
-                                    missing -= 1;
-                                    continue;
-                                }
+                while missing > 0 {
+                    let now = Instant::now();
+                    if now >= consensus_deadline {
+                        break;
+                    }
+                    match ctx.rx.recv_timeout(consensus_deadline - now) {
+                        Ok(msg) => {
+                            if msg.epoch == t && msg.round == 0 && msg.from != i
+                                && have[msg.from].is_none()
+                            {
+                                have[msg.from] = Some(msg.payload);
+                                missing -= 1;
+                            } else {
+                                inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
                             }
                         }
-                        // stale/early message: buffer for later rounds
-                        inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
+                        Err(_) => break,
                     }
-                    Err(RecvTimeoutError::Timeout) => break 'rounds,
-                    Err(RecvTimeoutError::Disconnected) => break 'rounds,
                 }
-            }
-            if missing > 0 {
-                break 'rounds;
-            }
-            // m ← P_ii m + Σ_j P_ij m_j
-            let pii = p.at(i, i) as f32;
-            for v in m.iter_mut() {
-                *v *= pii;
-            }
-            for (idx, &j) in neighbors.iter().enumerate() {
-                let pij = p.at(i, j) as f32;
-                let mj = have[idx].as_ref().unwrap();
-                for k in 0..=dim {
-                    m[k] += pij * mj[k];
+                if missing == 0 {
+                    have[i] = Some(std::mem::take(&mut m));
+                    let mut sum = vec![0.0f64; dim + 1];
+                    for pj in have.iter().flatten() {
+                        for k in 0..=dim {
+                            sum[k] += pj[k] as f64;
+                        }
+                    }
+                    m = sum.iter().map(|&s| (s / n as f64) as f32).collect();
                 }
+                // else: T_c expired with peers missing — keep own m (the
+                // node runs this epoch isolated, normalised by its own
+                // n·b_i side channel).
             }
-            round += 1;
-            // Don't start a send we can't finish inside the window.
-            if Instant::now() >= epoch_deadline {
-                break 'rounds;
-            }
-            for (_, tx) in &neighbor_txs {
-                let _ = tx.send(WireMsg { from: i, epoch: t, round, payload: m.clone() });
+            ConsensusMode::Gossip { .. } | ConsensusMode::GossipJitter { .. } => {
+                // Every node can derive every peer's round budget (the
+                // jitter draw is a pure function of (seed, node, epoch)),
+                // so when a peer has stopped gossiping we mix against its
+                // last-sent (frozen) value instead of stalling until the
+                // deadline — mirroring the simulator's `run_per_node`
+                // freeze semantics.
+                let budget_of = |node: usize| -> usize {
+                    match spec.consensus {
+                        ConsensusMode::Gossip { rounds } => rounds,
+                        ConsensusMode::GossipJitter { mean, jitter } => {
+                            epoch::gossip_jitter_rounds(spec.seed, node, t, mean, jitter)
+                        }
+                        ConsensusMode::Exact => unreachable!(),
+                    }
+                };
+                // A peer sends round 0 unconditionally, then round k after
+                // its k-th mix — INCLUDING its final post-budget state, so
+                // the frozen value neighbours fall back on is the peer's
+                // post-B-mix state, exactly what `run_per_node` mixes
+                // against for an exhausted node.
+                let peer_sends = |node: usize, round: usize| -> bool {
+                    round <= budget_of(node)
+                };
+                let max_rounds = budget_of(i);
+                // Frozen-peer tracking is only needed when budgets can
+                // differ across nodes (jitter); under uniform Gossip the
+                // fallback never triggers, so skip the per-message clones.
+                let track_frozen =
+                    matches!(spec.consensus, ConsensusMode::GossipJitter { .. });
+                for tx in &ctx.peer_txs {
+                    let _ = tx.send(WireMsg { from: i, epoch: t, round: 0, payload: m.clone() });
+                }
+                // Most recent payload seen from each peer this epoch
+                // (per-sender mpsc order makes "latest" = highest round).
+                let mut latest: Vec<Option<Vec<f32>>> = vec![None; ctx.peers.len()];
+                let mut round = 0usize;
+                'rounds: while round < max_rounds {
+                    // collect all peers' round-`round` messages
+                    let mut have: Vec<Option<Vec<f32>>> = vec![None; ctx.peers.len()];
+                    let mut missing = ctx.peers.len();
+                    // drain buffered messages; fall back to frozen values
+                    // for peers whose budget is exhausted
+                    for (idx, &j) in ctx.peers.iter().enumerate() {
+                        if let Some(pl) = inbox.remove(&(t, round, j)) {
+                            if track_frozen {
+                                latest[idx] = Some(pl.clone());
+                            }
+                            have[idx] = Some(pl);
+                            missing -= 1;
+                        } else if !peer_sends(j, round) {
+                            if let Some(frozen) = latest[idx].clone() {
+                                have[idx] = Some(frozen);
+                                missing -= 1;
+                            }
+                            // else: j's round-0 is still in flight; wait
+                            // for it below.
+                        }
+                    }
+                    while missing > 0 {
+                        let now = Instant::now();
+                        if now >= consensus_deadline {
+                            break 'rounds; // T_c exhausted mid-round: keep m as-is
+                        }
+                        match ctx.rx.recv_timeout(consensus_deadline - now) {
+                            Ok(msg) => {
+                                let peer_idx = (msg.epoch == t)
+                                    .then(|| ctx.peers.iter().position(|&j| j == msg.from))
+                                    .flatten();
+                                if let Some(idx) = peer_idx {
+                                    if track_frozen {
+                                        latest[idx] = Some(msg.payload.clone());
+                                    }
+                                    if msg.round == round && have[idx].is_none() {
+                                        have[idx] = Some(msg.payload);
+                                        missing -= 1;
+                                        // a frozen-eligible peer may have
+                                        // just delivered its round 0
+                                        continue;
+                                    }
+                                }
+                                // stale/early message: buffer for later rounds
+                                inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
+                                // re-check frozen fallbacks now that
+                                // `latest` may have been filled
+                                for (idx, &j) in ctx.peers.iter().enumerate() {
+                                    if have[idx].is_none() && !peer_sends(j, round) {
+                                        if let Some(frozen) = latest[idx].clone() {
+                                            have[idx] = Some(frozen);
+                                            missing -= 1;
+                                        }
+                                    }
+                                }
+                            }
+                            Err(_) => break 'rounds,
+                        }
+                    }
+                    if missing > 0 {
+                        break 'rounds;
+                    }
+                    // m ← P_ii m + Σ_j P_ij m_j
+                    let pii = ctx.p.at(i, i) as f32;
+                    for v in m.iter_mut() {
+                        *v *= pii;
+                    }
+                    for (idx, &j) in ctx.peers.iter().enumerate() {
+                        let pij = ctx.p.at(i, j) as f32;
+                        let mj = have[idx].as_ref().unwrap();
+                        for k in 0..=dim {
+                            m[k] += pij * mj[k];
+                        }
+                    }
+                    round += 1;
+                    // Broadcast the post-mix state — peers at this round
+                    // consume it live; peers past our budget freeze on it
+                    // (the final broadcast at round == max_rounds exists
+                    // only for that freeze path, so uniform Gossip skips
+                    // it).  Don't start a send we can't finish inside the
+                    // window.
+                    if round == max_rounds && !track_frozen {
+                        break;
+                    }
+                    if Instant::now() >= consensus_deadline {
+                        break 'rounds;
+                    }
+                    for tx in &ctx.peer_txs {
+                        let _ = tx.send(WireMsg { from: i, epoch: t, round, payload: m.clone() });
+                    }
+                }
+                rounds_done = round;
             }
         }
         // purge stale buffered messages from this epoch
         inbox.retain(|&(e, _, _), _| e > t);
 
-        // ---- update phase ----
-        let b_hat = (m[dim] / n as f32).max(1e-6) * n as f32; // == m[dim], kept explicit
+        // ---- update phase (shared state machine) ----
+        let b_hat = epoch::side_channel_b_hat(&m);
         if b_hat > 0.5 {
-            for k in 0..dim {
-                z[k] = m[k] / b_hat;
-            }
-            engine.primal_step(&z, t + 1, &mut w);
+            st.set_dual(&m, b_hat);
+            st.primal(&mut *engine, t + 1);
         }
-        epochs_out.push((t, b_i, loss_i, round));
-        errors.push(if i == 0 { engine.error_metric(&w, &mut metric_rng) } else { f64::NAN });
+        rows.push(EpochRow { b: b_i, loss: loss_i, rounds: rounds_done, compute_secs });
+        errors.push(if i == 0 {
+            engine.error_metric(&st.w, &mut metric_rng)
+        } else {
+            f64::NAN
+        });
         if std::env::var_os("AMB_DEBUG").is_some() {
             eprintln!(
-                "[node {i} epoch {t}] b={b_i} rounds={round} est_chunk={:.0}ms lag_after_update={:.0}ms",
+                "[node {i} epoch {t}] b={b_i} rounds={rounds_done} est_chunk={:.0}ms compute={:.0}ms",
                 est_chunk.as_secs_f64() * 1e3,
-                (Instant::now() - epoch_start).as_secs_f64() * 1e3 - epoch_len * 1e3,
+                compute_secs * 1e3,
             );
         }
     }
 
-    NodeResult { node: i, epochs: epochs_out, errors, final_w: w }
+    NodeResult { node: i, rows, errors, final_w: st.w }
 }
 
 fn sleep_until(t: Instant) {
@@ -345,34 +647,36 @@ fn sleep_until(t: Instant) {
 mod tests {
     use super::*;
     use crate::data::LinRegStream;
-    use crate::exec::{DataSource, NativeExec};
+    use crate::exec::{DataSource, ExecEngine, NativeExec};
     use crate::optim::{BetaSchedule, DualAveraging};
     use std::sync::Arc;
 
-    fn small_cfg(epochs: usize, slowdown: Vec<f64>) -> ThreadedConfig {
-        ThreadedConfig {
-            name: "amb-threaded".into(),
-            t_compute: 0.06,
-            t_consensus: 0.04,
-            epochs,
-            seed: 5,
-            grad_chunk: 16,
-            slowdown,
-        }
+    fn small_spec(epochs: usize, slowdown: Vec<f64>) -> RunSpec {
+        RunSpec::amb("amb-threaded", 0.06, 0.04, crate::coordinator::GOSSIP_UNTIL_DEADLINE, epochs, 5)
+            .with_grad_chunk(16)
+            .with_slowdown(slowdown)
+            .with_node_log()
     }
 
-    fn run_small(epochs: usize, slowdown: Vec<f64>) -> ThreadedOutput {
-        let topo = Topology::ring(4);
-        let src = Arc::new(DataSource::LinReg(LinRegStream::new(16, 2)));
-        let opt = DualAveraging::new(BetaSchedule::new(1.0, 500.0), 4.0 * 4.0);
+    fn linreg_factory(
+        d: usize,
+        seed: u64,
+    ) -> (impl Fn(usize) -> Box<dyn ExecEngine> + Send + Sync, Option<f64>) {
+        let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
+        let opt = DualAveraging::new(BetaSchedule::new(1.0, 500.0), 4.0 * (d as f64).sqrt());
         let f_star = src.f_star();
-        let cfg = small_cfg(epochs, slowdown);
-        run_amb(
-            &cfg,
-            &topo,
-            move |_| Box::new(NativeExec::new(src.clone(), opt.clone())),
+        (
+            move |_i: usize| -> Box<dyn ExecEngine> {
+                Box::new(NativeExec::new(src.clone(), opt.clone()))
+            },
             f_star,
         )
+    }
+
+    fn run_small(epochs: usize, slowdown: Vec<f64>) -> RunOutput {
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 2);
+        ThreadedRuntime.run(&small_spec(epochs, slowdown), &topo, &mk, f_star)
     }
 
     #[test]
@@ -394,8 +698,9 @@ mod tests {
     #[test]
     fn slowdown_shrinks_slow_nodes_batch() {
         let out = run_small(6, vec![3.0, 1.0, 1.0, 1.0]);
-        let slow: f64 = out.node_log.batches[0].iter().map(|&b| b as f64).sum::<f64>() / 6.0;
-        let fast: f64 = out.node_log.batches[2].iter().map(|&b| b as f64).sum::<f64>() / 6.0;
+        let log = out.node_log.as_ref().unwrap();
+        let slow: f64 = log.batches[0].iter().map(|&b| b as f64).sum::<f64>() / 6.0;
+        let fast: f64 = log.batches[2].iter().map(|&b| b as f64).sum::<f64>() / 6.0;
         assert!(
             slow < 0.7 * fast,
             "slowdown not visible: slow={slow} fast={fast}"
@@ -403,6 +708,61 @@ mod tests {
         // ... and the epoch still completed on schedule with b(t) > 0.
         for e in &out.record.epochs {
             assert!(e.batch > 0);
+        }
+    }
+
+    #[test]
+    fn fmb_computes_exact_quota_on_real_threads() {
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 3);
+        let spec = RunSpec::fmb("fmb-threaded", 48, 0.04, 2, 4, 7)
+            .with_grad_chunk(16)
+            .with_node_log();
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        for e in &out.record.epochs {
+            assert_eq!(e.min_node_batch, 48);
+            assert_eq!(e.max_node_batch, 48);
+            assert_eq!(e.batch, 4 * 48);
+        }
+    }
+
+    #[test]
+    fn backup_drops_exactly_ignore_nodes() {
+        let topo = Topology::complete(4);
+        let (mk, f_star) = linreg_factory(8, 4);
+        let spec = RunSpec::new(
+            "bk-threaded",
+            Scheme::FmbBackup { per_node_batch: 64, t_consensus: 0.05, ignore: 1, coded: false },
+            3,
+            9,
+        )
+        .with_grad_chunk(8)
+        .with_slowdown(vec![4.0, 1.0, 1.0, 1.0]);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        for e in &out.record.epochs {
+            // 3 survivors × 64; the straggler's work is dropped
+            assert_eq!(e.batch, 3 * 64, "b(t)={}", e.batch);
+            assert_eq!(e.min_node_batch, 0);
+            assert_eq!(e.max_node_batch, 64);
+        }
+    }
+
+    #[test]
+    fn coded_attribution_keeps_full_batch() {
+        let topo = Topology::complete(4);
+        let (mk, f_star) = linreg_factory(8, 6);
+        let spec = RunSpec::new(
+            "coded-threaded",
+            Scheme::FmbBackup { per_node_batch: 30, t_consensus: 0.05, ignore: 1, coded: true },
+            3,
+            11,
+        )
+        .with_grad_chunk(10)
+        .with_slowdown(vec![4.0, 1.0, 1.0, 1.0]);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        for e in &out.record.epochs {
+            // survivors are charged b/(n-ignore) = 30·4/3 = 40 each
+            assert_eq!(e.batch, 3 * 40, "b(t)={}", e.batch);
         }
     }
 }

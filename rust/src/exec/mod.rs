@@ -31,12 +31,16 @@ impl DataSource {
         }
     }
 
-    /// Per-sample optimal loss F(w*) when known:
-    /// linreg: ½·E[η²] = ½·noise_var.  logreg: estimated externally.
-    pub fn f_star(&self) -> f64 {
+    /// Per-sample optimal loss F(w*) when known analytically:
+    /// linreg: ½·E[η²] = ½·noise_var.  logreg: `None` — F(w*) has no
+    /// closed form for the mixture, and silently substituting a 0.0
+    /// lower bound would let regret accounting mix true and bounded
+    /// baselines across schemes (the caller decides; see
+    /// [`crate::metrics::RunRecord::regret_series`]).
+    pub fn f_star(&self) -> Option<f64> {
         match self {
-            DataSource::LinReg(s) => 0.5 * s.noise_std * s.noise_std,
-            DataSource::Mnist(_) => 0.0, // lower bound; cost curves still comparable
+            DataSource::LinReg(s) => Some(0.5 * s.noise_std * s.noise_std),
+            DataSource::Mnist(_) => None,
         }
     }
 }
@@ -230,8 +234,10 @@ mod tests {
     }
 
     #[test]
-    fn f_star_linreg() {
+    fn f_star_linreg_known_mnist_unknown() {
         let src = DataSource::LinReg(LinRegStream::new(4, 0));
-        assert!((src.f_star() - 0.5e-3).abs() < 1e-9);
+        assert!((src.f_star().unwrap() - 0.5e-3).abs() < 1e-9);
+        let mn = DataSource::Mnist(MnistLike::new(4, 16, 4.0, 1.0, 9));
+        assert_eq!(mn.f_star(), None, "no silent 0.0 lower bound");
     }
 }

@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use super::{Ctx, FigReport};
-use crate::coordinator::{sim, RunConfig};
+use crate::coordinator::RunSpec;
 use crate::metrics::RunRecord;
 use crate::straggler::ShiftedExp;
 use crate::topology::Topology;
@@ -26,6 +26,7 @@ pub struct PairOutcome {
     pub target: f64,
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn run_pair(
     ctx: &Ctx,
     source: std::sync::Arc<crate::exec::DataSource>,
@@ -39,15 +40,12 @@ pub fn run_pair(
     expected_batch: f64,
 ) -> Result<PairOutcome> {
     let opt = super::optimizer_for(&source, expected_batch);
-    let f_star = source.f_star();
 
-    let amb_cfg = RunConfig::amb("amb", t_compute, t_consensus, rounds, epochs, ctx.seed);
-    let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
-    let amb = sim::run(&amb_cfg, topo, strag, &mut *mk, f_star).record;
+    let amb_spec = RunSpec::amb("amb", t_compute, t_consensus, rounds, epochs, ctx.seed);
+    let amb = ctx.run(&amb_spec, topo, strag, &source, &opt)?.record;
 
-    let fmb_cfg = RunConfig::fmb("fmb", per_node_batch, t_consensus, rounds, epochs, ctx.seed);
-    let mut mk = ctx.engine_factory(source, opt)?;
-    let fmb = sim::run(&fmb_cfg, topo, strag, &mut *mk, f_star).record;
+    let fmb_spec = RunSpec::fmb("fmb", per_node_batch, t_consensus, rounds, epochs, ctx.seed);
+    let fmb = ctx.run(&fmb_spec, topo, strag, &source, &opt)?.record;
 
     // Target: the error both runs can reach (80th-percentile of final
     // errors, conservatively the worse of the two finals × 1.5).

@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use super::{Ctx, FigReport};
-use crate::coordinator::{sim, ConsensusMode, RunConfig};
+use crate::coordinator::{ConsensusMode, RunSpec};
 use crate::straggler::ShiftedExp;
 use crate::topology::Topology;
 
@@ -19,17 +19,14 @@ pub fn fig3(ctx: &Ctx) -> Result<FigReport> {
     let source = super::mnist_source(ctx.seed);
     let epochs = ctx.scaled(24);
     let opt = super::optimizer_for(&source, 3990.0);
-    let f_star = source.f_star();
 
-    let amb_cfg = RunConfig::amb("amb-hub", 3.0, 1.0, 1, epochs, ctx.seed)
+    let amb_spec = RunSpec::amb("amb-hub", 3.0, 1.0, 1, epochs, ctx.seed)
         .with_consensus(ConsensusMode::Exact);
-    let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
-    let amb = sim::run(&amb_cfg, &topo, &strag, &mut *mk, f_star).record;
+    let amb = ctx.run(&amb_spec, &topo, &strag, &source, &opt)?.record;
 
-    let fmb_cfg = RunConfig::fmb("fmb-hub", 210, 1.0, 1, epochs, ctx.seed)
+    let fmb_spec = RunSpec::fmb("fmb-hub", 210, 1.0, 1, epochs, ctx.seed)
         .with_consensus(ConsensusMode::Exact);
-    let mut mk = ctx.engine_factory(source, opt)?;
-    let fmb = sim::run(&fmb_cfg, &topo, &strag, &mut *mk, f_star).record;
+    let fmb = ctx.run(&fmb_spec, &topo, &strag, &source, &opt)?.record;
 
     let target = amb.epochs.last().unwrap().error.max(fmb.epochs.last().unwrap().error) * 1.5;
     let speedup = crate::metrics::speedup_at(&amb, &fmb, target)

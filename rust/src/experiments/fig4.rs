@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use super::{Ctx, FigReport};
-use crate::coordinator::{sim, RunConfig};
+use crate::coordinator::RunSpec;
 use crate::straggler::ShiftedExp;
 use crate::topology::Topology;
 use crate::util::csv::Csv;
@@ -21,7 +21,6 @@ pub fn fig4(ctx: &Ctx) -> Result<FigReport> {
     let epochs = ctx.scaled(20);
     let paths = ctx.scaled(20);
     let opt = super::optimizer_for(&source, 12_000.0);
-    let f_star = source.f_star();
 
     // One CSV per scheme: columns = path id, rows = epochs.
     let mut amb_csv = Csv::new(&["path", "epoch", "wall_time", "error"]);
@@ -32,13 +31,11 @@ pub fn fig4(ctx: &Ctx) -> Result<FigReport> {
 
     for path in 0..paths {
         let seed = ctx.seed.wrapping_add(1000 + path as u64);
-        let amb_cfg = RunConfig::amb("amb", 2.5, 0.5, 5, epochs, seed);
-        let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
-        let amb = sim::run(&amb_cfg, &topo, &strag, &mut *mk, f_star).record;
+        let amb_spec = RunSpec::amb("amb", 2.5, 0.5, 5, epochs, seed);
+        let amb = ctx.run(&amb_spec, &topo, &strag, &source, &opt)?.record;
 
-        let fmb_cfg = RunConfig::fmb("fmb", 600, 0.5, 5, epochs, seed);
-        let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
-        let fmb = sim::run(&fmb_cfg, &topo, &strag, &mut *mk, f_star).record;
+        let fmb_spec = RunSpec::fmb("fmb", 600, 0.5, 5, epochs, seed);
+        let fmb = ctx.run(&fmb_spec, &topo, &strag, &source, &opt)?.record;
 
         for e in &amb.epochs {
             amb_csv.push_nums(&[path as f64, e.epoch as f64, e.wall_time, e.error]);

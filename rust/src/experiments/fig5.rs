@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use super::{Ctx, FigReport};
-use crate::coordinator::{sim, ConsensusMode, RunConfig};
+use crate::coordinator::{ConsensusMode, RunSpec};
 use crate::metrics::RunRecord;
 use crate::straggler::ShiftedExp;
 use crate::topology::Topology;
@@ -19,19 +19,17 @@ pub fn fig5(ctx: &Ctx) -> Result<FigReport> {
     let source = super::linreg_source(ctx.seed);
     let epochs = ctx.scaled(20);
     let opt = super::optimizer_for(&source, 12_000.0);
-    let f_star = source.f_star();
 
     let run_one = |name: &str, amb: bool, exact: bool| -> Result<RunRecord> {
-        let mut cfg = if amb {
-            RunConfig::amb(name, 2.5, 0.5, 5, epochs, ctx.seed)
+        let mut spec = if amb {
+            RunSpec::amb(name, 2.5, 0.5, 5, epochs, ctx.seed)
         } else {
-            RunConfig::fmb(name, 600, 0.5, 5, epochs, ctx.seed)
+            RunSpec::fmb(name, 600, 0.5, 5, epochs, ctx.seed)
         };
         if exact {
-            cfg = cfg.with_consensus(ConsensusMode::Exact);
+            spec = spec.with_consensus(ConsensusMode::Exact);
         }
-        let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
-        Ok(sim::run(&cfg, &topo, &strag, &mut *mk, f_star).record)
+        Ok(ctx.run(&spec, &topo, &strag, &source, &opt)?.record)
     };
 
     let amb_r5 = run_one("amb-r5", true, false)?;

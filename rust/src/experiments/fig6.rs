@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use super::{Ctx, FigReport};
-use crate::coordinator::{sim, RunConfig};
+use crate::coordinator::{RunOutput, RunSpec};
 use crate::straggler::InducedGroups;
 use crate::topology::Topology;
 use crate::util::csv::Csv;
@@ -17,23 +17,17 @@ use crate::util::stats::Histogram;
 
 /// Run the induced-straggler pair and return (amb_out, fmb_out) with node
 /// logs attached.
-pub fn run_induced(
-    ctx: &Ctx,
-    epochs: usize,
-) -> Result<(sim::SimOutput, sim::SimOutput)> {
+pub fn run_induced(ctx: &Ctx, epochs: usize) -> Result<(RunOutput, RunOutput)> {
     let topo = Topology::paper_fig2();
     let strag = InducedGroups::paper_i3();
     let source = super::mnist_source(ctx.seed);
     let opt = super::optimizer_for(&source, 5850.0);
-    let f_star = source.f_star();
 
-    let amb_cfg = RunConfig::amb("amb-induced", 12.0, 3.0, 5, epochs, ctx.seed).with_node_log();
-    let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
-    let amb = sim::run(&amb_cfg, &topo, &strag, &mut *mk, f_star);
+    let amb_spec = RunSpec::amb("amb-induced", 12.0, 3.0, 5, epochs, ctx.seed).with_node_log();
+    let amb = ctx.run(&amb_spec, &topo, &strag, &source, &opt)?;
 
-    let fmb_cfg = RunConfig::fmb("fmb-induced", 585, 3.0, 5, epochs, ctx.seed).with_node_log();
-    let mut mk = ctx.engine_factory(source, opt)?;
-    let fmb = sim::run(&fmb_cfg, &topo, &strag, &mut *mk, f_star);
+    let fmb_spec = RunSpec::fmb("fmb-induced", 585, 3.0, 5, epochs, ctx.seed).with_node_log();
+    let fmb = ctx.run(&fmb_spec, &topo, &strag, &source, &opt)?;
     Ok((amb, fmb))
 }
 

@@ -12,31 +12,28 @@
 use anyhow::Result;
 
 use super::{Ctx, FigReport};
-use crate::coordinator::{sim, ConsensusMode, RunConfig};
+use crate::coordinator::{ConsensusMode, RunOutput, RunSpec};
 use crate::straggler::PauseModel;
 use crate::topology::Topology;
 use crate::util::csv::Csv;
 use crate::util::stats::Histogram;
 
-fn run_hpc(ctx: &Ctx, epochs: usize) -> Result<(sim::SimOutput, sim::SimOutput)> {
+fn run_hpc(ctx: &Ctx, epochs: usize) -> Result<(RunOutput, RunOutput)> {
     let strag = PauseModel::paper_i4();
     let n = strag.n();
     let topo = Topology::complete(n); // irrelevant under Exact (master aggregation)
     let source = super::mnist_source(ctx.seed);
     let opt = super::optimizer_for(&source, 500.0);
-    let f_star = source.f_star();
     // Times in milliseconds (pause model units); T_c = 10 ms.
-    let amb_cfg = RunConfig::amb("amb-hpc", 115.0, 10.0, 1, epochs, ctx.seed)
+    let amb_spec = RunSpec::amb("amb-hpc", 115.0, 10.0, 1, epochs, ctx.seed)
         .with_consensus(ConsensusMode::Exact)
         .with_node_log();
-    let mut mk = ctx.engine_factory(source.clone(), opt.clone())?;
-    let amb = sim::run(&amb_cfg, &topo, &strag, &mut *mk, f_star);
+    let amb = ctx.run(&amb_spec, &topo, &strag, &source, &opt)?;
 
-    let fmb_cfg = RunConfig::fmb("fmb-hpc", 10, 10.0, 1, epochs, ctx.seed)
+    let fmb_spec = RunSpec::fmb("fmb-hpc", 10, 10.0, 1, epochs, ctx.seed)
         .with_consensus(ConsensusMode::Exact)
         .with_node_log();
-    let mut mk = ctx.engine_factory(source, opt)?;
-    let fmb = sim::run(&fmb_cfg, &topo, &strag, &mut *mk, f_star);
+    let fmb = ctx.run(&fmb_spec, &topo, &strag, &source, &opt)?;
     Ok((amb, fmb))
 }
 

@@ -5,6 +5,13 @@
 //! [`FigReport`] with the paper's expected shape vs our measured numbers;
 //! `amb figures --fig all` regenerates everything, and each `cargo bench`
 //! target wraps the corresponding harness.
+//!
+//! Harnesses are runtime-agnostic: they build [`RunSpec`]s and execute
+//! them through [`Ctx::run`], which dispatches on [`Ctx::runtime`] —
+//! `amb figures --runtime threaded --time-scale 0.01` replays any figure
+//! on the real threaded cluster (straggler models map to per-node
+//! slowdown factors via
+//! [`crate::straggler::StragglerModel::slowdown_factors`]).
 
 pub mod ablations;
 pub mod fig1;
@@ -17,15 +24,19 @@ pub mod fig8;
 pub mod thm7;
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::coordinator::sim::SimRuntime;
+use crate::coordinator::threaded::ThreadedRuntime;
+use crate::coordinator::{RunOutput, RunSpec, RuntimeKind};
 use crate::data::{LinRegStream, MnistLike};
 use crate::exec::{DataSource, ExecEngine, NativeExec};
 use crate::optim::{BetaSchedule, DualAveraging};
 use crate::runtime::{PjrtExec, PjrtRuntime};
+use crate::straggler::StragglerModel;
+use crate::topology::Topology;
 
 /// Which execution backend figure runs use.
 #[derive(Debug, Clone)]
@@ -44,16 +55,62 @@ pub struct Ctx {
     /// Reduced epochs/paths for bench wrappers.
     pub quick: bool,
     pub seed: u64,
+    /// Which cluster runtime executes the harness's RunSpecs.
+    pub runtime: RuntimeKind,
+    /// Threaded only: real seconds per spec second (figures quote paper
+    /// units; 0.01 replays them 100× faster).
+    pub time_scale: f64,
 }
 
 impl Ctx {
     pub fn native(out_dir: &Path) -> Ctx {
-        Ctx { backend: Backend::Native, out_dir: out_dir.to_path_buf(), quick: false, seed: 42 }
+        Ctx {
+            backend: Backend::Native,
+            out_dir: out_dir.to_path_buf(),
+            quick: false,
+            seed: 42,
+            runtime: RuntimeKind::Sim,
+            time_scale: 1.0,
+        }
     }
 
     pub fn quick(mut self) -> Ctx {
         self.quick = true;
         self
+    }
+
+    pub fn with_runtime(mut self, runtime: RuntimeKind) -> Ctx {
+        self.runtime = runtime;
+        self
+    }
+
+    /// Build a harness context from the common CLI flags — `--pjrt`
+    /// [`--artifacts DIR`], `--quick`, `--seed N`, `--runtime
+    /// sim|threaded`, `--time-scale S` — shared by `amb
+    /// figures`/`ablations` and the example binaries so the entry
+    /// points cannot drift apart.  The threaded default time scale is
+    /// 0.01: figure specs quote paper-unit windows (tens of seconds).
+    pub fn from_args(out_dir: &Path, args: &crate::util::cli::Args) -> Result<Ctx> {
+        let mut ctx = Ctx::native(out_dir);
+        ctx.seed = args.u64_or("seed", 42)?;
+        if args.flag("pjrt") {
+            ctx.backend = Backend::Pjrt(
+                args.get("artifacts")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(crate::artifacts_dir),
+            );
+        }
+        if args.flag("quick") {
+            ctx = ctx.quick();
+        }
+        if let Some(rt) = args.get("runtime") {
+            ctx.runtime = RuntimeKind::parse(rt)
+                .ok_or_else(|| anyhow::anyhow!("unknown runtime '{rt}' (sim|threaded)"))?;
+        }
+        let default_scale = if ctx.runtime == RuntimeKind::Threaded { 0.01 } else { 1.0 };
+        ctx.time_scale = args.f64_or("time-scale", default_scale)?;
+        anyhow::ensure!(ctx.time_scale > 0.0, "--time-scale must be positive");
+        Ok(ctx)
     }
 
     /// Scale an epoch/path count down in quick mode.
@@ -66,13 +123,14 @@ impl Ctx {
     }
 
     /// Build an engine factory for a workload (shared data distribution,
-    /// per-node engines).  PJRT backend shares one runtime across the
-    /// (single-threaded) simulator's engines.
+    /// per-node engines).  The factory is `Send + Sync` so the threaded
+    /// runtime can invoke it from node threads; PJRT engines therefore
+    /// load one (thread-local) runtime per node.
     pub fn engine_factory(
         &self,
         source: Arc<DataSource>,
         optimizer: DualAveraging,
-    ) -> Result<Box<dyn FnMut(usize) -> Box<dyn ExecEngine>>> {
+    ) -> Result<Box<dyn Fn(usize) -> Box<dyn ExecEngine> + Send + Sync>> {
         match &self.backend {
             Backend::Native => {
                 let f = move |_i: usize| -> Box<dyn ExecEngine> {
@@ -81,14 +139,76 @@ impl Ctx {
                 Ok(Box::new(f))
             }
             Backend::Pjrt(dir) => {
-                let rt = Rc::new(PjrtRuntime::load(dir)?);
+                // Probe eagerly so a missing manifest fails at harness
+                // setup, not inside a node thread (this also warms the
+                // calling thread's cache for the simulator path).
+                let _probe = PjrtRuntime::load_shared(dir)?;
+                let dir = dir.clone();
                 let f = move |_i: usize| -> Box<dyn ExecEngine> {
+                    // Per-thread cache: the sim's engines share one
+                    // runtime; each threaded node thread loads its own.
+                    let rt = PjrtRuntime::load_shared(&dir)
+                        .expect("PJRT runtime load (probed at setup)");
                     Box::new(
-                        PjrtExec::new(rt.clone(), source.clone(), optimizer.clone())
+                        PjrtExec::new(rt, source.clone(), optimizer.clone())
                             .expect("PjrtExec init (artifact sizes must match workload)"),
                     )
                 };
                 Ok(Box::new(f))
+            }
+        }
+    }
+
+    /// Execute one [`RunSpec`] on the context's runtime — the single
+    /// path every harness goes through.
+    ///
+    /// * Sim: the straggler model drives the virtual clock.
+    /// * Threaded: the spec inherits the context's `time_scale`, and —
+    ///   unless it already carries explicit slowdown factors — the
+    ///   straggler model's persistent per-node structure maps onto
+    ///   `RunSpec::slowdown`.
+    pub fn run(
+        &self,
+        spec: &RunSpec,
+        topo: &Topology,
+        straggler: &dyn StragglerModel,
+        source: &Arc<DataSource>,
+        optimizer: &DualAveraging,
+    ) -> Result<RunOutput> {
+        let mk = self.engine_factory(source.clone(), optimizer.clone())?;
+        let f_star = source.f_star();
+        match self.runtime {
+            RuntimeKind::Sim => {
+                Ok(crate::run(&SimRuntime::new(straggler), spec, topo, &*mk, f_star))
+            }
+            RuntimeKind::Threaded => {
+                // Context values fill in only where the spec kept its
+                // defaults — a non-default with_time_scale / non-empty
+                // with_slowdown on the spec wins.  (A spec time_scale of
+                // exactly 1.0 IS the default and inherits the context's
+                // scale; request 1.0 explicitly via ctx.time_scale.)
+                let mut spec = spec.clone();
+                if spec.time_scale == 1.0 {
+                    spec = spec.with_time_scale(self.time_scale);
+                }
+                if spec.slowdown.is_empty() {
+                    spec.slowdown = straggler.slowdown_factors(topo.n());
+                    // i.i.d. models carry no persistent per-node structure,
+                    // so their threaded replay is a homogeneous cluster —
+                    // figures that rely on dispersion will not reproduce.
+                    let homogeneous = spec.slowdown.iter().all(|&f| f == 1.0);
+                    let dispersed =
+                        straggler.unit_moments().map(|m| m.stddev > 0.0).unwrap_or(false);
+                    if homogeneous && dispersed {
+                        eprintln!(
+                            "note: straggler model is i.i.d. — threaded replay of '{}' runs \
+                             a homogeneous cluster (use RunSpec::with_slowdown for induced \
+                             stragglers)",
+                            spec.name
+                        );
+                    }
+                }
+                Ok(crate::run(&ThreadedRuntime, &spec, topo, &*mk, f_star))
             }
         }
     }
@@ -190,6 +310,7 @@ pub fn run_one(ctx: &Ctx, id: &str) -> Result<FigReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::straggler::Deterministic;
 
     #[test]
     fn ctx_scaling() {
@@ -214,5 +335,24 @@ mod tests {
             let norm = crate::util::norm2(&s.w_star) as f64;
             assert!(opt.radius > norm, "radius {} vs ‖w*‖ {}", opt.radius, norm);
         }
+    }
+
+    #[test]
+    fn ctx_run_dispatches_to_both_runtimes() {
+        let topo = Topology::ring(3);
+        let strag = Deterministic { unit_time: 0.02, unit_batch: 32 };
+        let src = Arc::new(DataSource::LinReg(LinRegStream::new(8, 1)));
+        let opt = optimizer_for(&src, 100.0);
+        let spec = RunSpec::amb("dispatch", 0.04, 0.03, 2, 2, 3).with_grad_chunk(8);
+
+        let sim_ctx = Ctx::native(Path::new("/tmp/amb_ctx_run_test"));
+        let sim_out = sim_ctx.run(&spec, &topo, &strag, &src, &opt).unwrap();
+        assert_eq!(sim_out.record.epochs.len(), 2);
+
+        let thr_ctx = Ctx::native(Path::new("/tmp/amb_ctx_run_test"))
+            .with_runtime(RuntimeKind::Threaded);
+        let thr_out = thr_ctx.run(&spec, &topo, &strag, &src, &opt).unwrap();
+        assert_eq!(thr_out.record.epochs.len(), 2);
+        assert!(thr_out.record.epochs.iter().all(|e| e.batch > 0));
     }
 }

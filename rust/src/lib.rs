@@ -5,8 +5,9 @@
 //! Draper, Nokleby — ICLR 2019) as a three-layer Rust + JAX + Pallas
 //! stack:
 //!
-//! * **L3 (this crate)** — the coordinator: AMB/FMB epoch schedulers, a
-//!   discrete-event cluster simulator and a real threaded cluster,
+//! * **L3 (this crate)** — the coordinator: AMB/FMB/redundancy epoch
+//!   schedulers behind ONE runtime API ([`RunSpec`] → [`run`]), executed
+//!   by a discrete-event cluster simulator or a real threaded cluster,
 //!   averaging consensus over arbitrary topologies, dual averaging,
 //!   straggler models, metrics, and per-figure experiment harnesses.
 //! * **L2/L1 (python/compile, build-time only)** — JAX compute graphs
@@ -14,8 +15,9 @@
 //! * **Runtime bridge** — [`runtime`] loads the artifacts through the
 //!   xla-crate PJRT CPU client; Python never runs on the request path.
 //!
-//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See DESIGN.md for the full system inventory (and §3 for the runtime
+//! API, including the migration table from the old two-API surface) and
+//! EXPERIMENTS.md for the paper-vs-measured results.
 
 pub mod bench_harness;
 pub mod config;
@@ -32,6 +34,45 @@ pub mod runtime;
 pub mod straggler;
 pub mod topology;
 pub mod util;
+
+pub use coordinator::sim::SimRuntime;
+pub use coordinator::threaded::ThreadedRuntime;
+pub use coordinator::{
+    ConsensusMode, EngineFactory, RunOutput, RunSpec, Runtime, RuntimeKind, Scheme,
+};
+
+/// THE entry point: execute one [`RunSpec`] on any [`Runtime`].
+///
+/// ```no_run
+/// use anytime_mb::{RunSpec, SimRuntime, ThreadedRuntime};
+/// # use anytime_mb::exec::{DataSource, NativeExec, ExecEngine};
+/// # use anytime_mb::data::LinRegStream;
+/// # use anytime_mb::optim::{BetaSchedule, DualAveraging};
+/// # use anytime_mb::straggler::ShiftedExp;
+/// # use std::sync::Arc;
+/// let topo = anytime_mb::topology::Topology::paper_fig2();
+/// let spec = RunSpec::amb("demo", 2.5, 0.5, 5, 10, 42);
+/// let strag = ShiftedExp::paper_i2();
+/// let src = Arc::new(DataSource::LinReg(LinRegStream::new(64, 0)));
+/// let opt = DualAveraging::new(BetaSchedule::new(1.0, 6000.0), 32.0);
+/// let f_star = src.f_star();
+/// let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+///     Box::new(NativeExec::new(src.clone(), opt.clone()))
+/// };
+/// // same spec, either runtime:
+/// let sim_out = anytime_mb::run(&SimRuntime::new(&strag), &spec, &topo, &mk, f_star);
+/// let thr_out = anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, f_star);
+/// # let _ = (sim_out, thr_out);
+/// ```
+pub fn run(
+    runtime: &dyn Runtime,
+    spec: &RunSpec,
+    topo: &topology::Topology,
+    make_engine: EngineFactory<'_>,
+    f_star: Option<f64>,
+) -> RunOutput {
+    runtime.run(spec, topo, make_engine, f_star)
+}
 
 /// Default artifacts directory (relative to the repo root).
 pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   figures   regenerate paper figures (CSV into results/) and print the
 //!             paper-vs-measured report
-//!   run       one AMB or FMB simulation with explicit parameters
+//!   run       one AMB/FMB/backup/coded run with explicit parameters on
+//!             either runtime (--runtime sim|threaded)
 //!   train     end-to-end threaded AMB run (transformer LM via PJRT
 //!             artifacts, or native linreg)
 //!   info      artifact manifest + topology diagnostics
@@ -13,17 +14,20 @@
 //!   amb figures --fig f1a --pjrt
 //!   amb run --scheme amb --workload linreg --nodes 10 --epochs 25 \
 //!       --t-compute 14.5 --t-consensus 4.5 --rounds 5 --out run.csv
+//!   amb run --scheme fmb-coded --ignore 2 --runtime threaded \
+//!       --t-compute 0.5 --t-consensus 0.2 --time-scale 1.0
 //!   amb train --epochs 40 --t-compute 0.5 --t-consensus 0.2
 //!   amb info
 
 use std::path::Path;
 use std::process::ExitCode;
 
-use anytime_mb::coordinator::{sim, threaded, RunConfig};
+use anytime_mb::coordinator::{ConsensusMode, RunSpec, RuntimeKind, Scheme, GOSSIP_UNTIL_DEADLINE};
 use anytime_mb::experiments::{self, Backend, Ctx};
-use anytime_mb::straggler::{InducedGroups, PauseModel, ShiftedExp};
+use anytime_mb::straggler::{InducedGroups, PauseModel, ShiftedExp, StragglerModel};
 use anytime_mb::topology::Topology;
 use anytime_mb::util::cli::Args;
+use anytime_mb::ThreadedRuntime;
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -51,12 +55,16 @@ fn print_usage() {
     eprintln!(
         "amb — Anytime Minibatch (ICLR 2019) reproduction\n\
          \n\
-         usage: amb <figures|run|train|info> [options]\n\
+         usage: amb <figures|ablations|run|train|info> [options]\n\
          \n\
          figures --fig <id|all> [--out-dir results] [--pjrt] [--quick] [--seed N]\n\
-         run     --scheme <amb|fmb> --workload <linreg|logreg> [--nodes N]\n\
-         \u{20}       [--epochs N] [--t-compute S] [--t-consensus S] [--rounds R]\n\
-         \u{20}       [--per-node-batch B] [--straggler <shiftedexp|induced|pause|none>]\n\
+         \u{20}       [--runtime sim|threaded] [--time-scale S]\n\
+         run     --scheme <amb|fmb|fmb-backup|fmb-coded> --workload <linreg|logreg>\n\
+         \u{20}       [--runtime sim|threaded] [--nodes N] [--epochs N]\n\
+         \u{20}       [--t-compute S] [--t-consensus S] [--rounds R] [--exact-consensus]\n\
+         \u{20}       [--per-node-batch B] [--ignore K]\n\
+         \u{20}       [--straggler <shiftedexp|induced|pause|none>]\n\
+         \u{20}       [--grad-chunk C] [--slowdown f1,f2,...] [--time-scale S]\n\
          \u{20}       [--pjrt] [--seed N] [--out FILE.csv]\n\
          train   [--workload <transformer|linreg>] [--nodes N] [--epochs N]\n\
          \u{20}       [--t-compute S] [--t-consensus S] [--grad-chunk C]\n\
@@ -77,15 +85,19 @@ fn backend(args: &Args) -> Backend {
     }
 }
 
-fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+fn runtime_kind(args: &Args) -> anyhow::Result<RuntimeKind> {
+    let s = args.str_or("runtime", "sim");
+    RuntimeKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown runtime '{s}' (sim|threaded)"))
+}
+
+fn harness_ctx(args: &Args) -> anyhow::Result<Ctx> {
     let out_dir = std::path::PathBuf::from(args.str_or("out-dir", anytime_mb::RESULTS_DIR));
     std::fs::create_dir_all(&out_dir)?;
-    let mut ctx = Ctx::native(&out_dir);
-    ctx.backend = backend(args);
-    ctx.seed = args.u64_or("seed", 42)?;
-    if args.flag("quick") {
-        ctx = ctx.quick();
-    }
+    Ctx::from_args(&out_dir, args)
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let ctx = harness_ctx(args)?;
     let fig = args.str_or("fig", "all");
     let reports = if fig == "all" {
         experiments::run_all(&ctx)?
@@ -107,14 +119,7 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_ablations(args: &Args) -> anyhow::Result<()> {
-    let out_dir = std::path::PathBuf::from(args.str_or("out-dir", anytime_mb::RESULTS_DIR));
-    std::fs::create_dir_all(&out_dir)?;
-    let mut ctx = Ctx::native(&out_dir);
-    ctx.backend = backend(args);
-    ctx.seed = args.u64_or("seed", 42)?;
-    if args.flag("quick") {
-        ctx = ctx.quick();
-    }
+    let ctx = harness_ctx(args)?;
     let reports = experiments::ablations::run_all(&ctx)?;
     let mut bad = 0;
     for r in &reports {
@@ -125,6 +130,27 @@ fn cmd_ablations(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn parse_slowdown(args: &Args) -> anyhow::Result<Vec<f64>> {
+    match args.get("slowdown") {
+        None => Ok(Vec::new()),
+        Some(s) => s
+            .split(',')
+            .map(|v| -> anyhow::Result<f64> {
+                let f: f64 = v.trim().parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "invalid --slowdown factor '{v}' (expected comma-separated floats)"
+                    )
+                })?;
+                anyhow::ensure!(
+                    f.is_finite() && f >= 1.0,
+                    "--slowdown factors must be ≥ 1.0 (got {f})"
+                );
+                Ok(f)
+            })
+            .collect(),
+    }
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let nodes = args.usize_or("nodes", 10)?;
     let epochs = args.usize_or("epochs", 20)?;
@@ -132,6 +158,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let t_compute = args.f64_or("t-compute", 14.5)?;
     let t_consensus = args.f64_or("t-consensus", 4.5)?;
     let per_node_batch = args.usize_or("per-node-batch", 600)?;
+    let ignore = args.usize_or("ignore", 1)?;
     let seed = args.u64_or("seed", 42)?;
 
     let topo = if nodes == 10 {
@@ -146,34 +173,73 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown workload '{other}'"),
     };
 
-    let strag: Box<dyn anytime_mb::straggler::StragglerModel> =
-        match args.str_or("straggler", "shiftedexp") {
-            "shiftedexp" => Box::new(ShiftedExp {
-                zeta: args.f64_or("zeta", 1.0)?,
-                lambda: args.f64_or("lambda", 2.0 / 3.0)?,
-                unit_batch: per_node_batch,
-            }),
-            "induced" => Box::new(InducedGroups::paper_i3()),
-            "pause" => Box::new(PauseModel::paper_i4()),
-            "none" => Box::new(anytime_mb::straggler::Deterministic {
-                unit_time: args.f64_or("unit-time", 1.0)?,
-                unit_batch: per_node_batch,
-            }),
-            other => anyhow::bail!("unknown straggler model '{other}'"),
-        };
+    let strag: Box<dyn StragglerModel> = match args.str_or("straggler", "shiftedexp") {
+        "shiftedexp" => Box::new(ShiftedExp {
+            zeta: args.f64_or("zeta", 1.0)?,
+            lambda: args.f64_or("lambda", 2.0 / 3.0)?,
+            unit_batch: per_node_batch,
+        }),
+        "induced" => {
+            let m = InducedGroups::paper_i3();
+            anyhow::ensure!(
+                nodes == m.n(),
+                "--straggler induced has intrinsic n={} (got --nodes {nodes})",
+                m.n()
+            );
+            Box::new(m)
+        }
+        "pause" => {
+            let m = PauseModel::paper_i4();
+            anyhow::ensure!(
+                nodes == m.n(),
+                "--straggler pause has intrinsic n={} (got --nodes {nodes})",
+                m.n()
+            );
+            Box::new(m)
+        }
+        "none" => Box::new(anytime_mb::straggler::Deterministic {
+            unit_time: args.f64_or("unit-time", 1.0)?,
+            unit_batch: per_node_batch,
+        }),
+        other => anyhow::bail!("unknown straggler model '{other}'"),
+    };
+
+    let scheme = match args.str_or("scheme", "amb") {
+        "amb" => Scheme::Amb { t_compute, t_consensus },
+        "fmb" => Scheme::Fmb { per_node_batch, t_consensus },
+        "fmb-backup" => Scheme::FmbBackup { per_node_batch, t_consensus, ignore, coded: false },
+        "fmb-coded" => Scheme::FmbBackup { per_node_batch, t_consensus, ignore, coded: true },
+        other => anyhow::bail!("unknown scheme '{other}'"),
+    };
+    let consensus = if args.flag("exact-consensus") {
+        ConsensusMode::Exact
+    } else {
+        ConsensusMode::Gossip { rounds }
+    };
+    let spec = RunSpec::new(scheme.name(), scheme, epochs, seed)
+        .with_consensus(consensus)
+        .with_grad_chunk(args.usize_or("grad-chunk", 16)?)
+        .with_slowdown(parse_slowdown(args)?);
 
     let expected_batch = (nodes * per_node_batch) as f64;
     let opt = experiments::optimizer_for(&source, expected_batch);
-    let cfg = match args.str_or("scheme", "amb") {
-        "amb" => RunConfig::amb("amb", t_compute, t_consensus, rounds, epochs, seed),
-        "fmb" => RunConfig::fmb("fmb", per_node_batch, t_consensus, rounds, epochs, seed),
-        other => anyhow::bail!("unknown scheme '{other}'"),
-    };
 
-    let ctx = Ctx { backend: backend(args), out_dir: ".".into(), quick: false, seed };
-    let mut mk = ctx.engine_factory(source.clone(), opt)?;
-    let out = sim::run(&cfg, &topo, &*strag, &mut *mk, source.f_star());
+    let mut ctx = Ctx::native(Path::new(".")).with_runtime(runtime_kind(args)?);
+    ctx.backend = backend(args);
+    ctx.seed = seed;
+    // Unlike `figures` (paper-unit windows, 0.01 threaded default),
+    // `run` takes explicit --t-compute/--t-consensus, so seconds mean
+    // seconds unless the user scales them.
+    ctx.time_scale = args.f64_or("time-scale", 1.0)?;
+    anyhow::ensure!(ctx.time_scale > 0.0, "--time-scale must be positive");
+    let out = ctx.run(&spec, &topo, &*strag, &source, &opt)?;
 
+    println!(
+        "# runtime={} scheme={} consensus={:?}",
+        ctx.runtime.name(),
+        spec.scheme.name(),
+        spec.consensus
+    );
     println!(
         "{:<6} {:>10} {:>8} {:>12} {:>12} {:>12}",
         "epoch", "wall_time", "batch", "loss", "error", "cons_err"
@@ -199,25 +265,19 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 42)?;
     let nodes = args.usize_or("nodes", 4)?;
     let grad_chunk = args.usize_or("grad-chunk", 8)?;
-    let slowdown: Vec<f64> = args
-        .get("slowdown")
-        .map(|s| s.split(',').map(|v| v.parse().unwrap_or(1.0)).collect())
-        .unwrap_or_default();
+    let slowdown = parse_slowdown(args)?;
     let artifacts = args
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(anytime_mb::artifacts_dir);
 
     let topo = Topology::ring(nodes.max(2));
-    let cfg = threaded::ThreadedConfig {
-        name: "amb-train".into(),
-        t_compute,
-        t_consensus,
-        epochs,
-        seed,
-        grad_chunk,
-        slowdown,
-    };
+    // As many gossip rounds as fit in T_c (the pre-unification threaded
+    // behaviour); epochs land on the absolute real-time schedule.
+    let spec = RunSpec::amb("amb-train", t_compute, t_consensus, GOSSIP_UNTIL_DEADLINE, epochs, seed)
+        .with_grad_chunk(grad_chunk)
+        .with_slowdown(slowdown)
+        .with_node_log();
 
     let workload = args.str_or("workload", "transformer").to_string();
     let out = match workload.as_str() {
@@ -225,7 +285,6 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             use anytime_mb::data::TokenStream;
             use anytime_mb::optim::{BetaSchedule, DualAveraging};
             use anytime_mb::runtime::{PjrtRuntime, TransformerExec};
-            use std::rc::Rc;
             use std::sync::Arc;
 
             // Probe the manifest once for sizes (threads re-load privately).
@@ -237,36 +296,32 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 probe.transformer.seq_len,
                 probe.transformer.batch
             );
+            let spec = spec.with_grad_chunk(probe.transformer.batch);
             let tokens = Arc::new(TokenStream::new(probe.transformer.vocab, seed ^ 0x70_6B));
             let dir = artifacts.clone();
             let opt = DualAveraging::new(
                 BetaSchedule::new(args.f64_or("beta-k", 1.0)?, args.f64_or("beta-mu", 50.0)?),
                 args.f64_or("radius", 1000.0)?,
             );
-            threaded::run_amb(
-                &cfg,
-                &topo,
-                move |_i| {
-                    let rt = Rc::new(PjrtRuntime::load(&dir).expect("load artifacts"));
-                    Box::new(
-                        TransformerExec::new(rt, tokens.clone(), opt.clone())
-                            .expect("transformer exec"),
-                    )
-                },
-                0.0,
-            )
+            let mk = move |_i: usize| -> Box<dyn anytime_mb::exec::ExecEngine> {
+                let rt = PjrtRuntime::load_shared(&dir).expect("load artifacts");
+                Box::new(
+                    TransformerExec::new(rt, tokens.clone(), opt.clone())
+                        .expect("transformer exec"),
+                )
+            };
+            anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, None)
         }
         "linreg" => {
             use anytime_mb::exec::NativeExec;
             let source = experiments::linreg_source(seed);
             let opt = experiments::optimizer_for(&source, 5000.0);
             let f_star = source.f_star();
-            threaded::run_amb(
-                &cfg,
-                &topo,
-                move |_i| Box::new(NativeExec::new(source.clone(), opt.clone())),
-                f_star,
-            )
+            let src = source.clone();
+            let mk = move |_i: usize| -> Box<dyn anytime_mb::exec::ExecEngine> {
+                Box::new(NativeExec::new(src.clone(), opt.clone()))
+            };
+            anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, f_star)
         }
         other => anyhow::bail!("unknown train workload '{other}'"),
     };

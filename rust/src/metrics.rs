@@ -36,12 +36,15 @@ pub struct EpochStats {
 pub struct RunRecord {
     pub name: String,
     pub epochs: Vec<EpochStats>,
-    /// Optimal per-sample loss F(w*) when known (regret baseline).
-    pub f_star: f64,
+    /// Optimal per-sample loss F(w*) when known analytically (regret
+    /// baseline).  `None` — e.g. the MNIST-like mixture — means regret
+    /// is NOT computed rather than silently lower-bounded with 0.0, so
+    /// true and bounded baselines can never be mixed across schemes.
+    pub f_star: Option<f64>,
 }
 
 impl RunRecord {
-    pub fn new(name: &str, f_star: f64) -> RunRecord {
+    pub fn new(name: &str, f_star: Option<f64>) -> RunRecord {
         RunRecord { name: name.to_string(), epochs: Vec::new(), f_star }
     }
 
@@ -65,16 +68,21 @@ impl RunRecord {
 
     /// Running regret estimate after each epoch:
     /// R̂(τ) = Σ_{t≤τ} b(t)·(loss(t) − F(w*))   (paper eq. (16) with the
-    /// observed minibatch as the sample set).
-    pub fn regret_series(&self) -> Vec<f64> {
+    /// observed minibatch as the sample set).  `None` when F(w*) is
+    /// unknown — callers must choose a baseline explicitly instead of
+    /// inheriting a silent 0.0 bound.
+    pub fn regret_series(&self) -> Option<Vec<f64>> {
+        let f_star = self.f_star?;
         let mut acc = 0.0;
-        self.epochs
-            .iter()
-            .map(|e| {
-                acc += e.batch as f64 * (e.loss - self.f_star);
-                acc
-            })
-            .collect()
+        Some(
+            self.epochs
+                .iter()
+                .map(|e| {
+                    acc += e.batch as f64 * (e.loss - f_star);
+                    acc
+                })
+                .collect(),
+        )
     }
 
     /// First wall time at which `error` drops (and stays) below `target`;
@@ -94,13 +102,16 @@ impl RunRecord {
         hit
     }
 
-    /// Export the per-epoch series as CSV.
+    /// Export the per-epoch series as CSV.  The regret column is `NaN`
+    /// when F(w*) is unknown.
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "epoch", "wall_time", "batch", "potential", "loss", "error",
             "consensus_err", "min_node_batch", "max_node_batch", "regret",
         ]);
-        let regret = self.regret_series();
+        let regret = self
+            .regret_series()
+            .unwrap_or_else(|| vec![f64::NAN; self.epochs.len()]);
         for (e, r) in self.epochs.iter().zip(regret) {
             csv.push_nums(&[
                 e.epoch as f64,
@@ -122,9 +133,15 @@ impl RunRecord {
         self.to_csv().save(path)
     }
 
-    /// Compact JSON summary (for EXPERIMENTS.md tables).
+    /// Compact JSON summary (for EXPERIMENTS.md tables).  `final_regret`
+    /// is `null` when F(w*) is unknown.
     pub fn summary_json(&self) -> Json {
         let last = self.epochs.last();
+        let final_regret = self
+            .regret_series()
+            .and_then(|r| r.last().copied())
+            .map(Json::num)
+            .unwrap_or(Json::Null);
         Json::obj(vec![
             ("name", Json::str(&self.name)),
             ("epochs", Json::num(self.epochs.len() as f64)),
@@ -132,10 +149,7 @@ impl RunRecord {
             ("total_samples", Json::num(self.total_samples() as f64)),
             ("final_loss", Json::num(last.map(|e| e.loss).unwrap_or(f64::NAN))),
             ("final_error", Json::num(last.map(|e| e.error).unwrap_or(f64::NAN))),
-            (
-                "final_regret",
-                Json::num(self.regret_series().last().copied().unwrap_or(0.0)),
-            ),
+            ("final_regret", final_regret),
         ])
     }
 }
@@ -167,17 +181,17 @@ mod tests {
 
     #[test]
     fn regret_accumulates() {
-        let mut r = RunRecord::new("amb", 1.0);
+        let mut r = RunRecord::new("amb", Some(1.0));
         r.push(stats(1, 1.0, 10, 3.0, 1.0));
         r.push(stats(2, 2.0, 20, 2.0, 0.5));
-        assert_eq!(r.regret_series(), vec![20.0, 40.0]);
+        assert_eq!(r.regret_series().unwrap(), vec![20.0, 40.0]);
         assert_eq!(r.total_samples(), 30);
         assert_eq!(r.total_time(), 2.0);
     }
 
     #[test]
     fn time_to_error_requires_staying_below() {
-        let mut r = RunRecord::new("x", 0.0);
+        let mut r = RunRecord::new("x", Some(0.0));
         r.push(stats(1, 1.0, 1, 0.0, 0.5));
         r.push(stats(2, 2.0, 1, 0.0, 0.05)); // below
         r.push(stats(3, 3.0, 1, 0.0, 0.2)); // bounce back up
@@ -190,7 +204,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "contiguous")]
     fn non_contiguous_epochs_panic() {
-        let mut r = RunRecord::new("x", 0.0);
+        let mut r = RunRecord::new("x", Some(0.0));
         r.push(stats(1, 1.0, 1, 0.0, 0.0));
         r.push(stats(3, 2.0, 1, 0.0, 0.0));
     }
@@ -198,14 +212,27 @@ mod tests {
     #[test]
     #[should_panic(expected = "monotone")]
     fn non_monotone_time_panics() {
-        let mut r = RunRecord::new("x", 0.0);
+        let mut r = RunRecord::new("x", Some(0.0));
         r.push(stats(1, 5.0, 1, 0.0, 0.0));
         r.push(stats(2, 2.0, 1, 0.0, 0.0));
     }
 
     #[test]
+    fn unknown_f_star_never_fakes_regret() {
+        let mut r = RunRecord::new("mnist", None);
+        r.push(stats(1, 1.0, 10, 3.0, 1.0));
+        assert!(r.regret_series().is_none(), "no silent 0.0 baseline");
+        // CSV still has the column, explicitly NaN
+        let text = r.to_csv().to_string();
+        assert!(text.contains("regret"));
+        assert!(text.contains("NaN"));
+        // JSON reports null, not a bounded number
+        assert_eq!(r.summary_json().get("final_regret"), Some(&Json::Null));
+    }
+
+    #[test]
     fn csv_has_all_epochs() {
-        let mut r = RunRecord::new("x", 0.0);
+        let mut r = RunRecord::new("x", Some(0.0));
         r.push(stats(1, 1.0, 5, 1.0, 1.0));
         r.push(stats(2, 2.0, 6, 0.5, 0.5));
         let csv = r.to_csv();
@@ -215,8 +242,8 @@ mod tests {
 
     #[test]
     fn speedup_ratio() {
-        let mut a = RunRecord::new("amb", 0.0);
-        let mut b = RunRecord::new("fmb", 0.0);
+        let mut a = RunRecord::new("amb", Some(0.0));
+        let mut b = RunRecord::new("fmb", Some(0.0));
         for t in 1..=5 {
             a.push(stats(t, t as f64, 1, 0.0, 1.0 / t as f64));
             b.push(stats(t, 2.0 * t as f64, 1, 0.0, 1.0 / t as f64));
@@ -229,7 +256,7 @@ mod tests {
 
     #[test]
     fn summary_json_fields() {
-        let mut r = RunRecord::new("amb", 0.0);
+        let mut r = RunRecord::new("amb", Some(0.0));
         r.push(stats(1, 1.5, 7, 0.25, 0.1));
         let j = r.summary_json();
         assert_eq!(j.get("name").unwrap().as_str(), Some("amb"));

@@ -34,6 +34,15 @@ pub struct PjrtRuntime {
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+thread_local! {
+    /// Per-thread runtime cache for [`PjrtRuntime::load_shared`]: the
+    /// simulator's n engines (one thread) share a single client and
+    /// executable cache, while each threaded-cluster node thread gets
+    /// its own (PJRT clients are Rc-based and must not cross threads).
+    static RUNTIME_CACHE: RefCell<HashMap<std::path::PathBuf, Rc<PjrtRuntime>>> =
+        RefCell::new(HashMap::new());
+}
+
 impl PjrtRuntime {
     /// Load `<dir>/manifest.json` and create the CPU client.
     pub fn load(dir: &Path) -> Result<PjrtRuntime> {
@@ -41,6 +50,20 @@ impl PjrtRuntime {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
         Ok(PjrtRuntime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load through the per-thread cache: repeated calls with the same
+    /// directory on the same thread return the same runtime (one client,
+    /// one compiled-executable cache) instead of re-loading per engine.
+    pub fn load_shared(dir: &Path) -> Result<Rc<PjrtRuntime>> {
+        RUNTIME_CACHE.with(|cache| {
+            if let Some(rt) = cache.borrow().get(dir) {
+                return Ok(rt.clone());
+            }
+            let rt = Rc::new(PjrtRuntime::load(dir)?);
+            cache.borrow_mut().insert(dir.to_path_buf(), rt.clone());
+            Ok(rt)
+        })
     }
 
     /// Compile (or fetch cached) an entry's executable.

@@ -104,6 +104,16 @@ pub trait StragglerModel: Send + Sync {
     fn unit_moments(&self) -> Option<Moments> {
         None
     }
+
+    /// Relative per-node slowdown factors (≥ 1.0, fastest node = 1.0)
+    /// for the threaded runtime, which induces stragglers by napping
+    /// instead of drawing virtual times (`RunSpec::slowdown`).  The
+    /// default — an i.i.d. model — is a homogeneous cluster; models with
+    /// persistent per-node structure override this so a figure harness
+    /// can replay its straggler shape on real threads.
+    fn slowdown_factors(&self, n: usize) -> Vec<f64> {
+        vec![1.0; n]
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -199,6 +209,11 @@ impl StragglerModel for InducedGroups {
         self.unit_batch
     }
     // No closed-form mixture moments exposed; harnesses estimate them.
+
+    fn slowdown_factors(&self, n: usize) -> Vec<f64> {
+        assert_eq!(n, self.n(), "InducedGroups has intrinsic n={}", self.n());
+        self.factors.clone()
+    }
 }
 
 /// HPC induced-straggler experiment (App. I.4): after each gradient the
@@ -256,6 +271,23 @@ impl StragglerModel for PauseModel {
 
     fn unit_batch(&self) -> usize {
         1
+    }
+
+    fn slowdown_factors(&self, n: usize) -> Vec<f64> {
+        assert_eq!(n, self.n(), "PauseModel has intrinsic n={}", self.n());
+        // Mean per-gradient time ratio vs the fastest group.
+        let base = self.per_grad_base;
+        let fastest = self
+            .groups
+            .iter()
+            .map(|&(_, mu, _)| base + mu)
+            .fold(f64::INFINITY, f64::min);
+        (0..n)
+            .map(|i| {
+                let (mu, _) = self.group_of(i);
+                (base + mu) / fastest
+            })
+            .collect()
     }
 }
 
@@ -338,6 +370,12 @@ impl StragglerModel for HeterogeneousMeans {
 
     fn unit_batch(&self) -> usize {
         self.unit_batch
+    }
+
+    fn slowdown_factors(&self, n: usize) -> Vec<f64> {
+        assert_eq!(n, self.means.len(), "HeterogeneousMeans has intrinsic n={}", self.means.len());
+        let fastest = self.means.iter().copied().fold(f64::INFINITY, f64::min);
+        self.means.iter().map(|&m| m / fastest).collect()
     }
 }
 
@@ -565,6 +603,28 @@ mod tests {
         if nb > 10 && nn > 10 {
             assert!(tb / nb as f64 > 2.5 * (tn / nn as f64));
         }
+    }
+
+    #[test]
+    fn slowdown_factors_mirror_persistent_structure() {
+        // i.i.d. models are homogeneous on real threads
+        assert_eq!(ShiftedExp::paper_i2().slowdown_factors(4), vec![1.0; 4]);
+        // induced groups replay their exact factors
+        let ig = InducedGroups::paper_i3();
+        let f = ig.slowdown_factors(10);
+        assert_eq!(f[0], 3.0);
+        assert_eq!(f[4], 2.0);
+        assert_eq!(f[9], 1.0);
+        // pause model: mean per-grad ratio vs the fastest group
+        let pm = PauseModel::paper_i4();
+        let f = pm.slowdown_factors(50);
+        assert!((f[0] - 1.0).abs() < 1e-12);
+        assert!((f[49] - 56.0 / 6.0).abs() < 1e-9, "f49={}", f[49]);
+        // heterogeneous means normalise to the fastest node
+        let hm = HeterogeneousMeans::uniform(6, 1.0, 4.0, 0.0, 100, 3);
+        let f = hm.slowdown_factors(6);
+        assert!(f.iter().all(|&x| x >= 1.0));
+        assert!(f.iter().any(|&x| (x - 1.0).abs() < 1e-12));
     }
 
     #[test]

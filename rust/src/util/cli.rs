@@ -11,20 +11,31 @@ pub struct Args {
     flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
     Missing(String),
-    #[error("option --{0} has invalid value '{1}': expected {2}")]
     Invalid(String, String, &'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(k) => write!(f, "missing required option --{k}"),
+            CliError::Invalid(k, v, want) => {
+                write!(f, "option --{k} has invalid value '{v}': expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Boolean flags must be declared so `--verbose out.csv` parses as a flag
 /// plus a positional rather than `verbose=out.csv` (standard CLI
 /// disambiguation without a full schema).
 pub const KNOWN_FLAGS: &[&str] = &[
     "verbose", "help", "quiet", "dry-run", "small", "exact-bt", "node-log",
-    "pjrt", "native", "quick",
+    "pjrt", "native", "quick", "exact-consensus",
 ];
 
 impl Args {

@@ -1,16 +1,17 @@
 //! Property-based integration tests over the coordinator's invariants
-//! (DESIGN.md §6), using the in-tree `prop` harness.
+//! (DESIGN.md §6), using the in-tree `prop` harness and the unified
+//! `RunSpec` → `anytime_mb::run` API.
 
 use std::sync::Arc;
 
-use anytime_mb::coordinator::{sim, ConsensusMode, RunConfig};
 use anytime_mb::data::LinRegStream;
 use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
 use anytime_mb::optim::{BetaSchedule, DualAveraging};
 use anytime_mb::prop::{forall, Gen};
-use anytime_mb::straggler::{Deterministic, ShiftedExp};
+use anytime_mb::straggler::{Deterministic, ShiftedExp, StragglerModel};
 use anytime_mb::topology::Topology;
 use anytime_mb::{prop_assert, prop_assert_close};
+use anytime_mb::{ConsensusMode, RunOutput, RunSpec, SimRuntime};
 
 fn setup(g: &mut Gen) -> (Arc<DataSource>, DualAveraging, Topology) {
     let d = g.usize_in(4, 48);
@@ -24,11 +25,19 @@ fn setup(g: &mut Gen) -> (Arc<DataSource>, DualAveraging, Topology) {
     (src, opt, topo)
 }
 
-fn factory(
-    src: Arc<DataSource>,
-    opt: DualAveraging,
-) -> impl FnMut(usize) -> Box<dyn ExecEngine> {
-    move |_| Box::new(NativeExec::new(src.clone(), opt.clone()))
+fn sim_run(
+    spec: &RunSpec,
+    topo: &Topology,
+    strag: &dyn StragglerModel,
+    src: &Arc<DataSource>,
+    opt: &DualAveraging,
+) -> RunOutput {
+    let s = src.clone();
+    let o = opt.clone();
+    let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+        Box::new(NativeExec::new(s.clone(), o.clone()))
+    };
+    anytime_mb::run(&SimRuntime::new(strag), spec, topo, &mk, src.f_star())
 }
 
 /// AMB epoch wall time is exactly (T + T_c)·τ for ANY straggler draw,
@@ -45,8 +54,8 @@ fn prop_amb_wall_time_deterministic() {
         let t = g.f64_in(0.5, 5.0);
         let tc = g.f64_in(0.1, 2.0);
         let epochs = g.usize_in(2, 8);
-        let cfg = RunConfig::amb("amb", t, tc, g.usize_in(1, 10), epochs, g.u64());
-        let rec = sim::run(&cfg, &topo, &strag, factory(src.clone(), opt), src.f_star()).record;
+        let spec = RunSpec::amb("amb", t, tc, g.usize_in(1, 10), epochs, g.u64());
+        let rec = sim_run(&spec, &topo, &strag, &src, &opt).record;
         prop_assert_close!(rec.total_time(), epochs as f64 * (t + tc), 1e-9);
         Ok(())
     });
@@ -64,8 +73,8 @@ fn prop_fmb_wall_time_max_gated() {
         let tc = g.f64_in(0.1, 1.0);
         let epochs = g.usize_in(2, 6);
         let b = g.usize_in(5, 150);
-        let cfg = RunConfig::fmb("fmb", b, tc, 3, epochs, g.u64());
-        let rec = sim::run(&cfg, &topo, &strag, factory(src.clone(), opt), src.f_star()).record;
+        let spec = RunSpec::fmb("fmb", b, tc, 3, epochs, g.u64());
+        let rec = sim_run(&spec, &topo, &strag, &src, &opt).record;
         let per_epoch = unit_time * b as f64 / unit as f64 + tc;
         prop_assert_close!(rec.total_time(), epochs as f64 * per_epoch, 1e-9);
         Ok(())
@@ -85,8 +94,8 @@ fn prop_batch_accounting_consistent() {
             lambda: g.f64_in(0.5, 2.0),
             unit_batch: g.usize_in(20, 100),
         };
-        let cfg = RunConfig::amb("amb", g.f64_in(1.0, 4.0), 0.5, 3, 5, g.u64());
-        let rec = sim::run(&cfg, &topo, &strag, factory(src.clone(), opt), src.f_star()).record;
+        let spec = RunSpec::amb("amb", g.f64_in(1.0, 4.0), 0.5, 3, 5, g.u64());
+        let rec = sim_run(&spec, &topo, &strag, &src, &opt).record;
         for e in &rec.epochs {
             prop_assert!(e.min_node_batch <= e.max_node_batch);
             prop_assert!(e.batch >= n * e.min_node_batch);
@@ -106,8 +115,8 @@ fn prop_more_rounds_not_worse() {
         let strag = ShiftedExp { zeta: 0.5, lambda: 1.0, unit_batch: 50 };
         let seed = g.u64();
         let mut err_at = |rounds: usize| -> f64 {
-            let cfg = RunConfig::amb("amb", 2.0, 0.5, rounds, 4, seed);
-            let rec = sim::run(&cfg, &topo, &strag, factory(src.clone(), opt.clone()), src.f_star()).record;
+            let spec = RunSpec::amb("amb", 2.0, 0.5, rounds, 4, seed);
+            let rec = sim_run(&spec, &topo, &strag, &src, &opt).record;
             rec.epochs.iter().map(|e| e.consensus_err).sum::<f64>()
         };
         let few = err_at(1);
@@ -127,8 +136,9 @@ fn prop_exact_consensus_topology_invariant() {
         let strag = ShiftedExp { zeta: 0.5, lambda: 1.0, unit_batch: 50 };
         let seed = g.u64();
         let run_on = |topo: &Topology| {
-            let cfg = RunConfig::amb("amb", 2.0, 0.5, 1, 4, seed).with_consensus(ConsensusMode::Exact);
-            sim::run(&cfg, topo, &strag, factory(src.clone(), opt.clone()), src.f_star())
+            let spec = RunSpec::amb("amb", 2.0, 0.5, 1, 4, seed)
+                .with_consensus(ConsensusMode::Exact);
+            sim_run(&spec, topo, &strag, &src, &opt)
         };
         let a = run_on(&Topology::ring(6));
         let b = run_on(&Topology::complete(6));
@@ -149,8 +159,8 @@ fn prop_seeded_reproducibility() {
         let strag = ShiftedExp { zeta: 0.5, lambda: 1.5, unit_batch: 60 };
         let seed = g.u64();
         let run = || {
-            let cfg = RunConfig::amb("amb", 1.5, 0.4, 4, 5, seed);
-            sim::run(&cfg, &topo, &strag, factory(src.clone(), opt.clone()), src.f_star())
+            let spec = RunSpec::amb("amb", 1.5, 0.4, 4, 5, seed);
+            sim_run(&spec, &topo, &strag, &src, &opt)
         };
         let a = run();
         let b = run();

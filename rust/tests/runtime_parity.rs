@@ -1,0 +1,172 @@
+//! Runtime parity: the paper's claims must hold IDENTICALLY whether a
+//! `RunSpec` is replayed on the discrete-event simulator or executed on
+//! the real threaded cluster.  These tests pin the contract down:
+//!
+//! * one spec (small linreg, `ConsensusMode::Exact`, no slowdown) run on
+//!   both runtimes produces records whose losses agree within tolerance
+//!   (the runtimes share data RNG streams, the epoch state machine, and
+//!   the exact-averaging arithmetic — only f32 summation order differs,
+//!   because the threaded compute phase accumulates in `grad_chunk`s);
+//! * two sim runs with equal seeds are bitwise identical;
+//! * every `Scheme` variant executes on BOTH runtimes.
+
+use std::sync::Arc;
+
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::straggler::{Deterministic, ShiftedExp};
+use anytime_mb::topology::Topology;
+use anytime_mb::{ConsensusMode, RunOutput, RunSpec, Runtime, Scheme, SimRuntime, ThreadedRuntime};
+
+fn linreg_factory(
+    d: usize,
+    seed: u64,
+) -> (
+    impl Fn(usize) -> Box<dyn ExecEngine> + Send + Sync,
+    Option<f64>,
+) {
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 500.0), 4.0 * (d as f64).sqrt());
+    let f_star = src.f_star();
+    (
+        move |_i: usize| -> Box<dyn ExecEngine> {
+            Box::new(NativeExec::new(src.clone(), opt.clone()))
+        },
+        f_star,
+    )
+}
+
+fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-12)
+}
+
+/// Same RunSpec → both runtimes → same learning trajectory.
+///
+/// FMB pins the per-node batch, Exact consensus pins the averaging, the
+/// shared `coordinator::epoch` RNG derivations pin the data — so the two
+/// runtimes see the same samples in the same order and must agree up to
+/// f32 chunked-summation rounding.
+#[test]
+fn fmb_exact_same_spec_agrees_across_runtimes() {
+    let topo = Topology::ring(4);
+    let (mk, f_star) = linreg_factory(16, 2);
+    let spec = RunSpec::fmb("parity", 48, 0.05, 1, 6, 21)
+        .with_consensus(ConsensusMode::Exact)
+        .with_grad_chunk(16);
+    // The sim attributes time from a deterministic model; time never
+    // enters the learning math, only the records' wall clock.
+    let strag = Deterministic { unit_time: 0.01, unit_batch: 48 };
+
+    let sim = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star);
+    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+
+    assert_eq!(sim.record.epochs.len(), thr.record.epochs.len());
+    for (es, et) in sim.record.epochs.iter().zip(&thr.record.epochs) {
+        // batch accounting is EXACTLY equal: the quota is the quota
+        assert_eq!(es.batch, et.batch, "epoch {}", es.epoch);
+        assert_eq!(es.min_node_batch, et.min_node_batch);
+        assert_eq!(es.max_node_batch, et.max_node_batch);
+        // losses agree to f32 reorder tolerance
+        assert!(
+            rel_diff(es.loss, et.loss) < 1e-2,
+            "epoch {}: sim loss {} vs threaded {}",
+            es.epoch,
+            es.loss,
+            et.loss
+        );
+    }
+    let (ls, lt) = (
+        sim.record.epochs.last().unwrap().loss,
+        thr.record.epochs.last().unwrap().loss,
+    );
+    assert!(rel_diff(ls, lt) < 1e-2, "final loss: sim {ls} vs threaded {lt}");
+    let (es, et) = (
+        sim.record.epochs.last().unwrap().error,
+        thr.record.epochs.last().unwrap().error,
+    );
+    assert!(rel_diff(es, et) < 5e-2, "final error: sim {es} vs threaded {et}");
+
+    // final primals agree per node (the whole state machine matched)
+    for (ws, wt) in sim.final_w.iter().zip(&thr.final_w) {
+        let mut diff = 0.0f64;
+        let mut norm = 0.0f64;
+        for k in 0..ws.len() {
+            diff += ((ws[k] - wt[k]) as f64).powi(2);
+            norm += (ws[k] as f64).powi(2);
+        }
+        assert!(
+            diff.sqrt() < 1e-2 * norm.sqrt().max(1e-9),
+            "final w rel diff {}",
+            diff.sqrt() / norm.sqrt().max(1e-9)
+        );
+    }
+}
+
+/// Two sim runs with equal seeds are bitwise identical; a different seed
+/// diverges.
+#[test]
+fn sim_equal_seeds_bitwise_identical() {
+    let topo = Topology::paper_fig2();
+    let (mk, f_star) = linreg_factory(24, 5);
+    let strag = ShiftedExp { zeta: 0.5, lambda: 1.0, unit_batch: 60 };
+    let run = |seed: u64| -> RunOutput {
+        let spec = RunSpec::amb("det", 2.0, 0.5, 4, 8, seed);
+        SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star)
+    };
+    let a = run(77);
+    let b = run(77);
+    for (ea, eb) in a.record.epochs.iter().zip(&b.record.epochs) {
+        assert_eq!(ea.batch, eb.batch);
+        assert_eq!(ea.loss.to_bits(), eb.loss.to_bits());
+        assert_eq!(ea.error.to_bits(), eb.error.to_bits());
+        assert_eq!(ea.consensus_err.to_bits(), eb.consensus_err.to_bits());
+    }
+    for (wa, wb) in a.final_w.iter().zip(&b.final_w) {
+        assert_eq!(wa, wb, "final primals must be bitwise identical");
+    }
+    let c = run(78);
+    assert_ne!(
+        a.record.epochs[3].batch, c.record.epochs[3].batch,
+        "different seeds should differ (overwhelmingly likely)"
+    );
+}
+
+/// Acceptance: every Scheme variant executes on BOTH runtimes through
+/// the one entrypoint.
+#[test]
+fn every_scheme_runs_on_both_runtimes() {
+    let topo = Topology::complete(4);
+    let (mk, f_star) = linreg_factory(8, 9);
+    let strag = ShiftedExp { zeta: 0.05, lambda: 20.0, unit_batch: 32 };
+    let schemes: Vec<Scheme> = vec![
+        Scheme::Amb { t_compute: 0.04, t_consensus: 0.03 },
+        Scheme::Fmb { per_node_batch: 32, t_consensus: 0.03 },
+        Scheme::FmbBackup { per_node_batch: 32, t_consensus: 0.03, ignore: 1, coded: false },
+        Scheme::FmbBackup { per_node_batch: 32, t_consensus: 0.03, ignore: 1, coded: true },
+    ];
+    let sim = SimRuntime::new(&strag);
+    let runtimes: Vec<(&str, &dyn Runtime)> = vec![("sim", &sim), ("threaded", &ThreadedRuntime)];
+    for scheme in &schemes {
+        for (rt_name, rt) in &runtimes {
+            let spec = RunSpec::new(scheme.name(), *scheme, 3, 13).with_grad_chunk(8);
+            let out = anytime_mb::run(*rt, &spec, &topo, &mk, f_star);
+            assert_eq!(
+                out.record.epochs.len(),
+                3,
+                "{} on {rt_name} lost epochs",
+                scheme.name()
+            );
+            for e in &out.record.epochs {
+                assert!(
+                    e.batch > 0,
+                    "{} on {rt_name}: empty epoch {}",
+                    scheme.name(),
+                    e.epoch
+                );
+            }
+            assert_eq!(out.final_w.len(), 4);
+            assert_eq!(out.rounds.len(), 4);
+        }
+    }
+}

@@ -1,14 +1,16 @@
 //! Integration: full simulated AMB/FMB runs across straggler models and
-//! topologies — the paper's qualitative claims at test scale.
+//! topologies — the paper's qualitative claims at test scale, through
+//! the unified `RunSpec` → `anytime_mb::run` API.
 
 use std::sync::Arc;
 
-use anytime_mb::coordinator::{sim, ConsensusMode, RunConfig};
 use anytime_mb::data::LinRegStream;
 use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::metrics::RunRecord;
 use anytime_mb::optim::{BetaSchedule, DualAveraging};
 use anytime_mb::straggler::{InducedGroups, PauseModel, ShiftedExp, StragglerModel};
 use anytime_mb::topology::Topology;
+use anytime_mb::{ConsensusMode, RunOutput, RunSpec, SimRuntime};
 
 fn linreg(d: usize, seed: u64) -> (Arc<DataSource>, DualAveraging) {
     let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
@@ -19,8 +21,29 @@ fn linreg(d: usize, seed: u64) -> (Arc<DataSource>, DualAveraging) {
 fn native_factory(
     src: Arc<DataSource>,
     opt: DualAveraging,
-) -> impl FnMut(usize) -> Box<dyn ExecEngine> {
+) -> impl Fn(usize) -> Box<dyn ExecEngine> + Send + Sync {
     move |_| Box::new(NativeExec::new(src.clone(), opt.clone()))
+}
+
+fn sim_run(
+    spec: &RunSpec,
+    topo: &Topology,
+    strag: &dyn StragglerModel,
+    src: &Arc<DataSource>,
+    opt: &DualAveraging,
+) -> RunOutput {
+    let mk = native_factory(src.clone(), opt.clone());
+    anytime_mb::run(&SimRuntime::new(strag), spec, topo, &mk, src.f_star())
+}
+
+fn sim_record(
+    spec: &RunSpec,
+    topo: &Topology,
+    strag: &dyn StragglerModel,
+    src: &Arc<DataSource>,
+    opt: &DualAveraging,
+) -> RunRecord {
+    sim_run(spec, topo, strag, src, opt).record
 }
 
 /// Headline claim: AMB reaches the same error in less wall time than FMB
@@ -32,11 +55,8 @@ fn amb_beats_fmb_on_wall_time() {
     let (src, opt) = linreg(64, 3);
     let epochs = 20;
 
-    let amb_cfg = RunConfig::amb("amb", 3.0, 0.5, 6, epochs, 7);
-    let amb = sim::run(&amb_cfg, &topo, &strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
-
-    let fmb_cfg = RunConfig::fmb("fmb", 200, 0.5, 6, epochs, 7);
-    let fmb = sim::run(&fmb_cfg, &topo, &strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
+    let amb = sim_record(&RunSpec::amb("amb", 3.0, 0.5, 6, epochs, 7), &topo, &strag, &src, &opt);
+    let fmb = sim_record(&RunSpec::fmb("fmb", 200, 0.5, 6, epochs, 7), &topo, &strag, &src, &opt);
 
     let target = amb.epochs.last().unwrap().error.max(fmb.epochs.last().unwrap().error) * 2.0;
     let (ta, tb, speedup) = anytime_mb::metrics::speedup_at(&amb, &fmb, target).unwrap();
@@ -53,10 +73,8 @@ fn amb_and_fmb_match_per_epoch() {
     let (src, opt) = linreg(64, 5);
     let epochs = 15;
 
-    let amb_cfg = RunConfig::amb("amb", 2.01, 0.5, 8, epochs, 11);
-    let amb = sim::run(&amb_cfg, &topo, &strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
-    let fmb_cfg = RunConfig::fmb("fmb", 200, 0.5, 8, epochs, 11);
-    let fmb = sim::run(&fmb_cfg, &topo, &strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
+    let amb = sim_record(&RunSpec::amb("amb", 2.01, 0.5, 8, epochs, 11), &topo, &strag, &src, &opt);
+    let fmb = sim_record(&RunSpec::fmb("fmb", 200, 0.5, 8, epochs, 11), &topo, &strag, &src, &opt);
 
     let ea = amb.epochs.last().unwrap().error;
     let ef = fmb.epochs.last().unwrap().error;
@@ -76,10 +94,9 @@ fn regret_per_sample_decays() {
     let topo = Topology::paper_fig2();
     let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 100 };
     let (src, opt) = linreg(32, 9);
-    let cfg = RunConfig::amb("amb", 2.0, 0.5, 8, 40, 13);
-    let rec = sim::run(&cfg, &topo, &strag, native_factory(src.clone(), opt), src.f_star()).record;
+    let rec = sim_record(&RunSpec::amb("amb", 2.0, 0.5, 8, 40, 13), &topo, &strag, &src, &opt);
 
-    let regret = rec.regret_series();
+    let regret = rec.regret_series().expect("linreg knows F(w*)");
     let samples: Vec<f64> = rec
         .epochs
         .iter()
@@ -109,10 +126,10 @@ fn straggler_variability_widens_gap() {
     let epochs = 15;
 
     let speedup_under = |strag: &dyn StragglerModel, t_amb: f64, b: usize, seed: u64| -> f64 {
-        let amb_cfg = RunConfig::amb("amb", t_amb, 0.5, 6, epochs, seed);
-        let amb = sim::run(&amb_cfg, &topo, strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
-        let fmb_cfg = RunConfig::fmb("fmb", b, 0.5, 6, epochs, seed);
-        let fmb = sim::run(&fmb_cfg, &topo, strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
+        let amb =
+            sim_record(&RunSpec::amb("amb", t_amb, 0.5, 6, epochs, seed), &topo, strag, &src, &opt);
+        let fmb =
+            sim_record(&RunSpec::fmb("fmb", b, 0.5, 6, epochs, seed), &topo, strag, &src, &opt);
         let target = amb.epochs.last().unwrap().error.max(fmb.epochs.last().unwrap().error) * 2.0;
         anytime_mb::metrics::speedup_at(&amb, &fmb, target).map(|x| x.2).unwrap_or(1.0)
     };
@@ -143,12 +160,17 @@ fn exact_consensus_is_gossip_limit() {
     let (src, opt) = linreg(32, 23);
     let epochs = 10;
 
-    let exact_cfg = RunConfig::amb("exact", 2.0, 0.5, 1, epochs, 31)
+    let exact_spec = RunSpec::amb("exact", 2.0, 0.5, 1, epochs, 31)
         .with_consensus(ConsensusMode::Exact);
-    let exact = sim::run(&exact_cfg, &topo, &strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
+    let exact = sim_record(&exact_spec, &topo, &strag, &src, &opt);
 
-    let gossip_cfg = RunConfig::amb("gossip", 2.0, 0.5, 200, epochs, 31);
-    let gossip = sim::run(&gossip_cfg, &topo, &strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
+    let gossip = sim_record(
+        &RunSpec::amb("gossip", 2.0, 0.5, 200, epochs, 31),
+        &topo,
+        &strag,
+        &src,
+        &opt,
+    );
 
     let ee = exact.epochs.last().unwrap().error;
     let eg = gossip.epochs.last().unwrap().error;
@@ -167,8 +189,8 @@ fn pause_model_end_to_end() {
     };
     let topo = Topology::erdos_connected(10, 0.4, 1);
     let (src, opt) = linreg(32, 29);
-    let cfg = RunConfig::amb("amb-pause", 115.0, 10.0, 6, 12, 37).with_node_log();
-    let out = sim::run(&cfg, &topo, &strag, native_factory(src.clone(), opt), src.f_star());
+    let spec = RunSpec::amb("amb-pause", 115.0, 10.0, 6, 12, 37).with_node_log();
+    let out = sim_run(&spec, &topo, &strag, &src, &opt);
     let log = out.node_log.unwrap();
     // group ordering visible in batches
     let mean = |node: usize| -> f64 {
@@ -187,8 +209,7 @@ fn topology_affects_consensus_error() {
     let strag = ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 100 };
     let (src, opt) = linreg(32, 41);
     let avg_err = |topo: &Topology| -> f64 {
-        let cfg = RunConfig::amb("amb", 2.0, 0.5, 3, 8, 43);
-        let rec = sim::run(&cfg, topo, &strag, native_factory(src.clone(), opt.clone()), src.f_star()).record;
+        let rec = sim_record(&RunSpec::amb("amb", 2.0, 0.5, 3, 8, 43), topo, &strag, &src, &opt);
         rec.epochs.iter().map(|e| e.consensus_err).sum::<f64>() / 8.0
     };
     let ring = avg_err(&Topology::ring(10));

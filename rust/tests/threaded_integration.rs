@@ -1,38 +1,35 @@
 //! Integration: the real-time threaded cluster (one thread per node,
-//! channel network) running the full AMB protocol.
+//! channel network) running the full AMB protocol through the unified
+//! `RunSpec` → `anytime_mb::run` API.
 
 use std::sync::Arc;
 
-use anytime_mb::coordinator::threaded::{run_amb, ThreadedConfig};
 use anytime_mb::data::LinRegStream;
-use anytime_mb::exec::{DataSource, NativeExec};
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
 use anytime_mb::optim::{BetaSchedule, DualAveraging};
 use anytime_mb::topology::Topology;
+use anytime_mb::coordinator::GOSSIP_UNTIL_DEADLINE;
+use anytime_mb::{RunSpec, ThreadedRuntime};
 
-fn cfg(epochs: usize, t_compute: f64, t_consensus: f64, slowdown: Vec<f64>) -> ThreadedConfig {
-    ThreadedConfig {
-        name: "amb-threaded".into(),
-        t_compute,
-        t_consensus,
-        epochs,
-        seed: 9,
-        grad_chunk: 16,
-        slowdown,
-    }
+fn spec(epochs: usize, t_compute: f64, t_consensus: f64, slowdown: Vec<f64>) -> RunSpec {
+    RunSpec::amb("amb-threaded", t_compute, t_consensus, GOSSIP_UNTIL_DEADLINE, epochs, 9)
+        .with_grad_chunk(16)
+        .with_slowdown(slowdown)
+        .with_node_log()
 }
 
 fn linreg_factory(
     d: usize,
     seed: u64,
 ) -> (
-    impl Fn(usize) -> Box<dyn anytime_mb::exec::ExecEngine> + Send + Sync,
-    f64,
+    impl Fn(usize) -> Box<dyn ExecEngine> + Send + Sync,
+    Option<f64>,
 ) {
     let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
     let opt = DualAveraging::new(BetaSchedule::new(1.0, 500.0), 4.0 * (d as f64).sqrt());
     let f_star = src.f_star();
     (
-        move |_i: usize| -> Box<dyn anytime_mb::exec::ExecEngine> {
+        move |_i: usize| -> Box<dyn ExecEngine> {
             Box::new(NativeExec::new(src.clone(), opt.clone()))
         },
         f_star,
@@ -43,7 +40,7 @@ fn linreg_factory(
 fn five_node_ring_trains() {
     let topo = Topology::ring(5);
     let (mk, f_star) = linreg_factory(24, 3);
-    let out = run_amb(&cfg(8, 0.05, 0.04, vec![]), &topo, mk, f_star);
+    let out = anytime_mb::run(&ThreadedRuntime, &spec(8, 0.05, 0.04, vec![]), &topo, &mk, f_star);
     assert_eq!(out.record.epochs.len(), 8);
     let first = out.record.epochs[0].error;
     let last = out.record.epochs.last().unwrap().error;
@@ -68,35 +65,52 @@ fn epoch_wall_time_is_fixed_regardless_of_stragglers() {
     // on the absolute schedule even with a 4x-slowed node.
     let topo = Topology::ring(4);
     let (mk, f_star) = linreg_factory(16, 5);
-    let c = cfg(6, 0.05, 0.03, vec![4.0, 1.0, 1.0, 1.0]);
+    let s = spec(6, 0.05, 0.03, vec![4.0, 1.0, 1.0, 1.0]);
     let t0 = std::time::Instant::now();
-    let out = run_amb(&c, &topo, mk, f_star);
+    let out = anytime_mb::run(&ThreadedRuntime, &s, &topo, &mk, f_star);
     let elapsed = t0.elapsed().as_secs_f64();
     let scheduled = 6.0 * (0.05 + 0.03);
     assert!(
         elapsed < scheduled * 1.8 + 0.5,
         "cluster overran the fixed schedule: {elapsed}s vs {scheduled}s"
     );
+    let log = out.node_log.as_ref().unwrap();
     // the slowed node still contributed work every epoch
-    assert!(out.node_log.batches[0].iter().all(|&b| b > 0));
+    assert!(log.batches[0].iter().all(|&b| b > 0));
     // and contributed less than the fast nodes
-    let slow: usize = out.node_log.batches[0].iter().sum();
-    let fast: usize = out.node_log.batches[2].iter().sum();
+    let slow: usize = log.batches[0].iter().sum();
+    let fast: usize = log.batches[2].iter().sum();
     assert!(slow < fast, "slow={slow} fast={fast}");
+    // the record's wall clock stays in spec units on the absolute schedule
+    assert!((out.record.total_time() - scheduled).abs() < 1e-9);
 }
 
 #[test]
 fn nodes_converge_to_similar_models() {
-    // Consensus must keep node models close: compare node 0's final w
-    // against a fresh run's (deterministic data makes direct cross-node
-    // access unnecessary — instead check the leader's error is low AND
-    // batches from all nodes contributed).
+    // Consensus must keep node models close: the leader's error is low,
+    // every node contributed batches, and — now that the unified output
+    // exposes every node's primal — the final w's agree across nodes.
     let topo = Topology::complete(4);
     let (mk, f_star) = linreg_factory(16, 7);
-    let out = run_amb(&cfg(10, 0.05, 0.04, vec![]), &topo, mk, f_star);
+    let out = anytime_mb::run(&ThreadedRuntime, &spec(10, 0.05, 0.04, vec![]), &topo, &mk, f_star);
     let last = out.record.epochs.last().unwrap();
     assert!(last.error < out.record.epochs[0].error * 0.5);
     assert!(last.min_node_batch > 0);
+    assert_eq!(out.final_w.len(), 4);
+    let w0 = &out.final_w[0];
+    let norm0: f64 = w0.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    for w in &out.final_w[1..] {
+        let diff: f64 = w
+            .iter()
+            .zip(w0)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            diff < 0.25 * norm0.max(1e-9),
+            "node models diverged: diff={diff} norm={norm0}"
+        );
+    }
 }
 
 #[test]
@@ -104,7 +118,7 @@ fn single_neighbor_line_topology() {
     // Degenerate connectivity (path graph) still terminates and trains.
     let topo = Topology::from_edges(3, &[(0, 1), (1, 2)]);
     let (mk, f_star) = linreg_factory(8, 11);
-    let out = run_amb(&cfg(5, 0.04, 0.03, vec![]), &topo, mk, f_star);
+    let out = anytime_mb::run(&ThreadedRuntime, &spec(5, 0.04, 0.03, vec![]), &topo, &mk, f_star);
     assert_eq!(out.record.epochs.len(), 5);
     assert!(out.record.epochs.iter().all(|e| e.batch > 0));
 }
