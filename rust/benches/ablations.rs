@@ -5,6 +5,7 @@ use anytime_mb::bench_harness::Bencher;
 use anytime_mb::consensus::{sparse::SparseMix, Consensus};
 use anytime_mb::experiments::{ablations, Ctx};
 use anytime_mb::topology::Topology;
+use anytime_mb::util::matrix::NodeMatrix;
 use anytime_mb::util::rng::Pcg64;
 
 fn main() {
@@ -21,19 +22,20 @@ fn main() {
         let mut dense = Consensus::new(topo.metropolis().lazy());
         let sparse = SparseMix::metropolis(&topo, true);
         let mut rng = Pcg64::new(2);
-        let msgs0: Vec<Vec<f32>> = (0..n)
-            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
-            .collect();
+        let mut msgs0 = NodeMatrix::new(n, d);
+        for v in msgs0.as_mut_slice() {
+            *v = rng.normal() as f32;
+        }
         b.bench(&format!("dense/n{n}_d{d}_5r"), || {
             let mut m = msgs0.clone();
             dense.run(&mut m, 5);
-            m[0][0]
+            m.row(0)[0]
         });
-        let mut scratch = Vec::new();
+        let mut scratch = NodeMatrix::new(0, 0);
         b.bench(&format!("sparse/n{n}_d{d}_5r"), || {
             let mut m = msgs0.clone();
             sparse.run(&mut m, &mut scratch, 5);
-            m[0][0]
+            m.row(0)[0]
         });
     }
     b.report("consensus engine ablation");

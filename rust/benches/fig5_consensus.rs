@@ -5,6 +5,7 @@ use anytime_mb::bench_harness::Bencher;
 use anytime_mb::consensus::Consensus;
 use anytime_mb::experiments::{self, Ctx};
 use anytime_mb::topology::Topology;
+use anytime_mb::util::matrix::NodeMatrix;
 use anytime_mb::util::rng::Pcg64;
 
 fn main() {
@@ -18,13 +19,14 @@ fn main() {
         let topo = Topology::erdos_connected(n, 0.3, 1);
         let mut cons = Consensus::new(topo.metropolis().lazy());
         let mut rng = Pcg64::new(2);
-        let msgs0: Vec<Vec<f32>> = (0..n)
-            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
-            .collect();
+        let mut msgs0 = NodeMatrix::new(n, d);
+        for v in msgs0.as_mut_slice() {
+            *v = rng.normal() as f32;
+        }
         b.bench(&format!("consensus/n{n}_d{d}_r{rounds}"), || {
             let mut msgs = msgs0.clone();
             cons.run(&mut msgs, rounds);
-            msgs[0][0]
+            msgs.row(0)[0]
         });
     }
     b.report("fig5 consensus engine");

@@ -10,8 +10,8 @@
 use std::rc::Rc;
 use std::sync::Arc;
 
-use anytime_mb::bench_harness::Bencher;
-use anytime_mb::consensus::Consensus;
+use anytime_mb::bench_harness::{legacy_vecvec_mix_into, Bencher};
+use anytime_mb::consensus::{sparse::SparseMix, Consensus};
 use anytime_mb::coordinator::RunSpec;
 use anytime_mb::data::{LinRegStream, MnistLike};
 use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
@@ -19,6 +19,7 @@ use anytime_mb::optim::{BetaSchedule, DualAveraging};
 use anytime_mb::runtime::{PjrtExec, PjrtRuntime};
 use anytime_mb::straggler::ShiftedExp;
 use anytime_mb::topology::Topology;
+use anytime_mb::util::matrix::NodeMatrix;
 use anytime_mb::util::rng::Pcg64;
 use anytime_mb::SimRuntime;
 
@@ -26,27 +27,67 @@ fn optimizer(dim: usize) -> DualAveraging {
     DualAveraging::new(BetaSchedule::new(1.0, 1000.0), 4.0 * (dim as f64).sqrt())
 }
 
+fn random_arena(rng: &mut Pcg64, n: usize, d: usize) -> NodeMatrix {
+    let mut m = NodeMatrix::new(n, d);
+    for v in m.as_mut_slice() {
+        *v = rng.normal() as f32;
+    }
+    m
+}
+
 fn main() {
     let mut b = Bencher::new();
 
-    // ---- L3: consensus ----------------------------------------------------
-    let topo = Topology::paper_fig2();
-    let p = topo.metropolis().lazy();
-    let mut cons = Consensus::new(p);
+    // ---- L3: consensus kernel — nested-Vec baseline vs flat arena ---------
+    // The ISSUE-2 acceptance grid: n ∈ {10, 64} × d ∈ {1024, 8192},
+    // 5 gossip rounds in place (zero per-round allocations on the flat
+    // paths; the legacy path is the pre-arena data plane).  Speedup rows
+    // are printed below the table.
     let mut rng = Pcg64::new(1);
-    let msgs0: Vec<Vec<f32>> = (0..10)
-        .map(|_| (0..7851).map(|_| rng.normal() as f32).collect())
-        .collect();
-    b.bench("L3/consensus_round_n10_d7851", || {
-        let mut msgs = msgs0.clone();
-        cons.run(&mut msgs, 1);
-        msgs[0][0]
-    });
-    b.bench("L3/consensus_5rounds_n10_d7851", || {
-        let mut msgs = msgs0.clone();
-        cons.run(&mut msgs, 5);
-        msgs[0][0]
-    });
+    let mut grid_rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for (label, topo) in
+        [("n10_fig2", Topology::paper_fig2()), ("n64_expander", Topology::expander(64, 6, 2))]
+    {
+        for d in [1024usize, 8192] {
+            let n = topo.n();
+            let p = topo.metropolis().lazy();
+
+            let seed_rows = random_arena(&mut rng, n, d);
+
+            let mut legacy = seed_rows.to_rows();
+            let mut legacy_scratch = vec![vec![0.0f32; d]; n];
+            let t_legacy = b
+                .bench(&format!("L3/consensus_legacy_vecvec_{label}_d{d}_5r"), || {
+                    for _ in 0..5 {
+                        legacy_vecvec_mix_into(&p, &legacy, &mut legacy_scratch);
+                        std::mem::swap(&mut legacy, &mut legacy_scratch);
+                    }
+                    legacy[0][0]
+                })
+                .mean;
+
+            let mut cons = Consensus::new(p.clone());
+            let mut msgs = seed_rows.clone();
+            let t_flat = b
+                .bench(&format!("L3/consensus_flat_dense_{label}_d{d}_5r"), || {
+                    cons.run(&mut msgs, 5);
+                    msgs.row(0)[0]
+                })
+                .mean;
+
+            let sparse = SparseMix::metropolis(&topo, true);
+            let mut smsgs = seed_rows.clone();
+            let mut scratch = NodeMatrix::new(0, 0);
+            let t_sparse = b
+                .bench(&format!("L3/consensus_flat_sparse_{label}_d{d}_5r"), || {
+                    sparse.run(&mut smsgs, &mut scratch, 5);
+                    smsgs.row(0)[0]
+                })
+                .mean;
+
+            grid_rows.push((format!("{label}_d{d}"), t_legacy, t_flat, t_sparse));
+        }
+    }
 
     // ---- L3: native gradient chunks ----------------------------------------
     let lin_src = Arc::new(DataSource::LinReg(LinRegStream::new(1024, 2)));
@@ -78,6 +119,7 @@ fn main() {
     });
 
     // ---- L3: full simulated epoch (the figure-harness inner loop) ----------
+    let topo = Topology::paper_fig2();
     let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 600 };
     let sim_src = Arc::new(DataSource::LinReg(LinRegStream::new(1024, 5)));
     let sim_opt = optimizer(1024);
@@ -125,6 +167,22 @@ fn main() {
     }
 
     b.report("hotpath microbenchmarks");
+
+    // Before/after table for the NodeMatrix data-plane swap (the numbers
+    // the ISSUE-2 acceptance criteria track: flat ≥ 2× legacy at
+    // n=64, d=8192).
+    println!("\n== consensus kernel: legacy Vec<Vec<f32>> vs flat NodeMatrix (5 rounds) ==");
+    for (name, t_legacy, t_flat, t_sparse) in &grid_rows {
+        println!(
+            "  {:<22} legacy {:>9} | flat dense {:>9} ({:.2}x) | flat sparse {:>9} ({:.2}x)",
+            name,
+            anytime_mb::bench_harness::fmt_time(*t_legacy),
+            anytime_mb::bench_harness::fmt_time(*t_flat),
+            t_legacy / t_flat,
+            anytime_mb::bench_harness::fmt_time(*t_sparse),
+            t_legacy / t_sparse,
+        );
+    }
 
     // Derived throughput lines for §Perf.
     for s in b.results() {

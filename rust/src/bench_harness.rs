@@ -7,8 +7,37 @@ use std::hint::black_box;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{EngineFactory, RunSpec, Runtime};
-use crate::topology::Topology;
+use crate::topology::{MixMatrix, Topology};
 use crate::util::stats;
+
+/// The pre-`NodeMatrix` dense gossip kernel, kept VERBATIM as the
+/// before/after baseline for the arena data plane: one heap row per
+/// node, full-row read-modify-write axpys, zero-skip on the fly.  Both
+/// the bitwise pin test
+/// (`consensus::tests::flat_kernel_matches_legacy_nested_vec_bitwise`)
+/// and the `benches/hotpath.rs` speedup grid compare against THIS
+/// definition, so the two baselines cannot drift apart.
+pub fn legacy_vecvec_mix_into(p: &MixMatrix, msgs: &[Vec<f32>], out: &mut [Vec<f32>]) {
+    let n = p.n();
+    let d = msgs[0].len();
+    for i in 0..n {
+        let row = p.row(i);
+        let oi = &mut out[i];
+        for v in oi.iter_mut() {
+            *v = 0.0;
+        }
+        for j in 0..n {
+            let pij = row[j] as f32;
+            if pij == 0.0 {
+                continue;
+            }
+            let mj = &msgs[j];
+            for k in 0..d {
+                oi[k] += pij * mj[k];
+            }
+        }
+    }
+}
 
 /// One benchmark's timing summary (per-iteration, seconds).
 #[derive(Debug, Clone)]

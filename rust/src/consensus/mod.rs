@@ -5,23 +5,31 @@
 //! sets z_i(t+1) = m_i^(r_i)/b(t).  Perfect consensus would give every
 //! node the average (4); finite rounds leave error ξ_i(t) bounded by
 //! Lemma 1.
+//!
+//! Messages live in a [`NodeMatrix`] arena (one flat `[n × d]` buffer,
+//! DESIGN.md §1 "data plane"); a gossip round is one pass of the blocked
+//! flat kernel [`MixMatrix::mix_into`] followed by an O(1) buffer flip —
+//! zero heap allocations after the first `run` sizes the scratch arena.
 
 pub mod push_sum;
 pub mod sparse;
 
-use crate::topology::MixMatrix;
+use anyhow::{bail, Result};
 
-/// Dense synchronous consensus over row-stacked f32 messages.
+use crate::topology::MixMatrix;
+use crate::util::matrix::NodeMatrix;
+
+/// Dense synchronous consensus over an arena of row-stacked f32 messages.
 pub struct Consensus {
     p: MixMatrix,
-    /// Scratch buffer to avoid re-allocating per round.
-    scratch: Vec<Vec<f32>>,
+    /// Scratch arena double-buffered against the caller's messages; sized
+    /// on first use, reused allocation-free from then on.
+    scratch: NodeMatrix,
 }
 
 impl Consensus {
     pub fn new(p: MixMatrix) -> Consensus {
-        let n = p.n();
-        Consensus { p, scratch: vec![Vec::new(); n] }
+        Consensus { p, scratch: NodeMatrix::new(0, 0) }
     }
 
     pub fn n(&self) -> usize {
@@ -32,17 +40,21 @@ impl Consensus {
         &self.p
     }
 
-    /// Run `rounds` synchronous rounds in place.
-    pub fn run(&mut self, msgs: &mut Vec<Vec<f32>>, rounds: usize) {
-        let n = self.p.n();
-        assert_eq!(msgs.len(), n);
-        let d = msgs[0].len();
-        for s in &mut self.scratch {
-            s.resize(d, 0.0);
+    fn ensure_scratch(&mut self, n: usize, d: usize) {
+        if self.scratch.n() != n || self.scratch.d() != d {
+            self.scratch.reset(n, d);
         }
+    }
+
+    /// Run `rounds` synchronous rounds in place (mix into scratch, flip
+    /// buffers — no per-round copies or allocations).
+    pub fn run(&mut self, msgs: &mut NodeMatrix, rounds: usize) {
+        let n = self.p.n();
+        assert_eq!(msgs.n(), n);
+        self.ensure_scratch(n, msgs.d());
         for _ in 0..rounds {
             self.p.mix_into(msgs, &mut self.scratch);
-            std::mem::swap(msgs, &mut self.scratch);
+            msgs.swap(&mut self.scratch);
         }
     }
 
@@ -51,58 +63,59 @@ impl Consensus {
     /// fewer rounds keep their last value — this models the paper's
     /// variable r_i(t) within a fixed T_c.
     ///
-    /// Implementation note: we run max(r_i) global rounds and freeze node
-    /// i's row after r_i rounds.  Freezing breaks exact mass conservation
-    /// (as it does in the real protocol when a node drops out early);
-    /// Lemma 1's error bound still applies to each node's own estimate.
-    pub fn run_per_node(&mut self, msgs: &mut Vec<Vec<f32>>, rounds: &[usize]) {
+    /// Implementation note: we run max(r_i) global rounds, flip buffers,
+    /// and restore only the FROZEN rows from the pre-mix buffer — per
+    /// round the copy cost is proportional to exhausted nodes (zero in
+    /// early rounds), not active ones.  Freezing breaks exact mass
+    /// conservation (as it does in the real protocol when a node drops
+    /// out early); Lemma 1's error bound still applies to each node's
+    /// own estimate.
+    pub fn run_per_node(&mut self, msgs: &mut NodeMatrix, rounds: &[usize]) {
         let n = self.p.n();
-        assert_eq!(msgs.len(), n);
+        assert_eq!(msgs.n(), n);
         assert_eq!(rounds.len(), n);
         let rmax = rounds.iter().copied().max().unwrap_or(0);
-        let d = msgs[0].len();
-        for s in &mut self.scratch {
-            s.resize(d, 0.0);
-        }
+        self.ensure_scratch(n, msgs.d());
         for k in 0..rmax {
             self.p.mix_into(msgs, &mut self.scratch);
+            msgs.swap(&mut self.scratch);
+            // post-swap, scratch holds the pre-mix values: un-mix the
+            // rows whose budget is spent
             for i in 0..n {
-                if rounds[i] > k {
-                    std::mem::swap(&mut msgs[i], &mut self.scratch[i]);
+                if rounds[i] <= k {
+                    msgs.row_mut(i).copy_from_slice(self.scratch.row(i));
                 }
             }
         }
     }
 
     /// Exact average of the initial messages (what ε-perfect consensus
-    /// would deliver to every node).
-    pub fn exact_average(msgs: &[Vec<f32>]) -> Vec<f64> {
-        let n = msgs.len();
-        let d = msgs[0].len();
-        let mut avg = vec![0.0f64; d];
-        for m in msgs {
-            for k in 0..d {
-                avg[k] += m[k] as f64;
-            }
+    /// would deliver to every node), accumulated in f64.  Errors on an
+    /// empty arena instead of index-panicking.
+    pub fn exact_average(msgs: &NodeMatrix) -> Result<Vec<f64>> {
+        match msgs.mean_rows_f64() {
+            Some(avg) => Ok(avg),
+            None => bail!("exact_average: message arena has no rows (n = 0)"),
         }
-        for v in avg.iter_mut() {
-            *v /= n as f64;
-        }
-        avg
     }
 
-    /// max_i ‖m_i − avg‖₂ — the consensus error ε achieved.
-    pub fn max_error(msgs: &[Vec<f32>], avg: &[f64]) -> f64 {
+    /// max_i ‖m_i − avg‖₂ — the consensus error ε achieved.  Errors on an
+    /// empty arena (a silent 0.0 would read as perfect consensus).
+    pub fn max_error(msgs: &NodeMatrix, avg: &[f64]) -> Result<f64> {
+        if msgs.n() == 0 {
+            bail!("max_error: message arena has no rows (n = 0)");
+        }
+        assert_eq!(msgs.d(), avg.len(), "average length must match message width");
         let mut worst = 0.0f64;
-        for m in msgs {
+        for m in msgs.rows() {
             let mut ss = 0.0f64;
-            for k in 0..avg.len() {
-                let diff = m[k] as f64 - avg[k];
+            for (k, &a) in avg.iter().enumerate() {
+                let diff = m[k] as f64 - a;
                 ss += diff * diff;
             }
             worst = worst.max(ss.sqrt());
         }
-        worst
+        Ok(worst)
     }
 }
 
@@ -126,8 +139,9 @@ mod tests {
     use crate::prop::forall;
     use crate::topology::Topology;
 
-    fn random_msgs(g: &mut crate::prop::Gen, n: usize, d: usize) -> Vec<Vec<f32>> {
-        (0..n).map(|_| g.vec_normal_f32(d, 3.0)).collect()
+    fn random_msgs(g: &mut crate::prop::Gen, n: usize, d: usize) -> NodeMatrix {
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 3.0)).collect();
+        NodeMatrix::from_rows(&rows)
     }
 
     #[test]
@@ -138,9 +152,9 @@ mod tests {
             let t = Topology::erdos_connected(n, 0.5, g.u64());
             let mut cons = Consensus::new(t.metropolis().lazy());
             let mut msgs = random_msgs(g, n, d);
-            let avg = Consensus::exact_average(&msgs);
+            let avg = Consensus::exact_average(&msgs).unwrap();
             cons.run(&mut msgs, 400);
-            let err = Consensus::max_error(&msgs, &avg);
+            let err = Consensus::max_error(&msgs, &avg).unwrap();
             crate::prop_assert!(err < 1e-3, "err={}", err);
             Ok(())
         });
@@ -154,10 +168,10 @@ mod tests {
         let mut cons = Consensus::new(p);
         let mut g = crate::prop::Gen::new(1);
         let mut msgs = random_msgs(&mut g, 8, 4);
-        let avg = Consensus::exact_average(&msgs);
-        let e0 = Consensus::max_error(&msgs, &avg);
+        let avg = Consensus::exact_average(&msgs).unwrap();
+        let e0 = Consensus::max_error(&msgs, &avg).unwrap();
         cons.run(&mut msgs, 25);
-        let e25 = Consensus::max_error(&msgs, &avg);
+        let e25 = Consensus::max_error(&msgs, &avg).unwrap();
         // within 2x of the spectral prediction (max-norm vs 2-norm slack)
         let bound = predicted_error(e0, l2, 25) * (8f64).sqrt() * 2.0;
         assert!(e25 <= bound, "e25={e25} bound={bound}");
@@ -171,9 +185,9 @@ mod tests {
             let t = Topology::erdos_connected(n, 0.4, g.u64());
             let mut cons = Consensus::new(t.metropolis());
             let mut msgs = random_msgs(g, n, d);
-            let before = Consensus::exact_average(&msgs);
+            let before = Consensus::exact_average(&msgs).unwrap();
             cons.run(&mut msgs, g.usize_in(0, 30));
-            let after = Consensus::exact_average(&msgs);
+            let after = Consensus::exact_average(&msgs).unwrap();
             for k in 0..d {
                 crate::prop_assert!((before[k] - after[k]).abs() < 1e-3);
             }
@@ -202,8 +216,8 @@ mod tests {
         // node 0 does zero rounds: keeps the initial message
         let mut msgs = msgs0.clone();
         cons.run_per_node(&mut msgs, &[0, 5, 5, 5, 5, 5]);
-        assert_eq!(msgs[0], msgs0[0]);
-        assert_ne!(msgs[1], msgs0[1]);
+        assert_eq!(msgs.row(0), msgs0.row(0));
+        assert_ne!(msgs.row(1), msgs0.row(1));
 
         // equal per-node budgets == uniform run
         let mut a = msgs0.clone();
@@ -214,6 +228,28 @@ mod tests {
     }
 
     #[test]
+    fn per_node_freezing_is_per_row_exact() {
+        // A frozen node's row must be BITWISE the value it held when its
+        // budget ran out, while still feeding neighbours as a sender.
+        let t = Topology::ring(5);
+        let mut cons = Consensus::new(t.metropolis().lazy());
+        let mut g = crate::prop::Gen::new(0xC0_05);
+        let msgs0 = random_msgs(&mut g, 5, 3);
+
+        // Reference: node 2's value after exactly 2 uniform rounds.
+        let mut two = msgs0.clone();
+        cons.run(&mut two, 2);
+
+        let mut m = msgs0.clone();
+        cons.run_per_node(&mut m, &[6, 6, 2, 6, 6]);
+        assert_eq!(m.row(2), two.row(2), "frozen row drifted");
+        // the others kept mixing past round 2
+        for i in [0usize, 1, 3, 4] {
+            assert_ne!(m.row(i), two.row(i), "node {i} should have kept mixing");
+        }
+    }
+
+    #[test]
     fn more_per_node_rounds_no_worse() {
         // A node that listens longer ends closer to the average.
         let t = Topology::paper_fig2();
@@ -221,15 +257,15 @@ mod tests {
         let mut cons = Consensus::new(p);
         let mut g = crate::prop::Gen::new(4);
         let msgs0 = random_msgs(&mut g, 10, 8);
-        let avg = Consensus::exact_average(&msgs0);
+        let avg = Consensus::exact_average(&msgs0).unwrap();
         let mut err_of = |r: usize| {
             let mut m = msgs0.clone();
             let mut rounds = vec![r; 10];
             rounds[3] = r; // probe node 3
             cons.run_per_node(&mut m, &rounds);
             let mut ss = 0.0f64;
-            for k in 0..avg.len() {
-                let d = m[3][k] as f64 - avg[k];
+            for (k, &a) in avg.iter().enumerate() {
+                let d = m.row(3)[k] as f64 - a;
                 ss += d * d;
             }
             ss.sqrt()
@@ -237,6 +273,64 @@ mod tests {
         let e2 = err_of(2);
         let e10 = err_of(10);
         assert!(e10 <= e2 * 1.01, "e2={e2} e10={e10}");
+    }
+
+    #[test]
+    fn empty_arena_is_an_error_not_a_panic() {
+        let empty = NodeMatrix::new(0, 4);
+        assert!(Consensus::exact_average(&empty).is_err());
+        assert!(Consensus::max_error(&empty, &[0.0; 4]).is_err());
+    }
+
+    /// Bitwise pin: the blocked flat kernel must reproduce the legacy
+    /// nested-`Vec<Vec<f32>>` gossip results EXACTLY — same non-zero
+    /// skip, same ascending-j accumulation order per element, tiling
+    /// only re-chunks the k axis.  This is the contract that let the
+    /// arena swap land without perturbing any seeded run.  The baseline
+    /// is the single shared definition in `bench_harness`, the same one
+    /// the hotpath speedup grid times.
+    #[test]
+    fn flat_kernel_matches_legacy_nested_vec_bitwise() {
+        use crate::bench_harness::legacy_vecvec_mix_into as legacy_mix_into;
+        forall(12, 0xC0_06, |g| {
+            let n = g.usize_in(2, 12);
+            // straddle the tile boundary in some cases
+            let d = if g.f64_in(0.0, 1.0) < 0.5 {
+                g.usize_in(1, 64)
+            } else {
+                crate::topology::MixMatrix::MIX_TILE + g.usize_in(0, 8)
+            };
+            let t = Topology::erdos_connected(n, 0.4, g.u64());
+            let p = t.metropolis().lazy();
+            let rounds = g.usize_in(1, 6);
+
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 3.0)).collect();
+
+            // legacy gossip: mix + swap on nested Vecs
+            let mut legacy = rows.clone();
+            let mut legacy_scratch = vec![vec![0.0f32; d]; n];
+            for _ in 0..rounds {
+                legacy_mix_into(&p, &legacy, &mut legacy_scratch);
+                std::mem::swap(&mut legacy, &mut legacy_scratch);
+            }
+
+            // flat gossip through the engine
+            let mut cons = Consensus::new(p);
+            let mut flat = NodeMatrix::from_rows(&rows);
+            cons.run(&mut flat, rounds);
+
+            for i in 0..n {
+                for k in 0..d {
+                    crate::prop_assert!(
+                        flat.row(i)[k].to_bits() == legacy[i][k].to_bits(),
+                        "({i},{k}): flat={} legacy={}",
+                        flat.row(i)[k],
+                        legacy[i][k]
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -263,19 +357,18 @@ mod tests {
         let mut cons = Consensus::new(p);
         let mut g = crate::prop::Gen::new(5);
         // messages bounded by L in norm
-        let mut msgs: Vec<Vec<f32>> = (0..10)
-            .map(|_| {
-                let mut v = g.vec_normal_f32(4, 1.0);
-                let n = crate::util::norm2(&v).max(1e-9);
-                for x in v.iter_mut() {
-                    *x *= (lipschitz as f32) / n;
-                }
-                v
-            })
-            .collect();
-        let avg = Consensus::exact_average(&msgs);
+        let mut msgs = NodeMatrix::new(10, 4);
+        for i in 0..10 {
+            let mut v = g.vec_normal_f32(4, 1.0);
+            let n = crate::util::norm2(&v).max(1e-9);
+            for x in v.iter_mut() {
+                *x *= (lipschitz as f32) / n;
+            }
+            msgs.row_mut(i).copy_from_slice(&v);
+        }
+        let avg = Consensus::exact_average(&msgs).unwrap();
         cons.run(&mut msgs, rounds);
-        let err = Consensus::max_error(&msgs, &avg);
+        let err = Consensus::max_error(&msgs, &avg).unwrap();
         assert!(err < eps, "err={err} eps={eps} rounds={rounds}");
     }
 }

@@ -9,6 +9,7 @@
 //! asymmetric communication graphs (e.g. radio networks) where Metropolis
 //! weights don't exist.
 
+use crate::util::matrix::{NodeMatrix, NodeMatrixF64};
 use crate::util::rng::Pcg64;
 
 /// Directed graph as out-neighbour lists.
@@ -70,33 +71,38 @@ impl Digraph {
     }
 }
 
-/// Push-sum state for n nodes over d-dim values.
+/// Push-sum state for n nodes over d-dim values.  Values and scratch
+/// live in flat [`NodeMatrixF64`] arenas (the f64-accumulation twin of
+/// the consensus message arena): rounds are allocation-free and flip
+/// the two buffers in O(1).
 pub struct PushSum {
     g: Digraph,
-    /// values x_i (n × d)
-    x: Vec<Vec<f64>>,
+    /// values x_i (n × d arena)
+    x: NodeMatrixF64,
     /// weights φ_i
     phi: Vec<f64>,
     // scratch
-    x_next: Vec<Vec<f64>>,
+    x_next: NodeMatrixF64,
     phi_next: Vec<f64>,
 }
 
 impl PushSum {
-    /// Initialise from per-node vectors.
-    pub fn new(g: Digraph, values: Vec<Vec<f32>>) -> PushSum {
+    /// Initialise from the per-node value arena.
+    pub fn new(g: Digraph, values: &NodeMatrix) -> PushSum {
         let n = g.n();
-        assert_eq!(values.len(), n);
-        let d = values[0].len();
-        let x: Vec<Vec<f64>> = values
-            .into_iter()
-            .map(|v| v.into_iter().map(|f| f as f64).collect())
-            .collect();
+        assert_eq!(values.n(), n);
+        let d = values.d();
+        let mut x = NodeMatrixF64::new(n, d);
+        for i in 0..n {
+            for (xv, &v) in x.row_mut(i).iter_mut().zip(values.row(i)) {
+                *xv = v as f64;
+            }
+        }
         PushSum {
             g,
             x,
             phi: vec![1.0; n],
-            x_next: vec![vec![0.0; d]; n],
+            x_next: NodeMatrixF64::new(n, d),
             phi_next: vec![0.0; n],
         }
     }
@@ -104,28 +110,24 @@ impl PushSum {
     /// One synchronous push-sum round.
     pub fn round(&mut self) {
         let n = self.g.n();
-        for i in 0..n {
-            for v in self.x_next[i].iter_mut() {
-                *v = 0.0;
-            }
-            self.phi_next[i] = 0.0;
-        }
+        self.x_next.fill(0.0);
+        self.phi_next.fill(0.0);
         for i in 0..n {
             let share = 1.0 / (1.0 + self.g.out_degree(i) as f64);
             // to self
-            for (k, &v) in self.x[i].iter().enumerate() {
-                self.x_next[i][k] += share * v;
+            for (o, &v) in self.x_next.row_mut(i).iter_mut().zip(self.x.row(i)) {
+                *o += share * v;
             }
             self.phi_next[i] += share * self.phi[i];
             // to out-neighbours
             for &j in &self.g.out[i] {
-                for (k, &v) in self.x[i].iter().enumerate() {
-                    self.x_next[j][k] += share * v;
+                for (o, &v) in self.x_next.row_mut(j).iter_mut().zip(self.x.row(i)) {
+                    *o += share * v;
                 }
                 self.phi_next[j] += share * self.phi[i];
             }
         }
-        std::mem::swap(&mut self.x, &mut self.x_next);
+        self.x.swap(&mut self.x_next);
         std::mem::swap(&mut self.phi, &mut self.phi_next);
     }
 
@@ -137,7 +139,7 @@ impl PushSum {
 
     /// Node i's current average estimate x_i/φ_i.
     pub fn estimate(&self, i: usize) -> Vec<f64> {
-        self.x[i].iter().map(|&v| v / self.phi[i]).collect()
+        self.x.row(i).iter().map(|&v| v / self.phi[i]).collect()
     }
 
     /// max_i ‖estimate_i − avg‖₂.
@@ -160,11 +162,10 @@ impl PushSum {
     }
 
     pub fn total_value(&self) -> Vec<f64> {
-        let d = self.x[0].len();
-        let mut tot = vec![0.0; d];
-        for xi in &self.x {
-            for k in 0..d {
-                tot[k] += xi[k];
+        let mut tot = vec![0.0; self.x.d()];
+        for xi in self.x.rows() {
+            for (t, &v) in tot.iter_mut().zip(xi) {
+                *t += v;
             }
         }
         tot
@@ -176,28 +177,18 @@ mod tests {
     use super::*;
     use crate::prop::forall;
 
-    fn avg_of(values: &[Vec<f32>]) -> Vec<f64> {
-        let n = values.len();
-        let d = values[0].len();
-        let mut avg = vec![0.0f64; d];
-        for v in values {
-            for k in 0..d {
-                avg[k] += v[k] as f64;
-            }
-        }
-        for a in avg.iter_mut() {
-            *a /= n as f64;
-        }
-        avg
+    fn random_values(g: &mut crate::prop::Gen, n: usize, d: usize, std: f64) -> NodeMatrix {
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, std)).collect();
+        NodeMatrix::from_rows(&rows)
     }
 
     #[test]
     fn converges_on_directed_ring() {
         let n = 8;
         let mut g = crate::prop::Gen::new(1);
-        let values: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(4, 3.0)).collect();
-        let avg = avg_of(&values);
-        let mut ps = PushSum::new(Digraph::ring(n), values);
+        let values = random_values(&mut g, n, 4, 3.0);
+        let avg = values.mean_rows_f64().unwrap();
+        let mut ps = PushSum::new(Digraph::ring(n), &values);
         ps.run(300);
         assert!(ps.max_error(&avg) < 1e-6, "err={}", ps.max_error(&avg));
     }
@@ -208,12 +199,9 @@ mod tests {
             let n = g.usize_in(2, 12);
             let d = g.usize_in(1, 6);
             let dg = Digraph::random_strongly_connected(n, 0.3, g.u64());
-            let values: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 2.0)).collect();
-            let tot0 = {
-                let ps = PushSum::new(dg.clone(), values.clone());
-                ps.total_value()
-            };
-            let mut ps = PushSum::new(dg, values);
+            let values = random_values(g, n, d, 2.0);
+            let tot0 = PushSum::new(dg.clone(), &values).total_value();
+            let mut ps = PushSum::new(dg, &values);
             for _ in 0..g.usize_in(1, 20) {
                 ps.round();
                 crate::prop_assert_close!(ps.total_weight(), n as f64, 1e-9);
@@ -231,9 +219,9 @@ mod tests {
         forall(15, 0x50_02, |g| {
             let n = g.usize_in(3, 15);
             let dg = Digraph::random_strongly_connected(n, 0.4, g.u64());
-            let values: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(3, 5.0)).collect();
-            let avg = avg_of(&values);
-            let mut ps = PushSum::new(dg, values);
+            let values = random_values(g, n, 3, 5.0);
+            let avg = values.mean_rows_f64().unwrap();
+            let mut ps = PushSum::new(dg, &values);
             ps.run(400);
             crate::prop_assert!(ps.max_error(&avg) < 1e-5, "err={}", ps.max_error(&avg));
             Ok(())
@@ -246,24 +234,24 @@ mod tests {
         // paper graph agrees with dense Metropolis mixing.
         let topo = crate::topology::Topology::paper_fig2();
         let mut g = crate::prop::Gen::new(3);
-        let values: Vec<Vec<f32>> = (0..10).map(|_| g.vec_normal_f32(5, 1.0)).collect();
-        let avg = avg_of(&values);
+        let values = random_values(&mut g, 10, 5, 1.0);
+        let avg = values.mean_rows_f64().unwrap();
 
-        let mut ps = PushSum::new(Digraph::from_undirected(&topo), values.clone());
+        let mut ps = PushSum::new(Digraph::from_undirected(&topo), &values);
         ps.run(200);
         assert!(ps.max_error(&avg) < 1e-6);
 
         let mut cons = crate::consensus::Consensus::new(topo.metropolis().lazy());
         let mut msgs = values;
         cons.run(&mut msgs, 500);
-        let dense_err = crate::consensus::Consensus::max_error(&msgs, &avg);
+        let dense_err = crate::consensus::Consensus::max_error(&msgs, &avg).unwrap();
         assert!(dense_err < 1e-3);
     }
 
     #[test]
     fn estimate_unbiased_at_round_zero() {
-        let values = vec![vec![2.0f32], vec![4.0f32]];
-        let ps = PushSum::new(Digraph::ring(2), values);
+        let values = NodeMatrix::from_rows(&[vec![2.0f32], vec![4.0f32]]);
+        let ps = PushSum::new(Digraph::ring(2), &values);
         assert_eq!(ps.estimate(0), vec![2.0]);
         assert_eq!(ps.estimate(1), vec![4.0]);
     }

@@ -4,20 +4,26 @@
 //! O(n²d) even though real communication graphs are sparse (the paper's
 //! Fig-2 graph has 11 edges for n = 10).  This engine stores only the
 //! non-zero Metropolis weights per node and mixes in O(|E|·d), which is
-//! what an actual message-passing implementation costs.  Produces
-//! *bit-different but numerically equivalent* results to the dense
-//! engine (same weights, different summation order); equivalence is
-//! property-tested below and it backs the perf-pass numbers in
-//! EXPERIMENTS.md §Perf.
+//! what an actual message-passing implementation costs.  Messages live
+//! in the same flat [`NodeMatrix`] arena as the dense engine; a round is
+//! tiled over the d axis and allocation-free.  Produces *bit-different
+//! but numerically equivalent* results to the dense engine (same
+//! weights, different summation order); equivalence is property-tested
+//! below and it backs the perf-pass numbers in EXPERIMENTS.md §Perf.
 
-use crate::topology::Topology;
+use crate::topology::{accumulate_row_tile, MixMatrix, Topology};
+use crate::util::matrix::NodeMatrix;
 
-/// Per-node compressed mixing row: self weight + (neighbour, weight).
+/// Per-node compressed mixing row: self weight + CSR neighbour lists
+/// (the same layout [`MixMatrix`] caches, minus the diagonal, so both
+/// engines share one tile kernel).
 #[derive(Debug, Clone)]
 pub struct SparseMix {
     n: usize,
     self_w: Vec<f32>,
-    edges: Vec<Vec<(usize, f32)>>,
+    edge_ptr: Vec<usize>,
+    edge_cols: Vec<u32>,
+    edge_w: Vec<f32>,
 }
 
 impl SparseMix {
@@ -26,18 +32,23 @@ impl SparseMix {
     pub fn metropolis(topo: &Topology, lazy: bool) -> SparseMix {
         let n = topo.n();
         let mut self_w = vec![0.0f32; n];
-        let mut edges = vec![Vec::new(); n];
+        let mut edge_ptr = Vec::with_capacity(n + 1);
+        let mut edge_cols = Vec::new();
+        let mut edge_w = Vec::new();
+        edge_ptr.push(0);
         for i in 0..n {
             let mut off = 0.0f64;
             for &j in topo.neighbors(i) {
                 let w = 1.0 / (1.0 + topo.degree(i).max(topo.degree(j)) as f64);
                 let w = if lazy { w * 0.5 } else { w };
-                edges[i].push((j, w as f32));
+                edge_cols.push(j as u32);
+                edge_w.push(w as f32);
                 off += w;
             }
+            edge_ptr.push(edge_cols.len());
             self_w[i] = (1.0 - off) as f32;
         }
-        SparseMix { n, self_w, edges }
+        SparseMix { n, self_w, edge_ptr, edge_cols, edge_w }
     }
 
     pub fn n(&self) -> usize {
@@ -46,40 +57,52 @@ impl SparseMix {
 
     /// Non-zero off-diagonal entries (directed count).
     pub fn nnz(&self) -> usize {
-        self.edges.iter().map(|e| e.len()).sum()
+        self.edge_cols.len()
     }
 
-    /// One round: out[i] = w_ii·msgs[i] + Σ_{j∈N(i)} w_ij·msgs[j].
-    pub fn mix_into(&self, msgs: &[Vec<f32>], out: &mut [Vec<f32>]) {
-        assert_eq!(msgs.len(), self.n);
-        assert_eq!(out.len(), self.n);
-        let d = msgs[0].len();
-        for i in 0..self.n {
-            let oi = &mut out[i];
-            oi.resize(d, 0.0);
-            let wi = self.self_w[i];
-            let mi = &msgs[i];
-            for k in 0..d {
-                oi[k] = wi * mi[k];
-            }
-            for &(j, w) in &self.edges[i] {
-                let mj = &msgs[j];
-                for k in 0..d {
-                    oi[k] += w * mj[k];
+    /// One round: out.row(i) = w_ii·msgs.row(i) + Σ_{j∈N(i)} w_ij·msgs.row(j),
+    /// tiled over the d axis with the same fused tile kernel as the
+    /// dense engine ([`accumulate_row_tile`]).
+    pub fn mix_into(&self, msgs: &NodeMatrix, out: &mut NodeMatrix) {
+        assert_eq!(msgs.n(), self.n);
+        assert_eq!(out.n(), self.n);
+        assert_eq!(msgs.d(), out.d());
+        let d = msgs.d();
+        let mut k0 = 0usize;
+        loop {
+            let k1 = (k0 + MixMatrix::MIX_TILE).min(d);
+            for i in 0..self.n {
+                let wi = self.self_w[i];
+                let ot = &mut out.row_mut(i)[k0..k1];
+                for (o, &m) in ot.iter_mut().zip(&msgs.row(i)[k0..k1]) {
+                    *o = wi * m;
                 }
+                let (lo, hi) = (self.edge_ptr[i], self.edge_ptr[i + 1]);
+                accumulate_row_tile(
+                    &self.edge_w[lo..hi],
+                    &self.edge_cols[lo..hi],
+                    msgs,
+                    k0,
+                    k1,
+                    ot,
+                );
             }
+            if k1 == d {
+                break;
+            }
+            k0 = k1;
         }
     }
 
-    /// Run `rounds` rounds in place with an internal scratch buffer.
-    pub fn run(&self, msgs: &mut Vec<Vec<f32>>, scratch: &mut Vec<Vec<f32>>, rounds: usize) {
-        scratch.resize(self.n, Vec::new());
-        for s in scratch.iter_mut() {
-            s.resize(msgs[0].len(), 0.0);
+    /// Run `rounds` rounds in place; `scratch` is (re)shaped on first use
+    /// and the two arenas ping-pong with O(1) flips thereafter.
+    pub fn run(&self, msgs: &mut NodeMatrix, scratch: &mut NodeMatrix, rounds: usize) {
+        if scratch.n() != msgs.n() || scratch.d() != msgs.d() {
+            scratch.reset(msgs.n(), msgs.d());
         }
         for _ in 0..rounds {
             self.mix_into(msgs, scratch);
-            std::mem::swap(msgs, scratch);
+            msgs.swap(scratch);
         }
     }
 }
@@ -97,7 +120,8 @@ mod tests {
             let d = g.usize_in(1, 12);
             let topo = Topology::erdos_connected(n, g.f64_in(0.1, 0.8), g.u64());
             let rounds = g.usize_in(0, 12);
-            let msgs0: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 3.0)).collect();
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 3.0)).collect();
+            let msgs0 = NodeMatrix::from_rows(&rows);
 
             let mut dense = Consensus::new(topo.metropolis().lazy());
             let mut a = msgs0.clone();
@@ -105,15 +129,18 @@ mod tests {
 
             let sparse = SparseMix::metropolis(&topo, true);
             let mut b = msgs0;
-            let mut scratch = Vec::new();
+            let mut scratch = NodeMatrix::new(0, 0);
             sparse.run(&mut b, &mut scratch, rounds);
 
             for i in 0..n {
                 for k in 0..d {
                     crate::prop_assert!(
-                        (a[i][k] - b[i][k]).abs() < 1e-3 * (1.0 + a[i][k].abs()),
+                        (a.row(i)[k] - b.row(i)[k]).abs() < 1e-3 * (1.0 + a.row(i)[k].abs()),
                         "({},{}) dense={} sparse={}",
-                        i, k, a[i][k], b[i][k]
+                        i,
+                        k,
+                        a.row(i)[k],
+                        b.row(i)[k]
                     );
                 }
             }
@@ -137,9 +164,9 @@ mod tests {
             for lazy in [false, true] {
                 let s = SparseMix::metropolis(&topo, lazy);
                 for i in 0..n {
-                    let sum: f32 =
-                        s.self_w[i] + s.edges[i].iter().map(|&(_, w)| w).sum::<f32>();
-                    crate::prop_assert_close!(sum, 1.0, 1e-5);
+                    let edge_sum: f32 =
+                        s.edge_w[s.edge_ptr[i]..s.edge_ptr[i + 1]].iter().sum();
+                    crate::prop_assert_close!(s.self_w[i] + edge_sum, 1.0, 1e-5);
                 }
             }
             Ok(())
@@ -151,10 +178,11 @@ mod tests {
         let topo = Topology::paper_fig2();
         let s = SparseMix::metropolis(&topo, true);
         let mut g = crate::prop::Gen::new(2);
-        let mut msgs: Vec<Vec<f32>> = (0..10).map(|_| g.vec_normal_f32(4, 2.0)).collect();
-        let avg = Consensus::exact_average(&msgs);
-        let mut scratch = Vec::new();
+        let rows: Vec<Vec<f32>> = (0..10).map(|_| g.vec_normal_f32(4, 2.0)).collect();
+        let mut msgs = NodeMatrix::from_rows(&rows);
+        let avg = Consensus::exact_average(&msgs).unwrap();
+        let mut scratch = NodeMatrix::new(0, 0);
         s.run(&mut msgs, &mut scratch, 500);
-        assert!(Consensus::max_error(&msgs, &avg) < 1e-3);
+        assert!(Consensus::max_error(&msgs, &avg).unwrap() < 1e-3);
     }
 }

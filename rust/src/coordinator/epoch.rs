@@ -22,6 +22,7 @@
 use crate::coordinator::Scheme;
 use crate::exec::ExecEngine;
 use crate::straggler::StragglerModel;
+use crate::util::matrix::NodeMatrix;
 use crate::util::rng::Pcg64;
 
 // ---------------------------------------------------------------------------
@@ -104,10 +105,12 @@ impl NodeState {
     }
 
     /// Encode the consensus message m⁽⁰⁾ = n·(b_i·z + grad_sum) with the
-    /// n·b_i side channel into `msg` (resized to dim + 1).
-    pub fn encode_into(&self, n: usize, b_i: usize, msg: &mut Vec<f32>) {
+    /// n·b_i side channel into `msg` — a caller-owned `dim + 1` slice,
+    /// typically a [`NodeMatrix`] arena row, so encoding writes the wire
+    /// buffer in place with no allocation.
+    pub fn encode_into(&self, n: usize, b_i: usize, msg: &mut [f32]) {
         let dim = self.dim();
-        msg.resize(dim + 1, 0.0);
+        assert_eq!(msg.len(), dim + 1, "message row must be dim + 1 wide");
         let bi = b_i as f32;
         for k in 0..dim {
             msg[k] = n as f32 * (bi * self.z[k] + self.grad_sum[k]);
@@ -265,9 +268,15 @@ pub fn backup_attribution(
 /// the consensus-error diagnostic the simulator records.  `exact_bt`
 /// must match the run's normalisation so the diagnostic measures the
 /// dual the update actually used (oracle b(t) vs per-node side channel).
-pub fn consensus_error(msgs: &[Vec<f32>], exact_avg: &[f64], dim: usize, b_t: usize, exact_bt: bool) -> f64 {
+pub fn consensus_error(
+    msgs: &NodeMatrix,
+    exact_avg: &[f64],
+    dim: usize,
+    b_t: usize,
+    exact_bt: bool,
+) -> f64 {
     let mut worst = 0.0f64;
-    for m in msgs {
+    for m in msgs.rows() {
         let b_hat = if exact_bt { b_t as f64 } else { side_channel_b_hat(m) as f64 };
         let mut ss = 0.0f64;
         for k in 0..dim {
@@ -300,7 +309,7 @@ mod tests {
         let mut st = NodeState::new(&e);
         st.z = vec![1.0, -2.0, 0.5, 0.0];
         st.grad_sum = vec![4.0, 4.0, 4.0, 4.0];
-        let mut msg = Vec::new();
+        let mut msg = vec![0.0f32; 5];
         st.encode_into(5, 2, &mut msg);
         // m = 5·(2·z + g), side = 5·2
         assert_eq!(msg.len(), 5);

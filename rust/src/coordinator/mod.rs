@@ -36,6 +36,7 @@ pub mod threaded;
 use crate::exec::ExecEngine;
 use crate::metrics::RunRecord;
 use crate::topology::Topology;
+use crate::util::matrix::NodeMatrix;
 
 /// Epoch scheduling policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -271,8 +272,9 @@ pub struct RunOutput {
     pub record: RunRecord,
     /// Per-(node, epoch) raw log when `spec.record_node_log`.
     pub node_log: Option<NodeLog>,
-    /// Final primal variables per node.
-    pub final_w: Vec<Vec<f32>>,
+    /// Final primal variables, one arena row per node
+    /// (`final_w.row(i)` = node i's w).
+    pub final_w: NodeMatrix,
     /// Consensus rounds completed per (node, epoch); 0 under
     /// [`ConsensusMode::Exact`] (exact aggregation is not gossip).
     pub rounds: Vec<Vec<usize>>,

@@ -23,6 +23,7 @@ use crate::exec::ExecEngine;
 use crate::metrics::{EpochStats, RunRecord};
 use crate::straggler::StragglerModel;
 use crate::topology::Topology;
+use crate::util::matrix::NodeMatrix;
 
 /// Largest gossip-round budget the simulator will execute literally;
 /// anything above is assumed to be the threaded runtime's "as many
@@ -79,7 +80,9 @@ fn run_sim(
     let mut cons = Consensus::new(topo.metropolis().lazy());
 
     let mut states: Vec<NodeState> = engines.iter().map(|e| NodeState::new(&**e)).collect();
-    let mut msgs: Vec<Vec<f32>> = vec![vec![0.0f32; dim + 1]; n];
+    // The consensus wire: one flat [n × (dim+1)] arena, encoded/decoded
+    // in place every epoch (no per-node buffers, no per-epoch allocation).
+    let mut msgs = NodeMatrix::new(n, dim + 1);
     let mut rounds_buf = vec![0usize; n];
 
     let mut record = RunRecord::new(&spec.name, f_star);
@@ -104,14 +107,15 @@ fn run_sim(
 
         // ---- consensus phase ------------------------------------------------
         for i in 0..n {
-            states[i].encode_into(n, plan.batches[i], &mut msgs[i]);
+            states[i].encode_into(n, plan.batches[i], msgs.row_mut(i));
         }
-        let exact_avg = Consensus::exact_average(&msgs);
+        let exact_avg =
+            Consensus::exact_average(&msgs).expect("topology guarantees n > 0 nodes");
         match spec.consensus {
             ConsensusMode::Exact => {
-                for m in msgs.iter_mut() {
-                    for k in 0..=dim {
-                        m[k] = exact_avg[k] as f32;
+                for i in 0..n {
+                    for (v, &a) in msgs.row_mut(i).iter_mut().zip(&exact_avg) {
+                        *v = a as f32;
                     }
                 }
                 rounds_buf.fill(0);
@@ -151,9 +155,9 @@ fn run_sim(
                 let b_hat = if spec.exact_bt {
                     b_t as f32
                 } else {
-                    epoch::side_channel_b_hat(&msgs[i])
+                    epoch::side_channel_b_hat(msgs.row(i))
                 };
-                states[i].set_dual(&msgs[i], b_hat);
+                states[i].set_dual(msgs.row(i), b_hat);
                 states[i].primal(&mut *engines[i], t + 1);
             }
         }
@@ -179,12 +183,11 @@ fn run_sim(
         });
     }
 
-    RunOutput {
-        record,
-        node_log,
-        final_w: states.into_iter().map(|s| s.w).collect(),
-        rounds: rounds_log,
+    let mut final_w = NodeMatrix::new(n, dim);
+    for (i, s) in states.iter().enumerate() {
+        final_w.row_mut(i).copy_from_slice(&s.w);
     }
+    RunOutput { record, node_log, final_w, rounds: rounds_log }
 }
 
 #[cfg(test)]
@@ -344,7 +347,7 @@ mod tests {
         let est = mk(false);
         let ex = mk(true);
         for i in 0..10 {
-            let (we, wx) = (&est.final_w[i], &ex.final_w[i]);
+            let (we, wx) = (est.final_w.row(i), ex.final_w.row(i));
             let mut diff = 0.0f64;
             let mut norm = 0.0f64;
             for k in 0..we.len() {

@@ -42,6 +42,7 @@ use crate::coordinator::{
 };
 use crate::metrics::{EpochStats, RunRecord};
 use crate::topology::{MixMatrix, Topology};
+use crate::util::matrix::NodeMatrix;
 
 /// The real-time cluster runtime.
 pub struct ThreadedRuntime;
@@ -62,12 +63,15 @@ impl Runtime for ThreadedRuntime {
     }
 }
 
-/// One consensus message on the wire.
+/// One consensus message on the wire.  The payload is a refcounted row
+/// snapshot: a broadcast materialises the node's message row ONCE and
+/// every peer (and the frozen-value cache) shares it, instead of one
+/// `Vec` clone per peer per round.
 struct WireMsg {
     from: usize,
     epoch: usize,
     round: usize,
-    payload: Vec<f32>,
+    payload: Arc<[f32]>,
 }
 
 /// Per-(node, epoch) report.
@@ -180,6 +184,7 @@ fn run_threaded(
 /// [`RunOutput`] (times converted back to spec units).
 fn assemble(spec: &RunSpec, n: usize, mut results: Vec<NodeResult>, f_star: Option<f64>) -> RunOutput {
     results.sort_by_key(|r| r.node);
+    let dim = results.first().map_or(0, |r| r.final_w.len());
     let scale = spec.time_scale;
     let quota = epoch::work_quota(&spec.scheme, n);
 
@@ -238,12 +243,11 @@ fn assemble(spec: &RunSpec, n: usize, mut results: Vec<NodeResult>, f_star: Opti
             max_node_batch: max_b,
         });
     }
-    RunOutput {
-        record,
-        node_log,
-        final_w: results.into_iter().map(|r| r.final_w).collect(),
-        rounds,
+    let mut final_w = NodeMatrix::new(n, dim);
+    for r in &results {
+        final_w.row_mut(r.node).copy_from_slice(&r.final_w);
     }
+    RunOutput { record, node_log, final_w, rounds }
 }
 
 fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
@@ -264,11 +268,15 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
     let mut redundant_rng = epoch::redundancy_rng(spec.seed, i);
     let slowdown = spec.slowdown.get(i).copied().unwrap_or(1.0);
 
-    // Out-of-order message store: (epoch, round, from) -> payload.
-    let mut inbox: HashMap<(usize, usize, usize), Vec<f32>> = HashMap::new();
+    // Out-of-order message store: (epoch, round, from) -> shared payload.
+    let mut inbox: HashMap<(usize, usize, usize), Arc<[f32]>> = HashMap::new();
 
     let mut rows = Vec::with_capacity(spec.epochs);
     let mut errors = Vec::with_capacity(spec.epochs);
+
+    // The node's wire row, allocated once and re-encoded in place each
+    // epoch (the sim's arena row, one node wide).
+    let mut m = vec![0.0f32; dim + 1];
 
     // Warm up the engine and prime the chunk-duration estimate used for
     // admission control.  The FIRST call pays lazy-init costs (PJRT
@@ -423,7 +431,6 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
         }
 
         // ---- consensus phase ----
-        let mut m: Vec<f32> = Vec::with_capacity(dim + 1);
         st.encode_into(n, b_i, &mut m);
         let mut rounds_done = 0usize;
         match spec.consensus {
@@ -431,10 +438,12 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 // All-to-all exchange; aggregate in f64 node-index order so
                 // the result equals the simulator's exact average bit-for-bit
                 // given equal inputs.
+                let payload: Arc<[f32]> = Arc::from(&m[..]);
                 for tx in &ctx.peer_txs {
-                    let _ = tx.send(WireMsg { from: i, epoch: t, round: 0, payload: m.clone() });
+                    let _ =
+                        tx.send(WireMsg { from: i, epoch: t, round: 0, payload: payload.clone() });
                 }
-                let mut have: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+                let mut have: Vec<Option<Arc<[f32]>>> = (0..n).map(|_| None).collect();
                 let mut missing = n - 1;
                 for j in 0..n {
                     if j != i {
@@ -464,14 +473,17 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     }
                 }
                 if missing == 0 {
-                    have[i] = Some(std::mem::take(&mut m));
                     let mut sum = vec![0.0f64; dim + 1];
-                    for pj in have.iter().flatten() {
+                    for j in 0..n {
+                        let pj: &[f32] =
+                            if j == i { &m } else { have[j].as_deref().expect("missing == 0") };
                         for k in 0..=dim {
                             sum[k] += pj[k] as f64;
                         }
                     }
-                    m = sum.iter().map(|&s| (s / n as f64) as f32).collect();
+                    for (v, &s) in m.iter_mut().zip(&sum) {
+                        *v = (s / n as f64) as f32;
+                    }
                 }
                 // else: T_c expired with peers missing — keep own m (the
                 // node runs this epoch isolated, normalised by its own
@@ -507,16 +519,22 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 // fallback never triggers, so skip the per-message clones.
                 let track_frozen =
                     matches!(spec.consensus, ConsensusMode::GossipJitter { .. });
+                let payload: Arc<[f32]> = Arc::from(&m[..]);
                 for tx in &ctx.peer_txs {
-                    let _ = tx.send(WireMsg { from: i, epoch: t, round: 0, payload: m.clone() });
+                    let _ =
+                        tx.send(WireMsg { from: i, epoch: t, round: 0, payload: payload.clone() });
                 }
                 // Most recent payload seen from each peer this epoch
                 // (per-sender mpsc order makes "latest" = highest round).
-                let mut latest: Vec<Option<Vec<f32>>> = vec![None; ctx.peers.len()];
+                let mut latest: Vec<Option<Arc<[f32]>>> = vec![None; ctx.peers.len()];
+                // Round-k collection slots, reused across rounds.
+                let mut have: Vec<Option<Arc<[f32]>>> = vec![None; ctx.peers.len()];
                 let mut round = 0usize;
                 'rounds: while round < max_rounds {
                     // collect all peers' round-`round` messages
-                    let mut have: Vec<Option<Vec<f32>>> = vec![None; ctx.peers.len()];
+                    for h in have.iter_mut() {
+                        *h = None;
+                    }
                     let mut missing = ctx.peers.len();
                     // drain buffered messages; fall back to frozen values
                     // for peers whose budget is exhausted
@@ -602,8 +620,10 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     if Instant::now() >= consensus_deadline {
                         break 'rounds;
                     }
+                    let payload: Arc<[f32]> = Arc::from(&m[..]);
                     for tx in &ctx.peer_txs {
-                        let _ = tx.send(WireMsg { from: i, epoch: t, round, payload: m.clone() });
+                        let _ = tx
+                            .send(WireMsg { from: i, epoch: t, round, payload: payload.clone() });
                     }
                 }
                 rounds_done = round;

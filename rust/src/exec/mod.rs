@@ -112,23 +112,25 @@ impl ExecEngine for NativeExec {
         if n_samples == 0 {
             return 0.0;
         }
+        // Native chunks are always full, so they take the mask-free fast
+        // path (bit-identical to an all-ones mask, zero allocations); the
+        // chunk+mask convention only pays its tail cost on the AOT
+        // artifact path where shapes are static.
         match &*self.source {
             DataSource::LinReg(s) => {
                 s.sample_chunk(rng, n_samples, &mut self.x_buf, &mut self.y_buf);
-                let mask = vec![1.0f32; n_samples];
                 self.grad_buf.resize(s.d, 0.0);
-                let loss = crate::model::linreg::grad_sum(
-                    w, &self.x_buf, &self.y_buf, &mask, &mut self.grad_buf,
+                let loss = crate::model::linreg::grad_sum_dense(
+                    w, &self.x_buf, &self.y_buf, &mut self.grad_buf,
                 );
                 crate::util::axpy(1.0, &self.grad_buf, acc);
                 loss
             }
             DataSource::Mnist(m) => {
                 m.sample_chunk(rng, n_samples, &mut self.x_buf, &mut self.label_buf);
-                let mask = vec![1.0f32; n_samples];
                 self.grad_buf.resize(m.classes * m.d(), 0.0);
-                let loss = crate::model::logreg::grad_sum(
-                    w, &self.x_buf, &self.label_buf, &mask, m.classes, &mut self.grad_buf,
+                let loss = crate::model::logreg::grad_sum_dense(
+                    w, &self.x_buf, &self.label_buf, m.classes, &mut self.grad_buf,
                 );
                 crate::util::axpy(1.0, &self.grad_buf, acc);
                 loss
@@ -152,10 +154,9 @@ impl ExecEngine for NativeExec {
                 // y-axis).
                 let n = self.error_samples;
                 m.sample_chunk(rng, n, &mut self.x_buf, &mut self.label_buf);
-                let mask = vec![1.0f32; n];
                 self.grad_buf.resize(m.classes * m.d(), 0.0);
-                let loss = crate::model::logreg::grad_sum(
-                    w, &self.x_buf, &self.label_buf, &mask, m.classes, &mut self.grad_buf,
+                let loss = crate::model::logreg::grad_sum_dense(
+                    w, &self.x_buf, &self.label_buf, m.classes, &mut self.grad_buf,
                 );
                 loss / n as f64
             }

@@ -19,6 +19,7 @@ use crate::metrics::RunRecord;
 use crate::straggler::{InducedGroups, ShiftedExp};
 use crate::topology::Topology;
 use crate::util::csv::Csv;
+use crate::util::matrix::NodeMatrix;
 
 /// A1: consensus-round sweep.
 pub fn ablate_rounds(ctx: &Ctx) -> Result<FigReport> {
@@ -124,8 +125,9 @@ pub fn ablate_engines(ctx: &Ctx) -> Result<FigReport> {
     let n = topo.n();
     let d = 512usize;
     let mut g = crate::prop::Gen::new(ctx.seed);
-    let msgs0: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 2.0)).collect();
-    let avg = Consensus::exact_average(&msgs0);
+    let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 2.0)).collect();
+    let msgs0 = NodeMatrix::from_rows(&rows);
+    let avg = Consensus::exact_average(&msgs0)?;
     let rounds = 20;
 
     let mut dense = Consensus::new(topo.metropolis().lazy());
@@ -133,17 +135,17 @@ pub fn ablate_engines(ctx: &Ctx) -> Result<FigReport> {
     let t0 = std::time::Instant::now();
     dense.run(&mut a, rounds);
     let t_dense = t0.elapsed().as_secs_f64();
-    let e_dense = Consensus::max_error(&a, &avg);
+    let e_dense = Consensus::max_error(&a, &avg)?;
 
     let sp = SparseMix::metropolis(&topo, true);
     let mut b = msgs0.clone();
-    let mut scratch = Vec::new();
+    let mut scratch = NodeMatrix::new(0, 0);
     let t0 = std::time::Instant::now();
     sp.run(&mut b, &mut scratch, rounds);
     let t_sparse = t0.elapsed().as_secs_f64();
-    let e_sparse = Consensus::max_error(&b, &avg);
+    let e_sparse = Consensus::max_error(&b, &avg)?;
 
-    let mut ps = PushSum::new(Digraph::from_undirected(&topo), msgs0.clone());
+    let mut ps = PushSum::new(Digraph::from_undirected(&topo), &msgs0);
     let t0 = std::time::Instant::now();
     ps.run(rounds);
     let t_push = t0.elapsed().as_secs_f64();

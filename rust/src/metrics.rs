@@ -7,6 +7,7 @@ use std::path::Path;
 
 use crate::util::csv::Csv;
 use crate::util::json::Json;
+use crate::util::matrix::NodeMatrix;
 
 /// One epoch's summary.
 #[derive(Debug, Clone)]
@@ -161,6 +162,27 @@ pub fn speedup_at(a: &RunRecord, b: &RunRecord, target: f64) -> Option<(f64, f64
     Some((ta, tb, tb / ta))
 }
 
+/// Max pairwise L2 distance between per-node primal rows of a
+/// [`crate::coordinator::RunOutput::final_w`] arena — the "did consensus
+/// keep the models together" diagnostic (0 for a single node or under
+/// perfect consensus).  Panics on an empty arena: a silent 0.0 there
+/// would read as perfect consensus.
+pub fn max_primal_spread(final_w: &NodeMatrix) -> f64 {
+    assert!(final_w.n() > 0, "max_primal_spread over an empty arena");
+    let n = final_w.n();
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut ss = 0.0f64;
+            for (&a, &b) in final_w.row(i).iter().zip(final_w.row(j)) {
+                ss += ((a - b) as f64).powi(2);
+            }
+            worst = worst.max(ss.sqrt());
+        }
+    }
+    worst
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +237,13 @@ mod tests {
         let mut r = RunRecord::new("x", Some(0.0));
         r.push(stats(1, 5.0, 1, 0.0, 0.0));
         r.push(stats(2, 2.0, 1, 0.0, 0.0));
+    }
+
+    #[test]
+    fn primal_spread_over_arena_rows() {
+        let w = NodeMatrix::from_rows(&[vec![0.0f32, 0.0], vec![3.0, 4.0], vec![0.0, 0.0]]);
+        assert!((max_primal_spread(&w) - 5.0).abs() < 1e-9);
+        assert_eq!(max_primal_spread(&NodeMatrix::new(1, 4)), 0.0);
     }
 
     #[test]

@@ -6,7 +6,30 @@
 
 /// grad_sum = Xᵀ((Xw − y)⊙mask), loss_sum = ½·Σ mask·(Xw − y)².
 /// `x` row-major c × d; outputs into `grad` (d, zeroed here).
+///
+/// The mask exists for the artifact chunk+mask convention (DESIGN.md §1)
+/// where variable minibatches pad a fixed-shape tail.  Full chunks should
+/// use [`grad_sum_dense`], which skips the mask multiply entirely; with an
+/// all-ones mask both paths are bit-identical (`r * 1.0 == r`).
 pub fn grad_sum(
+    w: &[f32],
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    grad: &mut [f32],
+) -> f64 {
+    assert_eq!(mask.len(), y.len());
+    grad_sum_inner::<true>(w, x, y, mask, grad)
+}
+
+/// Mask-free fast path: every sample counts with weight 1, no per-sample
+/// multiply and no `vec![1.0; c]` allocation at the call site.
+pub fn grad_sum_dense(w: &[f32], x: &[f32], y: &[f32], grad: &mut [f32]) -> f64 {
+    grad_sum_inner::<false>(w, x, y, &[], grad)
+}
+
+#[inline(always)]
+fn grad_sum_inner<const MASKED: bool>(
     w: &[f32],
     x: &[f32],
     y: &[f32],
@@ -16,17 +39,16 @@ pub fn grad_sum(
     let d = w.len();
     let c = y.len();
     assert_eq!(x.len(), c * d, "x must be c*d");
-    assert_eq!(mask.len(), c);
     assert_eq!(grad.len(), d);
     grad.fill(0.0);
     let mut loss = 0.0f64;
     for i in 0..c {
-        if mask[i] == 0.0 {
+        if MASKED && mask[i] == 0.0 {
             continue;
         }
         let row = &x[i * d..(i + 1) * d];
         let r = crate::util::dot(row, w) - y[i];
-        let rm = r * mask[i];
+        let rm = if MASKED { r * mask[i] } else { r };
         loss += 0.5 * (rm as f64) * (r as f64);
         crate::util::axpy(rm, row, grad);
     }
@@ -80,6 +102,27 @@ mod tests {
             let loss = grad_sum(&w, &x, &y, &mask, &mut grad);
             crate::prop_assert!(crate::util::norm2(&grad) < 1e-3);
             crate::prop_assert!(loss < 1e-6);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_path_bitwise_equals_ones_mask() {
+        forall(25, 0x11_03, |g| {
+            let d = g.usize_in(1, 16);
+            let c = g.usize_in(1, 12);
+            let w = g.vec_normal_f32(d, 1.0);
+            let x = g.vec_normal_f32(c * d, 1.0);
+            let y = g.vec_normal_f32(c, 1.0);
+            let ones = vec![1.0f32; c];
+            let mut gm = vec![0.0f32; d];
+            let mut gd = vec![0.0f32; d];
+            let lm = grad_sum(&w, &x, &y, &ones, &mut gm);
+            let ld = grad_sum_dense(&w, &x, &y, &mut gd);
+            crate::prop_assert!(lm.to_bits() == ld.to_bits());
+            for j in 0..d {
+                crate::prop_assert!(gm[j].to_bits() == gd[j].to_bits());
+            }
             Ok(())
         });
     }

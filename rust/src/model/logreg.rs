@@ -3,7 +3,31 @@
 
 /// grad_sum (k × d, zeroed here) and masked summed cross-entropy loss.
 /// w row-major k × d; x row-major c × d.
+///
+/// The mask exists for the artifact chunk+mask convention (DESIGN.md §1);
+/// full chunks should use [`grad_sum_dense`], which skips the per-sample
+/// mask multiplies entirely — with an all-ones mask both paths are
+/// bit-identical.
 pub fn grad_sum(
+    w: &[f32],
+    x: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    k: usize,
+    grad: &mut [f32],
+) -> f64 {
+    assert_eq!(mask.len(), labels.len());
+    grad_sum_inner::<true>(w, x, labels, mask, k, grad)
+}
+
+/// Mask-free fast path: every sample counts with weight 1, no per-sample
+/// multiplies and no `vec![1.0; c]` allocation at the call site.
+pub fn grad_sum_dense(w: &[f32], x: &[f32], labels: &[i32], k: usize, grad: &mut [f32]) -> f64 {
+    grad_sum_inner::<false>(w, x, labels, &[], k, grad)
+}
+
+#[inline(always)]
+fn grad_sum_inner<const MASKED: bool>(
     w: &[f32],
     x: &[f32],
     labels: &[i32],
@@ -15,13 +39,12 @@ pub fn grad_sum(
     assert!(k > 0 && w.len() % k == 0);
     let d = w.len() / k;
     assert_eq!(x.len(), c * d);
-    assert_eq!(mask.len(), c);
     assert_eq!(grad.len(), k * d);
     grad.fill(0.0);
     let mut loss = 0.0f64;
     let mut logits = vec![0.0f32; k];
     for i in 0..c {
-        if mask[i] == 0.0 {
+        if MASKED && mask[i] == 0.0 {
             continue;
         }
         let row = &x[i * d..(i + 1) * d];
@@ -37,14 +60,15 @@ pub fn grad_sum(
         }
         let label = labels[i] as usize;
         assert!(label < k, "label {label} out of range k={k}");
-        // p_cls = logits[cls]/denom; dlogits = (p - onehot) * mask
+        // p_cls = logits[cls]/denom; dlogits = (p - onehot) [* mask]
         for cls in 0..k {
             let p = logits[cls] / denom;
-            let dl = (p - if cls == label { 1.0 } else { 0.0 }) * mask[i];
+            let onehot = if cls == label { 1.0 } else { 0.0 };
+            let dl = if MASKED { (p - onehot) * mask[i] } else { p - onehot };
             crate::util::axpy(dl, row, &mut grad[cls * d..(cls + 1) * d]);
         }
         let logp = (logits[label] / denom).max(f32::MIN_POSITIVE).ln();
-        loss -= (mask[i] * logp) as f64;
+        loss -= if MASKED { (mask[i] * logp) as f64 } else { logp as f64 };
     }
     loss
 }
@@ -98,6 +122,28 @@ mod tests {
             for j in 0..d {
                 let col: f32 = (0..k).map(|cls| grad[cls * d + j]).sum();
                 crate::prop_assert!(col.abs() < 1e-3, "col sum {}", col);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_path_bitwise_equals_ones_mask() {
+        forall(20, 0x12_04, |g| {
+            let k = g.usize_in(2, 6);
+            let d = g.usize_in(1, 8);
+            let c = g.usize_in(1, 10);
+            let w = g.vec_normal_f32(k * d, 1.0);
+            let x = g.vec_normal_f32(c * d, 1.0);
+            let labels: Vec<i32> = (0..c).map(|_| g.usize_in(0, k - 1) as i32).collect();
+            let ones = vec![1.0f32; c];
+            let mut gm = vec![0.0f32; k * d];
+            let mut gd = vec![0.0f32; k * d];
+            let lm = grad_sum(&w, &x, &labels, &ones, k, &mut gm);
+            let ld = grad_sum_dense(&w, &x, &labels, k, &mut gd);
+            crate::prop_assert!(lm.to_bits() == ld.to_bits());
+            for j in 0..k * d {
+                crate::prop_assert!(gm[j].to_bits() == gd[j].to_bits());
             }
             Ok(())
         });

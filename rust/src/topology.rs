@@ -11,6 +11,7 @@
 //! tuned so λ₂(P) ≈ 0.888, the value the paper reports — consensus speed,
 //! which is all that enters the algorithm, then matches the testbed.
 
+use crate::util::matrix::NodeMatrix;
 use crate::util::rng::Pcg64;
 
 /// Undirected graph with sorted adjacency lists.
@@ -232,21 +233,44 @@ impl Topology {
             let off: f64 = (0..n).filter(|&j| j != i).map(|j| p[i * n + j]).sum();
             p[i * n + i] = 1.0 - off;
         }
-        MixMatrix { n, p }
+        MixMatrix::from_rows(n, p)
     }
 }
 
-/// Dense doubly-stochastic mixing matrix (row-major).
+/// Dense doubly-stochastic mixing matrix (row-major), with a compressed
+/// f32 view of its non-zero pattern built once at construction so the
+/// per-round [`MixMatrix::mix_into`] kernel touches only real edges and
+/// never re-converts weights.
 #[derive(Debug, Clone)]
 pub struct MixMatrix {
     n: usize,
     p: Vec<f64>,
+    /// CSR over the non-zero (after f32 cast) entries of each row, in
+    /// ascending column order — the exact entries and accumulation order
+    /// the nested-Vec kernel used, so flat mixing stays bit-identical.
+    nz_ptr: Vec<usize>,
+    nz_cols: Vec<u32>,
+    nz_w: Vec<f32>,
 }
 
 impl MixMatrix {
     pub fn from_rows(n: usize, p: Vec<f64>) -> MixMatrix {
         assert_eq!(p.len(), n * n);
-        MixMatrix { n, p }
+        let mut nz_ptr = Vec::with_capacity(n + 1);
+        let mut nz_cols = Vec::new();
+        let mut nz_w = Vec::new();
+        nz_ptr.push(0);
+        for i in 0..n {
+            for j in 0..n {
+                let w = p[i * n + j] as f32;
+                if w != 0.0 {
+                    nz_cols.push(j as u32);
+                    nz_w.push(w);
+                }
+            }
+            nz_ptr.push(nz_cols.len());
+        }
+        MixMatrix { n, p, nz_ptr, nz_cols, nz_w }
     }
 
     pub fn n(&self) -> usize {
@@ -274,7 +298,7 @@ impl MixMatrix {
         for i in 0..n {
             p[i * n + i] += 0.5;
         }
-        MixMatrix { n, p }
+        MixMatrix::from_rows(n, p)
     }
 
     /// max |row sum − 1|, max |col sum − 1|, min entry — stochasticity
@@ -342,31 +366,79 @@ impl MixMatrix {
         lambda
     }
 
-    /// One synchronous consensus round applied to row-stacked messages:
-    /// out[i] = Σ_j P_ij msgs[j].  `out` and `msgs` are n × d flat.
-    pub fn mix_into(&self, msgs: &[Vec<f32>], out: &mut [Vec<f32>]) {
+    /// Column-tile width of the flat mixing kernel: 8 KiB of f32 keeps
+    /// the output tile pinned in L1 while every source row's matching
+    /// tile streams through, and — because all rows share one arena —
+    /// an n-row tile block stays L2-resident across output rows, so the
+    /// same source tile is never refetched from memory once per edge.
+    pub const MIX_TILE: usize = 2048;
+
+    /// One synchronous consensus round over a flat arena:
+    /// out.row(i) = Σ_j P_ij · msgs.row(j).
+    ///
+    /// Blocked sparse row kernel: iterates the precomputed non-zero
+    /// pattern only, in ascending-j order per output element — the exact
+    /// accumulation order of the old nested-Vec kernel, so results are
+    /// bit-identical (pinned by `consensus::tests::flat_kernel_matches_
+    /// legacy_nested_vec_bitwise`) — tiles the d axis so the hot working
+    /// set fits the cache hierarchy, and fuses four sources per sweep
+    /// ([`crate::util::axpy4`]) so the output tile is traversed ~deg/4
+    /// times instead of deg times.  Allocation-free.
+    pub fn mix_into(&self, msgs: &NodeMatrix, out: &mut NodeMatrix) {
         let n = self.n;
-        assert_eq!(msgs.len(), n);
-        assert_eq!(out.len(), n);
-        let d = msgs[0].len();
-        for i in 0..n {
-            let row = self.row(i);
-            let oi = &mut out[i];
-            assert_eq!(oi.len(), d);
-            for v in oi.iter_mut() {
-                *v = 0.0;
+        assert_eq!(msgs.n(), n);
+        assert_eq!(out.n(), n);
+        assert_eq!(msgs.d(), out.d());
+        let d = msgs.d();
+        let mut k0 = 0usize;
+        loop {
+            let k1 = (k0 + Self::MIX_TILE).min(d);
+            for i in 0..n {
+                let ot = &mut out.row_mut(i)[k0..k1];
+                ot.fill(0.0);
+                let (lo, hi) = (self.nz_ptr[i], self.nz_ptr[i + 1]);
+                accumulate_row_tile(&self.nz_w[lo..hi], &self.nz_cols[lo..hi], msgs, k0, k1, ot);
             }
-            for j in 0..n {
-                let pij = row[j] as f32;
-                if pij == 0.0 {
-                    continue;
-                }
-                let mj = &msgs[j];
-                for k in 0..d {
-                    oi[k] += pij * mj[k];
-                }
+            if k1 == d {
+                break;
             }
+            k0 = k1;
         }
+    }
+}
+
+/// Shared inner kernel of the dense and sparse flat mixers: accumulate
+/// one output tile from a compressed row,
+///   ot[k] += Σ_e ws[e] · msgs.row(cols[e])[k0 + k],
+/// four sources fused per sweep ([`crate::util::axpy4`]); per output
+/// element the adds apply in ascending-e order, so the result is
+/// bit-identical to applying the sources one at a time.
+pub(crate) fn accumulate_row_tile(
+    ws: &[f32],
+    cols: &[u32],
+    msgs: &NodeMatrix,
+    k0: usize,
+    k1: usize,
+    ot: &mut [f32],
+) {
+    assert_eq!(ws.len(), cols.len());
+    let (mut e, hi) = (0usize, ws.len());
+    while e + 4 <= hi {
+        crate::util::axpy4(
+            [ws[e], ws[e + 1], ws[e + 2], ws[e + 3]],
+            [
+                &msgs.row(cols[e] as usize)[k0..k1],
+                &msgs.row(cols[e + 1] as usize)[k0..k1],
+                &msgs.row(cols[e + 2] as usize)[k0..k1],
+                &msgs.row(cols[e + 3] as usize)[k0..k1],
+            ],
+            ot,
+        );
+        e += 4;
+    }
+    while e < hi {
+        crate::util::axpy(ws[e], &msgs.row(cols[e] as usize)[k0..k1], ot);
+        e += 1;
     }
 }
 
@@ -530,35 +602,20 @@ mod tests {
             let d = g.usize_in(1, 16);
             let t = Topology::erdos_connected(n, 0.4, g.u64());
             let m = t.metropolis();
-            let msgs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 2.0)).collect();
-            let mut mean = vec![0.0f64; d];
-            for msg in &msgs {
-                for k in 0..d {
-                    mean[k] += msg[k] as f64;
-                }
-            }
-            for v in mean.iter_mut() {
-                *v /= n as f64;
-            }
-            let mut out = vec![vec![0.0f32; d]; n];
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 2.0)).collect();
+            let msgs = NodeMatrix::from_rows(&rows);
+            let mean = msgs.mean_rows_f64().unwrap();
+            let mut out = NodeMatrix::new(n, d);
             m.mix_into(&msgs, &mut out);
             // conservation
-            let mut mean2 = vec![0.0f64; d];
-            for msg in &out {
-                for k in 0..d {
-                    mean2[k] += msg[k] as f64;
-                }
-            }
-            for v in mean2.iter_mut() {
-                *v /= n as f64;
-            }
+            let mean2 = out.mean_rows_f64().unwrap();
             for k in 0..d {
                 crate::prop_assert!((mean[k] - mean2[k]).abs() < 1e-3);
             }
             // contraction: max deviation must not grow
-            let dev = |ms: &[Vec<f32>]| -> f64 {
+            let dev = |ms: &NodeMatrix| -> f64 {
                 let mut worst = 0.0f64;
-                for msg in ms {
+                for msg in ms.rows() {
                     let mut ss = 0.0f64;
                     for k in 0..d {
                         let diff = msg[k] as f64 - mean[k];
@@ -571,6 +628,32 @@ mod tests {
             crate::prop_assert!(dev(&out) <= dev(&msgs) * (1.0 + 1e-6));
             Ok(())
         });
+    }
+
+    #[test]
+    fn mix_tiling_boundary_matches_untiled_expectation() {
+        // d straddling the tile width must give the same result as the
+        // per-element definition out[i][k] = Σ_j P_ij m[j][k].
+        let t = Topology::ring(5);
+        let m = t.metropolis().lazy();
+        let d = MixMatrix::MIX_TILE + 3;
+        let mut g = crate::prop::Gen::new(0x70_04);
+        let rows: Vec<Vec<f32>> = (0..5).map(|_| g.vec_normal_f32(d, 1.0)).collect();
+        let msgs = NodeMatrix::from_rows(&rows);
+        let mut out = NodeMatrix::new(5, d);
+        m.mix_into(&msgs, &mut out);
+        for i in 0..5 {
+            for &k in &[0usize, MixMatrix::MIX_TILE - 1, MixMatrix::MIX_TILE, d - 1] {
+                let mut want = 0.0f32;
+                for j in 0..5 {
+                    let pij = m.at(i, j) as f32;
+                    if pij != 0.0 {
+                        want += pij * rows[j][k];
+                    }
+                }
+                assert_eq!(out.row(i)[k], want, "({i},{k})");
+            }
+        }
     }
 }
 

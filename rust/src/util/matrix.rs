@@ -1,0 +1,258 @@
+//! Per-node state arenas: the crate's data plane (DESIGN.md §1).
+//!
+//! Consensus, the coordinator runtimes, and the exec layer all move
+//! "one vector per node" collections.  Storing them as `Vec<Vec<f32>>`
+//! costs one heap allocation per node, defeats hardware prefetching
+//! (rows land wherever the allocator put them), and forces every gossip
+//! round through pointer-chasing.  [`NodeMatrix`] flattens the whole
+//! collection into ONE row-major `[n × d]` buffer:
+//!
+//! * `row(i)` / `row_mut(i)` — contiguous per-node views, so all
+//!   existing slice-based kernels (`dot`, `axpy`, the model gradients)
+//!   apply unchanged;
+//! * `rows_mut_pair(i, j)` — two disjoint mutable rows at once (swap /
+//!   exchange patterns without `unsafe` at the call site);
+//! * `swap(&mut other)` — O(1) double-buffer flip for iterated kernels
+//!   (gossip rounds ping-pong between the message and scratch arenas
+//!   with zero copies and zero allocations after setup);
+//! * [`NodeMatrixF64`] — the paired f64-accumulation variant for exact
+//!   averaging and push-sum, where f32 summation error would compound
+//!   across rounds.
+//!
+//! The arena is deliberately NOT growable per row: every row has the
+//! same length `d`, fixed at construction (messages are `dim + 1` wide,
+//! primals `dim` wide — both known before the first epoch).
+
+macro_rules! node_matrix_impl {
+    ($name:ident, $elem:ty) => {
+        impl $name {
+            /// Zero-filled n × d arena.
+            pub fn new(n: usize, d: usize) -> $name {
+                $name { n, d, data: vec![0.0; n * d] }
+            }
+
+            /// Build from nested rows (interop / test convenience).
+            /// Panics if rows are ragged.
+            pub fn from_rows(rows: &[Vec<$elem>]) -> $name {
+                let n = rows.len();
+                let d = rows.first().map_or(0, |r| r.len());
+                let mut m = $name::new(n, d);
+                for (i, r) in rows.iter().enumerate() {
+                    assert_eq!(r.len(), d, "row {i} has length {} != {d}", r.len());
+                    m.row_mut(i).copy_from_slice(r);
+                }
+                m
+            }
+
+            /// Number of rows (nodes).
+            pub fn n(&self) -> usize {
+                self.n
+            }
+
+            /// Row width (per-node dimension).
+            pub fn d(&self) -> usize {
+                self.d
+            }
+
+            #[inline]
+            pub fn row(&self, i: usize) -> &[$elem] {
+                &self.data[i * self.d..(i + 1) * self.d]
+            }
+
+            #[inline]
+            pub fn row_mut(&mut self, i: usize) -> &mut [$elem] {
+                &mut self.data[i * self.d..(i + 1) * self.d]
+            }
+
+            /// Two disjoint mutable rows (i ≠ j, any order).
+            pub fn rows_mut_pair(&mut self, i: usize, j: usize) -> (&mut [$elem], &mut [$elem]) {
+                assert_ne!(i, j, "rows_mut_pair needs distinct rows");
+                let d = self.d;
+                if i < j {
+                    let (lo, hi) = self.data.split_at_mut(j * d);
+                    (&mut lo[i * d..(i + 1) * d], &mut hi[..d])
+                } else {
+                    let (lo, hi) = self.data.split_at_mut(i * d);
+                    let (a, b) = (&mut hi[..d], &mut lo[j * d..(j + 1) * d]);
+                    (a, b)
+                }
+            }
+
+            /// The whole flat buffer (row-major).
+            pub fn as_slice(&self) -> &[$elem] {
+                &self.data
+            }
+
+            pub fn as_mut_slice(&mut self) -> &mut [$elem] {
+                &mut self.data
+            }
+
+            /// Iterate rows in node order.
+            pub fn rows(&self) -> impl Iterator<Item = &[$elem]> {
+                let d = self.d;
+                let data = &self.data;
+                (0..self.n).map(move |i| &data[i * d..(i + 1) * d])
+            }
+
+            pub fn fill(&mut self, v: $elem) {
+                self.data.fill(v);
+            }
+
+            /// O(1) double-buffer flip with an equally-shaped arena — the
+            /// per-round "swap message and scratch" step of iterated
+            /// kernels.
+            pub fn swap(&mut self, other: &mut $name) {
+                assert_eq!(self.n, other.n, "swap needs equal shapes");
+                assert_eq!(self.d, other.d, "swap needs equal shapes");
+                std::mem::swap(&mut self.data, &mut other.data);
+            }
+
+            /// Reshape in place (contents zeroed).  Reallocates only when
+            /// the new arena is larger than any previous shape — scratch
+            /// buffers reach a steady state after the first use.
+            pub fn reset(&mut self, n: usize, d: usize) {
+                self.n = n;
+                self.d = d;
+                self.data.clear();
+                self.data.resize(n * d, 0.0);
+            }
+
+            /// Copy nested rows out (interop / serialization convenience).
+            pub fn to_rows(&self) -> Vec<Vec<$elem>> {
+                (0..self.n).map(|i| self.row(i).to_vec()).collect()
+            }
+        }
+    };
+}
+
+/// Row-major `[n × d]` f32 arena — one contiguous allocation for all
+/// per-node vectors.  See the module docs for the accessor contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeMatrix {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+/// Row-major `[n × d]` f64 arena — the accumulation-precision twin of
+/// [`NodeMatrix`] (exact averaging, push-sum mass bookkeeping).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeMatrixF64 {
+    n: usize,
+    d: usize,
+    data: Vec<f64>,
+}
+
+node_matrix_impl!(NodeMatrix, f32);
+node_matrix_impl!(NodeMatrixF64, f64);
+
+impl NodeMatrix {
+    /// Column-wise mean accumulated in f64 (the exact row average that
+    /// ε-perfect consensus would deliver).  `None` when the arena has no
+    /// rows — callers must decide, not index-panic.
+    pub fn mean_rows_f64(&self) -> Option<Vec<f64>> {
+        if self.n == 0 {
+            return None;
+        }
+        let mut avg = vec![0.0f64; self.d];
+        for row in self.rows() {
+            for (a, &v) in avg.iter_mut().zip(row) {
+                *a += v as f64;
+            }
+        }
+        for a in avg.iter_mut() {
+            *a /= self.n as f64;
+        }
+        Some(avg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_and_layout() {
+        let mut m = NodeMatrix::new(3, 4);
+        assert_eq!((m.n(), m.d()), (3, 4));
+        assert!(m.as_slice().iter().all(|&v| v == 0.0));
+        m.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.row(0), &[0.0; 4]);
+        // row-major layout: row 1 occupies elements 4..8
+        assert_eq!(&m.as_slice()[4..8], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.rows().count(), 3);
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let m = NodeMatrix::from_rows(&rows);
+        assert_eq!(m.to_rows(), rows);
+    }
+
+    #[test]
+    #[should_panic(expected = "row 1")]
+    fn from_rows_rejects_ragged() {
+        NodeMatrix::from_rows(&[vec![1.0f32], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn rows_mut_pair_disjoint_both_orders() {
+        let mut m = NodeMatrix::from_rows(&[vec![1.0f32], vec![2.0], vec![3.0]]);
+        {
+            let (a, b) = m.rows_mut_pair(0, 2);
+            std::mem::swap(&mut a[0], &mut b[0]);
+        }
+        assert_eq!(m.row(0), &[3.0]);
+        assert_eq!(m.row(2), &[1.0]);
+        {
+            let (a, b) = m.rows_mut_pair(2, 0);
+            assert_eq!((a[0], b[0]), (1.0, 3.0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn rows_mut_pair_rejects_same_row() {
+        let mut m = NodeMatrix::new(2, 1);
+        let _ = m.rows_mut_pair(1, 1);
+    }
+
+    #[test]
+    fn swap_is_a_buffer_flip() {
+        let mut a = NodeMatrix::from_rows(&[vec![1.0f32, 2.0]]);
+        let mut b = NodeMatrix::from_rows(&[vec![9.0f32, 8.0]]);
+        a.swap(&mut b);
+        assert_eq!(a.row(0), &[9.0, 8.0]);
+        assert_eq!(b.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn reset_reshapes_and_zeroes() {
+        let mut m = NodeMatrix::from_rows(&[vec![7.0f32; 8]; 4]);
+        m.reset(2, 3);
+        assert_eq!((m.n(), m.d()), (2, 3));
+        assert!(m.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mean_rows_f64_exact_and_guarded() {
+        let m = NodeMatrix::from_rows(&[vec![1.0f32, -2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.mean_rows_f64().unwrap(), vec![2.0, 1.0]);
+        assert_eq!(NodeMatrix::new(0, 5).mean_rows_f64(), None);
+    }
+
+    #[test]
+    fn f64_variant_same_contract() {
+        let mut m = NodeMatrixF64::new(2, 2);
+        m.row_mut(0)[1] = 0.5;
+        let (a, b) = m.rows_mut_pair(0, 1);
+        b[0] = a[1] * 2.0;
+        assert_eq!(m.row(1), &[1.0, 0.0]);
+        let mut s = NodeMatrixF64::new(2, 2);
+        m.swap(&mut s);
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+        assert_eq!(s.row(0), &[0.0, 0.5]);
+    }
+}

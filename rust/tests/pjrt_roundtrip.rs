@@ -15,6 +15,7 @@ use anytime_mb::data::{LinRegStream, MnistLike, TokenStream};
 use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
 use anytime_mb::optim::{BetaSchedule, DualAveraging};
 use anytime_mb::runtime::{lit_f32, lit_scalar, to_f32, to_scalar, PjrtExec, PjrtRuntime, TransformerExec};
+use anytime_mb::util::matrix::NodeMatrix;
 use anytime_mb::util::rng::Pcg64;
 
 fn runtime() -> Option<Rc<PjrtRuntime>> {
@@ -147,13 +148,15 @@ fn mix_artifact_is_doubly_stochastic_average() {
         let after: f32 = (0..n).map(|i| mixed[i * d + col]).sum::<f32>() / n as f32;
         assert!((before - after).abs() < 1e-3, "col {col}: {before} vs {after}");
     }
-    // matches native mix
-    let msgs: Vec<Vec<f32>> = (0..n).map(|i| m[i * d..(i + 1) * d].to_vec()).collect();
-    let mut out = vec![vec![0.0f32; d]; n];
+    // matches native mix (the artifact's row-major [n × d] operand IS the
+    // arena layout — no reshaping on either side)
+    let mut msgs = NodeMatrix::new(n, d);
+    msgs.as_mut_slice().copy_from_slice(&m);
+    let mut out = NodeMatrix::new(n, d);
     p.mix_into(&msgs, &mut out);
     for i in 0..n {
         for c in 0..d {
-            assert!((mixed[i * d + c] - out[i][c]).abs() < 1e-3);
+            assert!((mixed[i * d + c] - out.row(i)[c]).abs() < 1e-3);
         }
     }
 }

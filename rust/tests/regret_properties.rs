@@ -142,7 +142,7 @@ fn prop_exact_consensus_topology_invariant() {
         };
         let a = run_on(&Topology::ring(6));
         let b = run_on(&Topology::complete(6));
-        for (wa, wb) in a.final_w.iter().zip(&b.final_w) {
+        for (wa, wb) in a.final_w.rows().zip(b.final_w.rows()) {
             for k in 0..wa.len() {
                 prop_assert_close!(wa[k], wb[k], 1e-5);
             }
@@ -168,9 +168,7 @@ fn prop_seeded_reproducibility() {
             prop_assert!(ea.batch == eb.batch);
             prop_assert!(ea.loss.to_bits() == eb.loss.to_bits());
         }
-        for (wa, wb) in a.final_w.iter().zip(&b.final_w) {
-            prop_assert!(wa == wb);
-        }
+        prop_assert!(a.final_w == b.final_w);
         Ok(())
     });
 }

@@ -88,7 +88,8 @@ fn fmb_exact_same_spec_agrees_across_runtimes() {
     assert!(rel_diff(es, et) < 5e-2, "final error: sim {es} vs threaded {et}");
 
     // final primals agree per node (the whole state machine matched)
-    for (ws, wt) in sim.final_w.iter().zip(&thr.final_w) {
+    assert_eq!(sim.final_w.n(), thr.final_w.n());
+    for (ws, wt) in sim.final_w.rows().zip(thr.final_w.rows()) {
         let mut diff = 0.0f64;
         let mut norm = 0.0f64;
         for k in 0..ws.len() {
@@ -122,9 +123,7 @@ fn sim_equal_seeds_bitwise_identical() {
         assert_eq!(ea.error.to_bits(), eb.error.to_bits());
         assert_eq!(ea.consensus_err.to_bits(), eb.consensus_err.to_bits());
     }
-    for (wa, wb) in a.final_w.iter().zip(&b.final_w) {
-        assert_eq!(wa, wb, "final primals must be bitwise identical");
-    }
+    assert_eq!(a.final_w, b.final_w, "final primal arenas must be bitwise identical");
     let c = run(78);
     assert_ne!(
         a.record.epochs[3].batch, c.record.epochs[3].batch,
@@ -165,7 +164,7 @@ fn every_scheme_runs_on_both_runtimes() {
                     e.epoch
                 );
             }
-            assert_eq!(out.final_w.len(), 4);
+            assert_eq!(out.final_w.n(), 4);
             assert_eq!(out.rounds.len(), 4);
         }
     }

@@ -96,21 +96,17 @@ fn nodes_converge_to_similar_models() {
     let last = out.record.epochs.last().unwrap();
     assert!(last.error < out.record.epochs[0].error * 0.5);
     assert!(last.min_node_batch > 0);
-    assert_eq!(out.final_w.len(), 4);
-    let w0 = &out.final_w[0];
-    let norm0: f64 = w0.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
-    for w in &out.final_w[1..] {
-        let diff: f64 = w
-            .iter()
-            .zip(w0)
-            .map(|(&a, &b)| ((a - b) as f64).powi(2))
-            .sum::<f64>()
-            .sqrt();
-        assert!(
-            diff < 0.25 * norm0.max(1e-9),
-            "node models diverged: diff={diff} norm={norm0}"
-        );
-    }
+    assert_eq!(out.final_w.n(), 4);
+    let norm0: f64 =
+        out.final_w.row(0).iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let spread = anytime_mb::metrics::max_primal_spread(&out.final_w);
+    // Max pairwise spread dominates any node's distance from node 0, so
+    // this bound is at least as strict as the pre-arena test (each node
+    // within 0.25·‖w₀‖ of node 0).
+    assert!(
+        spread < 0.25 * norm0.max(1e-9),
+        "node models diverged: spread={spread} norm={norm0}"
+    );
 }
 
 #[test]
