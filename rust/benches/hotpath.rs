@@ -5,7 +5,12 @@
 //!   RT (PJRT)  — artifact-backed gradient chunk + dual update (requires
 //!                `make artifacts`; skipped otherwise)
 //!
-//! These are the numbers the §Perf iteration log tracks.
+//! These are the numbers the §Perf iteration log tracks.  Besides the
+//! printed tables, every row lands in machine-readable form in
+//! `BENCH_hotpath.json` at the workspace root (the bench trajectory the
+//! ISSUE-3 acceptance criteria read), including the serial-vs-parallel
+//! scaling grid: threads ∈ {1, 2, 4} × the n/d consensus grid plus the
+//! pool-fanned simulated epoch.
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -19,7 +24,9 @@ use anytime_mb::optim::{BetaSchedule, DualAveraging};
 use anytime_mb::runtime::{PjrtExec, PjrtRuntime};
 use anytime_mb::straggler::ShiftedExp;
 use anytime_mb::topology::Topology;
+use anytime_mb::util::json::Json;
 use anytime_mb::util::matrix::NodeMatrix;
+use anytime_mb::util::pool;
 use anytime_mb::util::rng::Pcg64;
 use anytime_mb::SimRuntime;
 
@@ -42,7 +49,11 @@ fn main() {
     // The ISSUE-2 acceptance grid: n ∈ {10, 64} × d ∈ {1024, 8192},
     // 5 gossip rounds in place (zero per-round allocations on the flat
     // paths; the legacy path is the pre-arena data plane).  Speedup rows
-    // are printed below the table.
+    // are printed below the table.  Pinned to ONE pool thread so this
+    // table isolates PR-2's layout win from PR-3's threading (which the
+    // dedicated t ∈ {1, 2, 4} scaling grid measures separately) and the
+    // recorded JSON doesn't vary with the host's core count.
+    pool::set_threads(1);
     let mut rng = Pcg64::new(1);
     let mut grid_rows: Vec<(String, f64, f64, f64)> = Vec::new();
     for (label, topo) in
@@ -88,6 +99,10 @@ fn main() {
             grid_rows.push((format!("{label}_d{d}"), t_legacy, t_flat, t_sparse));
         }
     }
+    // (the 1-thread pin stays on through the baseline rows below — the
+    // gradient/primal benches never touch the pool, and the baseline
+    // sim-epoch row must stay host-independent and comparable to the
+    // pre-pool trajectory; the scaling grid re-pins per point)
 
     // ---- L3: native gradient chunks ----------------------------------------
     let lin_src = Arc::new(DataSource::LinReg(LinRegStream::new(1024, 2)));
@@ -138,6 +153,54 @@ fn main() {
         f_star,
     );
 
+    // ---- pool scaling: threads ∈ {1, 2, 4} over the hot parallel paths ----
+    // Results are bit-identical at every thread count (the pool only
+    // re-partitions work — tests/parallel_determinism.rs); this grid
+    // measures what the partitioning buys.  threads=1 forces the serial
+    // path, so each row's speedup column is parallel-vs-serial directly.
+    let mut scaling_rows: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+    for (label, grid_topo) in
+        [("n10_fig2", Topology::paper_fig2()), ("n64_expander", Topology::expander(64, 6, 2))]
+    {
+        for d in [1024usize, 8192] {
+            let n = grid_topo.n();
+            let p = grid_topo.metropolis().lazy();
+            let seed_rows = random_arena(&mut rng, n, d);
+            let mut pts = Vec::new();
+            for threads in [1usize, 2, 4] {
+                pool::set_threads(threads);
+                let mut cons = Consensus::new(p.clone());
+                let mut msgs = seed_rows.clone();
+                let t = b
+                    .bench(&format!("L3/consensus_flat_dense_{label}_d{d}_5r_t{threads}"), || {
+                        cons.run(&mut msgs, 5);
+                        msgs.row(0)[0]
+                    })
+                    .mean;
+                pts.push((threads, t));
+            }
+            scaling_rows.push((format!("{label}_d{d}"), pts));
+        }
+    }
+    // The simulated epoch fans per-node gradient work across the pool.
+    let mut pts = Vec::new();
+    for threads in [1usize, 2, 4] {
+        pool::set_threads(threads);
+        let t = b
+            .bench_run(
+                &format!("L3/sim_epoch_amb_n10_d1024_b6000_t{threads}"),
+                &SimRuntime::new(&strag),
+                &epoch_spec,
+                &topo,
+                &epoch_mk,
+                f_star,
+            )
+            .mean;
+        pts.push((threads, t));
+    }
+    scaling_rows.push(("sim_epoch_amb_n10_d1024".to_string(), pts));
+    pool::clear_threads_override();
+
     // ---- RT: PJRT artifact path --------------------------------------------
     match PjrtRuntime::load(&anytime_mb::artifacts_dir()) {
         Ok(rt) => {
@@ -184,6 +247,20 @@ fn main() {
         );
     }
 
+    // Serial-vs-parallel scaling table (the ISSUE-3 acceptance bar:
+    // >1x on the n=64, d=8192 grid when more than one core exists).
+    println!("\n== pool scaling: threads ∈ {{1, 2, 4}} (speedup vs t=1) ==");
+    for (name, pts) in &scaling_rows {
+        let t1 = pts[0].1;
+        let cells: Vec<String> = pts
+            .iter()
+            .map(|&(t, m)| {
+                format!("t={t} {:>9} ({:.2}x)", anytime_mb::bench_harness::fmt_time(m), t1 / m)
+            })
+            .collect();
+        println!("  {:<26} {}", name, cells.join(" | "));
+    }
+
     // Derived throughput lines for §Perf.
     for s in b.results() {
         let items = match s.name.as_str() {
@@ -199,5 +276,62 @@ fn main() {
                 flops / s.mean / 1e9
             );
         }
+    }
+
+    // Machine-readable trajectory: every timed row + the two derived
+    // grids, at the workspace root so successive runs are diffable.
+    let doc = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        (
+            "detected_parallelism",
+            Json::num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+        ),
+        (
+            "results",
+            Json::arr(b.results().iter().map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(&s.name)),
+                    ("iters", Json::num(s.iters as f64)),
+                    ("mean_s", Json::num(s.mean)),
+                    ("stddev_s", Json::num(s.stddev)),
+                    ("p50_s", Json::num(s.p50)),
+                    ("p95_s", Json::num(s.p95)),
+                    ("min_s", Json::num(s.min)),
+                ])
+            })),
+        ),
+        (
+            "legacy_vs_flat",
+            Json::arr(grid_rows.iter().map(|(name, t_legacy, t_flat, t_sparse)| {
+                Json::obj(vec![
+                    ("grid", Json::str(name)),
+                    ("legacy_s", Json::num(*t_legacy)),
+                    ("flat_dense_s", Json::num(*t_flat)),
+                    ("flat_sparse_s", Json::num(*t_sparse)),
+                    ("dense_speedup", Json::num(t_legacy / t_flat)),
+                    ("sparse_speedup", Json::num(t_legacy / t_sparse)),
+                ])
+            })),
+        ),
+        (
+            "thread_scaling",
+            Json::arr(scaling_rows.iter().map(|(name, pts)| {
+                Json::obj(vec![
+                    ("grid", Json::str(name)),
+                    ("threads", Json::arr(pts.iter().map(|&(t, _)| Json::num(t as f64)))),
+                    ("mean_s", Json::arr(pts.iter().map(|&(_, m)| Json::num(m)))),
+                    (
+                        "speedup_vs_t1",
+                        Json::arr(pts.iter().map(|&(_, m)| Json::num(pts[0].1 / m))),
+                    ),
+                ])
+            })),
+        ),
+    ]);
+    let json_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_hotpath.json");
+    match std::fs::write(&json_path, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote {}", json_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", json_path.display()),
     }
 }

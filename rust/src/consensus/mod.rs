@@ -10,6 +10,9 @@
 //! DESIGN.md §1 "data plane"); a gossip round is one pass of the blocked
 //! flat kernel [`MixMatrix::mix_into`] followed by an O(1) buffer flip —
 //! zero heap allocations after the first `run` sizes the scratch arena.
+//! Each round row-partitions its output across the worker pool
+//! (`util::pool`, DESIGN.md §1 "threading model") with per-row op order
+//! untouched, so results are bit-identical at any thread count.
 
 pub mod push_sum;
 pub mod sparse;

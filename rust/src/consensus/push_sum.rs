@@ -75,8 +75,23 @@ impl Digraph {
 /// live in flat [`NodeMatrixF64`] arenas (the f64-accumulation twin of
 /// the consensus message arena): rounds are allocation-free and flip
 /// the two buffers in O(1).
+///
+/// Rounds run in *gather* form over an in-edge CSR built once at
+/// construction: destination row j sums `share_i · x_i` over its
+/// in-neighbours (self included) in ascending-source order — the exact
+/// per-element op sequence of the textbook scatter loop (each source i,
+/// in ascending order, adds its share to every out-neighbour), so the
+/// rewrite is bit-identical (pinned by
+/// `tests::gather_round_matches_legacy_scatter_bitwise`).  Gather makes
+/// every destination row independent, so rounds row-partition across
+/// the worker pool like the averaging kernels.
 pub struct PushSum {
     g: Digraph,
+    /// In-edge CSR over destinations: row j's sources (ascending, self
+    /// included) and their shares 1/(1 + out_degree(source)).
+    in_ptr: Vec<usize>,
+    in_src: Vec<u32>,
+    in_share: Vec<f64>,
     /// values x_i (n × d arena)
     x: NodeMatrixF64,
     /// weights φ_i
@@ -98,8 +113,32 @@ impl PushSum {
                 *xv = v as f64;
             }
         }
+        // Build the in-edge lists by scanning sources in ascending order,
+        // so every destination's list is ascending by construction and
+        // gather accumulation replays the scatter loop's op order.
+        let mut in_lists: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for i in 0..n {
+            in_lists[i].push(i as u32); // self share
+            for &j in &g.out[i] {
+                in_lists[j].push(i as u32);
+            }
+        }
+        let mut in_ptr = Vec::with_capacity(n + 1);
+        let mut in_src = Vec::new();
+        let mut in_share = Vec::new();
+        in_ptr.push(0);
+        for list in &in_lists {
+            for &i in list {
+                in_src.push(i);
+                in_share.push(1.0 / (1.0 + g.out_degree(i as usize) as f64));
+            }
+            in_ptr.push(in_src.len());
+        }
         PushSum {
             g,
+            in_ptr,
+            in_src,
+            in_share,
             x,
             phi: vec![1.0; n],
             x_next: NodeMatrixF64::new(n, d),
@@ -107,25 +146,35 @@ impl PushSum {
         }
     }
 
-    /// One synchronous push-sum round.
+    /// One synchronous push-sum round (gather form, row-partitioned).
     pub fn round(&mut self) {
         let n = self.g.n();
-        self.x_next.fill(0.0);
-        self.phi_next.fill(0.0);
-        for i in 0..n {
-            let share = 1.0 / (1.0 + self.g.out_degree(i) as f64);
-            // to self
-            for (o, &v) in self.x_next.row_mut(i).iter_mut().zip(self.x.row(i)) {
-                *o += share * v;
-            }
-            self.phi_next[i] += share * self.phi[i];
-            // to out-neighbours
-            for &j in &self.g.out[i] {
-                for (o, &v) in self.x_next.row_mut(j).iter_mut().zip(self.x.row(i)) {
-                    *o += share * v;
+        let d = self.x.d();
+        let x = &self.x;
+        let (in_ptr, in_src, in_share) = (&self.in_ptr, &self.in_src, &self.in_share);
+        if d > 0 {
+            crate::util::pool::par_chunks(self.x_next.as_mut_slice(), d, |row0, block| {
+                let rows = block.len() / d;
+                for r in 0..rows {
+                    let j = row0 + r;
+                    let out_row = &mut block[r * d..(r + 1) * d];
+                    out_row.fill(0.0);
+                    for e in in_ptr[j]..in_ptr[j + 1] {
+                        let share = in_share[e];
+                        let xi = x.row(in_src[e] as usize);
+                        for (o, &v) in out_row.iter_mut().zip(xi) {
+                            *o += share * v;
+                        }
+                    }
                 }
-                self.phi_next[j] += share * self.phi[i];
+            });
+        }
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for e in in_ptr[j]..in_ptr[j + 1] {
+                acc += in_share[e] * self.phi[in_src[e] as usize];
             }
+            self.phi_next[j] = acc;
         }
         self.x.swap(&mut self.x_next);
         std::mem::swap(&mut self.phi, &mut self.phi_next);
@@ -254,5 +303,85 @@ mod tests {
         let ps = PushSum::new(Digraph::ring(2), &values);
         assert_eq!(ps.estimate(0), vec![2.0]);
         assert_eq!(ps.estimate(1), vec![4.0]);
+    }
+
+    /// The pre-pool scatter round, kept verbatim as the baseline for the
+    /// gather rewrite: each source i (ascending) splits its mass among
+    /// itself and its out-neighbours.
+    fn legacy_scatter_round(
+        g: &Digraph,
+        x: &NodeMatrixF64,
+        phi: &[f64],
+        x_next: &mut NodeMatrixF64,
+        phi_next: &mut [f64],
+    ) {
+        let n = g.n();
+        x_next.fill(0.0);
+        phi_next.fill(0.0);
+        for i in 0..n {
+            let share = 1.0 / (1.0 + g.out_degree(i) as f64);
+            for (o, &v) in x_next.row_mut(i).iter_mut().zip(x.row(i)) {
+                *o += share * v;
+            }
+            phi_next[i] += share * phi[i];
+            for &j in &g.out[i] {
+                for (o, &v) in x_next.row_mut(j).iter_mut().zip(x.row(i)) {
+                    *o += share * v;
+                }
+                phi_next[j] += share * phi[i];
+            }
+        }
+    }
+
+    /// Bitwise pin: the in-edge-CSR gather round must reproduce the
+    /// legacy scatter round EXACTLY — per destination element, adds
+    /// apply in ascending-source order in both forms, so row
+    /// partitioning over the pool cannot perturb any seeded run.
+    #[test]
+    fn gather_round_matches_legacy_scatter_bitwise() {
+        forall(15, 0x50_03, |g| {
+            let n = g.usize_in(2, 14);
+            let d = g.usize_in(1, 9);
+            let dg = Digraph::random_strongly_connected(n, 0.4, g.u64());
+            let values = random_values(g, n, d, 3.0);
+            let rounds = g.usize_in(1, 8);
+
+            let mut ps = PushSum::new(dg.clone(), &values);
+            ps.run(rounds);
+
+            // legacy: replay the same rounds with the scatter kernel
+            let mut x = NodeMatrixF64::new(n, d);
+            for i in 0..n {
+                for (xv, &v) in x.row_mut(i).iter_mut().zip(values.row(i)) {
+                    *xv = v as f64;
+                }
+            }
+            let mut phi = vec![1.0f64; n];
+            let mut x_next = NodeMatrixF64::new(n, d);
+            let mut phi_next = vec![0.0f64; n];
+            for _ in 0..rounds {
+                legacy_scatter_round(&dg, &x, &phi, &mut x_next, &mut phi_next);
+                x.swap(&mut x_next);
+                std::mem::swap(&mut phi, &mut phi_next);
+            }
+
+            for i in 0..n {
+                crate::prop_assert!(
+                    ps.phi[i].to_bits() == phi[i].to_bits(),
+                    "phi[{i}]: gather={} scatter={}",
+                    ps.phi[i],
+                    phi[i]
+                );
+                for k in 0..d {
+                    crate::prop_assert!(
+                        ps.x.row(i)[k].to_bits() == x.row(i)[k].to_bits(),
+                        "x[{i}][{k}]: gather={} scatter={}",
+                        ps.x.row(i)[k],
+                        x.row(i)[k]
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -62,18 +62,34 @@ impl SparseMix {
 
     /// One round: out.row(i) = w_ii·msgs.row(i) + Σ_{j∈N(i)} w_ij·msgs.row(j),
     /// tiled over the d axis with the same fused tile kernel as the
-    /// dense engine ([`accumulate_row_tile`]).
+    /// dense engine ([`accumulate_row_tile`]).  Row-partitioned across
+    /// the worker pool like the dense kernel: disjoint output blocks,
+    /// shared read-only source arena, per-row op order untouched — so
+    /// pooled rounds are bit-identical to serial ones.
     pub fn mix_into(&self, msgs: &NodeMatrix, out: &mut NodeMatrix) {
         assert_eq!(msgs.n(), self.n);
         assert_eq!(out.n(), self.n);
         assert_eq!(msgs.d(), out.d());
         let d = msgs.d();
+        if d == 0 {
+            return;
+        }
+        crate::util::pool::par_chunks(out.as_mut_slice(), d, |row0, block| {
+            self.mix_rows(msgs, row0, block);
+        });
+    }
+
+    /// Serial kernel over one contiguous block of output rows.
+    fn mix_rows(&self, msgs: &NodeMatrix, row0: usize, block: &mut [f32]) {
+        let d = msgs.d();
+        let rows = block.len() / d;
         let mut k0 = 0usize;
         loop {
             let k1 = (k0 + MixMatrix::MIX_TILE).min(d);
-            for i in 0..self.n {
+            for r in 0..rows {
+                let i = row0 + r;
                 let wi = self.self_w[i];
-                let ot = &mut out.row_mut(i)[k0..k1];
+                let ot = &mut block[r * d + k0..r * d + k1];
                 for (o, &m) in ot.iter_mut().zip(&msgs.row(i)[k0..k1]) {
                     *o = wi * m;
                 }

@@ -13,6 +13,24 @@
 //!   consensus m_i⁽⁰⁾ = n·(b_i·z_i + grad_sum_i)  [+ scalar n·b_i channel]
 //!             r rounds of m ← P m  (or exact averaging)
 //!   update    z_i(t+1) = m_i⁽ʳ⁾ / b̂(t);  w_i(t+1) = argmin ⟨w,z⟩+βh(w)
+//!
+//! ## Execution (DESIGN.md §1 "threading model")
+//!
+//! Per-node work is independent within each phase (canonical per-(node,
+//! epoch) RNG streams from [`epoch`]), so the epoch loop fans the
+//! compute and update phases out across the worker pool
+//! ([`crate::util::pool`]): each pool worker owns a CONTIGUOUS block of
+//! nodes and builds its nodes' engines itself via the `Send + Sync`
+//! factory (engines need not be `Send`; PJRT clients are thread-local).
+//! The main thread keeps everything order-sensitive — straggler draws,
+//! the consensus kernels (themselves row-partitioned), record keeping —
+//! and exchanges per-phase messages with workers over mpsc channels.
+//! Per-node values are identical at any thread count (same inputs, same
+//! RNG streams, same op order), and the main thread folds them in node
+//! order, so `threads = 1` and `threads = k` runs are BIT-IDENTICAL
+//! (`tests/parallel_determinism.rs`).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::consensus::Consensus;
 use crate::coordinator::epoch::{self, NodeState};
@@ -24,6 +42,8 @@ use crate::metrics::{EpochStats, RunRecord};
 use crate::straggler::StragglerModel;
 use crate::topology::Topology;
 use crate::util::matrix::NodeMatrix;
+use crate::util::pool;
+use crate::util::rng::Pcg64;
 
 /// Largest gossip-round budget the simulator will execute literally;
 /// anything above is assumed to be the threaded runtime's "as many
@@ -57,6 +77,369 @@ impl Runtime for SimRuntime<'_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Node-block executors: the per-node half of the epoch state machine,
+// either inline (serial) or on pool workers (parallel).  Both produce
+// bit-identical per-node values; the epoch loop is written once against
+// this trait so the two paths cannot drift apart.
+// ---------------------------------------------------------------------------
+
+/// Compute phase over one contiguous node block `[lo, lo + k)`: per node
+/// (ascending) `begin_epoch`, one attributed `grad_chunk` on the
+/// canonical `data_rng(seed, node, epoch)` stream, then encode m⁽⁰⁾ into
+/// the node's `dim + 1`-wide slot of `rows` (the block's slice of the
+/// wire arena, or a worker-local staging buffer).  Returns the block's
+/// loss sums in node order.  This ONE function is the compute loop of
+/// both executors, so the serial and pooled paths cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+fn compute_block(
+    engines: &mut [Box<dyn ExecEngine>],
+    states: &mut [NodeState],
+    lo: usize,
+    n_total: usize,
+    seed: u64,
+    epoch: usize,
+    batches: &[usize],
+    rows: &mut [f32],
+) -> Vec<f64> {
+    let k = engines.len();
+    let width = states[0].dim() + 1;
+    debug_assert_eq!(batches.len(), k);
+    debug_assert_eq!(rows.len(), k * width);
+    let mut losses = Vec::with_capacity(k);
+    for li in 0..k {
+        let st = &mut states[li];
+        st.begin_epoch();
+        let mut data_rng = epoch::data_rng(seed, lo + li, epoch);
+        losses.push(engines[li].grad_chunk(&st.w, batches[li], &mut data_rng, &mut st.grad_sum));
+        st.encode_into(n_total, batches[li], &mut rows[li * width..(li + 1) * width]);
+    }
+    losses
+}
+
+/// Update phase over one contiguous node block: z ← m/b̂, w ← primal.
+/// `rows` holds the block's post-consensus messages, `dim + 1` wide each.
+fn update_block(
+    engines: &mut [Box<dyn ExecEngine>],
+    states: &mut [NodeState],
+    t_next: usize,
+    rows: &[f32],
+    b_hats: &[f32],
+) {
+    let width = states[0].dim() + 1;
+    for li in 0..engines.len() {
+        states[li].set_dual(&rows[li * width..(li + 1) * width], b_hats[li]);
+        states[li].primal(&mut *engines[li], t_next);
+    }
+}
+
+/// Copy a block's primal variables into a flat `[k × dim]` buffer.
+fn write_primals(states: &[NodeState], dim: usize, out: &mut [f32]) {
+    for (li, s) in states.iter().enumerate() {
+        out[li * dim..(li + 1) * dim].copy_from_slice(&s.w);
+    }
+}
+
+/// Build one node block's engines + states (the factory runs on the
+/// CALLING thread) and return them with the shared workload dimension.
+/// Shared by the serial executor and the pool workers so engine setup
+/// cannot drift between the paths.
+fn build_block(
+    range: std::ops::Range<usize>,
+    make_engine: EngineFactory<'_>,
+) -> (Vec<Box<dyn ExecEngine>>, Vec<NodeState>, usize) {
+    let engines: Vec<Box<dyn ExecEngine>> = range.map(make_engine).collect();
+    let dim = engines[0].workload().dim();
+    for e in &engines {
+        assert_eq!(e.workload().dim(), dim, "engines must share a workload");
+    }
+    let states = engines.iter().map(|e| NodeState::new(&**e)).collect();
+    (engines, states, dim)
+}
+
+trait NodeBlocks {
+    fn dim(&self) -> usize;
+
+    /// Compute phase for every node i (ascending): `begin_epoch`, one
+    /// attributed `grad_chunk` on the canonical `data_rng(seed, i, t)`
+    /// stream, then encode m_i⁽⁰⁾ into `msgs.row(i)`.  Returns the
+    /// per-node loss sums in node order.
+    fn compute_and_encode(
+        &mut self,
+        epoch: usize,
+        batches: &[usize],
+        msgs: &mut NodeMatrix,
+    ) -> Vec<f64>;
+
+    /// Update phase: when `do_update`, z_i ← msgs.row(i)/b̂_i and
+    /// w_i ← primal(t_next) for every node; always returns node 0's
+    /// error metric on its (possibly carried-over) primal, drawn from
+    /// the run-long sequential `metric_rng(seed, 0)` stream.
+    fn update_and_error(
+        &mut self,
+        t_next: usize,
+        msgs: &NodeMatrix,
+        b_hats: &[f32],
+        do_update: bool,
+    ) -> f64;
+
+    /// Final primal arena (one row per node).
+    fn final_w(&mut self) -> NodeMatrix;
+}
+
+/// Serial executor: all engines and states on the calling thread — the
+/// reference path (`--threads 1`).
+struct SerialBlocks {
+    seed: u64,
+    dim: usize,
+    engines: Vec<Box<dyn ExecEngine>>,
+    states: Vec<NodeState>,
+    metric_rng: Pcg64,
+}
+
+impl SerialBlocks {
+    fn new(n: usize, make_engine: EngineFactory<'_>, seed: u64) -> SerialBlocks {
+        let (engines, states, dim) = build_block(0..n, make_engine);
+        SerialBlocks { seed, dim, engines, states, metric_rng: epoch::metric_rng(seed, 0) }
+    }
+}
+
+impl NodeBlocks for SerialBlocks {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn compute_and_encode(
+        &mut self,
+        epoch: usize,
+        batches: &[usize],
+        msgs: &mut NodeMatrix,
+    ) -> Vec<f64> {
+        // The full arena is one contiguous block covering nodes 0..n.
+        let n = self.engines.len();
+        compute_block(
+            &mut self.engines,
+            &mut self.states,
+            0,
+            n,
+            self.seed,
+            epoch,
+            batches,
+            msgs.as_mut_slice(),
+        )
+    }
+
+    fn update_and_error(
+        &mut self,
+        t_next: usize,
+        msgs: &NodeMatrix,
+        b_hats: &[f32],
+        do_update: bool,
+    ) -> f64 {
+        if do_update {
+            update_block(&mut self.engines, &mut self.states, t_next, msgs.as_slice(), b_hats);
+        }
+        self.engines[0].error_metric(&self.states[0].w, &mut self.metric_rng)
+    }
+
+    fn final_w(&mut self) -> NodeMatrix {
+        let mut final_w = NodeMatrix::new(self.states.len(), self.dim);
+        write_primals(&self.states, self.dim, final_w.as_mut_slice());
+        final_w
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pooled executor: contiguous node blocks on run-long pool workers
+// ---------------------------------------------------------------------------
+
+/// One phase command to a worker (payloads are the worker's own nodes,
+/// in node order).
+enum Cmd {
+    Compute { epoch: usize, batches: Vec<usize> },
+    Update { t_next: usize, rows: Vec<f32>, b_hats: Vec<f32>, do_update: bool },
+    Finish,
+}
+
+/// A worker's phase result.
+enum Reply {
+    Ready { dim: usize },
+    Computed { worker: usize, losses: Vec<f64>, rows: Vec<f32> },
+    Updated { worker: usize, error: f64 },
+    Finished { worker: usize, w_rows: Vec<f32> },
+}
+
+/// Main-thread handle to the worker set.  Dropping it disconnects the
+/// command channels, so workers exit even when the epoch loop unwinds.
+struct PooledBlocks {
+    n: usize,
+    dim: usize,
+    /// Node range `[lo, hi)` per worker; worker 0 owns node 0.
+    spans: Vec<(usize, usize)>,
+    cmd_txs: Vec<Sender<Cmd>>,
+    reply_rx: Receiver<Reply>,
+}
+
+impl PooledBlocks {
+    fn send(&self, worker: usize, cmd: Cmd) {
+        self.cmd_txs[worker].send(cmd).expect("sim pool worker exited early");
+    }
+
+    fn recv(&self) -> Reply {
+        self.reply_rx.recv().expect("sim pool worker died")
+    }
+}
+
+impl NodeBlocks for PooledBlocks {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn compute_and_encode(
+        &mut self,
+        epoch: usize,
+        batches: &[usize],
+        msgs: &mut NodeMatrix,
+    ) -> Vec<f64> {
+        for (w, &(lo, hi)) in self.spans.iter().enumerate() {
+            self.send(w, Cmd::Compute { epoch, batches: batches[lo..hi].to_vec() });
+        }
+        let width = self.dim + 1;
+        let mut losses = vec![0.0f64; self.n];
+        for _ in 0..self.spans.len() {
+            match self.recv() {
+                Reply::Computed { worker, losses: ls, rows } => {
+                    let (lo, hi) = self.spans[worker];
+                    // block rows are contiguous in the arena
+                    msgs.as_mut_slice()[lo * width..hi * width].copy_from_slice(&rows);
+                    losses[lo..hi].copy_from_slice(&ls);
+                }
+                _ => unreachable!("sim pool protocol violation (expected Computed)"),
+            }
+        }
+        losses
+    }
+
+    fn update_and_error(
+        &mut self,
+        t_next: usize,
+        msgs: &NodeMatrix,
+        b_hats: &[f32],
+        do_update: bool,
+    ) -> f64 {
+        let width = self.dim + 1;
+        for (w, &(lo, hi)) in self.spans.iter().enumerate() {
+            let (rows, bh) = if do_update {
+                (msgs.as_slice()[lo * width..hi * width].to_vec(), b_hats[lo..hi].to_vec())
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            self.send(w, Cmd::Update { t_next, rows, b_hats: bh, do_update });
+        }
+        let mut error = f64::NAN;
+        for _ in 0..self.spans.len() {
+            match self.recv() {
+                Reply::Updated { worker, error: e } => {
+                    if worker == 0 {
+                        error = e;
+                    }
+                }
+                _ => unreachable!("sim pool protocol violation (expected Updated)"),
+            }
+        }
+        error
+    }
+
+    fn final_w(&mut self) -> NodeMatrix {
+        for w in 0..self.spans.len() {
+            self.send(w, Cmd::Finish);
+        }
+        let mut final_w = NodeMatrix::new(self.n, self.dim);
+        for _ in 0..self.spans.len() {
+            match self.recv() {
+                Reply::Finished { worker, w_rows } => {
+                    let (lo, hi) = self.spans[worker];
+                    final_w.as_mut_slice()[lo * self.dim..hi * self.dim]
+                        .copy_from_slice(&w_rows);
+                }
+                _ => unreachable!("sim pool protocol violation (expected Finished)"),
+            }
+        }
+        final_w
+    }
+}
+
+/// Everything a pool worker needs (grouping keeps the spawn site sane,
+/// like the threaded runtime's `NodeCtx`).
+struct WorkerCtx {
+    worker: usize,
+    /// Owned node range `[lo, hi)`.
+    lo: usize,
+    hi: usize,
+    n_total: usize,
+    seed: u64,
+    rx: Receiver<Cmd>,
+    tx: Sender<Reply>,
+}
+
+/// Worker body: build this block's engines (factory runs on THIS
+/// thread, like the threaded runtime's node threads), then serve phase
+/// commands until the channel disconnects.
+fn sim_worker(ctx: WorkerCtx, make_engine: EngineFactory<'_>) {
+    let WorkerCtx { worker, lo, hi, n_total, seed, rx, tx } = ctx;
+    // Nested pool calls from engine code must not multiply threads.
+    crate::util::pool::mark_pool_worker();
+    let (mut engines, mut states, dim) = build_block(lo..hi, make_engine);
+    // The run-long sequential metric stream lives with node 0's owner.
+    let mut metric_rng = (worker == 0).then(|| epoch::metric_rng(seed, 0));
+    if tx.send(Reply::Ready { dim }).is_err() {
+        return;
+    }
+    let width = dim + 1;
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Compute { epoch, batches } => {
+                let mut rows = vec![0.0f32; (hi - lo) * width];
+                let losses = compute_block(
+                    &mut engines,
+                    &mut states,
+                    lo,
+                    n_total,
+                    seed,
+                    epoch,
+                    &batches,
+                    &mut rows,
+                );
+                if tx.send(Reply::Computed { worker, losses, rows }).is_err() {
+                    break;
+                }
+            }
+            Cmd::Update { t_next, rows, b_hats, do_update } => {
+                if do_update {
+                    update_block(&mut engines, &mut states, t_next, &rows, &b_hats);
+                }
+                let error = match metric_rng.as_mut() {
+                    Some(rng) => engines[0].error_metric(&states[0].w, rng),
+                    None => f64::NAN,
+                };
+                if tx.send(Reply::Updated { worker, error }).is_err() {
+                    break;
+                }
+            }
+            Cmd::Finish => {
+                let mut w_rows = vec![0.0f32; (hi - lo) * dim];
+                write_primals(&states, dim, &mut w_rows);
+                let _ = tx.send(Reply::Finished { worker, w_rows });
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The epoch loop (shared by both executors) and the entry point
+// ---------------------------------------------------------------------------
+
 fn run_sim(
     spec: &RunSpec,
     topo: &Topology,
@@ -65,25 +448,81 @@ fn run_sim(
     f_star: Option<f64>,
 ) -> RunOutput {
     let n = topo.n();
-    let mut engines: Vec<Box<dyn ExecEngine>> = (0..n).map(make_engine).collect();
-    let dim = engines[0].workload().dim();
-    for e in &engines {
-        assert_eq!(e.workload().dim(), dim, "engines must share a workload");
+    let threads = pool::current_threads().min(n);
+    if threads <= 1 {
+        let mut nodes = SerialBlocks::new(n, make_engine, spec.seed);
+        return epoch_loop(spec, topo, straggler, f_star, &mut nodes);
     }
+    std::thread::scope(|scope| {
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut cmd_txs = Vec::with_capacity(threads);
+        let mut spans = Vec::with_capacity(threads);
+        let base = n / threads;
+        let extra = n % threads;
+        let mut lo = 0usize;
+        for w in 0..threads {
+            let hi = lo + base + usize::from(w < extra);
+            spans.push((lo, hi));
+            let (tx, rx) = channel::<Cmd>();
+            cmd_txs.push(tx);
+            let ctx = WorkerCtx {
+                worker: w,
+                lo,
+                hi,
+                n_total: n,
+                seed: spec.seed,
+                rx,
+                tx: reply_tx.clone(),
+            };
+            scope.spawn(move || sim_worker(ctx, make_engine));
+            lo = hi;
+        }
+        drop(reply_tx);
+        let mut dim: Option<usize> = None;
+        for _ in 0..threads {
+            match reply_rx.recv().expect("sim pool worker died during engine construction") {
+                Reply::Ready { dim: d } => match dim {
+                    None => dim = Some(d),
+                    Some(dd) => assert_eq!(dd, d, "engines must share a workload"),
+                },
+                _ => unreachable!("sim pool protocol violation (expected Ready)"),
+            }
+        }
+        let mut nodes = PooledBlocks {
+            n,
+            dim: dim.expect("at least one worker"),
+            spans,
+            cmd_txs,
+            reply_rx,
+        };
+        epoch_loop(spec, topo, straggler, f_star, &mut nodes)
+        // `nodes` drops here: command channels disconnect, workers exit,
+        // the scope joins them.
+    })
+}
+
+fn epoch_loop<B: NodeBlocks>(
+    spec: &RunSpec,
+    topo: &Topology,
+    straggler: &dyn StragglerModel,
+    f_star: Option<f64>,
+    nodes: &mut B,
+) -> RunOutput {
+    let n = topo.n();
+    let dim = nodes.dim();
 
     // Canonical per-purpose RNG streams (shared with the threaded
     // runtime so one spec replays the same data everywhere).
     let mut strag_rng = epoch::straggler_rng(spec.seed);
-    let mut metric_rng = epoch::metric_rng(spec.seed, 0);
 
     // Consensus machinery (lazy P for the PSD assumption; see topology.rs).
     let mut cons = Consensus::new(topo.metropolis().lazy());
 
-    let mut states: Vec<NodeState> = engines.iter().map(|e| NodeState::new(&**e)).collect();
     // The consensus wire: one flat [n × (dim+1)] arena, encoded/decoded
     // in place every epoch (no per-node buffers, no per-epoch allocation).
     let mut msgs = NodeMatrix::new(n, dim + 1);
     let mut rounds_buf = vec![0usize; n];
+    let mut b_hats = vec![0.0f32; n];
 
     let mut record = RunRecord::new(&spec.name, f_star);
     let mut node_log = spec.record_node_log.then(|| NodeLog::new(n));
@@ -96,19 +535,14 @@ fn run_sim(
         let b_t: usize = plan.batches.iter().sum();
         let c_t: usize = plan.potentials.iter().sum();
 
+        let losses = nodes.compute_and_encode(t, &plan.batches, &mut msgs);
+        // fold in node order — the serial accumulation sequence
         let mut loss_sum = 0.0f64;
-        for i in 0..n {
-            let st = &mut states[i];
-            st.begin_epoch();
-            let mut data_rng = epoch::data_rng(spec.seed, i, t);
-            loss_sum +=
-                engines[i].grad_chunk(&st.w, plan.batches[i], &mut data_rng, &mut st.grad_sum);
+        for &l in &losses {
+            loss_sum += l;
         }
 
         // ---- consensus phase ------------------------------------------------
-        for i in 0..n {
-            states[i].encode_into(n, plan.batches[i], msgs.row_mut(i));
-        }
         let exact_avg =
             Consensus::exact_average(&msgs).expect("topology guarantees n > 0 nodes");
         match spec.consensus {
@@ -149,19 +583,19 @@ fn run_sim(
         wall += plan.epoch_compute_time + spec.scheme.t_consensus();
 
         let mut consensus_err = 0.0f64;
-        if b_t > 0 {
+        let do_update = b_t > 0;
+        if do_update {
             consensus_err = epoch::consensus_error(&msgs, &exact_avg, dim, b_t, spec.exact_bt);
             for i in 0..n {
-                let b_hat = if spec.exact_bt {
+                b_hats[i] = if spec.exact_bt {
                     b_t as f32
                 } else {
                     epoch::side_channel_b_hat(msgs.row(i))
                 };
-                states[i].set_dual(msgs.row(i), b_hat);
-                states[i].primal(&mut *engines[i], t + 1);
             }
         }
         // (if b_t == 0 the epoch produced nothing; state carries over)
+        let error = nodes.update_and_error(t + 1, &msgs, &b_hats, do_update);
 
         if let Some(log) = node_log.as_mut() {
             for i in 0..n {
@@ -169,7 +603,6 @@ fn run_sim(
             }
         }
 
-        let error = engines[0].error_metric(&states[0].w, &mut metric_rng);
         record.push(EpochStats {
             epoch: t,
             wall_time: wall,
@@ -183,11 +616,7 @@ fn run_sim(
         });
     }
 
-    let mut final_w = NodeMatrix::new(n, dim);
-    for (i, s) in states.iter().enumerate() {
-        final_w.row_mut(i).copy_from_slice(&s.w);
-    }
-    RunOutput { record, node_log, final_w, rounds: rounds_log }
+    RunOutput { record, node_log, final_w: nodes.final_w(), rounds: rounds_log }
 }
 
 #[cfg(test)]

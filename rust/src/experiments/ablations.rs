@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use super::{Ctx, FigReport};
+use super::{sweep, Ctx, FigReport};
 use crate::consensus::{push_sum::Digraph, push_sum::PushSum, sparse::SparseMix, Consensus};
 use crate::coordinator::{RunSpec, Scheme};
 use crate::metrics::RunRecord;
@@ -29,11 +29,17 @@ pub fn ablate_rounds(ctx: &Ctx) -> Result<FigReport> {
     let opt = super::optimizer_for(&source, 6000.0);
     let epochs = ctx.scaled(16);
 
+    let round_grid = [1usize, 2, 5, 10, 20, 50];
+    let specs: Vec<RunSpec> = round_grid
+        .iter()
+        .map(|&r| RunSpec::amb(&format!("amb-r{r}"), 2.5, 0.5, r, epochs, ctx.seed))
+        .collect();
+    let outs = sweep::run_specs(ctx, &topo, &strag, &source, &opt, &specs)?;
+
     let mut csv = Csv::new(&["rounds", "final_error", "mean_consensus_err"]);
     let mut errs = Vec::new();
-    for rounds in [1usize, 2, 5, 10, 20, 50] {
-        let spec = RunSpec::amb(&format!("amb-r{rounds}"), 2.5, 0.5, rounds, epochs, ctx.seed);
-        let rec = ctx.run(&spec, &topo, &strag, &source, &opt)?.record;
+    for (&rounds, out) in round_grid.iter().zip(&outs) {
+        let rec = &out.record;
         let final_err = rec.epochs.last().unwrap().error;
         let cons: f64 =
             rec.epochs.iter().map(|e| e.consensus_err).sum::<f64>() / rec.epochs.len() as f64;
@@ -192,12 +198,19 @@ pub fn ablate_baselines(ctx: &Ctx) -> Result<FigReport> {
             Scheme::FmbBackup { per_node_batch: 585, t_consensus: 3.0, ignore: 2, coded: true },
         ),
     ];
+    let specs: Vec<RunSpec> = schemes
+        .iter()
+        .map(|(name, scheme)| {
+            RunSpec::new(name, *scheme, epochs, ctx.seed)
+                .with_consensus(crate::coordinator::ConsensusMode::Gossip { rounds: 5 })
+        })
+        .collect();
+    let outs = sweep::run_specs(ctx, &topo, &strag, &source, &opt, &specs)?;
+
     let mut csv = Csv::new(&["scheme", "total_time", "total_samples", "final_error"]);
     let mut recs = Vec::new();
-    for (name, scheme) in schemes {
-        let spec = RunSpec::new(name, scheme, epochs, ctx.seed)
-            .with_consensus(crate::coordinator::ConsensusMode::Gossip { rounds: 5 });
-        let rec = ctx.run(&spec, &topo, &strag, &source, &opt)?.record;
+    for ((name, _), out) in schemes.iter().zip(outs) {
+        let rec = out.record;
         csv.push(&[
             name.to_string(),
             format!("{:.1}", rec.total_time()),
@@ -247,12 +260,23 @@ pub fn ablate_topology(ctx: &Ctx) -> Result<FigReport> {
         ("erdos_p0.4", Topology::erdos_connected(10, 0.4, 3)),
         ("complete", Topology::complete(10)),
     ];
+    // Topology varies per item, so this grid goes through the generic
+    // sweep (serial on the real-time threaded runtime).
+    let measured = sweep::sweep_if(
+        ctx.runtime != crate::coordinator::RuntimeKind::Threaded,
+        topos.len(),
+        |idx| {
+            let (name, topo) = &topos[idx];
+            let l2 = topo.metropolis().lazy().lambda2();
+            let spec = RunSpec::amb(name, 2.0, 0.5, 5, epochs, ctx.seed);
+            let rec = ctx.run(&spec, topo, &strag, &source, &opt)?.record;
+            Ok((l2, rec))
+        },
+    )?;
+
     let mut csv = Csv::new(&["topology", "lambda2", "mean_consensus_err", "final_error"]);
     let mut rows = Vec::new();
-    for (name, topo) in &topos {
-        let l2 = topo.metropolis().lazy().lambda2();
-        let spec = RunSpec::amb(name, 2.0, 0.5, 5, epochs, ctx.seed);
-        let rec = ctx.run(&spec, topo, &strag, &source, &opt)?.record;
+    for ((name, _), (l2, rec)) in topos.iter().zip(&measured) {
         let cons: f64 =
             rec.epochs.iter().map(|e| e.consensus_err).sum::<f64>() / rec.epochs.len() as f64;
         csv.push(&[
@@ -261,7 +285,7 @@ pub fn ablate_topology(ctx: &Ctx) -> Result<FigReport> {
             format!("{cons:.4e}"),
             format!("{:.4e}", rec.epochs.last().unwrap().error),
         ]);
-        rows.push((l2, cons));
+        rows.push((*l2, cons));
     }
     let path = ctx.out_dir.join("ablation_topology.csv");
     csv.save(&path)?;

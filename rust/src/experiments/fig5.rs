@@ -7,9 +7,8 @@
 
 use anyhow::Result;
 
-use super::{Ctx, FigReport};
+use super::{sweep, Ctx, FigReport};
 use crate::coordinator::{ConsensusMode, RunSpec};
-use crate::metrics::RunRecord;
 use crate::straggler::ShiftedExp;
 use crate::topology::Topology;
 
@@ -20,7 +19,7 @@ pub fn fig5(ctx: &Ctx) -> Result<FigReport> {
     let epochs = ctx.scaled(20);
     let opt = super::optimizer_for(&source, 12_000.0);
 
-    let run_one = |name: &str, amb: bool, exact: bool| -> Result<RunRecord> {
+    let mk_spec = |name: &str, amb: bool, exact: bool| -> RunSpec {
         let mut spec = if amb {
             RunSpec::amb(name, 2.5, 0.5, 5, epochs, ctx.seed)
         } else {
@@ -29,13 +28,23 @@ pub fn fig5(ctx: &Ctx) -> Result<FigReport> {
         if exact {
             spec = spec.with_consensus(ConsensusMode::Exact);
         }
-        Ok(ctx.run(&spec, &topo, &strag, &source, &opt)?.record)
+        spec
     };
 
-    let amb_r5 = run_one("amb-r5", true, false)?;
-    let amb_inf = run_one("amb-rinf", true, true)?;
-    let fmb_r5 = run_one("fmb-r5", false, false)?;
-    let fmb_inf = run_one("fmb-rinf", false, true)?;
+    // The consensus grid runs concurrently on the pool; outputs come
+    // back in spec order.
+    let specs = [
+        mk_spec("amb-r5", true, false),
+        mk_spec("amb-rinf", true, true),
+        mk_spec("fmb-r5", false, false),
+        mk_spec("fmb-rinf", false, true),
+    ];
+    let mut outs =
+        sweep::run_specs(ctx, &topo, &strag, &source, &opt, &specs)?.into_iter();
+    let amb_r5 = outs.next().unwrap().record;
+    let amb_inf = outs.next().unwrap().record;
+    let fmb_r5 = outs.next().unwrap().record;
+    let fmb_inf = outs.next().unwrap().record;
 
     let mut outputs = Vec::new();
     for rec in [&amb_r5, &amb_inf, &fmb_r5, &fmb_inf] {

@@ -12,6 +12,12 @@
 //! on the real threaded cluster (straggler models map to per-node
 //! slowdown factors via
 //! [`crate::straggler::StragglerModel::slowdown_factors`]).
+//!
+//! Grids of independent specs (fig5's consensus grid, the ablation
+//! grids, thm7's speedup curve) run concurrently on the worker pool via
+//! the [`sweep`] driver — results stay in spec order, and threaded
+//! (real-time) grids stay serial so runs can't perturb each other's
+//! deadlines.
 
 pub mod ablations;
 pub mod fig1;
@@ -21,6 +27,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod sweep;
 pub mod thm7;
 
 use std::path::{Path, PathBuf};

@@ -1,0 +1,114 @@
+//! Concurrent sweep driver: run independent experiment items on the
+//! shared worker pool instead of back-to-back.
+//!
+//! Figure harnesses are grids of independent [`RunSpec`]s — fig5's
+//! consensus grid, the ablation grids, thm7's per-n speedup curves —
+//! and each item is deterministic given its spec (DESIGN.md §5), so
+//! running them concurrently changes nothing but wall-clock time.
+//! Results always come back **in item order**, whatever order workers
+//! finish in ([`crate::util::pool::par_indexed`] places each result in
+//! its input slot).
+//!
+//! Two guards keep sweeps honest:
+//!
+//! * items running on pool workers see a serial pool
+//!   (`pool::current_threads() == 1` inside a worker), so an inner
+//!   simulation never multiplies thread counts under the sweep;
+//! * [`run_specs`] refuses to parallelise *threaded-runtime* items —
+//!   those measure real wall clock, and concurrent runs would perturb
+//!   each other's deadlines.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::{RunOutput, RunSpec, RuntimeKind};
+use crate::exec::DataSource;
+use crate::optim::DualAveraging;
+use crate::straggler::StragglerModel;
+use crate::topology::Topology;
+use crate::util::pool;
+
+/// Run `f(0), …, f(count − 1)` on the pool; results in item order, first
+/// error wins.  `f` must be independent across items (no shared mutable
+/// state) — everything it borrows is shared read-only across workers.
+pub fn sweep<T, F>(count: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    pool::par_indexed(count, f).into_iter().collect()
+}
+
+/// [`sweep`], with a switch for callers that must sometimes stay serial
+/// (e.g. grids that may run on the real-time threaded runtime).
+pub fn sweep_if<T, F>(parallel: bool, count: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    if parallel {
+        sweep(count, f)
+    } else {
+        (0..count).map(f).collect()
+    }
+}
+
+/// Execute a grid of [`RunSpec`]s over one (topology, straggler,
+/// workload) through [`Ctx::run`], concurrently on the simulator and
+/// serially on the threaded runtime (real deadlines must not contend).
+/// Outputs are in spec order.
+pub fn run_specs(
+    ctx: &Ctx,
+    topo: &Topology,
+    straggler: &dyn StragglerModel,
+    source: &Arc<DataSource>,
+    optimizer: &DualAveraging,
+    specs: &[RunSpec],
+) -> Result<Vec<RunOutput>> {
+    sweep_if(ctx.runtime != RuntimeKind::Threaded, specs.len(), |i| {
+        ctx.run(&specs[i], topo, straggler, source, optimizer)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::straggler::Deterministic;
+    use std::path::Path;
+
+    #[test]
+    fn sweep_keeps_item_order_and_propagates_errors() {
+        let out = sweep(6, |i| Ok(i * i)).unwrap();
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25]);
+        let err = sweep(4, |i| {
+            if i == 2 {
+                anyhow::bail!("item {i} failed")
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn run_specs_returns_outputs_in_spec_order() {
+        let topo = Topology::ring(4);
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 30 };
+        let source = crate::experiments::linreg_source(3);
+        let opt = crate::experiments::optimizer_for(&source, 400.0);
+        let ctx = Ctx::native(Path::new("/tmp/amb_sweep_test"));
+        // different epoch counts => different work per item
+        let specs: Vec<RunSpec> = [5usize, 2, 4, 3]
+            .iter()
+            .map(|&e| RunSpec::amb(&format!("sw-{e}"), 1.0, 0.2, 3, e, 7))
+            .collect();
+        let outs = run_specs(&ctx, &topo, &strag, &source, &opt, &specs).unwrap();
+        assert_eq!(outs.len(), specs.len());
+        for (spec, out) in specs.iter().zip(&outs) {
+            assert_eq!(out.record.name, spec.name, "sweep reordered results");
+            assert_eq!(out.record.epochs.len(), spec.epochs);
+        }
+    }
+}

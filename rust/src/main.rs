@@ -31,6 +31,17 @@ use anytime_mb::ThreadedRuntime;
 
 fn main() -> ExitCode {
     let args = Args::from_env();
+    // Pool sizing first: `--threads N` beats AMB_THREADS beats detected
+    // cores (util::pool), and applies to every subcommand (`run` and
+    // `figures` are the documented consumers).
+    match anytime_mb::util::cli::threads_arg(&args) {
+        Ok(Some(t)) => anytime_mb::util::pool::set_threads(t),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    }
     let res = match args.subcommand() {
         Some("figures") => cmd_figures(&args),
         Some("ablations") => cmd_ablations(&args),
@@ -58,18 +69,22 @@ fn print_usage() {
          usage: amb <figures|ablations|run|train|info> [options]\n\
          \n\
          figures --fig <id|all> [--out-dir results] [--pjrt] [--quick] [--seed N]\n\
-         \u{20}       [--runtime sim|threaded] [--time-scale S]\n\
+         \u{20}       [--runtime sim|threaded] [--time-scale S] [--threads N]\n\
          run     --scheme <amb|fmb|fmb-backup|fmb-coded> --workload <linreg|logreg>\n\
          \u{20}       [--runtime sim|threaded] [--nodes N] [--epochs N]\n\
          \u{20}       [--t-compute S] [--t-consensus S] [--rounds R] [--exact-consensus]\n\
          \u{20}       [--per-node-batch B] [--ignore K]\n\
          \u{20}       [--straggler <shiftedexp|induced|pause|none>]\n\
          \u{20}       [--grad-chunk C] [--slowdown f1,f2,...] [--time-scale S]\n\
-         \u{20}       [--pjrt] [--seed N] [--out FILE.csv]\n\
+         \u{20}       [--pjrt] [--seed N] [--threads N] [--out FILE.csv]\n\
          train   [--workload <transformer|linreg>] [--nodes N] [--epochs N]\n\
          \u{20}       [--t-compute S] [--t-consensus S] [--grad-chunk C]\n\
          \u{20}       [--slowdown f1,f2,...] [--artifacts DIR] [--out FILE.csv]\n\
-         info    [--artifacts DIR]"
+         info    [--artifacts DIR]\n\
+         \n\
+         --threads N sizes the worker pool (sim epoch fan-out, consensus\n\
+         kernels, figure sweeps); precedence: --threads > AMB_THREADS >\n\
+         detected cores.  Results are bit-identical at any thread count."
     );
 }
 

@@ -384,17 +384,39 @@ impl MixMatrix {
     /// set fits the cache hierarchy, and fuses four sources per sweep
     /// ([`crate::util::axpy4`]) so the output tile is traversed ~deg/4
     /// times instead of deg times.  Allocation-free.
+    ///
+    /// Output rows are computed independently, so the round is
+    /// row-partitioned across the worker pool
+    /// ([`crate::util::pool::par_chunks`]): each worker owns a
+    /// contiguous block of output rows while the source arena is shared
+    /// read-only.  Per-row op order is untouched, so pooled and serial
+    /// rounds are bit-identical (the PR-2 pin holds at any thread
+    /// count).
     pub fn mix_into(&self, msgs: &NodeMatrix, out: &mut NodeMatrix) {
         let n = self.n;
         assert_eq!(msgs.n(), n);
         assert_eq!(out.n(), n);
         assert_eq!(msgs.d(), out.d());
         let d = msgs.d();
+        if d == 0 {
+            return;
+        }
+        crate::util::pool::par_chunks(out.as_mut_slice(), d, |row0, block| {
+            self.mix_rows(msgs, row0, block);
+        });
+    }
+
+    /// The serial kernel over one contiguous block of output rows
+    /// (`block` holds rows `row0..row0 + block.len()/d`).
+    fn mix_rows(&self, msgs: &NodeMatrix, row0: usize, block: &mut [f32]) {
+        let d = msgs.d();
+        let rows = block.len() / d;
         let mut k0 = 0usize;
         loop {
             let k1 = (k0 + Self::MIX_TILE).min(d);
-            for i in 0..n {
-                let ot = &mut out.row_mut(i)[k0..k1];
+            for r in 0..rows {
+                let i = row0 + r;
+                let ot = &mut block[r * d + k0..r * d + k1];
                 ot.fill(0.0);
                 let (lo, hi) = (self.nz_ptr[i], self.nz_ptr[i + 1]);
                 accumulate_row_tile(&self.nz_w[lo..hi], &self.nz_cols[lo..hi], msgs, k0, k1, ot);

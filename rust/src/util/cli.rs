@@ -119,6 +119,26 @@ impl Args {
     }
 }
 
+/// Parse the worker-pool size flag `--threads N` (`amb run` /
+/// `amb figures`).  `None` when absent — then `AMB_THREADS`, then
+/// `available_parallelism()`, decide (see `util::pool`).  `--threads 0`
+/// is rejected with a pointer at the serial spelling: every run needs
+/// at least the calling thread.
+pub fn threads_arg(args: &Args) -> Result<Option<usize>, CliError> {
+    match args.get("threads") {
+        None => Ok(None),
+        Some(v) => match v.parse::<usize>() {
+            Ok(0) => Err(CliError::Invalid(
+                "threads".into(),
+                v.into(),
+                "an integer >= 1 (use --threads 1 for the serial path)",
+            )),
+            Ok(n) => Ok(Some(n)),
+            Err(_) => Err(CliError::Invalid("threads".into(), v.into(), "an integer >= 1")),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,5 +207,16 @@ mod tests {
         // `--shift -1.5`: "-1.5" doesn't start with "--" so it's a value.
         let a = parse("--shift -1.5");
         assert_eq!(a.f64_or("shift", 0.0).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn threads_flag_parsing() {
+        assert_eq!(threads_arg(&parse("run")).unwrap(), None);
+        assert_eq!(threads_arg(&parse("run --threads 4")).unwrap(), Some(4));
+        assert_eq!(threads_arg(&parse("run --threads=1")).unwrap(), Some(1));
+        // 0 and junk are errors, and the 0 message points at --threads 1
+        let zero = threads_arg(&parse("run --threads 0")).unwrap_err();
+        assert!(zero.to_string().contains("--threads 1"), "{zero}");
+        assert!(threads_arg(&parse("run --threads lots")).is_err());
     }
 }

@@ -150,19 +150,34 @@ impl NodeMatrix {
     /// Column-wise mean accumulated in f64 (the exact row average that
     /// ε-perfect consensus would deliver).  `None` when the arena has no
     /// rows — callers must decide, not index-panic.
+    ///
+    /// Column-partitioned across the worker pool for wide arenas: each
+    /// worker owns a contiguous span of output columns and sums them
+    /// over all rows in ascending-row order — the serial op sequence per
+    /// column — so pooled and serial results are bit-identical.  (The
+    /// grain scales with `n` because each output element costs `n`
+    /// reads.)
     pub fn mean_rows_f64(&self) -> Option<Vec<f64>> {
         if self.n == 0 {
             return None;
         }
         let mut avg = vec![0.0f64; self.d];
-        for row in self.rows() {
-            for (a, &v) in avg.iter_mut().zip(row) {
-                *a += v as f64;
+        if self.d == 0 {
+            return Some(avg);
+        }
+        let (n, d, data) = (self.n, self.d, &self.data);
+        let grain = (crate::util::pool::MIN_ELEMS_PER_THREAD / n.max(1)).max(1);
+        crate::util::pool::par_chunks_grained(&mut avg, 1, grain, |c0, cols| {
+            for i in 0..n {
+                let row = &data[i * d + c0..i * d + c0 + cols.len()];
+                for (a, &v) in cols.iter_mut().zip(row) {
+                    *a += v as f64;
+                }
             }
-        }
-        for a in avg.iter_mut() {
-            *a /= self.n as f64;
-        }
+            for a in cols.iter_mut() {
+                *a /= n as f64;
+            }
+        });
         Some(avg)
     }
 }

@@ -1,4 +1,5 @@
-//! Dependency-free utilities: PRNG, statistics, JSON, CSV, CLI parsing.
+//! Dependency-free utilities: PRNG, statistics, JSON, CSV, CLI parsing,
+//! and the scoped worker pool ([`pool`]).
 //!
 //! The offline vendor set ships no rand/serde/clap (DESIGN.md §7), so
 //! these are small, fully-tested local implementations.
@@ -7,6 +8,7 @@ pub mod cli;
 pub mod csv;
 pub mod json;
 pub mod matrix;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,278 @@
+//! Scoped worker pool over `std::thread` — the crate's parallel
+//! execution layer (no rayon/crossbeam in the offline vendor set,
+//! DESIGN.md §7).
+//!
+//! Design goals, in order:
+//!
+//! 1. **Bitwise determinism.**  Every helper partitions work in a FIXED
+//!    order into DISJOINT outputs; a worker never changes *what* is
+//!    computed, only *where*.  `threads = 1` and `threads = k` runs are
+//!    bit-identical by construction (pinned by
+//!    `tests/parallel_determinism.rs`), so the thread count is a pure
+//!    performance knob.
+//! 2. **No `unsafe`.**  Parallel regions are `std::thread::scope` blocks;
+//!    borrowed inputs flow into workers through ordinary scoped borrows
+//!    and mutable outputs through `split_at_mut` row blocks.  The cost is
+//!    a thread spawn per region (~tens of µs), which is why the helpers
+//!    gate on a minimum work size and callers hoist parallelism to the
+//!    largest safe granularity (a whole mix round, a whole epoch compute
+//!    phase, a whole sweep item).
+//! 3. **No nested oversubscription.**  Threads spawned here mark
+//!    themselves as pool workers; any pool call *from inside a worker*
+//!    runs serial.  A concurrent experiment sweep therefore runs each
+//!    inner simulation single-threaded instead of multiplying thread
+//!    counts.
+//!
+//! Sizing: `--threads N` on the CLI (via [`set_threads`]) beats the
+//! `AMB_THREADS` environment variable, which beats
+//! `std::thread::available_parallelism()`.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::OnceLock;
+
+/// Process-wide override (0 = unset): `--threads` / [`set_threads`].
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Cached `AMB_THREADS` parse (read once; `None` = absent or invalid).
+static ENV_THREADS: OnceLock<Option<usize>> = OnceLock::new();
+
+thread_local! {
+    /// Set on threads spawned by this module; see module docs.
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Below this many elements of output per worker a thread spawn costs
+/// more than it saves; the helpers fall back to the serial path.
+pub const MIN_ELEMS_PER_THREAD: usize = 1 << 15;
+
+fn env_threads() -> Option<usize> {
+    *ENV_THREADS.get_or_init(|| match std::env::var("AMB_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => {
+                eprintln!("warning: ignoring AMB_THREADS='{s}' (want an integer >= 1)");
+                None
+            }
+        },
+        Err(_) => None,
+    })
+}
+
+/// Override the pool size for this process (the CLI's `--threads N`).
+/// `1` means "always take the serial path".
+pub fn set_threads(n: usize) {
+    assert!(n >= 1, "thread count must be >= 1 (use 1 for the serial path)");
+    OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// Drop a [`set_threads`] override (tests and benches restore the
+/// environment-driven default this way).
+pub fn clear_threads_override() {
+    OVERRIDE.store(0, Ordering::SeqCst);
+}
+
+/// Is the calling thread a pool worker?  (Pool calls made from workers
+/// run serial — see module docs.)
+pub fn is_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+pub(crate) fn mark_pool_worker() {
+    IN_POOL_WORKER.with(|f| f.set(true));
+}
+
+/// The pool size parallel regions will use from the calling thread:
+/// 1 inside a pool worker, else `--threads` override, else `AMB_THREADS`,
+/// else `available_parallelism()`.
+pub fn current_threads() -> usize {
+    if is_pool_worker() {
+        return 1;
+    }
+    let o = OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    if let Some(n) = env_threads() {
+        return n;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Partition a flat `[rows × width]` buffer into contiguous row blocks,
+/// one per worker, and run `f(first_row, block)` on each concurrently.
+///
+/// The partition is a pure function of `(data.len(), width, threads)`
+/// and every block is disjoint, so as long as `f` computes each row
+/// independently of the partition (true of every caller: mix kernels,
+/// column sums), results are bit-identical to `f(0, data)`.
+pub fn par_chunks<T, F>(data: &mut [T], width: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks_grained(data, width, MIN_ELEMS_PER_THREAD, f)
+}
+
+/// [`par_chunks`] with an explicit serial-fallback grain: spawn at most
+/// `data.len() / grain` workers.  Callers whose per-element cost is far
+/// from one flop (e.g. a column sum touching `n` rows per output
+/// element) scale the grain accordingly.
+pub fn par_chunks_grained<T, F>(data: &mut [T], width: usize, grain: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(width > 0, "par_chunks needs a positive row width");
+    debug_assert_eq!(data.len() % width, 0, "data must be whole rows");
+    let rows = data.len() / width;
+    let threads = current_threads().min(rows).min((data.len() / grain.max(1)).max(1));
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let base = rows / threads;
+    let extra = rows % threads;
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = data;
+        let mut row0 = 0usize;
+        for w in 0..threads {
+            let take = base + usize::from(w < extra);
+            let (block, tail) = rest.split_at_mut(take * width);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || {
+                mark_pool_worker();
+                f(r0, block);
+            });
+            row0 += take;
+        }
+    });
+}
+
+/// Run `f(0), f(1), …, f(count − 1)` on the pool and return the results
+/// **in index order**, whatever order workers finish in.  Workers pull
+/// indices from a shared counter (work stealing), so uneven items
+/// balance; each result lands in its own slot, so ordering is exact.
+pub fn par_indexed<T, F>(count: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = current_threads().min(count);
+    if threads <= 1 {
+        return (0..count).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(count);
+    slots.resize_with(count, || None);
+    std::thread::scope(|s| {
+        let f = &f;
+        let next = &next;
+        for _ in 0..threads {
+            let tx = tx.clone();
+            s.spawn(move || {
+                mark_pool_worker();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= count {
+                        break;
+                    }
+                    if tx.send((i, f(i))).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|o| o.expect("pool worker died before returning its result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Pool configuration is process-global; tests that touch it
+    /// serialize here so they can't observe each other's overrides.
+    static CONFIG_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn par_chunks_matches_serial_bitwise() {
+        let _g = CONFIG_LOCK.lock().unwrap();
+        set_threads(4);
+        let rows = 37usize;
+        let width = 11usize;
+        let mut serial: Vec<f32> = (0..rows * width).map(|i| i as f32 * 0.5).collect();
+        let mut parallel = serial.clone();
+        let work = |row0: usize, block: &mut [f32]| {
+            for (r, row) in block.chunks_mut(width).enumerate() {
+                let i = row0 + r;
+                for (k, v) in row.iter_mut().enumerate() {
+                    *v = (*v + i as f32) * (k as f32 + 1.0);
+                }
+            }
+        };
+        work(0, &mut serial);
+        // grain 1 so the tiny buffer still fans out
+        par_chunks_grained(&mut parallel, width, 1, work);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        clear_threads_override();
+    }
+
+    #[test]
+    fn par_indexed_preserves_index_order() {
+        let _g = CONFIG_LOCK.lock().unwrap();
+        set_threads(4);
+        // later items are cheap, early items spin — completion order is
+        // (very likely) inverted, result order must not be
+        let out = par_indexed(16, |i| {
+            let mut acc = 0u64;
+            for k in 0..(16 - i) * 20_000 {
+                acc = acc.wrapping_add(k as u64);
+            }
+            std::hint::black_box(acc);
+            i * 10
+        });
+        assert_eq!(out, (0..16).map(|i| i * 10).collect::<Vec<_>>());
+        clear_threads_override();
+    }
+
+    #[test]
+    fn nested_pool_calls_run_serial() {
+        let _g = CONFIG_LOCK.lock().unwrap();
+        set_threads(4);
+        assert!(!is_pool_worker());
+        let inner_threads = par_indexed(4, |_| current_threads());
+        // every worker sees a serial pool
+        assert_eq!(inner_threads, vec![1; 4]);
+        clear_threads_override();
+    }
+
+    #[test]
+    fn override_and_clear() {
+        let _g = CONFIG_LOCK.lock().unwrap();
+        set_threads(3);
+        assert_eq!(current_threads(), 3);
+        clear_threads_override();
+        assert!(current_threads() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 1")]
+    fn zero_threads_rejected() {
+        set_threads(0);
+    }
+}

@@ -1,0 +1,172 @@
+//! The §5 determinism guarantee under the worker pool: a seeded sim run
+//! is BITWISE identical at `threads = 1` (serial path) and `threads = 4`
+//! (pooled epoch fan-out + row-partitioned consensus kernels), for every
+//! `Scheme` × `ConsensusMode`; and the concurrent sweep driver returns
+//! results in spec order regardless of completion order.
+//!
+//! Pool sizing is process-global, so every test here serializes on one
+//! lock and restores the environment default before releasing it.
+
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use anytime_mb::consensus::Consensus;
+use anytime_mb::coordinator::{ConsensusMode, RunOutput, RunSpec, Scheme};
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::experiments::sweep;
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::straggler::ShiftedExp;
+use anytime_mb::topology::Topology;
+use anytime_mb::util::matrix::NodeMatrix;
+use anytime_mb::util::pool;
+use anytime_mb::Runtime;
+use anytime_mb::SimRuntime;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn run_sim(spec: &RunSpec) -> RunOutput {
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(24, 5)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 400.0), 4.0 * 24f64.sqrt());
+    let f_star = src.f_star();
+    let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+        Box::new(NativeExec::new(src.clone(), opt.clone()))
+    };
+    SimRuntime::new(&strag).run(spec, &topo, &mk, f_star)
+}
+
+/// Bitwise comparison of everything a [`RunOutput`] records.
+fn assert_bitwise_equal(a: &RunOutput, b: &RunOutput, label: &str) {
+    assert_eq!(a.record.epochs.len(), b.record.epochs.len(), "{label}: epoch count");
+    for (x, y) in a.record.epochs.iter().zip(&b.record.epochs) {
+        assert_eq!(x.batch, y.batch, "{label}: batch @ epoch {}", x.epoch);
+        assert_eq!(x.potential, y.potential, "{label}: potential @ epoch {}", x.epoch);
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{label}: loss bits @ epoch {} ({} vs {})",
+            x.epoch,
+            x.loss,
+            y.loss
+        );
+        assert_eq!(
+            x.error.to_bits(),
+            y.error.to_bits(),
+            "{label}: error bits @ epoch {} ({} vs {})",
+            x.epoch,
+            x.error,
+            y.error
+        );
+        assert_eq!(
+            x.consensus_err.to_bits(),
+            y.consensus_err.to_bits(),
+            "{label}: consensus_err bits @ epoch {}",
+            x.epoch
+        );
+        assert_eq!(
+            x.wall_time.to_bits(),
+            y.wall_time.to_bits(),
+            "{label}: wall_time bits @ epoch {}",
+            x.epoch
+        );
+    }
+    assert_eq!(a.rounds, b.rounds, "{label}: per-(node, epoch) gossip rounds");
+    assert_eq!(a.final_w.n(), b.final_w.n(), "{label}: final_w rows");
+    for (k, (x, y)) in a
+        .final_w
+        .as_slice()
+        .iter()
+        .zip(b.final_w.as_slice())
+        .enumerate()
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: final_w[{k}] ({x} vs {y})");
+    }
+}
+
+#[test]
+fn sim_threads1_equals_threads4_for_every_scheme_and_mode() {
+    let _guard = POOL_LOCK.lock().unwrap();
+    let schemes: [Scheme; 4] = [
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
+        Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: false },
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: true },
+    ];
+    let modes: [ConsensusMode; 3] = [
+        ConsensusMode::Exact,
+        ConsensusMode::Gossip { rounds: 5 },
+        ConsensusMode::GossipJitter { mean: 5, jitter: 2 },
+    ];
+    for scheme in schemes {
+        for mode in modes {
+            let spec = RunSpec::new(scheme.name(), scheme, 5, 13).with_consensus(mode);
+            pool::set_threads(1);
+            let serial = run_sim(&spec);
+            pool::set_threads(4);
+            let pooled = run_sim(&spec);
+            assert_bitwise_equal(
+                &serial,
+                &pooled,
+                &format!("{} × {:?}", scheme.name(), mode),
+            );
+        }
+    }
+    pool::clear_threads_override();
+}
+
+#[test]
+fn row_partitioned_kernels_are_thread_count_invariant() {
+    let _guard = POOL_LOCK.lock().unwrap();
+    // straddle the MIX_TILE boundary and the per-thread work gate
+    let topo = Topology::expander(48, 6, 3);
+    let p = topo.metropolis().lazy();
+    let mut seed = NodeMatrix::new(48, 2048 + 7);
+    let mut v = 0.37f32;
+    for x in seed.as_mut_slice() {
+        v = (v * 1.7).sin();
+        *x = v * 3.0;
+    }
+
+    pool::set_threads(1);
+    let mut serial = seed.clone();
+    Consensus::new(p.clone()).run(&mut serial, 4);
+    let avg_serial = Consensus::exact_average(&seed).unwrap();
+
+    pool::set_threads(4);
+    let mut pooled = seed.clone();
+    Consensus::new(p).run(&mut pooled, 4);
+    let avg_pooled = Consensus::exact_average(&seed).unwrap();
+
+    for (a, b) in serial.as_slice().iter().zip(pooled.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "mix kernel drifted with thread count");
+    }
+    for (a, b) in avg_serial.iter().zip(&avg_pooled) {
+        assert_eq!(a.to_bits(), b.to_bits(), "exact_average drifted with thread count");
+    }
+    pool::clear_threads_override();
+}
+
+#[test]
+fn sweep_driver_returns_results_in_spec_order() {
+    let _guard = POOL_LOCK.lock().unwrap();
+    pool::set_threads(4);
+    // Epoch counts descend, so spec 0 takes the longest and (with work
+    // stealing) finishes LAST — completion order is the reverse of spec
+    // order, which is exactly what the ordering contract must survive.
+    let epochs = [8usize, 5, 3, 2, 1];
+    let outs = sweep::sweep(epochs.len(), |i| {
+        let spec = RunSpec::amb(&format!("sweep-{i}"), 2.0, 0.5, 4, epochs[i], 29);
+        Ok(run_sim(&spec))
+    })
+    .unwrap();
+    for (i, out) in outs.iter().enumerate() {
+        assert_eq!(out.record.name, format!("sweep-{i}"), "sweep reordered results");
+        assert_eq!(out.record.epochs.len(), epochs[i]);
+    }
+    // ... and sweep items see a serial inner pool (no nested fan-out).
+    let inner = sweep::sweep(3, |_| Ok(pool::current_threads())).unwrap();
+    assert_eq!(inner, vec![1, 1, 1]);
+    pool::clear_threads_override();
+}
