@@ -1,0 +1,337 @@
+//! Elastic membership: per-epoch node churn schedules.
+//!
+//! The paper (Sec. 3) fixes the graph G(V,E) and the doubly-stochastic P
+//! for the whole run, but its own premise — cloud nodes whose speed
+//! varies with latent load — extends naturally to nodes that *disappear
+//! and return*: maintenance reboots, spot-instance preemption, network
+//! partitions.  "Anytime Minibatch with Delayed Gradients" (Al-Lawati &
+//! Draper) relaxes synchrony across epochs and "Redundancy Techniques
+//! for Straggler Mitigation" (Karakus et al.) treats outright failure;
+//! this module supplies the membership process both need.
+//!
+//! A [`ChurnSpec`] describes the process (part of
+//! [`crate::coordinator::RunSpec`], so one spec drives both runtimes and
+//! round-trips through config JSON); a [`ChurnSchedule`] is the
+//! materialised per-epoch active-set table, a **pure function of
+//! (spec, n, epochs)** — every sim worker and every threaded node thread
+//! derives the identical table, so membership needs no coordination
+//! channel, exactly like the derived RNG streams in
+//! [`crate::coordinator::epoch`].
+//!
+//! Semantics (DESIGN.md §churn): an inactive node contributes b_i = 0,
+//! is *isolated* in the epoch's consensus graph (nobody mixes against
+//! it, it mixes against nobody), and holds its dual/primal state; on
+//! rejoining it simply re-enters the weighted average with its held
+//! state — "wasted work never blocks progress" extended to "absent
+//! nodes never block progress".  The i.i.d./Markov/trace family mirrors
+//! the [`crate::straggler::StragglerModel`] family: dropout is the
+//! memoryless baseline, the Markov chain models correlated outages
+//! (maintenance windows), and traces replay digitised real logs.
+
+use crate::util::rng::Pcg64;
+
+/// Declarative churn process — lives in `RunSpec`, serialises to config
+/// JSON, and is materialised per run by [`ChurnSchedule::new`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnSpec {
+    /// Static membership: every node active in every epoch (the paper's
+    /// setting).  Runs with `None` take the exact pre-churn code paths,
+    /// so their outputs are bit-for-bit unchanged.
+    None,
+    /// Every (node, epoch) is independently down with probability `p`.
+    /// `p = 0` reproduces the static schedule (and therefore today's
+    /// outputs bit-for-bit — pinned by `tests/churn.rs`).
+    IidDropout { p: f64, seed: u64 },
+    /// Per-node two-state Markov chain: an up node goes down with
+    /// `p_down` per epoch, a down node recovers with `p_up`.  Models
+    /// correlated outages (a rebooting node is likely still down next
+    /// epoch).  Chains start up and evolve deterministically from
+    /// (seed, node) — one sequential pass, never an O(T²) replay.
+    Markov { p_down: f64, p_up: f64, seed: u64 },
+    /// Explicit trace: `active[node][epoch % active[node].len()]`
+    /// (1-based epochs map to index `epoch - 1`), wrapping like
+    /// [`crate::straggler::TraceReplay`].
+    Trace { active: Vec<Vec<bool>> },
+}
+
+impl ChurnSpec {
+    pub fn is_none(&self) -> bool {
+        matches!(self, ChurnSpec::None)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChurnSpec::None => "none",
+            ChurnSpec::IidDropout { .. } => "iid",
+            ChurnSpec::Markov { .. } => "markov",
+            ChurnSpec::Trace { .. } => "trace",
+        }
+    }
+
+    /// Parse the CLI surface (`amb run --churn SPEC`):
+    ///   `none` | `iid:P[:SEED]` | `markov:P_DOWN:P_UP[:SEED]`
+    /// with SEED defaulting to `default_seed` (the run seed) so churn
+    /// weather is reproducible per run by default.
+    pub fn parse(s: &str, default_seed: u64) -> anyhow::Result<ChurnSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let prob = |v: &str, what: &str| -> anyhow::Result<f64> {
+            let p: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--churn: {what} '{v}' is not a number"))?;
+            anyhow::ensure!((0.0..=1.0).contains(&p), "--churn: {what} {p} not in [0, 1]");
+            Ok(p)
+        };
+        let seed = |v: Option<&&str>| -> anyhow::Result<u64> {
+            match v {
+                None => Ok(default_seed),
+                Some(s) => s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--churn: seed '{s}' is not a u64")),
+            }
+        };
+        match parts.as_slice() {
+            ["none"] => Ok(ChurnSpec::None),
+            ["iid", p, rest @ ..] if rest.len() <= 1 => Ok(ChurnSpec::IidDropout {
+                p: prob(p, "dropout probability")?,
+                seed: seed(rest.first())?,
+            }),
+            ["markov", pd, pu, rest @ ..] if rest.len() <= 1 => Ok(ChurnSpec::Markov {
+                p_down: prob(pd, "p_down")?,
+                p_up: prob(pu, "p_up")?,
+                seed: seed(rest.first())?,
+            }),
+            _ => anyhow::bail!(
+                "--churn: expected none | iid:P[:SEED] | markov:P_DOWN:P_UP[:SEED] (got '{s}')"
+            ),
+        }
+    }
+}
+
+/// Is `node` down in `epoch` under i.i.d. dropout?  A pure function of
+/// (seed, node, epoch) via a derived stream — the same derivation idiom
+/// as [`crate::coordinator::epoch::gossip_jitter_rounds`], so any
+/// process can evaluate any (node, epoch) without shared state.
+fn iid_down(seed: u64, node: usize, epoch: usize, p: f64) -> bool {
+    let mut rng = Pcg64::new(seed).split(0xC8A2_0000 ^ ((node as u64) << 24) ^ epoch as u64);
+    rng.f64() < p
+}
+
+/// The materialised per-epoch active-set table for one run.
+///
+/// Rows are precomputed in ONE pass at construction (O(n · epochs)
+/// bools), which is what keeps the Markov variant linear — the chain is
+/// never replayed from epoch 0 per query (the bug class fixed in
+/// `MarkovModulated::bursting`).  `ChurnSpec::None` stores a single
+/// shared all-active row, so static runs pay no per-epoch storage.
+pub struct ChurnSchedule {
+    n: usize,
+    /// Active set per epoch (row `t - 1` for epoch `t`); a single row
+    /// when `static_all`.
+    rows: Vec<Vec<bool>>,
+    counts: Vec<usize>,
+    static_all: bool,
+}
+
+impl ChurnSchedule {
+    pub fn new(spec: &ChurnSpec, n: usize, epochs: usize) -> ChurnSchedule {
+        assert!(n > 0, "churn schedule needs at least one node");
+        let mut static_all = false;
+        let rows: Vec<Vec<bool>> = match spec {
+            ChurnSpec::None => {
+                static_all = true;
+                vec![vec![true; n]]
+            }
+            ChurnSpec::IidDropout { p, seed } => {
+                assert!(
+                    (0.0..=1.0).contains(p),
+                    "IidDropout probability {p} not in [0, 1]"
+                );
+                (1..=epochs)
+                    .map(|t| (0..n).map(|i| !iid_down(*seed, i, t, *p)).collect())
+                    .collect()
+            }
+            ChurnSpec::Markov { p_down, p_up, seed } => {
+                assert!(
+                    (0.0..=1.0).contains(p_down) && (0.0..=1.0).contains(p_up),
+                    "Markov churn probabilities must lie in [0, 1]"
+                );
+                let mut rows = vec![vec![true; n]; epochs];
+                for node in 0..n {
+                    // One sequential chain per node — O(epochs), computed
+                    // once; deterministic from (seed, node).
+                    let mut rng = Pcg64::new(seed ^ ((node as u64) << 20) ^ 0xC4A1);
+                    let mut up = true;
+                    for row in rows.iter_mut() {
+                        let u = rng.f64();
+                        up = if up { u >= *p_down } else { u < *p_up };
+                        row[node] = up;
+                    }
+                }
+                rows
+            }
+            ChurnSpec::Trace { active } => {
+                assert_eq!(active.len(), n, "trace churn needs one row per node");
+                assert!(
+                    active.iter().all(|r| !r.is_empty()),
+                    "trace churn rows must be non-empty"
+                );
+                (1..=epochs)
+                    .map(|t| (0..n).map(|i| active[i][(t - 1) % active[i].len()]).collect())
+                    .collect()
+            }
+        };
+        let counts = rows
+            .iter()
+            .map(|r| r.iter().filter(|&&a| a).count())
+            .collect();
+        ChurnSchedule { n, rows, counts, static_all }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn row_index(&self, epoch: usize) -> usize {
+        assert!(epoch >= 1, "epochs are 1-based");
+        if self.static_all {
+            0
+        } else {
+            assert!(
+                epoch <= self.rows.len(),
+                "epoch {epoch} beyond the schedule horizon {}",
+                self.rows.len()
+            );
+            epoch - 1
+        }
+    }
+
+    /// The active set for (1-based) `epoch`.
+    pub fn active(&self, epoch: usize) -> &[bool] {
+        &self.rows[self.row_index(epoch)]
+    }
+
+    /// |A(t)| — number of active nodes in `epoch`.
+    pub fn active_count(&self, epoch: usize) -> usize {
+        self.counts[self.row_index(epoch)]
+    }
+
+    /// Whether every node is active in `epoch` (the zero-rebuild fast
+    /// path: the base mixing matrix applies unchanged).
+    pub fn is_all_active(&self, epoch: usize) -> bool {
+        self.active_count(epoch) == self.n
+    }
+
+    /// Mean active fraction over epochs `1..=epochs` (harness summary).
+    pub fn mean_active_fraction(&self, epochs: usize) -> f64 {
+        if epochs == 0 {
+            return 1.0;
+        }
+        let total: usize = (1..=epochs).map(|t| self.active_count(t)).sum();
+        total as f64 / (epochs * self.n) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_static_all_active() {
+        let s = ChurnSchedule::new(&ChurnSpec::None, 5, 100);
+        for t in 1..=100 {
+            assert!(s.is_all_active(t));
+            assert_eq!(s.active_count(t), 5);
+            assert!(s.active(t).iter().all(|&a| a));
+        }
+        assert_eq!(s.mean_active_fraction(100), 1.0);
+    }
+
+    #[test]
+    fn iid_zero_dropout_matches_none() {
+        let a = ChurnSchedule::new(&ChurnSpec::None, 8, 20);
+        let b = ChurnSchedule::new(&ChurnSpec::IidDropout { p: 0.0, seed: 7 }, 8, 20);
+        for t in 1..=20 {
+            assert_eq!(a.active(t), b.active(t));
+        }
+    }
+
+    #[test]
+    fn iid_dropout_rate_and_determinism() {
+        let spec = ChurnSpec::IidDropout { p: 0.25, seed: 11 };
+        let s1 = ChurnSchedule::new(&spec, 10, 400);
+        let s2 = ChurnSchedule::new(&spec, 10, 400);
+        for t in 1..=400 {
+            assert_eq!(s1.active(t), s2.active(t), "schedule must be deterministic");
+        }
+        let frac = s1.mean_active_fraction(400);
+        assert!((frac - 0.75).abs() < 0.03, "frac={frac}");
+        // a different seed gives different weather
+        let s3 = ChurnSchedule::new(&ChurnSpec::IidDropout { p: 0.25, seed: 12 }, 10, 400);
+        assert!((1..=400).any(|t| s1.active(t) != s3.active(t)));
+    }
+
+    #[test]
+    fn markov_stationary_fraction_and_persistence() {
+        // stationary up fraction = p_up / (p_up + p_down) = 0.8
+        let spec = ChurnSpec::Markov { p_down: 0.05, p_up: 0.2, seed: 3 };
+        let s = ChurnSchedule::new(&spec, 20, 2000);
+        let frac = s.mean_active_fraction(2000);
+        assert!((frac - 0.8).abs() < 0.05, "frac={frac}");
+        // down spells persist: P(down at t+1 | down at t) = 1 - p_up = 0.8,
+        // far above the marginal down rate 0.2.
+        let (mut down_pairs, mut down_down) = (0usize, 0usize);
+        for node in 0..20 {
+            for t in 1..2000 {
+                if !s.active(t)[node] {
+                    down_pairs += 1;
+                    down_down += usize::from(!s.active(t + 1)[node]);
+                }
+            }
+        }
+        let persist = down_down as f64 / down_pairs as f64;
+        assert!(persist > 0.7, "persist={persist}");
+    }
+
+    #[test]
+    fn trace_wraps_like_trace_replay() {
+        let spec = ChurnSpec::Trace {
+            active: vec![vec![true, false], vec![true], vec![false, true, true]],
+        };
+        let s = ChurnSchedule::new(&spec, 3, 7);
+        // node 0 alternates starting active; node 1 always active; node 2
+        // has period 3 starting inactive.
+        assert_eq!(s.active(1), &[true, true, false]);
+        assert_eq!(s.active(2), &[false, true, true]);
+        assert_eq!(s.active(3), &[true, true, true]);
+        assert_eq!(s.active(4), &[false, true, false]);
+        assert_eq!(s.active_count(1), 2);
+    }
+
+    #[test]
+    fn parse_cli_forms() {
+        assert_eq!(ChurnSpec::parse("none", 9).unwrap(), ChurnSpec::None);
+        assert_eq!(
+            ChurnSpec::parse("iid:0.2", 9).unwrap(),
+            ChurnSpec::IidDropout { p: 0.2, seed: 9 }
+        );
+        assert_eq!(
+            ChurnSpec::parse("iid:0.2:44", 9).unwrap(),
+            ChurnSpec::IidDropout { p: 0.2, seed: 44 }
+        );
+        assert_eq!(
+            ChurnSpec::parse("markov:0.05:0.25", 9).unwrap(),
+            ChurnSpec::Markov { p_down: 0.05, p_up: 0.25, seed: 9 }
+        );
+        for bad in ["", "iid", "iid:1.5", "markov:0.1", "bogus:1", "iid:x"] {
+            assert!(ChurnSpec::parse(bad, 9).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "horizon")]
+    fn beyond_horizon_panics() {
+        let s = ChurnSchedule::new(&ChurnSpec::IidDropout { p: 0.5, seed: 1 }, 4, 10);
+        let _ = s.active(11);
+    }
+}

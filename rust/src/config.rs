@@ -12,6 +12,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::churn::ChurnSpec;
 use crate::coordinator::{ConsensusMode, RunSpec, Scheme};
 use crate::util::json::Json;
 
@@ -65,10 +66,36 @@ impl ExperimentConfig {
                 ("jitter", Json::num(jitter as f64)),
             ]),
         };
+        let churn = match &self.run.churn {
+            ChurnSpec::None => Json::obj(vec![("kind", Json::str("none"))]),
+            ChurnSpec::IidDropout { p, seed } => Json::obj(vec![
+                ("kind", Json::str("iid")),
+                ("p", Json::num(*p)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
+            ChurnSpec::Markov { p_down, p_up, seed } => Json::obj(vec![
+                ("kind", Json::str("markov")),
+                ("p_down", Json::num(*p_down)),
+                ("p_up", Json::num(*p_up)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
+            ChurnSpec::Trace { active } => Json::obj(vec![
+                ("kind", Json::str("trace")),
+                (
+                    "active",
+                    Json::arr(
+                        active
+                            .iter()
+                            .map(|row| Json::arr(row.iter().map(|&b| Json::Bool(b)))),
+                    ),
+                ),
+            ]),
+        };
         Json::obj(vec![
             ("name", Json::str(&self.run.name)),
             ("scheme", scheme),
             ("consensus", consensus),
+            ("churn", churn),
             ("epochs", Json::num(self.run.epochs as f64)),
             ("seed", Json::num(self.run.seed as f64)),
             ("exact_bt", Json::Bool(self.run.exact_bt)),
@@ -139,6 +166,70 @@ impl ExperimentConfig {
         if !slowdown.iter().all(|f| f.is_finite() && *f >= 1.0) {
             bail!("slowdown factors must be finite and >= 1.0 (got {slowdown:?})");
         }
+
+        // Optional churn block; absent (pre-churn configs) means static
+        // membership, so old config files keep loading unchanged.
+        let churn = match j.get("churn") {
+            None => ChurnSpec::None,
+            Some(cj) => {
+                let prob = |k: &str| -> Result<f64> {
+                    let p = cj
+                        .get(k)
+                        .and_then(|v| v.as_f64())
+                        .with_context(|| format!("churn.{k}"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        bail!("churn.{k} = {p} not in [0, 1]");
+                    }
+                    Ok(p)
+                };
+                let seed = || -> Result<u64> {
+                    Ok(cj.get("seed").and_then(|v| v.as_f64()).context("churn.seed")? as u64)
+                };
+                match cj.get("kind").and_then(|v| v.as_str()) {
+                    Some("none") => ChurnSpec::None,
+                    Some("iid") => ChurnSpec::IidDropout { p: prob("p")?, seed: seed()? },
+                    Some("markov") => ChurnSpec::Markov {
+                        p_down: prob("p_down")?,
+                        p_up: prob("p_up")?,
+                        seed: seed()?,
+                    },
+                    Some("trace") => {
+                        let rows = match cj.get("active") {
+                            Some(Json::Arr(rows)) => rows
+                                .iter()
+                                .map(|row| match row {
+                                    Json::Arr(cells) => cells
+                                        .iter()
+                                        .map(|c| {
+                                            c.as_bool()
+                                                .context("churn.active cells must be booleans")
+                                        })
+                                        .collect::<Result<Vec<bool>>>(),
+                                    _ => bail!("churn.active rows must be arrays"),
+                                })
+                                .collect::<Result<Vec<Vec<bool>>>>()?,
+                            _ => bail!("churn.active must be an array of arrays"),
+                        };
+                        // Validate HERE, like every other field, so a
+                        // malformed config is a clean load-time error and
+                        // not a run-time assert inside ChurnSchedule::new.
+                        if rows.iter().any(|r| r.is_empty()) {
+                            bail!("churn.active rows must be non-empty");
+                        }
+                        let nodes = req_num("nodes")? as usize;
+                        if rows.len() != nodes {
+                            bail!(
+                                "churn.active has {} rows but the config declares {} nodes",
+                                rows.len(),
+                                nodes
+                            );
+                        }
+                        ChurnSpec::Trace { active: rows }
+                    }
+                    other => bail!("unknown churn kind {other:?}"),
+                }
+            }
+        };
         Ok(ExperimentConfig {
             run: RunSpec {
                 name: req_str("name")?.to_string(),
@@ -174,6 +265,7 @@ impl ExperimentConfig {
                         ts
                     }
                 },
+                churn,
             },
             workload: req_str("workload")?.to_string(),
             straggler: req_str("straggler")?.to_string(),
@@ -278,6 +370,48 @@ mod tests {
         assert_eq!(back.run.grad_chunk, 64);
         assert_eq!(back.run.slowdown, vec![3.0, 1.0]);
         assert!((back.run.time_scale - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn churn_roundtrip_all_kinds() {
+        let mut cfg = preset("fig1a_amb").unwrap();
+        // one trace row per configured node (the parser validates this)
+        let mut trace_rows = vec![vec![true]; cfg.nodes];
+        trace_rows[0] = vec![true, false];
+        for churn in [
+            ChurnSpec::None,
+            ChurnSpec::IidDropout { p: 0.2, seed: 7 },
+            ChurnSpec::Markov { p_down: 0.05, p_up: 0.3, seed: 9 },
+            ChurnSpec::Trace { active: trace_rows },
+        ] {
+            cfg.run = cfg.run.clone().with_churn(churn.clone());
+            let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+            assert_eq!(back.run.churn, churn);
+        }
+        // configs written before the churn field default to static
+        let pre_churn = preset("fig1a_amb").unwrap().to_json().to_string();
+        let stripped = {
+            // the preset serialises churn kind "none"; removing the block
+            // entirely must still parse (backwards compatibility)
+            assert!(pre_churn.contains("churn"));
+            pre_churn.replace("\"churn\":{\"kind\":\"none\"},", "")
+        };
+        let back = ExperimentConfig::from_json(&stripped).unwrap();
+        assert!(back.run.churn.is_none());
+        // invalid probability rejected
+        cfg.run = cfg.run.clone().with_churn(ChurnSpec::IidDropout { p: 0.2, seed: 7 });
+        let text = cfg.to_json().to_string();
+        assert!(ExperimentConfig::from_json(&text.replace("\"p\":0.2", "\"p\":1.5")).is_err());
+        // trace shape mismatches rejected at load time, not run time
+        cfg.run = cfg
+            .run
+            .clone()
+            .with_churn(ChurnSpec::Trace { active: vec![vec![true]; cfg.nodes - 1] });
+        assert!(ExperimentConfig::from_json(&cfg.to_json().to_string()).is_err());
+        cfg.run = cfg.run.clone().with_churn(ChurnSpec::Trace {
+            active: vec![Vec::new(); cfg.nodes],
+        });
+        assert!(ExperimentConfig::from_json(&cfg.to_json().to_string()).is_err());
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! Per-epoch subgraph consensus for elastic membership (churn).
+//!
+//! A churn run mixes over [`Topology::induced`] subgraphs — inactive
+//! nodes are isolated (Metropolis row eᵢ) so they hold their message
+//! bit-for-bit and contribute nothing, while the active block stays
+//! doubly stochastic and conserves the ACTIVE-set mean.  Building an
+//! induced matrix is O(n²) and churn rebuilds per epoch, so this engine
+//! **memoizes by active-set key**: each distinct active set pays the
+//! build once, and the common "nobody churned" epoch takes the
+//! preloaded base matrix with ZERO rebuild or lookup-allocation cost.
+//!
+//! The rounds themselves are the stock [`MixMatrix::mix_into`] blocked
+//! CSR kernel (row-partitioned across the worker pool, per-row op order
+//! fixed), so every bitwise pin from PR 2/3 — and the threads=1 ≡
+//! threads=k contract — holds for churn runs unchanged.
+
+use std::collections::HashMap;
+
+use crate::topology::{MixMatrix, Topology};
+use crate::util::matrix::NodeMatrix;
+
+/// Dense synchronous consensus with a per-active-set matrix cache.
+///
+/// The all-active matrix is exactly `topo.metropolis().lazy()` — the
+/// matrix the static-membership [`super::Consensus`] engine uses — so a
+/// schedule that never drops a node reproduces static runs bit-for-bit.
+pub struct InducedConsensus {
+    topo: Topology,
+    /// The all-active (P + I)/2 Metropolis matrix (zero-rebuild path).
+    base: MixMatrix,
+    /// Induced lazy matrices memoized by active-set key.
+    cache: HashMap<Vec<bool>, MixMatrix>,
+    /// Scratch arena double-buffered against the caller's messages.
+    scratch: NodeMatrix,
+}
+
+impl InducedConsensus {
+    /// Cache cap: under high-rate i.i.d. dropout on a large cluster,
+    /// nearly every epoch draws a NEVER-seen active set, and each dense
+    /// matrix is O(n²) — unbounded memoization would retain
+    /// O(epochs · n²) memory over a long run.  When the cap is reached
+    /// the cache is cleared (epoch-style eviction: periodic schedules
+    /// re-warm in one build each; pure-random ones were not reusing
+    /// entries anyway).
+    pub const MAX_CACHED_SETS: usize = 64;
+
+    pub fn new(topo: Topology) -> InducedConsensus {
+        let base = topo.metropolis().lazy();
+        InducedConsensus { topo, base, cache: HashMap::new(), scratch: NodeMatrix::new(0, 0) }
+    }
+
+    pub fn n(&self) -> usize {
+        self.topo.n()
+    }
+
+    /// Number of distinct (non-all-active) active sets currently cached
+    /// — the memoization diagnostic: an all-active schedule stays at 0,
+    /// and the count never exceeds [`Self::MAX_CACHED_SETS`].
+    pub fn cached_sets(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// The ONE build-and-memoize site: make sure `active`'s induced
+    /// matrix is cached (no-op for the all-active set, which
+    /// short-circuits to the base matrix) and report whether the set is
+    /// all-active.  `run`/`run_per_node`/`matrix_for` all go through
+    /// here, then re-borrow field-disjointly.
+    fn ensure_cached(&mut self, active: &[bool]) -> bool {
+        assert_eq!(active.len(), self.topo.n(), "active mask must cover every node");
+        let all = active.iter().all(|&a| a);
+        if !all && !self.cache.contains_key(active) {
+            if self.cache.len() >= Self::MAX_CACHED_SETS {
+                self.cache.clear();
+            }
+            let m = self.topo.induced(active).metropolis().lazy();
+            self.cache.insert(active.to_vec(), m);
+        }
+        all
+    }
+
+    /// The mixing matrix for `active` (building + memoizing on first
+    /// sight; the all-active set short-circuits to the base matrix).
+    pub fn matrix_for(&mut self, active: &[bool]) -> &MixMatrix {
+        if self.ensure_cached(active) {
+            &self.base
+        } else {
+            self.cache.get(active).unwrap()
+        }
+    }
+
+    fn ensure_scratch(&mut self, n: usize, d: usize) {
+        if self.scratch.n() != n || self.scratch.d() != d {
+            self.scratch.reset(n, d);
+        }
+    }
+
+    /// `rounds` synchronous rounds over the `active` subgraph, in place
+    /// (mix into scratch, O(1) flip).  Inactive rows come back bitwise
+    /// untouched (their row is eᵢ and 1.0 · x = x exactly).
+    pub fn run(&mut self, msgs: &mut NodeMatrix, rounds: usize, active: &[bool]) {
+        let n = self.topo.n();
+        assert_eq!(msgs.n(), n);
+        self.ensure_scratch(n, msgs.d());
+        // Field-disjoint borrows: the matrix ref (base/cache) and the
+        // scratch arena live in different fields.
+        let all = self.ensure_cached(active);
+        let p = if all { &self.base } else { self.cache.get(active).unwrap() };
+        for _ in 0..rounds {
+            p.mix_into(msgs, &mut self.scratch);
+            msgs.swap(&mut self.scratch);
+        }
+    }
+
+    /// Per-node round budgets r_i over the `active` subgraph — the
+    /// freeze semantics of [`super::Consensus::run_per_node`], mixed
+    /// with the induced matrix.  Callers pass 0 for inactive nodes
+    /// (isolation already holds them; a 0 budget keeps the rounds log
+    /// honest).
+    pub fn run_per_node(&mut self, msgs: &mut NodeMatrix, rounds: &[usize], active: &[bool]) {
+        let n = self.topo.n();
+        assert_eq!(msgs.n(), n);
+        assert_eq!(rounds.len(), n);
+        let rmax = rounds.iter().copied().max().unwrap_or(0);
+        self.ensure_scratch(n, msgs.d());
+        let all = self.ensure_cached(active);
+        let p = if all { &self.base } else { self.cache.get(active).unwrap() };
+        for k in 0..rmax {
+            p.mix_into(msgs, &mut self.scratch);
+            msgs.swap(&mut self.scratch);
+            // post-swap, scratch holds the pre-mix values: un-mix the
+            // rows whose budget is spent
+            for i in 0..n {
+                if rounds[i] <= k {
+                    msgs.row_mut(i).copy_from_slice(self.scratch.row(i));
+                }
+            }
+        }
+    }
+
+    /// Mean of the ACTIVE rows, accumulated in f64 in ascending-node
+    /// order — what ε-perfect consensus over the active subgraph would
+    /// deliver to every active node.  `None` when no node is active.
+    pub fn active_mean_f64(msgs: &NodeMatrix, active: &[bool]) -> Option<Vec<f64>> {
+        assert_eq!(msgs.n(), active.len());
+        let count = active.iter().filter(|&&a| a).count();
+        if count == 0 {
+            return None;
+        }
+        let mut avg = vec![0.0f64; msgs.d()];
+        for (i, row) in msgs.rows().enumerate() {
+            if active[i] {
+                for (a, &v) in avg.iter_mut().zip(row) {
+                    *a += v as f64;
+                }
+            }
+        }
+        for a in avg.iter_mut() {
+            *a /= count as f64;
+        }
+        Some(avg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::Consensus;
+    use crate::prop::forall;
+
+    fn random_msgs(g: &mut crate::prop::Gen, n: usize, d: usize) -> NodeMatrix {
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 3.0)).collect();
+        NodeMatrix::from_rows(&rows)
+    }
+
+    /// A mask with at least one active node.
+    fn random_active(g: &mut crate::prop::Gen, n: usize) -> Vec<bool> {
+        let mut active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
+        let forced = g.usize_in(0, n - 1);
+        active[forced] = true;
+        active
+    }
+
+    #[test]
+    fn all_active_matches_static_engine_bitwise() {
+        forall(15, 0xCE_01, |g| {
+            let n = g.usize_in(2, 12);
+            let d = g.usize_in(1, 16);
+            let topo = Topology::erdos_connected(n, 0.4, g.u64());
+            let rounds = g.usize_in(1, 6);
+            let msgs0 = random_msgs(g, n, d);
+
+            let mut stat = Consensus::new(topo.metropolis().lazy());
+            let mut a = msgs0.clone();
+            stat.run(&mut a, rounds);
+
+            let mut ind = InducedConsensus::new(topo);
+            let mut b = msgs0;
+            ind.run(&mut b, rounds, &vec![true; n]);
+
+            crate::prop_assert!(ind.cached_sets() == 0, "all-active must not build");
+            for i in 0..n {
+                for k in 0..d {
+                    crate::prop_assert!(
+                        a.row(i)[k].to_bits() == b.row(i)[k].to_bits(),
+                        "({i},{k}) static={} induced={}",
+                        a.row(i)[k],
+                        b.row(i)[k]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conserves_active_mean_and_freezes_inactive_rows() {
+        forall(25, 0xCE_02, |g| {
+            let n = g.usize_in(2, 14);
+            let d = g.usize_in(1, 8);
+            let topo = Topology::erdos_connected(n, 0.5, g.u64());
+            let active = random_active(g, n);
+            let msgs0 = random_msgs(g, n, d);
+            let before = InducedConsensus::active_mean_f64(&msgs0, &active).unwrap();
+
+            let mut ind = InducedConsensus::new(topo);
+            let mut msgs = msgs0.clone();
+            ind.run(&mut msgs, g.usize_in(1, 25), &active);
+
+            // active-set mean conserved (double stochasticity over the
+            // active block)
+            let after = InducedConsensus::active_mean_f64(&msgs, &active).unwrap();
+            for k in 0..d {
+                crate::prop_assert_close!(before[k], after[k], 1e-4);
+            }
+            // inactive rows bitwise frozen
+            for i in 0..n {
+                if !active[i] {
+                    crate::prop_assert!(
+                        msgs.row(i) == msgs0.row(i),
+                        "inactive row {i} drifted"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn active_component_converges_to_active_mean() {
+        // On a complete graph the active subgraph stays connected, so
+        // active nodes must converge to the mean of the ACTIVE initial
+        // values (not the all-node mean).
+        let n = 8;
+        let topo = Topology::complete(n);
+        let mut g = crate::prop::Gen::new(0xCE_03);
+        let msgs0 = random_msgs(&mut g, n, 4);
+        let active = vec![true, false, true, true, false, true, true, false];
+        let want = InducedConsensus::active_mean_f64(&msgs0, &active).unwrap();
+
+        let mut ind = InducedConsensus::new(topo);
+        let mut msgs = msgs0.clone();
+        ind.run(&mut msgs, 200, &active);
+        for i in 0..n {
+            if active[i] {
+                for k in 0..4 {
+                    assert!(
+                        (msgs.row(i)[k] as f64 - want[k]).abs() < 1e-4,
+                        "node {i} col {k}: {} vs {}",
+                        msgs.row(i)[k],
+                        want[k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memoizes_by_active_set_key() {
+        let topo = Topology::ring(6);
+        let mut ind = InducedConsensus::new(topo);
+        let mut g = crate::prop::Gen::new(0xCE_04);
+        let mut msgs = random_msgs(&mut g, 6, 3);
+        let a1 = vec![true, true, false, true, true, true];
+        let a2 = vec![true, false, true, true, true, true];
+        let all = vec![true; 6];
+        for _ in 0..50 {
+            ind.run(&mut msgs, 1, &a1);
+            ind.run(&mut msgs, 1, &a2);
+            ind.run(&mut msgs, 1, &all);
+        }
+        assert_eq!(ind.cached_sets(), 2, "one build per distinct churned set");
+    }
+
+    #[test]
+    fn cache_is_bounded_under_nonrepeating_active_sets() {
+        // 10 nodes admit > MAX_CACHED_SETS distinct active sets; the
+        // cache must never exceed the cap (epoch-style eviction), and
+        // results stay correct after eviction (rebuild on demand).
+        let n = 10;
+        let topo = Topology::complete(n);
+        let mut ind = InducedConsensus::new(topo);
+        let mut g = crate::prop::Gen::new(0xCE_06);
+        let mut msgs = random_msgs(&mut g, n, 2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..(InducedConsensus::MAX_CACHED_SETS * 3) {
+            let mut active: Vec<bool> = (0..n).map(|_| g.bool(0.5)).collect();
+            active[0] = true; // keep at least one node up
+            if active.iter().all(|&a| a) {
+                active[1] = false; // force a churned (cacheable) set
+            }
+            seen.insert(active.clone());
+            ind.run(&mut msgs, 1, &active);
+            assert!(
+                ind.cached_sets() <= InducedConsensus::MAX_CACHED_SETS,
+                "cache grew past the cap: {}",
+                ind.cached_sets()
+            );
+        }
+        // the sweep really did exceed the cap, so eviction was exercised
+        assert!(seen.len() > InducedConsensus::MAX_CACHED_SETS, "distinct sets: {}", seen.len());
+    }
+
+    #[test]
+    fn per_node_budgets_freeze_with_churn() {
+        let topo = Topology::complete(5);
+        let mut g = crate::prop::Gen::new(0xCE_05);
+        let msgs0 = random_msgs(&mut g, 5, 3);
+        let active = vec![true, true, false, true, true];
+        let mut ind = InducedConsensus::new(topo);
+
+        let mut m = msgs0.clone();
+        // node 3 stops after 1 round; inactive node 2 has budget 0
+        ind.run_per_node(&mut m, &[4, 4, 0, 1, 4], &active);
+        assert_eq!(m.row(2), msgs0.row(2), "inactive row must hold");
+        assert_ne!(m.row(0), msgs0.row(0));
+
+        // node 3's frozen value equals its state after exactly 1 round
+        let mut one = msgs0.clone();
+        ind.run(&mut one, 1, &active);
+        assert_eq!(m.row(3), one.row(3), "frozen row drifted");
+    }
+}

@@ -14,6 +14,7 @@
 //! (`util::pool`, DESIGN.md §1 "threading model") with per-row op order
 //! untouched, so results are bit-identical at any thread count.
 
+pub mod churn;
 pub mod push_sum;
 pub mod sparse;
 

@@ -69,6 +69,28 @@ impl Digraph {
     pub fn out_degree(&self, i: usize) -> usize {
         self.out[i].len()
     }
+
+    /// Subgraph induced by `active`, keeping the node indexing: arcs
+    /// touching an inactive endpoint are dropped, so inactive nodes keep
+    /// all their mass to themselves (share 1) and active nodes split
+    /// only among active out-neighbours — the push-sum face of the churn
+    /// semantics in [`crate::topology::Topology::induced`].
+    pub fn induced(&self, active: &[bool]) -> Digraph {
+        assert_eq!(active.len(), self.n(), "active mask must cover every node");
+        let out = self
+            .out
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if active[i] {
+                    l.iter().copied().filter(|&j| active[j]).collect()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        Digraph { out }
+    }
 }
 
 /// Push-sum state for n nodes over d-dim values.  Values and scratch
@@ -101,6 +123,34 @@ pub struct PushSum {
     phi_next: Vec<f64>,
 }
 
+/// (Re)build the in-edge CSR of `g` into the caller's buffers, scanning
+/// sources in ascending order so every destination's list is ascending
+/// by construction and gather accumulation replays the scatter loop's op
+/// order.  Shared by construction and the per-active-set rebuild, so the
+/// two paths cannot drift; buffers are cleared and refilled in place
+/// (steady-state capacity, no per-epoch allocation once warm).
+fn build_in_csr(g: &Digraph, in_ptr: &mut Vec<usize>, in_src: &mut Vec<u32>, in_share: &mut Vec<f64>) {
+    let n = g.n();
+    let mut in_lists: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for i in 0..n {
+        in_lists[i].push(i as u32); // self share
+        for &j in &g.out[i] {
+            in_lists[j].push(i as u32);
+        }
+    }
+    in_ptr.clear();
+    in_src.clear();
+    in_share.clear();
+    in_ptr.push(0);
+    for list in &in_lists {
+        for &i in list {
+            in_src.push(i);
+            in_share.push(1.0 / (1.0 + g.out_degree(i as usize) as f64));
+        }
+        in_ptr.push(in_src.len());
+    }
+}
+
 impl PushSum {
     /// Initialise from the per-node value arena.
     pub fn new(g: Digraph, values: &NodeMatrix) -> PushSum {
@@ -113,27 +163,10 @@ impl PushSum {
                 *xv = v as f64;
             }
         }
-        // Build the in-edge lists by scanning sources in ascending order,
-        // so every destination's list is ascending by construction and
-        // gather accumulation replays the scatter loop's op order.
-        let mut in_lists: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for i in 0..n {
-            in_lists[i].push(i as u32); // self share
-            for &j in &g.out[i] {
-                in_lists[j].push(i as u32);
-            }
-        }
         let mut in_ptr = Vec::with_capacity(n + 1);
         let mut in_src = Vec::new();
         let mut in_share = Vec::new();
-        in_ptr.push(0);
-        for list in &in_lists {
-            for &i in list {
-                in_src.push(i);
-                in_share.push(1.0 / (1.0 + g.out_degree(i as usize) as f64));
-            }
-            in_ptr.push(in_src.len());
-        }
+        build_in_csr(&g, &mut in_ptr, &mut in_src, &mut in_share);
         PushSum {
             g,
             in_ptr,
@@ -144,6 +177,24 @@ impl PushSum {
             x_next: NodeMatrixF64::new(n, d),
             phi_next: vec![0.0; n],
         }
+    }
+
+    /// Restrict subsequent rounds to the `active` subgraph: the in-edge
+    /// CSR is rebuilt in place over [`Digraph::induced`] while (x, φ)
+    /// carry over — an inactive node's only in-edge is its self-share 1,
+    /// so it holds its state bit-for-bit and a rejoining node re-enters
+    /// the ratio average with whatever it held (churn semantics,
+    /// DESIGN.md §churn).  Total mass over the whole vertex set is still
+    /// conserved, so the active-set mass is too.
+    pub fn set_active(&mut self, active: &[bool]) {
+        let induced = self.g.induced(active);
+        build_in_csr(&induced, &mut self.in_ptr, &mut self.in_src, &mut self.in_share);
+    }
+
+    /// Undo [`PushSum::set_active`]: rebuild the CSR over the full base
+    /// digraph.
+    pub fn set_all_active(&mut self) {
+        build_in_csr(&self.g, &mut self.in_ptr, &mut self.in_src, &mut self.in_share);
     }
 
     /// One synchronous push-sum round (gather form, row-partitioned).
@@ -295,6 +346,89 @@ mod tests {
         cons.run(&mut msgs, 500);
         let dense_err = crate::consensus::Consensus::max_error(&msgs, &avg).unwrap();
         assert!(dense_err < 1e-3);
+    }
+
+    #[test]
+    fn induced_drops_arcs_touching_inactive_nodes() {
+        let g = Digraph::random_strongly_connected(8, 0.4, 3);
+        let active = vec![true, false, true, true, false, true, true, true];
+        let s = g.induced(&active);
+        assert_eq!(s.n(), 8);
+        assert_eq!(s.out_degree(1), 0);
+        assert_eq!(s.out_degree(4), 0);
+        for i in 0..8 {
+            for &j in &s.out[i] {
+                assert!(active[i] && active[j], "arc ({i},{j}) touches an inactive node");
+                assert!(g.out[i].contains(&j), "induced invented arc ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn set_active_freezes_inactive_and_conserves_active_mass() {
+        forall(20, 0x50_04, |g| {
+            let n = g.usize_in(3, 12);
+            let d = g.usize_in(1, 5);
+            let dg = Digraph::random_strongly_connected(n, 0.4, g.u64());
+            let values = random_values(g, n, d, 2.0);
+            let mut active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
+            active[g.usize_in(0, n - 1)] = true;
+
+            let mut ps = PushSum::new(dg, &values);
+            ps.set_active(&active);
+            let x0 = ps.x.clone();
+            let phi0 = ps.phi.clone();
+            for _ in 0..g.usize_in(1, 15) {
+                ps.round();
+                // global mass conserved (self-shares of inactive nodes
+                // are 1), hence active-set mass conserved too
+                crate::prop_assert_close!(ps.total_weight(), n as f64, 1e-9);
+                let tot = ps.total_value();
+                let tot0: Vec<f64> = (0..d)
+                    .map(|k| x0.rows().map(|r| r[k]).sum::<f64>())
+                    .collect();
+                for k in 0..d {
+                    crate::prop_assert_close!(tot[k], tot0[k], 1e-9);
+                }
+                // inactive rows bitwise frozen
+                for i in 0..n {
+                    if !active[i] {
+                        crate::prop_assert!(
+                            ps.phi[i].to_bits() == phi0[i].to_bits(),
+                            "inactive phi[{i}] drifted"
+                        );
+                        for k in 0..d {
+                            crate::prop_assert!(
+                                ps.x.row(i)[k].to_bits() == x0.row(i)[k].to_bits(),
+                                "inactive x[{i}][{k}] drifted"
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejoin_after_set_all_active_converges_to_global_mean() {
+        // Phase 1: run with node 2 absent.  Phase 2: rejoin and keep
+        // pushing — mass never left the system, so estimates converge to
+        // the ORIGINAL global average (absent nodes never block or skew
+        // long-run progress).
+        let n = 6;
+        let mut g = crate::prop::Gen::new(0x50_05);
+        let values = random_values(&mut g, n, 3, 2.0);
+        let avg = values.mean_rows_f64().unwrap();
+        let dg = Digraph::random_strongly_connected(n, 0.5, 9);
+        let mut ps = PushSum::new(dg, &values);
+        let mut active = vec![true; n];
+        active[2] = false;
+        ps.set_active(&active);
+        ps.run(40);
+        ps.set_all_active();
+        ps.run(400);
+        assert!(ps.max_error(&avg) < 1e-6, "err={}", ps.max_error(&avg));
     }
 
     #[test]

@@ -158,72 +158,101 @@ pub struct ComputePlan {
 /// simulator's time model (paper Sec. 3; Assumption 2's conditionally
 /// linear progress).  Draw order is fixed (node-major, AMB drawing a
 /// second "potential" profile) so runs are bit-reproducible per seed.
+///
+/// Churn: `active` masks the epoch's membership.  Profiles are STILL
+/// drawn for inactive nodes (the shared straggler stream advances
+/// identically whatever the schedule, so changing only the dropout rate
+/// replays the same compute weather), but an absent node is attributed
+/// zero batch, zero potential, zero compute time, and never gates the
+/// epoch.  An all-true mask reproduces the static plan bit-for-bit.
 pub fn plan_compute(
     scheme: &Scheme,
     n: usize,
     epoch: usize,
     straggler: &dyn StragglerModel,
     rng: &mut Pcg64,
+    active: &[bool],
 ) -> ComputePlan {
+    assert_eq!(active.len(), n, "active mask must cover every node");
     let mut batches = vec![0usize; n];
     let mut potentials = vec![0usize; n];
     let mut compute_times = vec![0.0f64; n];
+    let act = active.iter().filter(|&&a| a).count();
     let epoch_compute_time;
     match *scheme {
         Scheme::Amb { t_compute, t_consensus } => {
             for i in 0..n {
                 let mut prof = straggler.draw(i, epoch, rng);
-                batches[i] = prof.grads_in_time(t_compute);
-                compute_times[i] = t_compute;
+                let b = prof.grads_in_time(t_compute);
                 // potential work c_i(t): what the node could have done
                 // with the consensus window too.  Fresh profile draw: an
                 // unbiased estimate with identical distribution.
                 let mut prof2 = straggler.draw(i, epoch, rng);
-                potentials[i] = prof2.grads_in_time(t_compute + t_consensus).max(batches[i]);
+                let pot = prof2.grads_in_time(t_compute + t_consensus);
+                if active[i] {
+                    batches[i] = b;
+                    compute_times[i] = t_compute;
+                    potentials[i] = pot.max(b);
+                }
             }
+            // AMB's schedule is absolute: the window elapses whether or
+            // not anyone is present.
             epoch_compute_time = t_compute;
         }
         Scheme::Fmb { per_node_batch, .. } => {
             let mut slowest = 0.0f64;
             for i in 0..n {
                 let mut prof = straggler.draw(i, epoch, rng);
-                batches[i] = per_node_batch;
-                compute_times[i] = prof.time_for_grads(per_node_batch);
-                slowest = slowest.max(compute_times[i]);
+                let ct = prof.time_for_grads(per_node_batch);
+                if active[i] {
+                    batches[i] = per_node_batch;
+                    compute_times[i] = ct;
+                    slowest = slowest.max(ct);
+                }
             }
             for (p, &b) in potentials.iter_mut().zip(&batches) {
-                *p = b; // FMB: everyone computes exactly the quota
+                *p = b; // FMB: every PRESENT node computes exactly the quota
             }
+            // only active nodes gate the epoch (absent nodes never block
+            // progress); with nobody present the phase is instantaneous.
             epoch_compute_time = slowest;
         }
         Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => {
-            // Redundancy baseline: wait only for the fastest n−ignore
-            // nodes.  Coded variant makes every node compute (ignore+1)×
-            // the quota so the batch stays whole.  EXACTLY n−ignore nodes
-            // survive — ties broken by node index, matching the threaded
-            // runtime's atomic finish-rank semantics (otherwise a
-            // deterministic model would mark everyone on-time and coded
-            // attribution would exceed the recoverable batch).
-            let ignore = ignore.min(n.saturating_sub(1));
-            let work = work_quota(scheme, n).unwrap();
+            // Redundancy baseline: wait only for the fastest |A|−ignore
+            // of the epoch's ACTIVE nodes.  Coded variant makes every
+            // node compute (ignore+1)× the quota so the batch stays
+            // whole.  EXACTLY |A|−ignore nodes survive — ties broken by
+            // node index, matching the threaded runtime's atomic
+            // finish-rank semantics (otherwise a deterministic model
+            // would mark everyone on-time and coded attribution would
+            // exceed the recoverable batch).
+            let ignore = ignore.min(act.saturating_sub(1));
+            let work = work_quota(scheme, act).unwrap();
             for i in 0..n {
                 let mut prof = straggler.draw(i, epoch, rng);
-                compute_times[i] = prof.time_for_grads(work);
+                let ct = prof.time_for_grads(work);
+                if active[i] {
+                    compute_times[i] = ct;
+                }
             }
-            let mut order: Vec<usize> = (0..n).collect();
-            order.sort_by(|&a, &b| {
-                compute_times[a]
-                    .partial_cmp(&compute_times[b])
-                    .unwrap()
-                    .then(a.cmp(&b))
-            });
-            let cutoff = compute_times[order[n - 1 - ignore]];
-            for (rank, &i) in order.iter().enumerate() {
-                let on_time = rank < n - ignore;
-                batches[i] = backup_attribution(on_time, coded, per_node_batch, n, ignore);
-                potentials[i] = work.max(batches[i]);
+            if act == 0 {
+                epoch_compute_time = 0.0;
+            } else {
+                let mut order: Vec<usize> = (0..n).filter(|&i| active[i]).collect();
+                order.sort_by(|&a, &b| {
+                    compute_times[a]
+                        .partial_cmp(&compute_times[b])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                let cutoff = compute_times[order[act - 1 - ignore]];
+                for (rank, &i) in order.iter().enumerate() {
+                    let on_time = rank < act - ignore;
+                    batches[i] = backup_attribution(on_time, coded, per_node_batch, act, ignore);
+                    potentials[i] = work.max(batches[i]);
+                }
+                epoch_compute_time = cutoff;
             }
-            epoch_compute_time = cutoff;
         }
     }
     ComputePlan { batches, potentials, compute_times, epoch_compute_time }
@@ -247,6 +276,10 @@ pub fn work_quota(scheme: &Scheme, n: usize) -> Option<usize> {
 /// * uncoded on-time: the quota; uncoded late: work DROPPED (0);
 /// * coded on-time: the full batch is recoverable — each survivor is
 ///   charged b/(n−ignore) of it; coded late: 0.
+///
+/// Total in `n`: a churn epoch can leave ZERO nodes active, and the
+/// threaded runtime evaluates the attribution before checking its own
+/// membership — n = 0 must attribute 0, not divide by zero.
 pub fn backup_attribution(
     on_time: bool,
     coded: bool,
@@ -254,6 +287,9 @@ pub fn backup_attribution(
     n: usize,
     ignore: usize,
 ) -> usize {
+    if n == 0 {
+        return 0;
+    }
     let ignore = ignore.min(n.saturating_sub(1));
     if !on_time {
         0
@@ -281,6 +317,37 @@ pub fn consensus_error(
         let mut ss = 0.0f64;
         for k in 0..dim {
             let exact = exact_avg[k] / b_t as f64;
+            let diff = m[k] as f64 / b_hat - exact;
+            ss += diff * diff;
+        }
+        worst = worst.max(ss.sqrt());
+    }
+    worst
+}
+
+/// [`consensus_error`] for a churn epoch: the dual target is the ratio
+/// of the ACTIVE-set mean message to the ACTIVE-set mean side channel
+/// (`active_avg`, length `dim + 1`) — the ratio encoding makes the
+/// n/|A| scale factor cancel, so this is exactly Σ_A (b_i z_i + g_i) /
+/// b(t) — and only active nodes (the ones that will decode) are scored.
+pub fn consensus_error_active(
+    msgs: &NodeMatrix,
+    active_avg: &[f64],
+    dim: usize,
+    exact_bt: bool,
+    active: &[bool],
+) -> f64 {
+    assert_eq!(active_avg.len(), dim + 1, "active_avg must include the side channel");
+    let side = active_avg[dim].max(1e-6);
+    let mut worst = 0.0f64;
+    for (i, m) in msgs.rows().enumerate() {
+        if !active[i] {
+            continue;
+        }
+        let b_hat = if exact_bt { side } else { side_channel_b_hat(m) as f64 };
+        let mut ss = 0.0f64;
+        for k in 0..dim {
+            let exact = active_avg[k] / side;
             let diff = m[k] as f64 / b_hat - exact;
             ss += diff * diff;
         }
@@ -354,7 +421,7 @@ mod tests {
         let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
         let scheme = Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 };
         let mut rng = Pcg64::new(1);
-        let plan = plan_compute(&scheme, 3, 1, &strag, &mut rng);
+        let plan = plan_compute(&scheme, 3, 1, &strag, &mut rng, &[true; 3]);
         assert_eq!(plan.batches, vec![80, 80, 80]);
         assert!(plan.potentials.iter().all(|&p| p == 100));
         assert!((plan.epoch_compute_time - 2.0).abs() < 1e-12);
@@ -365,9 +432,87 @@ mod tests {
         let strag = Deterministic { unit_time: 2.0, unit_batch: 100 };
         let scheme = Scheme::Fmb { per_node_batch: 50, t_consensus: 0.5 };
         let mut rng = Pcg64::new(1);
-        let plan = plan_compute(&scheme, 4, 1, &strag, &mut rng);
+        let plan = plan_compute(&scheme, 4, 1, &strag, &mut rng, &[true; 4]);
         assert_eq!(plan.batches, vec![50; 4]);
         assert!((plan.epoch_compute_time - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_zeroes_inactive_nodes_and_keeps_draw_stream() {
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
+        let scheme = Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 };
+        let mut rng = Pcg64::new(1);
+        let plan = plan_compute(&scheme, 3, 1, &strag, &mut rng, &[true, false, true]);
+        assert_eq!(plan.batches, vec![80, 0, 80]);
+        assert_eq!(plan.potentials, vec![100, 0, 100]);
+        assert_eq!(plan.compute_times, vec![2.0, 0.0, 2.0]);
+        // the straggler stream advances exactly as in the all-active
+        // plan (profiles are drawn for absent nodes too), so the NEXT
+        // epoch's weather is unchanged by churn — checked with a model
+        // that actually consumes the stream.
+        let se = crate::straggler::ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 40 };
+        let mut rng_churn = Pcg64::new(9);
+        let mut rng_full = Pcg64::new(9);
+        let _ = plan_compute(&scheme, 3, 1, &se, &mut rng_churn, &[true, false, false]);
+        let _ = plan_compute(&scheme, 3, 1, &se, &mut rng_full, &[true; 3]);
+        assert_eq!(
+            rng_churn.next_u64(),
+            rng_full.next_u64(),
+            "churn shifted the straggler stream"
+        );
+    }
+
+    #[test]
+    fn plan_fmb_inactive_nodes_never_gate() {
+        // node 1 would be the 4x-slow straggler, but it's absent
+        let strag = crate::straggler::HeterogeneousMeans {
+            means: vec![1.0, 4.0, 1.0],
+            jitter: 0.0,
+            unit_batch: 50,
+        };
+        let scheme = Scheme::Fmb { per_node_batch: 50, t_consensus: 0.5 };
+        let mut rng = Pcg64::new(2);
+        let plan = plan_compute(&scheme, 3, 1, &strag, &mut rng, &[true, false, true]);
+        assert_eq!(plan.batches, vec![50, 0, 50]);
+        assert!((plan.epoch_compute_time - 1.0).abs() < 1e-9, "absent straggler gated the epoch");
+    }
+
+    #[test]
+    fn plan_backup_survivor_count_tracks_active_set() {
+        let strag = crate::straggler::HeterogeneousMeans {
+            means: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            jitter: 0.0,
+            unit_batch: 10,
+        };
+        let scheme =
+            Scheme::FmbBackup { per_node_batch: 10, t_consensus: 0.5, ignore: 1, coded: false };
+        let mut rng = Pcg64::new(3);
+        // nodes 0 and 4 absent: 3 active, ignore 1 ⇒ the slowest active
+        // node (3) is dropped; survivors 1 and 2 keep the quota.
+        let plan =
+            plan_compute(&scheme, 5, 1, &strag, &mut rng, &[false, true, true, true, false]);
+        assert_eq!(plan.batches, vec![0, 10, 10, 0, 0]);
+        assert_eq!(plan.potentials[0], 0);
+        assert!((plan.epoch_compute_time - 3.0).abs() < 1e-9, "cutoff must be node 2's time");
+    }
+
+    #[test]
+    fn consensus_error_active_scores_only_active_rows() {
+        // two active rows at the exact active mean => zero error even
+        // though the inactive row is wildly off.
+        let mut msgs = NodeMatrix::new(3, 3); // dim = 2 + side channel
+        msgs.row_mut(0).copy_from_slice(&[6.0, 2.0, 2.0]);
+        msgs.row_mut(1).copy_from_slice(&[6.0, 2.0, 2.0]);
+        msgs.row_mut(2).copy_from_slice(&[1e6, -1e6, 1.0]);
+        let active = [true, true, false];
+        let avg = vec![6.0, 2.0, 2.0];
+        let err = consensus_error_active(&msgs, &avg, 2, false, &active);
+        assert!(err < 1e-12, "err={err}");
+        let err_oracle = consensus_error_active(&msgs, &avg, 2, true, &active);
+        assert!(err_oracle < 1e-12, "err={err_oracle}");
+        // perturb an active row: error registers
+        msgs.row_mut(1)[0] = 8.0;
+        assert!(consensus_error_active(&msgs, &avg, 2, false, &active) > 0.1);
     }
 
     #[test]
@@ -378,6 +523,9 @@ mod tests {
         // coded: survivors are charged b/(n-ignore) of the full batch
         assert_eq!(backup_attribution(true, true, 100, 10, 2), 125);
         assert_eq!(backup_attribution(false, true, 100, 10, 2), 0);
+        // empty active set (churn): attribute 0, never divide by zero
+        assert_eq!(backup_attribution(true, true, 100, 0, 2), 0);
+        assert_eq!(backup_attribution(true, false, 100, 0, 2), 0);
     }
 
     #[test]

@@ -33,6 +33,7 @@ pub mod epoch;
 pub mod sim;
 pub mod threaded;
 
+use crate::churn::ChurnSpec;
 use crate::exec::ExecEngine;
 use crate::metrics::RunRecord;
 use crate::topology::Topology;
@@ -163,6 +164,13 @@ pub struct RunSpec {
     /// paper units (e.g. T = 14.5 s); `time_scale = 0.01` replays them
     /// 100× faster while the records stay in spec units.
     pub time_scale: f64,
+    /// Elastic membership (`ChurnSpec::None` = the paper's static
+    /// graph): a deterministic per-epoch active-set process evaluated
+    /// identically by both runtimes.  Inactive nodes contribute
+    /// b_i = 0, are isolated in that epoch's consensus subgraph, and
+    /// hold their dual/primal state until they rejoin (DESIGN.md
+    /// §churn).
+    pub churn: ChurnSpec,
 }
 
 impl RunSpec {
@@ -181,6 +189,7 @@ impl RunSpec {
             grad_chunk: 16,
             slowdown: Vec::new(),
             time_scale: 1.0,
+            churn: ChurnSpec::None,
         }
     }
 
@@ -243,6 +252,11 @@ impl RunSpec {
         self.time_scale = scale;
         self
     }
+
+    pub fn with_churn(mut self, churn: ChurnSpec) -> RunSpec {
+        self.churn = churn;
+        self
+    }
 }
 
 /// Per-(node, epoch) raw log for straggler histograms.
@@ -278,6 +292,9 @@ pub struct RunOutput {
     /// Consensus rounds completed per (node, epoch); 0 under
     /// [`ConsensusMode::Exact`] (exact aggregation is not gossip).
     pub rounds: Vec<Vec<usize>>,
+    /// |A(t)| per epoch — the number of active nodes (always n without
+    /// churn).  The churn harness's membership diagnostic.
+    pub active_counts: Vec<usize>,
 }
 
 /// Engine factory shared by both runtimes.  The threaded runtime invokes
@@ -331,6 +348,11 @@ mod tests {
         assert_eq!(f.grad_chunk, 32);
         assert_eq!(f.slowdown, vec![2.0, 1.0]);
         assert!((f.time_scale - 0.1).abs() < 1e-12);
+        // churn defaults to the paper's static membership
+        assert!(c.churn.is_none() && f.churn.is_none());
+        let ch = RunSpec::amb("c", 1.0, 0.2, 5, 10, 1)
+            .with_churn(ChurnSpec::IidDropout { p: 0.2, seed: 3 });
+        assert_eq!(ch.churn, ChurnSpec::IidDropout { p: 0.2, seed: 3 });
     }
 
     #[test]

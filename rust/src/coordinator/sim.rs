@@ -32,6 +32,8 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
+use crate::churn::ChurnSchedule;
+use crate::consensus::churn::InducedConsensus;
 use crate::consensus::Consensus;
 use crate::coordinator::epoch::{self, NodeState};
 use crate::coordinator::{
@@ -117,7 +119,9 @@ fn compute_block(
     losses
 }
 
-/// Update phase over one contiguous node block: z ← m/b̂, w ← primal.
+/// Update phase over one contiguous node block: z ← m/b̂, w ← primal,
+/// for the nodes `update` selects (a churn epoch's inactive nodes hold
+/// their dual/primal state; an all-true mask is the static path).
 /// `rows` holds the block's post-consensus messages, `dim + 1` wide each.
 fn update_block(
     engines: &mut [Box<dyn ExecEngine>],
@@ -125,9 +129,13 @@ fn update_block(
     t_next: usize,
     rows: &[f32],
     b_hats: &[f32],
+    update: &[bool],
 ) {
     let width = states[0].dim() + 1;
     for li in 0..engines.len() {
+        if !update[li] {
+            continue;
+        }
         states[li].set_dual(&rows[li * width..(li + 1) * width], b_hats[li]);
         states[li].primal(&mut *engines[li], t_next);
     }
@@ -171,16 +179,17 @@ trait NodeBlocks {
         msgs: &mut NodeMatrix,
     ) -> Vec<f64>;
 
-    /// Update phase: when `do_update`, z_i ← msgs.row(i)/b̂_i and
-    /// w_i ← primal(t_next) for every node; always returns node 0's
-    /// error metric on its (possibly carried-over) primal, drawn from
-    /// the run-long sequential `metric_rng(seed, 0)` stream.
+    /// Update phase: z_i ← msgs.row(i)/b̂_i and w_i ← primal(t_next)
+    /// for every node `update` selects (all-false when b(t) = 0;
+    /// inactive churn nodes excluded — they hold state); always returns
+    /// node 0's error metric on its (possibly carried-over) primal,
+    /// drawn from the run-long sequential `metric_rng(seed, 0)` stream.
     fn update_and_error(
         &mut self,
         t_next: usize,
         msgs: &NodeMatrix,
         b_hats: &[f32],
-        do_update: bool,
+        update: &[bool],
     ) -> f64;
 
     /// Final primal arena (one row per node).
@@ -234,10 +243,17 @@ impl NodeBlocks for SerialBlocks {
         t_next: usize,
         msgs: &NodeMatrix,
         b_hats: &[f32],
-        do_update: bool,
+        update: &[bool],
     ) -> f64 {
-        if do_update {
-            update_block(&mut self.engines, &mut self.states, t_next, msgs.as_slice(), b_hats);
+        if update.iter().any(|&u| u) {
+            update_block(
+                &mut self.engines,
+                &mut self.states,
+                t_next,
+                msgs.as_slice(),
+                b_hats,
+                update,
+            );
         }
         self.engines[0].error_metric(&self.states[0].w, &mut self.metric_rng)
     }
@@ -257,7 +273,9 @@ impl NodeBlocks for SerialBlocks {
 /// in node order).
 enum Cmd {
     Compute { epoch: usize, batches: Vec<usize> },
-    Update { t_next: usize, rows: Vec<f32>, b_hats: Vec<f32>, do_update: bool },
+    /// `update` masks the worker's nodes (node order within the block);
+    /// `rows`/`b_hats` are empty when no node in the block updates.
+    Update { t_next: usize, rows: Vec<f32>, b_hats: Vec<f32>, update: Vec<bool> },
     Finish,
 }
 
@@ -325,16 +343,17 @@ impl NodeBlocks for PooledBlocks {
         t_next: usize,
         msgs: &NodeMatrix,
         b_hats: &[f32],
-        do_update: bool,
+        update: &[bool],
     ) -> f64 {
         let width = self.dim + 1;
         for (w, &(lo, hi)) in self.spans.iter().enumerate() {
-            let (rows, bh) = if do_update {
+            let mask = update[lo..hi].to_vec();
+            let (rows, bh) = if mask.iter().any(|&u| u) {
                 (msgs.as_slice()[lo * width..hi * width].to_vec(), b_hats[lo..hi].to_vec())
             } else {
                 (Vec::new(), Vec::new())
             };
-            self.send(w, Cmd::Update { t_next, rows, b_hats: bh, do_update });
+            self.send(w, Cmd::Update { t_next, rows, b_hats: bh, update: mask });
         }
         let mut error = f64::NAN;
         for _ in 0..self.spans.len() {
@@ -414,9 +433,9 @@ fn sim_worker(ctx: WorkerCtx, make_engine: EngineFactory<'_>) {
                     break;
                 }
             }
-            Cmd::Update { t_next, rows, b_hats, do_update } => {
-                if do_update {
-                    update_block(&mut engines, &mut states, t_next, &rows, &b_hats);
+            Cmd::Update { t_next, rows, b_hats, update } => {
+                if update.iter().any(|&u| u) {
+                    update_block(&mut engines, &mut states, t_next, &rows, &b_hats, &update);
                 }
                 let error = match metric_rng.as_mut() {
                     Some(rng) => engines[0].error_metric(&states[0].w, rng),
@@ -515,23 +534,39 @@ fn epoch_loop<B: NodeBlocks>(
     // runtime so one spec replays the same data everywhere).
     let mut strag_rng = epoch::straggler_rng(spec.seed);
 
-    // Consensus machinery (lazy P for the PSD assumption; see topology.rs).
-    let mut cons = Consensus::new(topo.metropolis().lazy());
+    // Per-epoch membership, precomputed from the spec (pure function of
+    // seed — the threaded runtime derives the identical table).
+    let churn = ChurnSchedule::new(&spec.churn, n, spec.epochs);
+
+    // Consensus machinery (lazy P for the PSD assumption; see
+    // topology.rs).  The induced engine's all-active path IS the static
+    // matrix + the static kernels, so runs without churn — and churn
+    // schedules that happen never to drop a node — are bit-for-bit the
+    // pre-churn outputs; churned epochs take induced matrices memoized
+    // by active-set key (consensus::churn).
+    let mut cons = InducedConsensus::new(topo.clone());
 
     // The consensus wire: one flat [n × (dim+1)] arena, encoded/decoded
     // in place every epoch (no per-node buffers, no per-epoch allocation).
     let mut msgs = NodeMatrix::new(n, dim + 1);
     let mut rounds_buf = vec![0usize; n];
     let mut b_hats = vec![0.0f32; n];
+    let mut update_mask = vec![false; n];
 
     let mut record = RunRecord::new(&spec.name, f_star);
     let mut node_log = spec.record_node_log.then(|| NodeLog::new(n));
     let mut rounds_log: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut active_counts = Vec::with_capacity(spec.epochs);
     let mut wall = 0.0f64;
 
     for t in 1..=spec.epochs {
+        let active = churn.active(t);
+        let act = churn.active_count(t);
+        let all_active = act == n;
+        active_counts.push(act);
+
         // ---- compute phase -------------------------------------------------
-        let plan = epoch::plan_compute(&spec.scheme, n, t, straggler, &mut strag_rng);
+        let plan = epoch::plan_compute(&spec.scheme, n, t, straggler, &mut strag_rng, active);
         let b_t: usize = plan.batches.iter().sum();
         let c_t: usize = plan.potentials.iter().sum();
 
@@ -543,13 +578,25 @@ fn epoch_loop<B: NodeBlocks>(
         }
 
         // ---- consensus phase ------------------------------------------------
-        let exact_avg =
-            Consensus::exact_average(&msgs).expect("topology guarantees n > 0 nodes");
+        // The exact average of the epoch's initial messages — over ALL
+        // rows when everyone is present (the static code path, column-
+        // pooled), over the ACTIVE rows under churn (inactive rows are
+        // isolated and must not dilute the target).  None ⇔ nobody is
+        // present, in which case the epoch is a membership no-op.
+        let exact_avg: Option<Vec<f64>> = if all_active {
+            Some(Consensus::exact_average(&msgs).expect("topology guarantees n > 0 nodes"))
+        } else {
+            InducedConsensus::active_mean_f64(&msgs, active)
+        };
         match spec.consensus {
             ConsensusMode::Exact => {
-                for i in 0..n {
-                    for (v, &a) in msgs.row_mut(i).iter_mut().zip(&exact_avg) {
-                        *v = a as f32;
+                if let Some(avg) = &exact_avg {
+                    for i in 0..n {
+                        if active[i] {
+                            for (v, &a) in msgs.row_mut(i).iter_mut().zip(avg) {
+                                *v = a as f32;
+                            }
+                        }
                     }
                 }
                 rounds_buf.fill(0);
@@ -565,14 +612,30 @@ fn epoch_loop<B: NodeBlocks>(
                      threaded-only GOSSIP_UNTIL_DEADLINE sentinel; the sim has no per-round \
                      time model and runs exactly `rounds` mixes — use a finite budget"
                 );
-                cons.run(&mut msgs, rounds);
-                rounds_buf.fill(rounds);
+                if act > 0 {
+                    cons.run(&mut msgs, rounds, active);
+                }
+                // Churn-isolated nodes (active, every neighbour down) log
+                // 0 rounds — they had nobody to gossip with, matching the
+                // threaded runtime's convention.  The all-active path
+                // keeps today's log bit-for-bit.
+                for (i, r) in rounds_buf.iter_mut().enumerate() {
+                    let gossips = active[i]
+                        && (all_active || topo.neighbors(i).iter().any(|&j| active[j]));
+                    *r = if gossips { rounds } else { 0 };
+                }
             }
             ConsensusMode::GossipJitter { mean, jitter } => {
                 for (i, r) in rounds_buf.iter_mut().enumerate() {
-                    *r = epoch::gossip_jitter_rounds(spec.seed, i, t, mean, jitter);
+                    let gossips = active[i]
+                        && (all_active || topo.neighbors(i).iter().any(|&j| active[j]));
+                    *r = if gossips {
+                        epoch::gossip_jitter_rounds(spec.seed, i, t, mean, jitter)
+                    } else {
+                        0
+                    };
                 }
-                cons.run_per_node(&mut msgs, &rounds_buf);
+                cons.run_per_node(&mut msgs, &rounds_buf, active);
             }
         }
         for i in 0..n {
@@ -585,17 +648,40 @@ fn epoch_loop<B: NodeBlocks>(
         let mut consensus_err = 0.0f64;
         let do_update = b_t > 0;
         if do_update {
-            consensus_err = epoch::consensus_error(&msgs, &exact_avg, dim, b_t, spec.exact_bt);
+            let avg = exact_avg.as_ref().expect("b_t > 0 requires an active node");
+            consensus_err = if all_active {
+                epoch::consensus_error(&msgs, avg, dim, b_t, spec.exact_bt)
+            } else {
+                epoch::consensus_error_active(&msgs, avg, dim, spec.exact_bt, active)
+            };
             for i in 0..n {
-                b_hats[i] = if spec.exact_bt {
+                b_hats[i] = if !spec.exact_bt {
+                    epoch::side_channel_b_hat(msgs.row(i))
+                } else if all_active {
                     b_t as f32
                 } else {
-                    epoch::side_channel_b_hat(msgs.row(i))
+                    // churned oracle: perfect averaging over |A| nodes
+                    // scales the side channel to n·b(t)/|A| — the exact
+                    // value the ratio encoding divides back out.
+                    avg[dim] as f32
                 };
             }
         }
-        // (if b_t == 0 the epoch produced nothing; state carries over)
-        let error = nodes.update_and_error(t + 1, &msgs, &b_hats, do_update);
+        // (if b_t == 0 the epoch produced nothing; state carries over —
+        // and inactive nodes ALWAYS hold their state until they rejoin.)
+        // The per-node gate on the node's OWN side channel mirrors the
+        // threaded runtime: a node whose post-consensus message carries
+        // no mass — e.g. churn isolated it with b_i = 0, so its row is
+        // all-zero — holds its dual instead of zeroing it.  Gating on
+        // the own side channel even under `exact_bt` matters: the
+        // oracle b̂ only rescales the division, it cannot conjure mass
+        // into a row nothing reached.
+        for (i, u) in update_mask.iter_mut().enumerate() {
+            *u = do_update
+                && active[i]
+                && epoch::side_channel_b_hat(msgs.row(i)) > 0.5;
+        }
+        let error = nodes.update_and_error(t + 1, &msgs, &b_hats, &update_mask);
 
         if let Some(log) = node_log.as_mut() {
             for i in 0..n {
@@ -616,7 +702,13 @@ fn epoch_loop<B: NodeBlocks>(
         });
     }
 
-    RunOutput { record, node_log, final_w: nodes.final_w(), rounds: rounds_log }
+    RunOutput {
+        record,
+        node_log,
+        final_w: nodes.final_w(),
+        rounds: rounds_log,
+        active_counts,
+    }
 }
 
 #[cfg(test)]
@@ -803,6 +895,40 @@ mod tests {
         assert!(out.record.epochs.last().unwrap().error.is_finite());
         // jitter draws stay inside the configured band
         assert!(out.rounds.iter().flatten().all(|&r| (3..=7).contains(&r)));
+    }
+
+    #[test]
+    fn churn_trace_zeroes_absent_nodes_and_logs_membership() {
+        use crate::churn::ChurnSpec;
+        let topo = Topology::ring(4);
+        let (src, opt) = linreg_setup(8, 7);
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
+        // node 3 absent in even epochs, node 0 absent in epoch 3
+        let trace = ChurnSpec::Trace {
+            active: vec![
+                vec![true, true, false, true],
+                vec![true],
+                vec![true],
+                vec![true, false],
+            ],
+        };
+        let spec = RunSpec::amb("churn-sim", 2.0, 0.5, 4, 4, 5)
+            .with_node_log()
+            .with_churn(trace);
+        let out = run_on(&spec, &topo, &strag, src, opt);
+        let log = out.node_log.unwrap();
+        // deterministic model: present nodes compute 80, absent 0
+        assert_eq!(log.batches[3], vec![80, 0, 80, 0]);
+        assert_eq!(log.batches[0], vec![80, 80, 0, 80]);
+        assert_eq!(log.batches[1], vec![80, 80, 80, 80]);
+        // epoch 1 has everyone; afterwards exactly one node is out
+        assert_eq!(out.active_counts, vec![4, 3, 3, 3]);
+        // absent nodes complete zero gossip rounds
+        assert_eq!(out.rounds[3], vec![4, 0, 4, 0]);
+        // epoch batch sums only the present nodes
+        let batches: Vec<usize> = out.record.epochs.iter().map(|e| e.batch).collect();
+        assert_eq!(batches, vec![4 * 80, 3 * 80, 3 * 80, 3 * 80]);
+        assert_eq!(out.record.epochs[1].min_node_batch, 0);
     }
 
     #[test]

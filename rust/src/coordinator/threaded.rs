@@ -36,6 +36,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::churn::ChurnSchedule;
 use crate::coordinator::epoch::{self, NodeState};
 use crate::coordinator::{
     ConsensusMode, EngineFactory, NodeLog, RunOutput, RunSpec, Runtime, RuntimeKind, Scheme,
@@ -107,6 +108,12 @@ struct NodeCtx {
     p: Arc<MixMatrix>,
     /// Per-epoch finish counters (FmbBackup cutoff detection).
     done_counts: Arc<Vec<AtomicUsize>>,
+    /// The base topology — induced Metropolis rows for churned epochs
+    /// are computed locally from neighbour lists + the shared schedule.
+    topo: Arc<Topology>,
+    /// Per-epoch membership, identical on every node (pure function of
+    /// the spec): activity needs no coordination messages.
+    churn: Arc<ChurnSchedule>,
 }
 
 fn run_threaded(
@@ -154,6 +161,8 @@ fn run_threaded(
     let start_cell: Arc<OnceLock<Instant>> = Arc::new(OnceLock::new());
     let done_counts: Arc<Vec<AtomicUsize>> =
         Arc::new((0..spec.epochs).map(|_| AtomicUsize::new(0)).collect());
+    let topo_arc = Arc::new(topo.clone());
+    let churn = Arc::new(ChurnSchedule::new(&spec.churn, n, spec.epochs));
 
     let results: Vec<NodeResult> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -170,6 +179,8 @@ fn run_threaded(
                 peers: peer_ids[i].clone(),
                 p: p.clone(),
                 done_counts: done_counts.clone(),
+                topo: topo_arc.clone(),
+                churn: churn.clone(),
             };
             handles.push(scope.spawn(move || node_main(ctx, make_engine)));
         }
@@ -177,22 +188,36 @@ fn run_threaded(
         handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect()
     });
 
-    assemble(spec, n, results, f_star)
+    assemble(spec, n, results, f_star, &churn)
 }
 
 /// Leader-side assembly of the per-node reports into the common
 /// [`RunOutput`] (times converted back to spec units).
-fn assemble(spec: &RunSpec, n: usize, mut results: Vec<NodeResult>, f_star: Option<f64>) -> RunOutput {
+fn assemble(
+    spec: &RunSpec,
+    n: usize,
+    mut results: Vec<NodeResult>,
+    f_star: Option<f64>,
+    // the SAME schedule instance the node threads evaluated (one build
+    // per run; the table is a pure function of the spec either way)
+    churn: &ChurnSchedule,
+) -> RunOutput {
     results.sort_by_key(|r| r.node);
     let dim = results.first().map_or(0, |r| r.final_w.len());
     let scale = spec.time_scale;
-    let quota = epoch::work_quota(&spec.scheme, n);
+    let is_amb = matches!(spec.scheme, Scheme::Amb { .. });
 
     let mut record = RunRecord::new(&spec.name, f_star);
     let mut node_log = spec.record_node_log.then(|| NodeLog::new(n));
     let mut rounds = vec![Vec::new(); n];
+    let mut active_counts = Vec::with_capacity(spec.epochs);
     let mut wall = 0.0f64;
     for t in 1..=spec.epochs {
+        let active = churn.active(t);
+        let act_count = churn.active_count(t);
+        active_counts.push(act_count);
+        // Per-epoch quota over the ACTIVE cluster (None for AMB).
+        let quota = epoch::work_quota(&spec.scheme, act_count);
         let mut b_t = 0usize;
         let mut loss = 0.0f64;
         let mut min_b = usize::MAX;
@@ -204,15 +229,16 @@ fn assemble(spec: &RunSpec, n: usize, mut results: Vec<NodeResult>, f_star: Opti
             loss += row.loss;
             min_b = min_b.min(row.b);
             max_b = max_b.max(row.b);
-            // Dropped backup stragglers do not gate the epoch (the sim's
-            // epoch_compute_time is the survivors' cutoff); their late
-            // abandon time must not inflate the wall clock.
+            // Dropped backup stragglers and absent nodes do not gate the
+            // epoch (the sim's epoch_compute_time is the survivors'
+            // cutoff); their time must not inflate the wall clock.
             if quota.is_none() || row.b > 0 {
                 max_compute = max_compute.max(row.compute_secs);
             }
             if let Some(log) = node_log.as_mut() {
                 let ct = match spec.scheme {
-                    Scheme::Amb { t_compute, .. } => t_compute,
+                    Scheme::Amb { t_compute, .. } if active[r.node] => t_compute,
+                    Scheme::Amb { .. } => 0.0,
                     _ => row.compute_secs / scale,
                 };
                 log.push(r.node, row.b, ct);
@@ -226,10 +252,16 @@ fn assemble(spec: &RunSpec, n: usize, mut results: Vec<NodeResult>, f_star: Opti
             _ => wall + max_compute / scale + spec.scheme.t_consensus(),
         };
         // Potential work c(t): the quota schemes know exactly what was
-        // assigned; AMB's undone work is unobservable in real time.
-        let potential = match quota {
-            None => b_t,
-            Some(work) => results.iter().map(|r| work.max(r.rows[t - 1].b)).sum(),
+        // assigned to each PRESENT node; AMB's undone work is
+        // unobservable in real time, and absent nodes have none.
+        let potential = if is_amb {
+            b_t
+        } else {
+            let work = quota.unwrap_or(0);
+            results
+                .iter()
+                .map(|r| if active[r.node] { work.max(r.rows[t - 1].b) } else { 0 })
+                .sum()
         };
         record.push(EpochStats {
             epoch: t,
@@ -247,7 +279,7 @@ fn assemble(spec: &RunSpec, n: usize, mut results: Vec<NodeResult>, f_star: Opti
     for r in &results {
         final_w.row_mut(r.node).copy_from_slice(&r.final_w);
     }
-    RunOutput { record, node_log, final_w, rounds }
+    RunOutput { record, node_log, final_w, rounds, active_counts }
 }
 
 fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
@@ -295,14 +327,13 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
     };
 
     // FmbBackup bookkeeping shared with the simulator's attribution.
+    // `ignore` stays UNclamped here: under churn the per-epoch clamp is
+    // against the ACTIVE count, computed inside the epoch loop.
     let (ignore, coded, per_node_batch) = match spec.scheme {
-        Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => {
-            (ignore.min(n.saturating_sub(1)), coded, per_node_batch)
-        }
+        Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => (ignore, coded, per_node_batch),
         Scheme::Fmb { per_node_batch, .. } => (0, false, per_node_batch),
         Scheme::Amb { .. } => (0, false, 0),
     };
-    let quota = epoch::work_quota(&spec.scheme, n);
 
     // Engine is built and warm; rendezvous, then agree on the common t0.
     ctx.ready.wait();
@@ -312,6 +343,11 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
         st.begin_epoch();
         // Per-(node, epoch) stream, identical to the simulator's.
         let mut data_rng = epoch::data_rng(spec.seed, i, t);
+        // Membership is a pure function of the spec: every node reads
+        // the same table, so nobody waits on an absent peer.
+        let active = ctx.churn.active(t);
+        let on = active[i];
+        let act_count = ctx.churn.active_count(t);
         let mut b_i = 0usize;
         let mut loss_i = 0.0f64;
         let compute_secs;
@@ -328,7 +364,9 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 let compute_deadline = epoch_start + Duration::from_secs_f64(t_compute * scale);
                 let epoch_deadline = epoch_start + Duration::from_secs_f64(epoch_len);
                 sleep_until(epoch_start);
-                while Instant::now() + est_chunk.mul_f64(0.9) < compute_deadline {
+                // An absent node idles the window out (the absolute
+                // schedule ticks on regardless — DESIGN.md §churn).
+                while on && Instant::now() + est_chunk.mul_f64(0.9) < compute_deadline {
                     let chunk_t0 = Instant::now();
                     loss_i +=
                         engine.grad_chunk(&st.w, grad_chunk, &mut data_rng, &mut st.grad_sum);
@@ -346,23 +384,30 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     let observed = chunk_t0.elapsed();
                     est_chunk = est_chunk.mul_f64(0.5) + observed.mul_f64(0.5);
                 }
-                if b_i == 0 {
+                if on && b_i == 0 {
                     // Nothing admitted: the estimate may be stale-high
                     // (scheduler spike, paging); decay it so the node can
                     // re-probe instead of starving forever.
                     est_chunk = est_chunk.mul_f64(0.5);
                 }
                 sleep_until(compute_deadline);
-                compute_secs = t_compute * scale;
+                compute_secs = if on { t_compute * scale } else { 0.0 };
                 consensus_deadline = epoch_deadline;
             }
             Scheme::Fmb { .. } | Scheme::FmbBackup { .. } => {
                 // ---- compute phase: race to the quota ----
-                let work = quota.unwrap();
+                // The epoch's effective cluster is its ACTIVE set: the
+                // quota, the coded attribution, and the survivor count
+                // all use |A(t)| — matching the simulator's plan (shared
+                // helpers in `epoch`).  Absent nodes skip the race but
+                // still hit both barriers, so phases stay aligned.
+                let ignore_eff = ignore.min(act_count.saturating_sub(1));
+                let work = epoch::work_quota(&spec.scheme, act_count).unwrap();
                 // Gradients beyond this count are pure redundancy (coded):
                 // they cost real time but their sums are never used.
-                let attributed = epoch::backup_attribution(true, coded, per_node_batch, n, ignore);
-                let survivors = n - ignore;
+                let attributed =
+                    epoch::backup_attribution(true, coded, per_node_batch, act_count, ignore_eff);
+                let survivors = act_count - ignore_eff;
                 let is_backup = matches!(spec.scheme, Scheme::FmbBackup { .. });
                 // Align the epoch start: without this, a node delayed in
                 // the PREVIOUS epoch's consensus window could find the
@@ -370,83 +415,110 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 // lateness it didn't have (the sim drops the `ignore`
                 // slowest by compute time, never by consensus luck).
                 ctx.phase_barrier.wait();
-                let compute_t0 = Instant::now();
-                let mut done = 0usize;
-                let mut abandoned = false;
-                let mut scratch: Vec<f32> = Vec::new();
-                while done < work {
-                    if is_backup
-                        && ctx.done_counts[t - 1].load(Ordering::SeqCst) >= survivors
-                    {
-                        // Cutoff passed: this node is a dropped straggler.
-                        abandoned = true;
-                        break;
+                if on {
+                    let compute_t0 = Instant::now();
+                    let mut done = 0usize;
+                    let mut abandoned = false;
+                    let mut scratch: Vec<f32> = Vec::new();
+                    while done < work {
+                        if is_backup
+                            && ctx.done_counts[t - 1].load(Ordering::SeqCst) >= survivors
+                        {
+                            // Cutoff passed: this node is a dropped straggler.
+                            abandoned = true;
+                            break;
+                        }
+                        let chunk_t0 = Instant::now();
+                        let take = grad_chunk.min(work - done);
+                        let main_take =
+                            if done < attributed { take.min(attributed - done) } else { 0 };
+                        if main_take > 0 {
+                            loss_i += engine.grad_chunk(
+                                &st.w,
+                                main_take,
+                                &mut data_rng,
+                                &mut st.grad_sum,
+                            );
+                        }
+                        let redundant = take - main_take;
+                        if redundant > 0 {
+                            // Redundant work burns real compute time but its
+                            // gradients are never attributed; a dedicated RNG
+                            // stream keeps the attributed data sequence equal
+                            // to the simulator's.
+                            scratch.clear();
+                            scratch.resize(dim, 0.0);
+                            let _ = engine.grad_chunk(
+                                &st.w,
+                                redundant,
+                                &mut redundant_rng,
+                                &mut scratch,
+                            );
+                        }
+                        done += take;
+                        if slowdown > 1.0 {
+                            std::thread::sleep(chunk_t0.elapsed().mul_f64(slowdown - 1.0));
+                        }
                     }
-                    let chunk_t0 = Instant::now();
-                    let take = grad_chunk.min(work - done);
-                    let main_take = if done < attributed { take.min(attributed - done) } else { 0 };
-                    if main_take > 0 {
-                        loss_i += engine.grad_chunk(
-                            &st.w,
-                            main_take,
-                            &mut data_rng,
-                            &mut st.grad_sum,
-                        );
+                    let on_time = if abandoned {
+                        false
+                    } else {
+                        // Only ACTIVE nodes enter the finish race.
+                        let rank = ctx.done_counts[t - 1].fetch_add(1, Ordering::SeqCst);
+                        !is_backup || rank < survivors
+                    };
+                    if on_time {
+                        b_i = attributed;
+                    } else {
+                        // Straggler: work dropped (b_i = 0), state untouched.
+                        b_i = 0;
+                        loss_i = 0.0;
+                        st.grad_sum.fill(0.0);
                     }
-                    let redundant = take - main_take;
-                    if redundant > 0 {
-                        // Redundant work burns real compute time but its
-                        // gradients are never attributed; a dedicated RNG
-                        // stream keeps the attributed data sequence equal
-                        // to the simulator's.
-                        scratch.clear();
-                        scratch.resize(dim, 0.0);
-                        let _ =
-                            engine.grad_chunk(&st.w, redundant, &mut redundant_rng, &mut scratch);
-                    }
-                    done += take;
-                    if slowdown > 1.0 {
-                        std::thread::sleep(chunk_t0.elapsed().mul_f64(slowdown - 1.0));
-                    }
-                }
-                let on_time = if abandoned {
-                    false
+                    compute_secs = compute_t0.elapsed().as_secs_f64();
                 } else {
-                    let rank = ctx.done_counts[t - 1].fetch_add(1, Ordering::SeqCst);
-                    !is_backup || rank < survivors
-                };
-                if on_time {
-                    b_i = attributed;
-                } else {
-                    // Straggler: work dropped (b_i = 0), state untouched.
-                    b_i = 0;
-                    loss_i = 0.0;
-                    st.grad_sum.fill(0.0);
+                    // Absent: no compute, no finish-counter entry; the
+                    // barrier below keeps the cluster in phase.
+                    compute_secs = 0.0;
                 }
-                compute_secs = compute_t0.elapsed().as_secs_f64();
                 // The epoch's compute phase ends for everyone together.
                 ctx.phase_barrier.wait();
                 consensus_deadline = Instant::now() + Duration::from_secs_f64(t_consensus_real);
             }
         }
 
-        // ---- consensus phase ----
-        st.encode_into(n, b_i, &mut m);
+        // ---- consensus phase (ACTIVE nodes only) ----
+        // An absent node neither sends nor mixes: nobody addresses it
+        // (every sender reads the same schedule), and it holds m, z, w
+        // untouched until it rejoins — the simulator's isolated-row
+        // semantics on real threads.
         let mut rounds_done = 0usize;
+        if on {
+            st.encode_into(n, b_i, &mut m);
+        }
         match spec.consensus {
+            // Absent this epoch: no sends, no mixing, m/z/w held.
+            _ if !on => {}
             ConsensusMode::Exact => {
-                // All-to-all exchange; aggregate in f64 node-index order so
-                // the result equals the simulator's exact average bit-for-bit
-                // given equal inputs.
+                // All-to-all exchange among the ACTIVE set; aggregate in
+                // f64 node-index order over |A| rows so the result equals
+                // the simulator's active-mean bit-for-bit given equal
+                // inputs.
                 let payload: Arc<[f32]> = Arc::from(&m[..]);
-                for tx in &ctx.peer_txs {
-                    let _ =
-                        tx.send(WireMsg { from: i, epoch: t, round: 0, payload: payload.clone() });
+                for (idx, tx) in ctx.peer_txs.iter().enumerate() {
+                    if active[ctx.peers[idx]] {
+                        let _ = tx.send(WireMsg {
+                            from: i,
+                            epoch: t,
+                            round: 0,
+                            payload: payload.clone(),
+                        });
+                    }
                 }
                 let mut have: Vec<Option<Arc<[f32]>>> = (0..n).map(|_| None).collect();
-                let mut missing = n - 1;
+                let mut missing = act_count - 1;
                 for j in 0..n {
-                    if j != i {
+                    if j != i && active[j] {
                         if let Some(pl) = inbox.remove(&(t, 0, j)) {
                             have[j] = Some(pl);
                             missing -= 1;
@@ -461,6 +533,7 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     match ctx.rx.recv_timeout(consensus_deadline - now) {
                         Ok(msg) => {
                             if msg.epoch == t && msg.round == 0 && msg.from != i
+                                && active[msg.from]
                                 && have[msg.from].is_none()
                             {
                                 have[msg.from] = Some(msg.payload);
@@ -475,6 +548,9 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 if missing == 0 {
                     let mut sum = vec![0.0f64; dim + 1];
                     for j in 0..n {
+                        if !active[j] {
+                            continue;
+                        }
                         let pj: &[f32] =
                             if j == i { &m } else { have[j].as_deref().expect("missing == 0") };
                         for k in 0..=dim {
@@ -482,7 +558,7 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                         }
                     }
                     for (v, &s) in m.iter_mut().zip(&sum) {
-                        *v = (s / n as f64) as f32;
+                        *v = (s / act_count as f64) as f32;
                     }
                 }
                 // else: T_c expired with peers missing — keep own m (the
@@ -505,6 +581,29 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                         ConsensusMode::Exact => unreachable!(),
                     }
                 };
+                // This epoch's gossip runs over the ACTIVE subgraph:
+                // `epeers` indexes the active peers, and the mixing row
+                // is the base lazy Metropolis row when everyone is
+                // present (the static path, zero recompute) or the
+                // induced-subgraph row — derived locally from neighbour
+                // lists + the shared schedule, matching the simulator's
+                // `Topology::induced(..).metropolis().lazy()` weights —
+                // when somebody churned.
+                let epeers: Vec<usize> =
+                    (0..ctx.peers.len()).filter(|&idx| active[ctx.peers[idx]]).collect();
+                let (pii, pw): (f32, Vec<f32>) = if act_count == n {
+                    (
+                        ctx.p.at(i, i) as f32,
+                        epeers.iter().map(|&idx| ctx.p.at(i, ctx.peers[idx]) as f32).collect(),
+                    )
+                } else {
+                    // Gossip peers are the adjacency list in ascending
+                    // order, and `epeers` filters it in order, so the
+                    // helper's weights align 1:1 with `epeers`.
+                    let (d, w) = ctx.topo.induced_lazy_metropolis_row(active, i);
+                    debug_assert_eq!(w.len(), epeers.len());
+                    (d as f32, w.iter().map(|&x| x as f32).collect())
+                };
                 // A peer sends round 0 unconditionally, then round k after
                 // its k-th mix — INCLUDING its final post-budget state, so
                 // the frozen value neighbours fall back on is the peer's
@@ -513,41 +612,58 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 let peer_sends = |node: usize, round: usize| -> bool {
                     round <= budget_of(node)
                 };
-                let max_rounds = budget_of(i);
+                let max_rounds = if epeers.is_empty() {
+                    // Nobody to exchange with (churn isolated us): the
+                    // induced row is eᵢ, so mixing is the identity —
+                    // skip it rather than spin against the deadline.
+                    0
+                } else {
+                    budget_of(i)
+                };
                 // Frozen-peer tracking is only needed when budgets can
                 // differ across nodes (jitter); under uniform Gossip the
                 // fallback never triggers, so skip the per-message clones.
                 let track_frozen =
                     matches!(spec.consensus, ConsensusMode::GossipJitter { .. });
-                let payload: Arc<[f32]> = Arc::from(&m[..]);
-                for tx in &ctx.peer_txs {
-                    let _ =
-                        tx.send(WireMsg { from: i, epoch: t, round: 0, payload: payload.clone() });
+                // Round 0 is sent even on a zero budget (jitter lo = 0):
+                // it is the frozen value active peers mix against.
+                if !epeers.is_empty() {
+                    let payload: Arc<[f32]> = Arc::from(&m[..]);
+                    for &idx in &epeers {
+                        let _ = ctx.peer_txs[idx].send(WireMsg {
+                            from: i,
+                            epoch: t,
+                            round: 0,
+                            payload: payload.clone(),
+                        });
+                    }
                 }
-                // Most recent payload seen from each peer this epoch
-                // (per-sender mpsc order makes "latest" = highest round).
-                let mut latest: Vec<Option<Arc<[f32]>>> = vec![None; ctx.peers.len()];
+                // Most recent payload seen from each active peer this
+                // epoch (per-sender mpsc order makes "latest" = highest
+                // round).
+                let mut latest: Vec<Option<Arc<[f32]>>> = vec![None; epeers.len()];
                 // Round-k collection slots, reused across rounds.
-                let mut have: Vec<Option<Arc<[f32]>>> = vec![None; ctx.peers.len()];
+                let mut have: Vec<Option<Arc<[f32]>>> = vec![None; epeers.len()];
                 let mut round = 0usize;
                 'rounds: while round < max_rounds {
-                    // collect all peers' round-`round` messages
+                    // collect all active peers' round-`round` messages
                     for h in have.iter_mut() {
                         *h = None;
                     }
-                    let mut missing = ctx.peers.len();
+                    let mut missing = epeers.len();
                     // drain buffered messages; fall back to frozen values
                     // for peers whose budget is exhausted
-                    for (idx, &j) in ctx.peers.iter().enumerate() {
+                    for (e, &idx) in epeers.iter().enumerate() {
+                        let j = ctx.peers[idx];
                         if let Some(pl) = inbox.remove(&(t, round, j)) {
                             if track_frozen {
-                                latest[idx] = Some(pl.clone());
+                                latest[e] = Some(pl.clone());
                             }
-                            have[idx] = Some(pl);
+                            have[e] = Some(pl);
                             missing -= 1;
                         } else if !peer_sends(j, round) {
-                            if let Some(frozen) = latest[idx].clone() {
-                                have[idx] = Some(frozen);
+                            if let Some(frozen) = latest[e].clone() {
+                                have[e] = Some(frozen);
                                 missing -= 1;
                             }
                             // else: j's round-0 is still in flight; wait
@@ -561,15 +677,19 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                         }
                         match ctx.rx.recv_timeout(consensus_deadline - now) {
                             Ok(msg) => {
-                                let peer_idx = (msg.epoch == t)
-                                    .then(|| ctx.peers.iter().position(|&j| j == msg.from))
+                                let peer_e = (msg.epoch == t)
+                                    .then(|| {
+                                        epeers
+                                            .iter()
+                                            .position(|&idx| ctx.peers[idx] == msg.from)
+                                    })
                                     .flatten();
-                                if let Some(idx) = peer_idx {
+                                if let Some(e) = peer_e {
                                     if track_frozen {
-                                        latest[idx] = Some(msg.payload.clone());
+                                        latest[e] = Some(msg.payload.clone());
                                     }
-                                    if msg.round == round && have[idx].is_none() {
-                                        have[idx] = Some(msg.payload);
+                                    if msg.round == round && have[e].is_none() {
+                                        have[e] = Some(msg.payload);
                                         missing -= 1;
                                         // a frozen-eligible peer may have
                                         // just delivered its round 0
@@ -580,10 +700,11 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                                 inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
                                 // re-check frozen fallbacks now that
                                 // `latest` may have been filled
-                                for (idx, &j) in ctx.peers.iter().enumerate() {
-                                    if have[idx].is_none() && !peer_sends(j, round) {
-                                        if let Some(frozen) = latest[idx].clone() {
-                                            have[idx] = Some(frozen);
+                                for (e, &idx) in epeers.iter().enumerate() {
+                                    let j = ctx.peers[idx];
+                                    if have[e].is_none() && !peer_sends(j, round) {
+                                        if let Some(frozen) = latest[e].clone() {
+                                            have[e] = Some(frozen);
                                             missing -= 1;
                                         }
                                     }
@@ -595,14 +716,13 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     if missing > 0 {
                         break 'rounds;
                     }
-                    // m ← P_ii m + Σ_j P_ij m_j
-                    let pii = ctx.p.at(i, i) as f32;
+                    // m ← P_ii m + Σ_{j ∈ A ∩ N(i)} P_ij m_j
                     for v in m.iter_mut() {
                         *v *= pii;
                     }
-                    for (idx, &j) in ctx.peers.iter().enumerate() {
-                        let pij = ctx.p.at(i, j) as f32;
-                        let mj = have[idx].as_ref().unwrap();
+                    for (e, _) in epeers.iter().enumerate() {
+                        let pij = pw[e];
+                        let mj = have[e].as_ref().unwrap();
                         for k in 0..=dim {
                             m[k] += pij * mj[k];
                         }
@@ -621,9 +741,13 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                         break 'rounds;
                     }
                     let payload: Arc<[f32]> = Arc::from(&m[..]);
-                    for tx in &ctx.peer_txs {
-                        let _ = tx
-                            .send(WireMsg { from: i, epoch: t, round, payload: payload.clone() });
+                    for &idx in &epeers {
+                        let _ = ctx.peer_txs[idx].send(WireMsg {
+                            from: i,
+                            epoch: t,
+                            round,
+                            payload: payload.clone(),
+                        });
                     }
                 }
                 rounds_done = round;
@@ -632,11 +756,13 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
         // purge stale buffered messages from this epoch
         inbox.retain(|&(e, _, _), _| e > t);
 
-        // ---- update phase (shared state machine) ----
-        let b_hat = epoch::side_channel_b_hat(&m);
-        if b_hat > 0.5 {
-            st.set_dual(&m, b_hat);
-            st.primal(&mut *engine, t + 1);
+        // ---- update phase (shared state machine; absent nodes hold) ----
+        if on {
+            let b_hat = epoch::side_channel_b_hat(&m);
+            if b_hat > 0.5 {
+                st.set_dual(&m, b_hat);
+                st.primal(&mut *engine, t + 1);
+            }
         }
         rows.push(EpochRow { b: b_i, loss: loss_i, rounds: rounds_done, compute_secs });
         errors.push(if i == 0 {
@@ -729,6 +855,53 @@ mod tests {
         for e in &out.record.epochs {
             assert!(e.batch > 0);
         }
+    }
+
+    #[test]
+    fn churn_trace_absent_node_skips_epoch_on_real_threads() {
+        use crate::churn::ChurnSpec;
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 8);
+        // node 3 absent in epochs 2 and 4 (trace period 2)
+        let trace = ChurnSpec::Trace {
+            active: vec![vec![true], vec![true], vec![true], vec![true, false]],
+        };
+        let spec = small_spec(4, vec![]).with_churn(trace);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        assert_eq!(out.record.epochs.len(), 4);
+        assert_eq!(out.active_counts, vec![4, 3, 4, 3]);
+        let log = out.node_log.as_ref().unwrap();
+        // absent epochs: zero batch, zero rounds, zero logged compute
+        assert_eq!(log.batches[3][1], 0);
+        assert_eq!(log.batches[3][3], 0);
+        assert_eq!(out.rounds[3][1], 0);
+        assert_eq!(log.compute_times[3][1], 0.0);
+        // present nodes keep making progress every epoch
+        for t in 0..4 {
+            for node in 0..3 {
+                assert!(log.batches[node][t] > 0, "node {node} idle in epoch {}", t + 1);
+            }
+        }
+        // the epoch 1 batch includes node 3, epoch 2's does not
+        assert!(out.record.epochs[1].min_node_batch == 0);
+    }
+
+    #[test]
+    fn fmb_churn_quota_tracks_active_set_on_real_threads() {
+        use crate::churn::ChurnSpec;
+        let topo = Topology::complete(4);
+        let (mk, f_star) = linreg_factory(8, 5);
+        let trace = ChurnSpec::Trace {
+            active: vec![vec![true], vec![true, false], vec![true], vec![true]],
+        };
+        let spec = RunSpec::fmb("fmb-churn-threaded", 32, 0.04, 2, 4, 11)
+            .with_grad_chunk(8)
+            .with_churn(trace);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        let batches: Vec<usize> = out.record.epochs.iter().map(|e| e.batch).collect();
+        // epochs with node 1 absent lose exactly its quota
+        assert_eq!(batches, vec![4 * 32, 3 * 32, 4 * 32, 3 * 32]);
+        assert_eq!(out.active_counts, vec![4, 3, 4, 3]);
     }
 
     #[test]

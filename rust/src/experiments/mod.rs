@@ -20,6 +20,7 @@
 //! deadlines.
 
 pub mod ablations;
+pub mod churn;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
@@ -310,7 +311,10 @@ pub fn run_one(ctx: &Ctx, id: &str) -> Result<FigReport> {
         "f8" => fig8::fig8(ctx),
         "f9" => fig8::fig9(ctx),
         "thm7" => thm7::thm7(ctx),
-        other => anyhow::bail!("unknown figure id '{other}' (try f1a f1b f3 f4 f5 f6 f7 f8 f9 thm7)"),
+        "churn" => churn::churn(ctx),
+        other => anyhow::bail!(
+            "unknown figure id '{other}' (try f1a f1b f3 f4 f5 f6 f7 f8 f9 thm7 churn)"
+        ),
     }
 }
 

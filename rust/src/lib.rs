@@ -20,6 +20,7 @@
 //! EXPERIMENTS.md for the paper-vs-measured results.
 
 pub mod bench_harness;
+pub mod churn;
 pub mod config;
 pub mod consensus;
 pub mod coordinator;
@@ -35,6 +36,7 @@ pub mod straggler;
 pub mod topology;
 pub mod util;
 
+pub use churn::{ChurnSchedule, ChurnSpec};
 pub use coordinator::sim::SimRuntime;
 pub use coordinator::threaded::ThreadedRuntime;
 pub use coordinator::{

@@ -45,6 +45,7 @@ fn main() -> ExitCode {
     let res = match args.subcommand() {
         Some("figures") => cmd_figures(&args),
         Some("ablations") => cmd_ablations(&args),
+        Some("churn") => cmd_churn(&args),
         Some("run") => cmd_run(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(&args),
@@ -66,15 +67,18 @@ fn print_usage() {
     eprintln!(
         "amb — Anytime Minibatch (ICLR 2019) reproduction\n\
          \n\
-         usage: amb <figures|ablations|run|train|info> [options]\n\
+         usage: amb <figures|ablations|churn|run|train|info> [options]\n\
          \n\
          figures --fig <id|all> [--out-dir results] [--pjrt] [--quick] [--seed N]\n\
          \u{20}       [--runtime sim|threaded] [--time-scale S] [--threads N]\n\
+         churn   elastic-membership sweep (dropout x topology x scheme);\n\
+         \u{20}       same options as figures\n\
          run     --scheme <amb|fmb|fmb-backup|fmb-coded> --workload <linreg|logreg>\n\
          \u{20}       [--runtime sim|threaded] [--nodes N] [--epochs N]\n\
          \u{20}       [--t-compute S] [--t-consensus S] [--rounds R] [--exact-consensus]\n\
          \u{20}       [--per-node-batch B] [--ignore K]\n\
          \u{20}       [--straggler <shiftedexp|induced|pause|none>]\n\
+         \u{20}       [--churn <none|iid:P[:SEED]|markov:PDOWN:PUP[:SEED]>]\n\
          \u{20}       [--grad-chunk C] [--slowdown f1,f2,...] [--time-scale S]\n\
          \u{20}       [--pjrt] [--seed N] [--threads N] [--out FILE.csv]\n\
          train   [--workload <transformer|linreg>] [--nodes N] [--epochs N]\n\
@@ -142,6 +146,14 @@ fn cmd_ablations(args: &Args) -> anyhow::Result<()> {
         bad += (!r.shape_holds) as usize;
     }
     anyhow::ensure!(bad == 0, "{bad} ablation(s) diverged");
+    Ok(())
+}
+
+fn cmd_churn(args: &Args) -> anyhow::Result<()> {
+    let ctx = harness_ctx(args)?;
+    let report = experiments::churn::churn(&ctx)?;
+    println!("{report}");
+    anyhow::ensure!(report.shape_holds, "churn harness diverged");
     Ok(())
 }
 
@@ -231,10 +243,15 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     } else {
         ConsensusMode::Gossip { rounds }
     };
+    let churn = match args.get("churn") {
+        None => anytime_mb::ChurnSpec::None,
+        Some(s) => anytime_mb::ChurnSpec::parse(s, seed)?,
+    };
     let spec = RunSpec::new(scheme.name(), scheme, epochs, seed)
         .with_consensus(consensus)
         .with_grad_chunk(args.usize_or("grad-chunk", 16)?)
-        .with_slowdown(parse_slowdown(args)?);
+        .with_slowdown(parse_slowdown(args)?)
+        .with_churn(churn);
 
     let expected_batch = (nodes * per_node_batch) as f64;
     let opt = experiments::optimizer_for(&source, expected_batch);
@@ -250,10 +267,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let out = ctx.run(&spec, &topo, &*strag, &source, &opt)?;
 
     println!(
-        "# runtime={} scheme={} consensus={:?}",
+        "# runtime={} scheme={} consensus={:?} churn={}",
         ctx.runtime.name(),
         spec.scheme.name(),
-        spec.consensus
+        spec.consensus,
+        spec.churn.name()
     );
     println!(
         "{:<6} {:>10} {:>8} {:>12} {:>12} {:>12}",

@@ -23,12 +23,17 @@ pub struct Topology {
 
 impl Topology {
     /// Build from an edge list; self-loops and duplicates are ignored.
+    ///
+    /// Duplicates (in either orientation) are removed by sort + dedup —
+    /// O(E log E) total.  The old per-insert `contains` scan was
+    /// O(E · deg): quadratic for `complete(n)` / `expander`, which now
+    /// sit on the churn hot path (`induced` rebuilds per active set).
     pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Topology {
         assert!(n > 0);
         let mut adj = vec![Vec::new(); n];
         for &(a, b) in edges {
             assert!(a < n && b < n, "edge ({a},{b}) out of range n={n}");
-            if a == b || adj[a].contains(&b) {
+            if a == b {
                 continue;
             }
             adj[a].push(b);
@@ -36,6 +41,7 @@ impl Topology {
         }
         for l in &mut adj {
             l.sort_unstable();
+            l.dedup();
         }
         Topology { n, adj }
     }
@@ -86,13 +92,22 @@ impl Topology {
 
     /// Watts–Strogatz small world: ring lattice with k nearest neighbours
     /// per side, each chord rewired with probability beta (rewiring keeps
-    /// the underlying ring so the graph stays connected).
+    /// the underlying ring so the graph stays connected).  Requires
+    /// 2k ≤ n (chords up to the antipode; longer ones would only
+    /// duplicate the other side) — the documented n = 4, k = 2 minimum
+    /// is valid, which the old `k < n/2` assert wrongly rejected.
     pub fn small_world(n: usize, k: usize, beta: f64, seed: u64) -> Topology {
-        assert!(n >= 4 && k >= 1 && k < n / 2);
+        assert!(n >= 4 && k >= 1 && 2 * k <= n);
         let mut rng = Pcg64::new(seed ^ 0x5_3A11);
         let mut edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
         for dist in 2..=k {
-            for i in 0..n {
+            // At the antipode (2·dist == n) the chord (i, i+dist) and
+            // (i+dist, i) are the SAME edge; enumerating all n starts
+            // would draw two independent rewires for it (survival
+            // probability (1−β)² instead of 1−β, plus phantom extra
+            // chords).  Each undirected chord gets exactly one draw.
+            let starts = if 2 * dist == n { n / 2 } else { n };
+            for i in 0..starts {
                 let j = (i + dist) % n;
                 if rng.f64() < beta {
                     // rewire to a uniform non-self target (dups dropped
@@ -234,6 +249,62 @@ impl Topology {
             p[i * n + i] = 1.0 - off;
         }
         MixMatrix::from_rows(n, p)
+    }
+
+    /// Subgraph induced by the per-node `active` mask, KEEPING the node
+    /// indexing: inactive nodes stay in the vertex set but lose every
+    /// incident edge (degree 0 ⇒ Metropolis row eᵢ, so they hold their
+    /// message bit-for-bit through any number of mixing rounds), while
+    /// active nodes keep exactly their active neighbours.  This is the
+    /// per-epoch consensus graph of a churn run (DESIGN.md §churn):
+    /// `induced(active).metropolis()` is doubly stochastic over all n
+    /// rows, so mixing conserves the ACTIVE-set sum — absent nodes
+    /// neither receive nor contribute mass.  An all-true mask returns a
+    /// graph identical to `self`.
+    pub fn induced(&self, active: &[bool]) -> Topology {
+        assert_eq!(active.len(), self.n, "active mask must cover every node");
+        let adj = (0..self.n)
+            .map(|i| {
+                if active[i] {
+                    self.adj[i].iter().copied().filter(|&j| active[j]).collect()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        Topology { n: self.n, adj }
+    }
+
+    /// Row `i` of the induced LAZY Metropolis matrix
+    /// `induced(active).metropolis().lazy()`, computed in O(deg²)
+    /// without materialising the matrix: returns `(P_ii, weights)` with
+    /// one weight per ACTIVE neighbour of `i`, in adjacency (ascending)
+    /// order.  This is THE induced-weight definition — the threaded
+    /// runtime mixes with it per epoch, the simulator builds the full
+    /// matrix from the same formula — so the two runtimes cannot drift.
+    /// The op sequence replays `metropolis()` + `lazy()` exactly
+    /// (unhalved Metropolis weights summed in ascending-j order, then
+    /// the (P+I)/2 transform), so the row is BITWISE the materialised
+    /// one (pinned by `induced_row_matches_materialised_matrix`).
+    /// An inactive `i` gets `(1.0, [])` — the held-message identity row.
+    pub fn induced_lazy_metropolis_row(&self, active: &[bool], i: usize) -> (f64, Vec<f64>) {
+        assert_eq!(active.len(), self.n, "active mask must cover every node");
+        let deg_act =
+            |j: usize| -> usize { self.adj[j].iter().filter(|&&k| active[k]).count() };
+        if !active[i] {
+            return (1.0, Vec::new());
+        }
+        let di = deg_act(i);
+        // metropolis(): w_ij = 1/(1 + max(d_i, d_j)) over induced degrees
+        let w_met: Vec<f64> = self.adj[i]
+            .iter()
+            .filter(|&&j| active[j])
+            .map(|&j| 1.0 / (1.0 + di.max(deg_act(j)) as f64))
+            .collect();
+        let off: f64 = w_met.iter().sum();
+        // lazy(): every entry halved, then +0.5 on the diagonal
+        let pii = (1.0 - off) * 0.5 + 0.5;
+        (pii, w_met.into_iter().map(|x| x * 0.5).collect())
     }
 }
 
@@ -550,6 +621,140 @@ mod tests {
     fn disconnected_detected() {
         let t = Topology::from_edges(4, &[(0, 1), (2, 3)]);
         assert!(!t.is_connected());
+    }
+
+    #[test]
+    fn from_edges_dedups_both_orientations_and_sorts() {
+        // duplicates in both orientations plus self-loops collapse to the
+        // clean sorted adjacency (the sort+dedup path must agree with the
+        // old per-insert contains() scan).
+        let t = Topology::from_edges(
+            4,
+            &[(0, 1), (1, 0), (0, 1), (2, 2), (3, 0), (0, 3), (1, 2), (2, 1), (1, 2)],
+        );
+        assert_eq!(t.neighbors(0), &[1, 3]);
+        assert_eq!(t.neighbors(1), &[0, 2]);
+        assert_eq!(t.neighbors(2), &[1]);
+        assert_eq!(t.neighbors(3), &[0]);
+        assert_eq!(t.edge_count(), 3);
+        // and matches a duplicate-free build exactly
+        let clean = Topology::from_edges(4, &[(0, 1), (0, 3), (1, 2)]);
+        for i in 0..4 {
+            assert_eq!(t.neighbors(i), clean.neighbors(i));
+        }
+    }
+
+    #[test]
+    fn small_world_accepts_documented_minimum() {
+        // n = 4, k = 2 (chords to the antipode) was rejected by the old
+        // `k < n/2` assert; it is a valid Watts–Strogatz lattice (= K4 at
+        // beta = 0).
+        let t = Topology::small_world(4, 2, 0.0, 1);
+        assert!(t.is_connected());
+        assert_eq!(t.edge_count(), 6, "beta=0, n=4, k=2 is the complete graph");
+        assert!(t.metropolis().is_doubly_stochastic(1e-9));
+        // antipodal chords are enumerated once at 2k == n
+        let t6 = Topology::small_world(6, 3, 0.0, 1);
+        assert!(t6.is_connected());
+        assert_eq!(t6.edge_count(), 6 * 5 / 2);
+        // ... and with beta > 0 at 2k == n (each antipodal chord draws
+        // exactly ONE rewire — see the `starts` bound in small_world):
+        // the graph stays connected and its mixing matrix valid.
+        for s in 0..50u64 {
+            let t = Topology::small_world(20, 10, 0.7, s);
+            assert!(t.is_connected());
+            assert!(t.metropolis().is_doubly_stochastic(1e-9));
+        }
+    }
+
+    #[test]
+    fn induced_isolates_inactive_and_keeps_active_subgraph() {
+        let t = Topology::paper_fig2();
+        let mut active = vec![true; 10];
+        active[3] = false;
+        active[7] = false;
+        let s = t.induced(&active);
+        assert_eq!(s.n(), 10);
+        assert_eq!(s.degree(3), 0);
+        assert_eq!(s.degree(7), 0);
+        for i in 0..10 {
+            for &j in s.neighbors(i) {
+                assert!(active[i] && active[j], "edge ({i},{j}) touches an inactive node");
+                assert!(t.neighbors(i).contains(&j), "induced invented edge ({i},{j})");
+            }
+        }
+        // active nodes keep exactly their active neighbours
+        for i in 0..10 {
+            if active[i] {
+                let want: Vec<usize> =
+                    t.neighbors(i).iter().copied().filter(|&j| active[j]).collect();
+                assert_eq!(s.neighbors(i), &want[..]);
+            }
+        }
+        // all-active mask is the identity
+        let full = t.induced(&vec![true; 10]);
+        for i in 0..10 {
+            assert_eq!(full.neighbors(i), t.neighbors(i));
+        }
+    }
+
+    #[test]
+    fn induced_row_matches_materialised_matrix() {
+        // The O(deg²) per-row helper the threaded runtime mixes with
+        // must be BITWISE the row of the full induced lazy matrix the
+        // simulator builds — same formula, same op order.
+        forall(25, 0x70_06, |g| {
+            let n = g.usize_in(2, 16);
+            let t = Topology::erdos_connected(n, g.f64_in(0.1, 0.7), g.u64());
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
+            let m = t.induced(&active).metropolis().lazy();
+            for i in 0..n {
+                let (pii, w) = t.induced_lazy_metropolis_row(&active, i);
+                crate::prop_assert!(
+                    pii.to_bits() == m.at(i, i).to_bits(),
+                    "diag {i}: helper {pii} vs matrix {}",
+                    m.at(i, i)
+                );
+                let mut e = 0usize;
+                for &j in t.neighbors(i) {
+                    if active[i] && active[j] {
+                        crate::prop_assert!(
+                            w[e].to_bits() == m.at(i, j).to_bits(),
+                            "({i},{j}): helper {} vs matrix {}",
+                            w[e],
+                            m.at(i, j)
+                        );
+                        e += 1;
+                    }
+                }
+                crate::prop_assert!(e == w.len(), "row {i}: weight count mismatch");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn induced_metropolis_doubly_stochastic_over_random_active_sets() {
+        forall(40, 0x70_05, |g| {
+            let n = g.usize_in(2, 20);
+            let t = Topology::erdos_connected(n, g.f64_in(0.1, 0.7), g.u64());
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
+            let m = t.induced(&active).metropolis();
+            crate::prop_assert!(m.is_doubly_stochastic(1e-9));
+            // inactive rows are exactly e_i: held bit-for-bit under mixing
+            for i in 0..n {
+                if !active[i] {
+                    crate::prop_assert!(m.at(i, i) == 1.0, "row {i} not identity");
+                    for j in 0..n {
+                        if j != i {
+                            crate::prop_assert!(m.at(i, j) == 0.0);
+                            crate::prop_assert!(m.at(j, i) == 0.0);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Elastic-membership (churn) invariants across the whole stack:
+//!
+//! * an all-active schedule (`IidDropout { p: 0 }`) reproduces the
+//!   static-membership run **bit-for-bit** on the simulator;
+//! * the ISSUE-4 acceptance run — ring-10, 20% i.i.d. dropout, AMB vs
+//!   FMB — completes on BOTH runtimes with membership-consistent batch
+//!   accounting;
+//! * sim ↔ threaded parity holds under churn (FMB + Exact consensus:
+//!   exactly equal batches, losses within f32-reorder tolerance);
+//! * a node absent for an epoch holds its primal state bit-for-bit
+//!   (rejoin semantics).
+
+use std::sync::Arc;
+
+use anytime_mb::churn::{ChurnSchedule, ChurnSpec};
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::straggler::{Deterministic, ShiftedExp};
+use anytime_mb::topology::Topology;
+use anytime_mb::{ConsensusMode, RunOutput, RunSpec, Runtime, SimRuntime, ThreadedRuntime};
+
+fn linreg_factory(
+    d: usize,
+    seed: u64,
+) -> (
+    impl Fn(usize) -> Box<dyn ExecEngine> + Send + Sync,
+    Option<f64>,
+) {
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 500.0), 4.0 * (d as f64).sqrt());
+    let f_star = src.f_star();
+    (
+        move |_i: usize| -> Box<dyn ExecEngine> {
+            Box::new(NativeExec::new(src.clone(), opt.clone()))
+        },
+        f_star,
+    )
+}
+
+fn assert_bitwise_equal(a: &RunOutput, b: &RunOutput, label: &str) {
+    assert_eq!(a.record.epochs.len(), b.record.epochs.len(), "{label}: epoch count");
+    for (x, y) in a.record.epochs.iter().zip(&b.record.epochs) {
+        assert_eq!(x.batch, y.batch, "{label}: batch @ epoch {}", x.epoch);
+        assert_eq!(x.potential, y.potential, "{label}: potential @ epoch {}", x.epoch);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{label}: loss bits @ epoch {}", x.epoch);
+        assert_eq!(x.error.to_bits(), y.error.to_bits(), "{label}: error bits @ epoch {}", x.epoch);
+        assert_eq!(
+            x.consensus_err.to_bits(),
+            y.consensus_err.to_bits(),
+            "{label}: consensus_err bits @ epoch {}",
+            x.epoch
+        );
+    }
+    assert_eq!(a.rounds, b.rounds, "{label}: rounds log");
+    for (k, (x, y)) in a.final_w.as_slice().iter().zip(b.final_w.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: final_w[{k}]");
+    }
+}
+
+fn sim_run(spec: &RunSpec, topo: &Topology) -> RunOutput {
+    let (mk, f_star) = linreg_factory(24, 5);
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+    SimRuntime::new(&strag).run(spec, topo, &mk, f_star)
+}
+
+/// A schedule that never drops a node must reproduce TODAY's outputs
+/// bit-for-bit, for every scheme × consensus mode: every epoch takes the
+/// zero-rebuild base-matrix path and the static update mask.
+#[test]
+fn all_active_schedule_reproduces_static_run_bitwise() {
+    use anytime_mb::Scheme;
+    let topo = Topology::paper_fig2();
+    let schemes = [
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
+        Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: true },
+    ];
+    let modes = [
+        ConsensusMode::Exact,
+        ConsensusMode::Gossip { rounds: 5 },
+        ConsensusMode::GossipJitter { mean: 5, jitter: 2 },
+    ];
+    for scheme in schemes {
+        for mode in modes {
+            let base = RunSpec::new(scheme.name(), scheme, 5, 13).with_consensus(mode);
+            let churned = base
+                .clone()
+                .with_churn(ChurnSpec::IidDropout { p: 0.0, seed: 77 });
+            let a = sim_run(&base, &topo);
+            let b = sim_run(&churned, &topo);
+            assert_bitwise_equal(&a, &b, &format!("{} × {mode:?}", scheme.name()));
+            assert_eq!(b.active_counts, vec![10; 5]);
+        }
+    }
+}
+
+/// ISSUE-4 acceptance: ring-10, 20% i.i.d. dropout, AMB vs FMB on BOTH
+/// runtimes — runs complete, batch accounting matches the membership
+/// table, and the sim run is bit-reproducible.
+#[test]
+fn acceptance_ring10_dropout20_amb_vs_fmb_both_runtimes() {
+    let topo = Topology::ring(10);
+    let epochs = 6;
+    let churn = ChurnSpec::IidDropout { p: 0.2, seed: 42 };
+    let schedule = ChurnSchedule::new(&churn, 10, epochs);
+    let expected_counts: Vec<usize> = (1..=epochs).map(|t| schedule.active_count(t)).collect();
+
+    // Deterministic unit times so FMB batch accounting is exact on both
+    // runtimes and compute windows are fast real-time.
+    let strag = Deterministic { unit_time: 0.02, unit_batch: 32 };
+    let (mk, f_star) = linreg_factory(16, 3);
+
+    let amb_spec = RunSpec::amb("accept-amb", 0.04, 0.03, 3, epochs, 9)
+        .with_grad_chunk(8)
+        .with_churn(churn.clone());
+    let fmb_spec = RunSpec::fmb("accept-fmb", 32, 0.03, 3, epochs, 9)
+        .with_grad_chunk(8)
+        .with_churn(churn.clone());
+
+    for spec in [&amb_spec, &fmb_spec] {
+        let sim = SimRuntime::new(&strag).run(spec, &topo, &mk, f_star);
+        let thr = ThreadedRuntime.run(spec, &topo, &mk, f_star);
+        for out in [&sim, &thr] {
+            assert_eq!(out.record.epochs.len(), epochs, "{} lost epochs", spec.name);
+            assert_eq!(out.active_counts, expected_counts, "{} membership", spec.name);
+        }
+        // FMB: batch = |A(t)| × quota EXACTLY on both runtimes.
+        if spec.name.contains("fmb") {
+            for (e, (es, et)) in sim.record.epochs.iter().zip(&thr.record.epochs).enumerate() {
+                let want = expected_counts[e] * 32;
+                assert_eq!(es.batch, want, "sim fmb epoch {}", e + 1);
+                assert_eq!(et.batch, want, "threaded fmb epoch {}", e + 1);
+            }
+        }
+        // sim runs are bit-reproducible under churn
+        let sim2 = SimRuntime::new(&strag).run(spec, &topo, &mk, f_star);
+        assert_bitwise_equal(&sim, &sim2, &format!("{} repro", spec.name));
+    }
+}
+
+/// Sim ↔ threaded parity under churn: FMB + Exact consensus + a
+/// deterministic straggler give exactly equal batches and losses within
+/// f32-chunked-summation tolerance — the runtime-parity contract
+/// extended to elastic membership.
+#[test]
+fn fmb_exact_parity_across_runtimes_under_churn() {
+    let topo = Topology::ring(4);
+    let (mk, f_star) = linreg_factory(16, 2);
+    let churn = ChurnSpec::Trace {
+        active: vec![vec![true], vec![true, false, true], vec![true], vec![true, true, false]],
+    };
+    let spec = RunSpec::fmb("churn-parity", 48, 0.05, 1, 6, 21)
+        .with_consensus(ConsensusMode::Exact)
+        .with_grad_chunk(16)
+        .with_churn(churn);
+    let strag = Deterministic { unit_time: 0.01, unit_batch: 48 };
+
+    let sim = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star);
+    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+
+    assert_eq!(sim.active_counts, thr.active_counts);
+    for (es, et) in sim.record.epochs.iter().zip(&thr.record.epochs) {
+        assert_eq!(es.batch, et.batch, "epoch {}", es.epoch);
+        assert_eq!(es.min_node_batch, et.min_node_batch);
+        assert_eq!(es.max_node_batch, et.max_node_batch);
+        let rel = (es.loss - et.loss).abs() / es.loss.abs().max(et.loss.abs()).max(1e-12);
+        assert!(rel < 1e-2, "epoch {}: sim loss {} vs threaded {}", es.epoch, es.loss, et.loss);
+    }
+    // per-node primals agree across runtimes (same data streams, same
+    // active-set averaging in f64 node order)
+    for (i, (ws, wt)) in sim.final_w.rows().zip(thr.final_w.rows()).enumerate() {
+        let mut diff = 0.0f64;
+        let mut norm = 0.0f64;
+        for k in 0..ws.len() {
+            diff += ((ws[k] - wt[k]) as f64).powi(2);
+            norm += (ws[k] as f64).powi(2);
+        }
+        assert!(
+            diff.sqrt() < 2e-2 * norm.sqrt().max(1e-9),
+            "node {i} final w rel diff {}",
+            diff.sqrt() / norm.sqrt().max(1e-9)
+        );
+    }
+}
+
+/// Rejoin semantics: a node absent from the FINAL epoch ends the run
+/// with exactly the primal it held after the previous epoch — absence
+/// is a bitwise freeze, not an approximate one.
+#[test]
+fn absent_node_holds_primal_bitwise() {
+    let topo = Topology::complete(4);
+    // node 0 present only in epoch 1 of 2
+    let churn = ChurnSpec::Trace {
+        active: vec![vec![true, false], vec![true], vec![true], vec![true]],
+    };
+    let long = RunSpec::amb("hold-2", 2.0, 0.5, 4, 2, 17).with_churn(churn);
+    let short = RunSpec::amb("hold-1", 2.0, 0.5, 4, 1, 17);
+    let a = sim_run(&long, &topo);
+    let b = sim_run(&short, &topo);
+    // node 0's primal after epoch 2 (absent) == after epoch 1 (present)
+    for (x, y) in a.final_w.row(0).iter().zip(b.final_w.row(0)) {
+        assert_eq!(x.to_bits(), y.to_bits(), "absent node's primal drifted");
+    }
+    // the others kept updating
+    assert_ne!(a.final_w.row(1), b.final_w.row(1));
+}
+
+/// Churn composes with every consensus mode and scheme on the simulator
+/// (GossipJitter exercises run_per_node over induced matrices; backup
+/// exercises the active-set survivor accounting).
+#[test]
+fn churn_composes_with_schemes_and_modes() {
+    use anytime_mb::Scheme;
+    let topo = Topology::paper_fig2();
+    let churn = ChurnSpec::Markov { p_down: 0.2, p_up: 0.5, seed: 23 };
+    let schemes = [
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
+        Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: false },
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: true },
+    ];
+    let modes = [
+        ConsensusMode::Exact,
+        ConsensusMode::Gossip { rounds: 4 },
+        ConsensusMode::GossipJitter { mean: 4, jitter: 2 },
+    ];
+    let schedule = ChurnSchedule::new(&churn, 10, 6);
+    for scheme in schemes {
+        for mode in modes {
+            let spec = RunSpec::new(scheme.name(), scheme, 6, 31)
+                .with_consensus(mode)
+                .with_churn(churn.clone());
+            let out = sim_run(&spec, &topo);
+            assert_eq!(out.record.epochs.len(), 6);
+            for t in 1..=6 {
+                assert_eq!(out.active_counts[t - 1], schedule.active_count(t));
+                // absent nodes never gossip
+                for i in 0..10 {
+                    if !schedule.active(t)[i] {
+                        assert_eq!(out.rounds[i][t - 1], 0, "absent node {i} gossiped @ {t}");
+                    }
+                }
+            }
+            let last = out.record.epochs.last().unwrap();
+            assert!(
+                last.error.is_finite(),
+                "{} × {mode:?}: error diverged",
+                scheme.name()
+            );
+        }
+    }
+}

@@ -116,6 +116,44 @@ fn sim_threads1_equals_threads4_for_every_scheme_and_mode() {
     pool::clear_threads_override();
 }
 
+/// The bitwise threads=1 ≡ threads=k contract must hold for CHURN runs
+/// too (ISSUE 4): churned epochs mix with induced matrices through the
+/// same row-partitioned kernels, and the per-node update mask is applied
+/// identically by the serial path and the pooled node blocks.
+#[test]
+fn sim_threads1_equals_threads4_under_churn() {
+    use anytime_mb::churn::ChurnSpec;
+    let _guard = POOL_LOCK.lock().unwrap();
+    let schemes: [Scheme; 3] = [
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
+        Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: true },
+    ];
+    let modes: [ConsensusMode; 3] = [
+        ConsensusMode::Exact,
+        ConsensusMode::Gossip { rounds: 5 },
+        ConsensusMode::GossipJitter { mean: 5, jitter: 2 },
+    ];
+    for scheme in schemes {
+        for mode in modes {
+            let spec = RunSpec::new(scheme.name(), scheme, 5, 13)
+                .with_consensus(mode)
+                .with_churn(ChurnSpec::IidDropout { p: 0.25, seed: 31 });
+            pool::set_threads(1);
+            let serial = run_sim(&spec);
+            pool::set_threads(4);
+            let pooled = run_sim(&spec);
+            assert_eq!(serial.active_counts, pooled.active_counts);
+            assert_bitwise_equal(
+                &serial,
+                &pooled,
+                &format!("churn {} × {:?}", scheme.name(), mode),
+            );
+        }
+    }
+    pool::clear_threads_override();
+}
+
 #[test]
 fn row_partitioned_kernels_are_thread_count_invariant() {
     let _guard = POOL_LOCK.lock().unwrap();
