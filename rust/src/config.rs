@@ -53,6 +53,12 @@ impl ExperimentConfig {
                 ("ignore", Json::num(ignore as f64)),
                 ("coded", Json::Bool(coded)),
             ]),
+            Scheme::AmbDg { t_compute, t_consensus, delay } => Json::obj(vec![
+                ("kind", Json::str("amb_dg")),
+                ("t_compute", Json::num(t_compute)),
+                ("t_consensus", Json::num(t_consensus)),
+                ("delay", Json::num(delay as f64)),
+            ]),
         };
         let consensus = match self.run.consensus {
             ConsensusMode::Exact => Json::obj(vec![("kind", Json::str("exact"))]),
@@ -139,6 +145,14 @@ impl ExperimentConfig {
                 t_consensus: snum("t_consensus")?,
                 ignore: snum("ignore")? as usize,
                 coded: sj.get("coded").and_then(|v| v.as_bool()).unwrap_or(false),
+            },
+            "amb_dg" => Scheme::AmbDg {
+                t_compute: snum("t_compute")?,
+                t_consensus: snum("t_consensus")?,
+                delay: sj
+                    .get("delay")
+                    .and_then(|v| v.as_usize())
+                    .context("scheme.delay (whole epochs of gradient staleness)")?,
             },
             other => bail!("unknown scheme kind '{other}'"),
         };
@@ -357,6 +371,22 @@ mod tests {
             assert_eq!(back.run.slowdown, cfg.run.slowdown);
             assert!((back.run.time_scale - cfg.run.time_scale).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn amb_dg_scheme_roundtrip() {
+        let mut cfg = preset("fig1a_amb").unwrap();
+        for delay in [0usize, 1, 4] {
+            cfg.run.scheme = Scheme::AmbDg { t_compute: 14.5, t_consensus: 4.5, delay };
+            let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+            assert_eq!(back.run.scheme, cfg.run.scheme, "delay {delay}");
+        }
+        // a delayed scheme without the delay field is an error, not a
+        // silent default
+        let text = cfg.to_json().to_string();
+        assert!(text.contains("\"kind\":\"amb_dg\""));
+        let missing = text.replace(",\"delay\":4", "");
+        assert!(ExperimentConfig::from_json(&missing).is_err());
     }
 
     #[test]

@@ -109,13 +109,7 @@ impl NodeState {
     /// typically a [`NodeMatrix`] arena row, so encoding writes the wire
     /// buffer in place with no allocation.
     pub fn encode_into(&self, n: usize, b_i: usize, msg: &mut [f32]) {
-        let dim = self.dim();
-        assert_eq!(msg.len(), dim + 1, "message row must be dim + 1 wide");
-        let bi = b_i as f32;
-        for k in 0..dim {
-            msg[k] = n as f32 * (bi * self.z[k] + self.grad_sum[k]);
-        }
-        msg[dim] = n as f32 * bi;
+        encode_msg_into(&self.z, &self.grad_sum, n, b_i, msg);
     }
 
     /// Decode the post-consensus message: z ← m / b̂.
@@ -130,6 +124,23 @@ impl NodeState {
     pub fn primal(&mut self, engine: &mut dyn ExecEngine, t_next: usize) {
         engine.primal_step(&self.z, t_next, &mut self.w);
     }
+}
+
+/// Encode a consensus message from explicit components: m = n·(b·z + g)
+/// with the n·b side channel.  [`NodeState::encode_into`] is the
+/// (z, live grad_sum) view of this; the AMB-DG pipeline encodes a batch
+/// popped from the delay ring — its gradients were computed against a
+/// STALE primal, but the dual weight is the node's CURRENT z — through
+/// the same kernel, so the two paths cannot drift.
+pub fn encode_msg_into(z: &[f32], g: &[f32], n: usize, b_i: usize, msg: &mut [f32]) {
+    let dim = z.len();
+    assert_eq!(g.len(), dim, "gradient sum must match the dual's dimension");
+    assert_eq!(msg.len(), dim + 1, "message row must be dim + 1 wide");
+    let bi = b_i as f32;
+    for k in 0..dim {
+        msg[k] = n as f32 * (bi * z[k] + g[k]);
+    }
+    msg[dim] = n as f32 * bi;
 }
 
 /// The distributed b̂(t) estimate from a message's side channel, clamped
@@ -180,7 +191,16 @@ pub fn plan_compute(
     let act = active.iter().filter(|&&a| a).count();
     let epoch_compute_time;
     match *scheme {
-        Scheme::Amb { t_compute, t_consensus } => {
+        // AMB-DG shares AMB's compute weather EXACTLY (same window, same
+        // two profile draws per node, so the straggler stream — and every
+        // later epoch's draws — are identical whatever the delay).  The
+        // delay only changes WHEN a batch enters the dual, which is the
+        // executors' pipeline ring, not the plan.  The potential draw is
+        // kept even though a pipelined node never idles (c_i(t) stays an
+        // upper bound) — dropping it would shift the shared stream and
+        // break the Amb ≡ AmbDg{delay: 0} bitwise contract.
+        Scheme::Amb { t_compute, t_consensus }
+        | Scheme::AmbDg { t_compute, t_consensus, .. } => {
             for i in 0..n {
                 let mut prof = straggler.draw(i, epoch, rng);
                 let b = prof.grads_in_time(t_compute);
@@ -263,7 +283,7 @@ pub fn plan_compute(
 /// this includes the (ignore+1)× redundancy.
 pub fn work_quota(scheme: &Scheme, n: usize) -> Option<usize> {
     match *scheme {
-        Scheme::Amb { .. } => None,
+        Scheme::Amb { .. } | Scheme::AmbDg { .. } => None,
         Scheme::Fmb { per_node_batch, .. } => Some(per_node_batch),
         Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => {
             let ignore = ignore.min(n.saturating_sub(1));
@@ -425,6 +445,43 @@ mod tests {
         assert_eq!(plan.batches, vec![80, 80, 80]);
         assert!(plan.potentials.iter().all(|&p| p == 100));
         assert!((plan.epoch_compute_time - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_amb_dg_matches_amb_bitwise_at_any_delay() {
+        // AMB-DG's compute plan — batches, potentials, times, and the
+        // straggler-stream position afterwards — must be identical to
+        // AMB's for every delay (the delay lives in the pipeline ring,
+        // not the plan).
+        let se = crate::straggler::ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 40 };
+        let scheme_amb = Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 };
+        for delay in [0usize, 1, 4] {
+            let scheme_dg = Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay };
+            let mut rng_a = Pcg64::new(11);
+            let mut rng_d = Pcg64::new(11);
+            let pa = plan_compute(&scheme_amb, 4, 2, &se, &mut rng_a, &[true; 4]);
+            let pd = plan_compute(&scheme_dg, 4, 2, &se, &mut rng_d, &[true; 4]);
+            assert_eq!(pa.batches, pd.batches, "delay {delay}");
+            assert_eq!(pa.potentials, pd.potentials);
+            assert_eq!(pa.compute_times, pd.compute_times);
+            assert_eq!(pa.epoch_compute_time, pd.epoch_compute_time);
+            assert_eq!(rng_a.next_u64(), rng_d.next_u64(), "stream position diverged");
+        }
+    }
+
+    #[test]
+    fn encode_msg_into_matches_node_state_encode() {
+        let e = engine(3);
+        let mut st = NodeState::new(&e);
+        st.z = vec![0.5, -1.0, 2.0];
+        st.grad_sum = vec![3.0, 0.0, -2.0];
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        st.encode_into(7, 4, &mut a);
+        encode_msg_into(&st.z, &st.grad_sum, 7, 4, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -59,6 +59,17 @@ pub enum Scheme {
     ///   is recoverable from any n−ignore nodes (b(t) = b, but each node
     ///   does (ignore+1)× work).
     FmbBackup { per_node_batch: usize, t_consensus: f64, ignore: usize, coded: bool },
+    /// AMB with delayed gradients (AMB-DG, Al-Lawati & Draper,
+    /// arXiv:2012.08616): nodes never idle through the consensus window.
+    /// The gradient batch computed in epoch t (against the then-current
+    /// primal) is held in a `delay`-deep pipeline ring and enters the
+    /// dual update `delay` epochs later, so epoch t's consensus — which
+    /// carries the batch from epoch t−D — overlaps epoch t's compute.
+    /// Wall clock: `delay = 0` is EXACTLY the paper's AMB (epoch =
+    /// T + T_c, bit-for-bit — the acceptance contract); `delay ≥ 1`
+    /// pipelines the two windows, epoch = max(T, T_c).  β(t) is
+    /// unchanged (DESIGN.md §pipelining).
+    AmbDg { t_compute: f64, t_consensus: f64, delay: usize },
 }
 
 impl Scheme {
@@ -68,6 +79,7 @@ impl Scheme {
             Scheme::Fmb { .. } => "fmb",
             Scheme::FmbBackup { coded: false, .. } => "fmb-backup",
             Scheme::FmbBackup { coded: true, .. } => "fmb-coded",
+            Scheme::AmbDg { .. } => "amb-dg",
         }
     }
 
@@ -76,7 +88,46 @@ impl Scheme {
         match *self {
             Scheme::Amb { t_consensus, .. }
             | Scheme::Fmb { t_consensus, .. }
-            | Scheme::FmbBackup { t_consensus, .. } => t_consensus,
+            | Scheme::FmbBackup { t_consensus, .. }
+            | Scheme::AmbDg { t_consensus, .. } => t_consensus,
+        }
+    }
+
+    /// Gradient-pipeline depth: how many epochs separate computing a
+    /// batch from applying it (0 for every undelayed scheme).
+    pub fn delay(&self) -> usize {
+        match *self {
+            Scheme::AmbDg { delay, .. } => delay,
+            _ => 0,
+        }
+    }
+
+    /// Wall-clock length of one epoch given the compute phase's
+    /// attributed duration.  Every undelayed scheme serializes compute
+    /// and consensus (epoch = compute + T_c); a pipelined AMB-DG epoch
+    /// overlaps the consensus of the previous batch with this epoch's
+    /// compute, so only the longer of the two windows elapses.
+    pub fn epoch_wall(&self, compute_time: f64) -> f64 {
+        match *self {
+            Scheme::AmbDg { t_compute, t_consensus, delay } if delay > 0 => {
+                t_compute.max(t_consensus)
+            }
+            _ => compute_time + self.t_consensus(),
+        }
+    }
+
+    /// Collapse the degenerate pipeline: `AmbDg { delay: 0 }` IS the
+    /// paper's AMB (nothing is ever in flight), so the threaded runtime
+    /// executes it through the stock AMB path.  The simulator does NOT
+    /// normalize — it routes D = 0 through the pipeline ring so the
+    /// `AmbDg { delay: 0 } ≡ Amb` bitwise contract is tested THROUGH the
+    /// new code, not around it (`tests/amb_dg.rs`).
+    pub fn normalized(self) -> Scheme {
+        match self {
+            Scheme::AmbDg { t_compute, t_consensus, delay: 0 } => {
+                Scheme::Amb { t_compute, t_consensus }
+            }
+            s => s,
         }
     }
 }
@@ -217,6 +268,20 @@ impl RunSpec {
             .with_consensus(ConsensusMode::Gossip { rounds })
     }
 
+    /// Pipelined AMB-DG spec (same defaults as [`RunSpec::amb`]).
+    pub fn amb_dg(
+        name: &str,
+        t_compute: f64,
+        t_consensus: f64,
+        delay: usize,
+        rounds: usize,
+        epochs: usize,
+        seed: u64,
+    ) -> RunSpec {
+        RunSpec::new(name, Scheme::AmbDg { t_compute, t_consensus, delay }, epochs, seed)
+            .with_consensus(ConsensusMode::Gossip { rounds })
+    }
+
     pub fn with_consensus(mut self, mode: ConsensusMode) -> RunSpec {
         self.consensus = mode;
         self
@@ -332,6 +397,39 @@ mod tests {
             "fmb-coded"
         );
         assert_eq!(Scheme::Fmb { per_node_batch: 10, t_consensus: 0.25 }.t_consensus(), 0.25);
+        assert_eq!(
+            Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 1 }.name(),
+            "amb-dg"
+        );
+        assert_eq!(
+            Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 3 }.t_consensus(),
+            0.5
+        );
+    }
+
+    #[test]
+    fn scheme_delay_and_wall() {
+        let amb = Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 };
+        let dg0 = Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 0 };
+        let dg2 = Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 2 };
+        assert_eq!(amb.delay(), 0);
+        assert_eq!(dg0.delay(), 0);
+        assert_eq!(dg2.delay(), 2);
+        // undelayed epochs serialize compute + consensus; pipelined
+        // epochs take only the longer window
+        assert_eq!(amb.epoch_wall(2.0), 2.5);
+        assert_eq!(dg0.epoch_wall(2.0), 2.5);
+        assert_eq!(dg2.epoch_wall(2.0), 2.0);
+        assert_eq!(
+            Scheme::AmbDg { t_compute: 1.0, t_consensus: 4.0, delay: 1 }.epoch_wall(1.0),
+            4.0,
+            "a comm-bound pipeline is gated by T_c"
+        );
+        // D = 0 normalizes to the stock AMB scheme; D >= 1 and the other
+        // schemes are untouched
+        assert_eq!(dg0.normalized(), amb);
+        assert_eq!(dg2.normalized(), dg2);
+        assert_eq!(amb.normalized(), amb);
     }
 
     #[test]
@@ -353,6 +451,9 @@ mod tests {
         let ch = RunSpec::amb("c", 1.0, 0.2, 5, 10, 1)
             .with_churn(ChurnSpec::IidDropout { p: 0.2, seed: 3 });
         assert_eq!(ch.churn, ChurnSpec::IidDropout { p: 0.2, seed: 3 });
+        let dg = RunSpec::amb_dg("dg", 2.5, 0.5, 2, 7, 20, 1);
+        assert_eq!(dg.scheme, Scheme::AmbDg { t_compute: 2.5, t_consensus: 0.5, delay: 2 });
+        assert_eq!(dg.consensus, ConsensusMode::Gossip { rounds: 7 });
     }
 
     #[test]

@@ -37,10 +37,11 @@ use crate::consensus::churn::InducedConsensus;
 use crate::consensus::Consensus;
 use crate::coordinator::epoch::{self, NodeState};
 use crate::coordinator::{
-    ConsensusMode, EngineFactory, NodeLog, RunOutput, RunSpec, Runtime, RuntimeKind,
+    ConsensusMode, EngineFactory, NodeLog, RunOutput, RunSpec, Runtime, RuntimeKind, Scheme,
 };
 use crate::exec::ExecEngine;
 use crate::metrics::{EpochStats, RunRecord};
+use crate::optim::DelayedGradients;
 use crate::straggler::StragglerModel;
 use crate::topology::Topology;
 use crate::util::matrix::NodeMatrix;
@@ -86,37 +87,92 @@ impl Runtime for SimRuntime<'_> {
 // this trait so the two paths cannot drift apart.
 // ---------------------------------------------------------------------------
 
+/// What one node's compute phase APPLIES this epoch: for the undelayed
+/// schemes the batch it just computed; for AMB-DG the batch popped from
+/// its pipeline ring (computed `staleness` epochs ago against the
+/// then-current primal).
+#[derive(Clone, Copy, Default)]
+struct NodeApplied {
+    b: usize,
+    loss: f64,
+    /// Epochs between compute and application; meaningful when b > 0.
+    staleness: usize,
+}
+
 /// Compute phase over one contiguous node block `[lo, lo + k)`: per node
 /// (ascending) `begin_epoch`, one attributed `grad_chunk` on the
 /// canonical `data_rng(seed, node, epoch)` stream, then encode m⁽⁰⁾ into
 /// the node's `dim + 1`-wide slot of `rows` (the block's slice of the
-/// wire arena, or a worker-local staging buffer).  Returns the block's
-/// loss sums in node order.  This ONE function is the compute loop of
-/// both executors, so the serial and pooled paths cannot drift apart.
+/// wire arena, or a worker-local staging buffer).  `rings` is the
+/// AMB-DG pipeline (None for every undelayed scheme): the freshly
+/// computed batch is pushed, the batch that has aged `delay` epochs is
+/// popped and encoded against the node's CURRENT dual — for delay 0 the
+/// push-then-pop round trip returns the batch just computed, so the
+/// ring path is bit-identical to the direct encode.  Inactive nodes
+/// neither push nor pop (absence freezes the pipeline; every batch is
+/// still applied exactly once after rejoin).  Returns the block's
+/// applied-batch reports in node order.  This ONE function is the
+/// compute loop of both executors, so the serial and pooled paths
+/// cannot drift apart.
 #[allow(clippy::too_many_arguments)]
 fn compute_block(
     engines: &mut [Box<dyn ExecEngine>],
     states: &mut [NodeState],
+    rings: &mut Option<Vec<DelayedGradients>>,
     lo: usize,
     n_total: usize,
     seed: u64,
     epoch: usize,
     batches: &[usize],
+    active: &[bool],
     rows: &mut [f32],
-) -> Vec<f64> {
+) -> Vec<NodeApplied> {
     let k = engines.len();
     let width = states[0].dim() + 1;
     debug_assert_eq!(batches.len(), k);
+    debug_assert_eq!(active.len(), k);
     debug_assert_eq!(rows.len(), k * width);
-    let mut losses = Vec::with_capacity(k);
+    let mut applied = Vec::with_capacity(k);
     for li in 0..k {
         let st = &mut states[li];
         st.begin_epoch();
         let mut data_rng = epoch::data_rng(seed, lo + li, epoch);
-        losses.push(engines[li].grad_chunk(&st.w, batches[li], &mut data_rng, &mut st.grad_sum));
-        st.encode_into(n_total, batches[li], &mut rows[li * width..(li + 1) * width]);
+        let loss = engines[li].grad_chunk(&st.w, batches[li], &mut data_rng, &mut st.grad_sum);
+        let row = &mut rows[li * width..(li + 1) * width];
+        match rings.as_mut() {
+            None => {
+                st.encode_into(n_total, batches[li], row);
+                applied.push(NodeApplied { b: batches[li], loss, staleness: 0 });
+            }
+            Some(rings) => {
+                let ring = &mut rings[li];
+                if active[li] {
+                    ring.push(epoch, batches[li], loss, &st.grad_sum);
+                }
+                let ready = if active[li] { ring.pop_ready() } else { None };
+                match ready {
+                    Some(p) => {
+                        epoch::encode_msg_into(&st.z, &p.grad_sum, n_total, p.batch, row);
+                        applied.push(NodeApplied {
+                            b: p.batch,
+                            loss: p.loss,
+                            staleness: epoch - p.epoch,
+                        });
+                        ring.recycle(p);
+                    }
+                    None => {
+                        // Warm-up (nothing aged enough) or absent: an
+                        // empty message — n·(0·z + 0) — carries no mass,
+                        // so consensus ignores it and the node's own
+                        // update stays gated.
+                        row.fill(0.0);
+                        applied.push(NodeApplied::default());
+                    }
+                }
+            }
+        }
     }
-    losses
+    applied
 }
 
 /// Update phase over one contiguous node block: z ← m/b̂, w ← primal,
@@ -170,14 +226,18 @@ trait NodeBlocks {
 
     /// Compute phase for every node i (ascending): `begin_epoch`, one
     /// attributed `grad_chunk` on the canonical `data_rng(seed, i, t)`
-    /// stream, then encode m_i⁽⁰⁾ into `msgs.row(i)`.  Returns the
-    /// per-node loss sums in node order.
+    /// stream, then encode m_i⁽⁰⁾ — the freshly computed batch, or the
+    /// delay-ripened one from the AMB-DG pipeline ring — into
+    /// `msgs.row(i)`.  `active` masks the epoch's membership (the ring
+    /// freezes across absence).  Returns the per-node applied-batch
+    /// reports in node order.
     fn compute_and_encode(
         &mut self,
         epoch: usize,
         batches: &[usize],
+        active: &[bool],
         msgs: &mut NodeMatrix,
-    ) -> Vec<f64>;
+    ) -> Vec<NodeApplied>;
 
     /// Update phase: z_i ← msgs.row(i)/b̂_i and w_i ← primal(t_next)
     /// for every node `update` selects (all-false when b(t) = 0;
@@ -196,6 +256,12 @@ trait NodeBlocks {
     fn final_w(&mut self) -> NodeMatrix;
 }
 
+/// Build the per-node AMB-DG pipeline rings for a block of `k` nodes
+/// (None for undelayed schemes — their hot path never touches a ring).
+fn build_rings(delay: Option<usize>, k: usize) -> Option<Vec<DelayedGradients>> {
+    delay.map(|d| (0..k).map(|_| DelayedGradients::new(d)).collect())
+}
+
 /// Serial executor: all engines and states on the calling thread — the
 /// reference path (`--threads 1`).
 struct SerialBlocks {
@@ -203,13 +269,26 @@ struct SerialBlocks {
     dim: usize,
     engines: Vec<Box<dyn ExecEngine>>,
     states: Vec<NodeState>,
+    rings: Option<Vec<DelayedGradients>>,
     metric_rng: Pcg64,
 }
 
 impl SerialBlocks {
-    fn new(n: usize, make_engine: EngineFactory<'_>, seed: u64) -> SerialBlocks {
+    fn new(
+        n: usize,
+        make_engine: EngineFactory<'_>,
+        seed: u64,
+        delay: Option<usize>,
+    ) -> SerialBlocks {
         let (engines, states, dim) = build_block(0..n, make_engine);
-        SerialBlocks { seed, dim, engines, states, metric_rng: epoch::metric_rng(seed, 0) }
+        SerialBlocks {
+            seed,
+            dim,
+            engines,
+            states,
+            rings: build_rings(delay, n),
+            metric_rng: epoch::metric_rng(seed, 0),
+        }
     }
 }
 
@@ -222,18 +301,21 @@ impl NodeBlocks for SerialBlocks {
         &mut self,
         epoch: usize,
         batches: &[usize],
+        active: &[bool],
         msgs: &mut NodeMatrix,
-    ) -> Vec<f64> {
+    ) -> Vec<NodeApplied> {
         // The full arena is one contiguous block covering nodes 0..n.
         let n = self.engines.len();
         compute_block(
             &mut self.engines,
             &mut self.states,
+            &mut self.rings,
             0,
             n,
             self.seed,
             epoch,
             batches,
+            active,
             msgs.as_mut_slice(),
         )
     }
@@ -272,7 +354,7 @@ impl NodeBlocks for SerialBlocks {
 /// One phase command to a worker (payloads are the worker's own nodes,
 /// in node order).
 enum Cmd {
-    Compute { epoch: usize, batches: Vec<usize> },
+    Compute { epoch: usize, batches: Vec<usize>, active: Vec<bool> },
     /// `update` masks the worker's nodes (node order within the block);
     /// `rows`/`b_hats` are empty when no node in the block updates.
     Update { t_next: usize, rows: Vec<f32>, b_hats: Vec<f32>, update: Vec<bool> },
@@ -282,7 +364,7 @@ enum Cmd {
 /// A worker's phase result.
 enum Reply {
     Ready { dim: usize },
-    Computed { worker: usize, losses: Vec<f64>, rows: Vec<f32> },
+    Computed { worker: usize, applied: Vec<NodeApplied>, rows: Vec<f32> },
     Updated { worker: usize, error: f64 },
     Finished { worker: usize, w_rows: Vec<f32> },
 }
@@ -317,25 +399,33 @@ impl NodeBlocks for PooledBlocks {
         &mut self,
         epoch: usize,
         batches: &[usize],
+        active: &[bool],
         msgs: &mut NodeMatrix,
-    ) -> Vec<f64> {
+    ) -> Vec<NodeApplied> {
         for (w, &(lo, hi)) in self.spans.iter().enumerate() {
-            self.send(w, Cmd::Compute { epoch, batches: batches[lo..hi].to_vec() });
+            self.send(
+                w,
+                Cmd::Compute {
+                    epoch,
+                    batches: batches[lo..hi].to_vec(),
+                    active: active[lo..hi].to_vec(),
+                },
+            );
         }
         let width = self.dim + 1;
-        let mut losses = vec![0.0f64; self.n];
+        let mut applied = vec![NodeApplied::default(); self.n];
         for _ in 0..self.spans.len() {
             match self.recv() {
-                Reply::Computed { worker, losses: ls, rows } => {
+                Reply::Computed { worker, applied: ap, rows } => {
                     let (lo, hi) = self.spans[worker];
                     // block rows are contiguous in the arena
                     msgs.as_mut_slice()[lo * width..hi * width].copy_from_slice(&rows);
-                    losses[lo..hi].copy_from_slice(&ls);
+                    applied[lo..hi].copy_from_slice(&ap);
                 }
                 _ => unreachable!("sim pool protocol violation (expected Computed)"),
             }
         }
-        losses
+        applied
     }
 
     fn update_and_error(
@@ -397,6 +487,9 @@ struct WorkerCtx {
     hi: usize,
     n_total: usize,
     seed: u64,
+    /// AMB-DG pipeline depth (None for undelayed schemes); workers own
+    /// their nodes' rings for the whole run, like engines and states.
+    delay: Option<usize>,
     rx: Receiver<Cmd>,
     tx: Sender<Reply>,
 }
@@ -405,10 +498,11 @@ struct WorkerCtx {
 /// thread, like the threaded runtime's node threads), then serve phase
 /// commands until the channel disconnects.
 fn sim_worker(ctx: WorkerCtx, make_engine: EngineFactory<'_>) {
-    let WorkerCtx { worker, lo, hi, n_total, seed, rx, tx } = ctx;
+    let WorkerCtx { worker, lo, hi, n_total, seed, delay, rx, tx } = ctx;
     // Nested pool calls from engine code must not multiply threads.
     crate::util::pool::mark_pool_worker();
     let (mut engines, mut states, dim) = build_block(lo..hi, make_engine);
+    let mut rings = build_rings(delay, hi - lo);
     // The run-long sequential metric stream lives with node 0's owner.
     let mut metric_rng = (worker == 0).then(|| epoch::metric_rng(seed, 0));
     if tx.send(Reply::Ready { dim }).is_err() {
@@ -417,19 +511,21 @@ fn sim_worker(ctx: WorkerCtx, make_engine: EngineFactory<'_>) {
     let width = dim + 1;
     while let Ok(cmd) = rx.recv() {
         match cmd {
-            Cmd::Compute { epoch, batches } => {
+            Cmd::Compute { epoch, batches, active } => {
                 let mut rows = vec![0.0f32; (hi - lo) * width];
-                let losses = compute_block(
+                let applied = compute_block(
                     &mut engines,
                     &mut states,
+                    &mut rings,
                     lo,
                     n_total,
                     seed,
                     epoch,
                     &batches,
+                    &active,
                     &mut rows,
                 );
-                if tx.send(Reply::Computed { worker, losses, rows }).is_err() {
+                if tx.send(Reply::Computed { worker, applied, rows }).is_err() {
                     break;
                 }
             }
@@ -467,9 +563,16 @@ fn run_sim(
     f_star: Option<f64>,
 ) -> RunOutput {
     let n = topo.n();
+    // AMB-DG runs through the pipeline ring at EVERY delay, including 0:
+    // the `AmbDg { delay: 0 } ≡ Amb` bitwise contract is then a test of
+    // the pipeline code itself, not of a bypass around it.
+    let delay = match spec.scheme {
+        Scheme::AmbDg { delay, .. } => Some(delay),
+        _ => None,
+    };
     let threads = pool::current_threads().min(n);
     if threads <= 1 {
-        let mut nodes = SerialBlocks::new(n, make_engine, spec.seed);
+        let mut nodes = SerialBlocks::new(n, make_engine, spec.seed, delay);
         return epoch_loop(spec, topo, straggler, f_star, &mut nodes);
     }
     std::thread::scope(|scope| {
@@ -490,6 +593,7 @@ fn run_sim(
                 hi,
                 n_total: n,
                 seed: spec.seed,
+                delay,
                 rx,
                 tx: reply_tx.clone(),
             };
@@ -567,14 +671,17 @@ fn epoch_loop<B: NodeBlocks>(
 
         // ---- compute phase -------------------------------------------------
         let plan = epoch::plan_compute(&spec.scheme, n, t, straggler, &mut strag_rng, active);
-        let b_t: usize = plan.batches.iter().sum();
         let c_t: usize = plan.potentials.iter().sum();
 
-        let losses = nodes.compute_and_encode(t, &plan.batches, &mut msgs);
+        let applied = nodes.compute_and_encode(t, &plan.batches, active, &mut msgs);
+        // b(t) is what this epoch's update CONSUMES: the batches just
+        // computed for the undelayed schemes, the delay-ripened pipeline
+        // batches for AMB-DG (0 during warm-up).
+        let b_t: usize = applied.iter().map(|a| a.b).sum();
         // fold in node order — the serial accumulation sequence
         let mut loss_sum = 0.0f64;
-        for &l in &losses {
-            loss_sum += l;
+        for a in &applied {
+            loss_sum += a.loss;
         }
 
         // ---- consensus phase ------------------------------------------------
@@ -643,7 +750,9 @@ fn epoch_loop<B: NodeBlocks>(
         }
 
         // ---- update phase ----------------------------------------------------
-        wall += plan.epoch_compute_time + spec.scheme.t_consensus();
+        // Undelayed schemes serialize compute + consensus; a pipelined
+        // AMB-DG epoch overlaps them and only the longer window elapses.
+        wall += spec.scheme.epoch_wall(plan.epoch_compute_time);
 
         let mut consensus_err = 0.0f64;
         let do_update = b_t > 0;
@@ -689,6 +798,16 @@ fn epoch_loop<B: NodeBlocks>(
             }
         }
 
+        // Staleness of what the epoch applied (0/0.0 for undelayed
+        // schemes; NaN mean when nothing was applied, like `loss`).
+        let mut max_staleness = 0usize;
+        let mut staleness_wsum = 0.0f64;
+        for a in &applied {
+            if a.b > 0 {
+                max_staleness = max_staleness.max(a.staleness);
+                staleness_wsum += (a.b * a.staleness) as f64;
+            }
+        }
         record.push(EpochStats {
             epoch: t,
             wall_time: wall,
@@ -697,8 +816,13 @@ fn epoch_loop<B: NodeBlocks>(
             loss: if b_t > 0 { loss_sum / b_t as f64 } else { f64::NAN },
             error,
             consensus_err,
+            // min/max stay the COMPUTED per-node batches (the straggler
+            // spread diagnostic, matching the node log), not the applied
+            // ones.
             min_node_batch: plan.batches.iter().copied().min().unwrap_or(0),
             max_node_batch: plan.batches.iter().copied().max().unwrap_or(0),
+            max_staleness,
+            mean_staleness: if b_t > 0 { staleness_wsum / b_t as f64 } else { f64::NAN },
         });
     }
 
@@ -929,6 +1053,39 @@ mod tests {
         let batches: Vec<usize> = out.record.epochs.iter().map(|e| e.batch).collect();
         assert_eq!(batches, vec![4 * 80, 3 * 80, 3 * 80, 3 * 80]);
         assert_eq!(out.record.epochs[1].min_node_batch, 0);
+    }
+
+    #[test]
+    fn amb_dg_pipeline_warmup_staleness_and_wall() {
+        let topo = Topology::ring(6);
+        let (src, opt) = linreg_setup(8, 6);
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
+        let spec = RunSpec::amb_dg("dg", 2.0, 0.5, 1, 4, 5, 13).with_node_log();
+        let out = run_on(&spec, &topo, &strag, src, opt);
+        let batches: Vec<usize> = out.record.epochs.iter().map(|e| e.batch).collect();
+        // D = 1: the first epoch applies nothing (warm-up); afterwards
+        // every epoch applies the previous epoch's 6 × 80 samples.
+        assert_eq!(batches, vec![0, 480, 480, 480, 480]);
+        assert!(out.record.epochs[0].loss.is_nan());
+        assert!(out.record.epochs[0].mean_staleness.is_nan());
+        for e in &out.record.epochs[1..] {
+            assert_eq!(e.max_staleness, 1);
+            assert!((e.mean_staleness - 1.0).abs() < 1e-12);
+            assert!(e.loss.is_finite());
+        }
+        // the node log records the COMPUTED batches: 80 every epoch
+        let log = out.node_log.unwrap();
+        for node in 0..6 {
+            assert_eq!(log.batches[node], vec![80; 5]);
+        }
+        // pipelined wall clock: every epoch takes max(T, T_c) = 2.0
+        for (i, e) in out.record.epochs.iter().enumerate() {
+            assert!((e.wall_time - 2.0 * (i + 1) as f64).abs() < 1e-9);
+        }
+        // error still falls once the pipeline is warm
+        let first = out.record.epochs[1].error;
+        let last = out.record.epochs.last().unwrap().error;
+        assert!(last < first, "no progress: {first} -> {last}");
     }
 
     #[test]

@@ -41,9 +41,12 @@ use crate::coordinator::epoch::{self, NodeState};
 use crate::coordinator::{
     ConsensusMode, EngineFactory, NodeLog, RunOutput, RunSpec, Runtime, RuntimeKind, Scheme,
 };
+use crate::exec::ExecEngine;
 use crate::metrics::{EpochStats, RunRecord};
+use crate::optim::DelayedGradients;
 use crate::topology::{MixMatrix, Topology};
 use crate::util::matrix::NodeMatrix;
+use crate::util::rng::Pcg64;
 
 /// The real-time cluster runtime.
 pub struct ThreadedRuntime;
@@ -77,8 +80,15 @@ struct WireMsg {
 
 /// Per-(node, epoch) report.
 struct EpochRow {
+    /// Batch COMPUTED this epoch (the node-log / straggler-spread view).
     b: usize,
-    loss: f64,
+    /// Batch APPLIED this epoch (= `b` for undelayed schemes; the
+    /// delay-ripened pipeline batch for AMB-DG, 0 during warm-up).
+    applied_b: usize,
+    /// Loss sum over the APPLIED batch's samples.
+    applied_loss: f64,
+    /// Epochs between computing and applying the applied batch.
+    staleness: usize,
     rounds: usize,
     /// Real seconds spent in the compute phase.
     compute_secs: f64,
@@ -122,6 +132,17 @@ fn run_threaded(
     make_engine: EngineFactory<'_>,
     f_star: Option<f64>,
 ) -> RunOutput {
+    // `AmbDg { delay: 0 }` IS the paper's AMB; executing it through the
+    // stock AMB path keeps "D = 0 degenerates to today's AMB" true by
+    // construction on real threads (the pipelined arm below requires
+    // delay ≥ 1: a pre-push pop cannot apply a batch in the epoch that
+    // computes it).
+    let spec_norm = {
+        let mut s = spec.clone();
+        s.scheme = s.scheme.normalized();
+        s
+    };
+    let spec = &spec_norm;
     let n = topo.n();
     assert!(n >= 2, "threaded runtime needs at least 2 nodes");
     assert!(
@@ -205,7 +226,9 @@ fn assemble(
     results.sort_by_key(|r| r.node);
     let dim = results.first().map_or(0, |r| r.final_w.len());
     let scale = spec.time_scale;
-    let is_amb = matches!(spec.scheme, Scheme::Amb { .. });
+    // Anytime-window schemes: undone work is unobservable in real time,
+    // so the recorded potential is the applied batch.
+    let is_anytime = matches!(spec.scheme, Scheme::Amb { .. } | Scheme::AmbDg { .. });
 
     let mut record = RunRecord::new(&spec.name, f_star);
     let mut node_log = spec.record_node_log.then(|| NodeLog::new(n));
@@ -216,19 +239,28 @@ fn assemble(
         let active = churn.active(t);
         let act_count = churn.active_count(t);
         active_counts.push(act_count);
-        // Per-epoch quota over the ACTIVE cluster (None for AMB).
+        // Per-epoch quota over the ACTIVE cluster (None for AMB/AMB-DG).
         let quota = epoch::work_quota(&spec.scheme, act_count);
         let mut b_t = 0usize;
         let mut loss = 0.0f64;
         let mut min_b = usize::MAX;
         let mut max_b = 0usize;
         let mut max_compute = 0.0f64;
+        let mut max_staleness = 0usize;
+        let mut staleness_wsum = 0.0f64;
         for r in &results {
             let row = &r.rows[t - 1];
-            b_t += row.b;
-            loss += row.loss;
+            // b(t) is what the epoch's update consumed; min/max stay the
+            // COMPUTED per-node batches (the node-log view), matching
+            // the simulator's convention.
+            b_t += row.applied_b;
+            loss += row.applied_loss;
             min_b = min_b.min(row.b);
             max_b = max_b.max(row.b);
+            if row.applied_b > 0 {
+                max_staleness = max_staleness.max(row.staleness);
+                staleness_wsum += (row.applied_b * row.staleness) as f64;
+            }
             // Dropped backup stragglers and absent nodes do not gate the
             // epoch (the sim's epoch_compute_time is the survivors'
             // cutoff); their time must not inflate the wall clock.
@@ -239,6 +271,9 @@ fn assemble(
                 let ct = match spec.scheme {
                     Scheme::Amb { t_compute, .. } if active[r.node] => t_compute,
                     Scheme::Amb { .. } => 0.0,
+                    // AMB-DG's compute window is whatever the consensus
+                    // head of the window left over — log the measured
+                    // pipelined compute time.
                     _ => row.compute_secs / scale,
                 };
                 log.push(r.node, row.b, ct);
@@ -246,15 +281,20 @@ fn assemble(
             rounds[r.node].push(row.rounds);
         }
         wall = match spec.scheme {
-            // AMB's epochs land on the absolute schedule by construction.
-            Scheme::Amb { t_compute, t_consensus } => t as f64 * (t_compute + t_consensus),
+            // The anytime schemes land on the absolute schedule by
+            // construction — `Scheme::epoch_wall` is the ONE cadence
+            // formula shared with the simulator's accumulation, so the
+            // two runtimes' wall clocks cannot drift apart.
+            Scheme::Amb { t_compute, .. } | Scheme::AmbDg { t_compute, .. } => {
+                t as f64 * spec.scheme.epoch_wall(t_compute)
+            }
             // Quota schemes are gated by the slowest (surviving) node.
             _ => wall + max_compute / scale + spec.scheme.t_consensus(),
         };
         // Potential work c(t): the quota schemes know exactly what was
-        // assigned to each PRESENT node; AMB's undone work is
-        // unobservable in real time, and absent nodes have none.
-        let potential = if is_amb {
+        // assigned to each PRESENT node; an anytime window's undone work
+        // is unobservable in real time, and absent nodes have none.
+        let potential = if is_anytime {
             b_t
         } else {
             let work = quota.unwrap_or(0);
@@ -273,6 +313,8 @@ fn assemble(
             consensus_err: f64::NAN, // not observable without global state
             min_node_batch: min_b,
             max_node_batch: max_b,
+            max_staleness,
+            mean_staleness: if b_t > 0 { staleness_wsum / b_t as f64 } else { f64::NAN },
         });
     }
     let mut final_w = NodeMatrix::new(n, dim);
@@ -280,6 +322,334 @@ fn assemble(
         final_w.row_mut(r.node).copy_from_slice(&r.final_w);
     }
     RunOutput { record, node_log, final_w, rounds, active_counts }
+}
+
+/// AMB's anytime gradient accumulation: admission-controlled chunks on
+/// the node's canonical data stream until `deadline` (a gradient that
+/// cannot finish in time is never started — Algorithm 1's
+/// `while current_time − T0 ≤ T`), napping after each chunk per the
+/// slowdown factor, EWMA-updating the chunk-duration estimate.  ONE
+/// function serves both the serialized AMB compute window and the
+/// pipelined AMB-DG window (which simply passes the epoch's end as the
+/// deadline), so the two compute paths cannot drift.  Returns (batch,
+/// loss sum); gradients accumulate into `st.grad_sum`.
+fn anytime_compute(
+    engine: &mut dyn ExecEngine,
+    st: &mut NodeState,
+    data_rng: &mut Pcg64,
+    deadline: Instant,
+    est_chunk: &mut Duration,
+    slowdown: f64,
+    grad_chunk: usize,
+) -> (usize, f64) {
+    let mut b_i = 0usize;
+    let mut loss_i = 0.0f64;
+    while Instant::now() + est_chunk.mul_f64(0.9) < deadline {
+        let chunk_t0 = Instant::now();
+        loss_i += engine.grad_chunk(&st.w, grad_chunk, data_rng, &mut st.grad_sum);
+        b_i += grad_chunk;
+        if slowdown > 1.0 {
+            let busy = chunk_t0.elapsed();
+            let nap = busy.mul_f64(slowdown - 1.0);
+            if Instant::now() + nap < deadline + Duration::from_millis(2) {
+                std::thread::sleep(nap);
+            } else {
+                sleep_until(deadline);
+            }
+        }
+        // EWMA over observed chunk times, including the nap.
+        let observed = chunk_t0.elapsed();
+        *est_chunk = est_chunk.mul_f64(0.5) + observed.mul_f64(0.5);
+    }
+    if b_i == 0 {
+        // Nothing admitted: the estimate may be stale-high (scheduler
+        // spike, paging); decay it so the node can re-probe instead of
+        // starving forever.
+        *est_chunk = est_chunk.mul_f64(0.5);
+    }
+    (b_i, loss_i)
+}
+
+/// One epoch's consensus phase over the wire — every [`ConsensusMode`],
+/// shared by the serialized (AMB/FMB: consensus after compute) and
+/// pipelined (AMB-DG: consensus at the head of the window, overlapping
+/// the compute that follows) epoch layouts, so the two cannot drift.
+/// `m` is the node's encoded wire row; an absent node neither sends nor
+/// mixes (nobody addresses it — every sender reads the same schedule)
+/// and `m` comes back untouched.  Returns completed gossip rounds.
+#[allow(clippy::too_many_arguments)]
+fn consensus_phase(
+    ctx: &NodeCtx,
+    t: usize,
+    on: bool,
+    active: &[bool],
+    act_count: usize,
+    dim: usize,
+    m: &mut [f32],
+    inbox: &mut HashMap<(usize, usize, usize), Arc<[f32]>>,
+    consensus_deadline: Instant,
+) -> usize {
+    let spec = &ctx.spec;
+    let (i, n) = (ctx.node, ctx.n);
+    let mut rounds_done = 0usize;
+    match spec.consensus {
+        // Absent this epoch: no sends, no mixing, m/z/w held.
+        _ if !on => {}
+        ConsensusMode::Exact => {
+            // All-to-all exchange among the ACTIVE set; aggregate in
+            // f64 node-index order over |A| rows so the result equals
+            // the simulator's active-mean bit-for-bit given equal
+            // inputs.
+            let payload: Arc<[f32]> = Arc::from(&m[..]);
+            for (idx, tx) in ctx.peer_txs.iter().enumerate() {
+                if active[ctx.peers[idx]] {
+                    let _ = tx.send(WireMsg {
+                        from: i,
+                        epoch: t,
+                        round: 0,
+                        payload: payload.clone(),
+                    });
+                }
+            }
+            let mut have: Vec<Option<Arc<[f32]>>> = (0..n).map(|_| None).collect();
+            let mut missing = act_count - 1;
+            for j in 0..n {
+                if j != i && active[j] {
+                    if let Some(pl) = inbox.remove(&(t, 0, j)) {
+                        have[j] = Some(pl);
+                        missing -= 1;
+                    }
+                }
+            }
+            while missing > 0 {
+                let now = Instant::now();
+                if now >= consensus_deadline {
+                    break;
+                }
+                match ctx.rx.recv_timeout(consensus_deadline - now) {
+                    Ok(msg) => {
+                        if msg.epoch == t && msg.round == 0 && msg.from != i
+                            && active[msg.from]
+                            && have[msg.from].is_none()
+                        {
+                            have[msg.from] = Some(msg.payload);
+                            missing -= 1;
+                        } else {
+                            inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            if missing == 0 {
+                let mut sum = vec![0.0f64; dim + 1];
+                for j in 0..n {
+                    if !active[j] {
+                        continue;
+                    }
+                    let pj: &[f32] =
+                        if j == i { &*m } else { have[j].as_deref().expect("missing == 0") };
+                    for k in 0..=dim {
+                        sum[k] += pj[k] as f64;
+                    }
+                }
+                for (v, &s) in m.iter_mut().zip(&sum) {
+                    *v = (s / act_count as f64) as f32;
+                }
+            }
+            // else: T_c expired with peers missing — keep own m (the
+            // node runs this epoch isolated, normalised by its own
+            // n·b_i side channel).
+        }
+        ConsensusMode::Gossip { .. } | ConsensusMode::GossipJitter { .. } => {
+            // Every node can derive every peer's round budget (the
+            // jitter draw is a pure function of (seed, node, epoch)),
+            // so when a peer has stopped gossiping we mix against its
+            // last-sent (frozen) value instead of stalling until the
+            // deadline — mirroring the simulator's `run_per_node`
+            // freeze semantics.
+            let budget_of = |node: usize| -> usize {
+                match spec.consensus {
+                    ConsensusMode::Gossip { rounds } => rounds,
+                    ConsensusMode::GossipJitter { mean, jitter } => {
+                        epoch::gossip_jitter_rounds(spec.seed, node, t, mean, jitter)
+                    }
+                    ConsensusMode::Exact => unreachable!(),
+                }
+            };
+            // This epoch's gossip runs over the ACTIVE subgraph:
+            // `epeers` indexes the active peers, and the mixing row
+            // is the base lazy Metropolis row when everyone is
+            // present (the static path, zero recompute) or the
+            // induced-subgraph row — derived locally from neighbour
+            // lists + the shared schedule, matching the simulator's
+            // `Topology::induced(..).metropolis().lazy()` weights —
+            // when somebody churned.
+            let epeers: Vec<usize> =
+                (0..ctx.peers.len()).filter(|&idx| active[ctx.peers[idx]]).collect();
+            let (pii, pw): (f32, Vec<f32>) = if act_count == n {
+                (
+                    ctx.p.at(i, i) as f32,
+                    epeers.iter().map(|&idx| ctx.p.at(i, ctx.peers[idx]) as f32).collect(),
+                )
+            } else {
+                // Gossip peers are the adjacency list in ascending
+                // order, and `epeers` filters it in order, so the
+                // helper's weights align 1:1 with `epeers`.
+                let (d, w) = ctx.topo.induced_lazy_metropolis_row(active, i);
+                debug_assert_eq!(w.len(), epeers.len());
+                (d as f32, w.iter().map(|&x| x as f32).collect())
+            };
+            // A peer sends round 0 unconditionally, then round k after
+            // its k-th mix — INCLUDING its final post-budget state, so
+            // the frozen value neighbours fall back on is the peer's
+            // post-B-mix state, exactly what `run_per_node` mixes
+            // against for an exhausted node.
+            let peer_sends = |node: usize, round: usize| -> bool {
+                round <= budget_of(node)
+            };
+            let max_rounds = if epeers.is_empty() {
+                // Nobody to exchange with (churn isolated us): the
+                // induced row is eᵢ, so mixing is the identity —
+                // skip it rather than spin against the deadline.
+                0
+            } else {
+                budget_of(i)
+            };
+            // Frozen-peer tracking is only needed when budgets can
+            // differ across nodes (jitter); under uniform Gossip the
+            // fallback never triggers, so skip the per-message clones.
+            let track_frozen =
+                matches!(spec.consensus, ConsensusMode::GossipJitter { .. });
+            // Round 0 is sent even on a zero budget (jitter lo = 0):
+            // it is the frozen value active peers mix against.
+            if !epeers.is_empty() {
+                let payload: Arc<[f32]> = Arc::from(&m[..]);
+                for &idx in &epeers {
+                    let _ = ctx.peer_txs[idx].send(WireMsg {
+                        from: i,
+                        epoch: t,
+                        round: 0,
+                        payload: payload.clone(),
+                    });
+                }
+            }
+            // Most recent payload seen from each active peer this
+            // epoch (per-sender mpsc order makes "latest" = highest
+            // round).
+            let mut latest: Vec<Option<Arc<[f32]>>> = vec![None; epeers.len()];
+            // Round-k collection slots, reused across rounds.
+            let mut have: Vec<Option<Arc<[f32]>>> = vec![None; epeers.len()];
+            let mut round = 0usize;
+            'rounds: while round < max_rounds {
+                // collect all active peers' round-`round` messages
+                for h in have.iter_mut() {
+                    *h = None;
+                }
+                let mut missing = epeers.len();
+                // drain buffered messages; fall back to frozen values
+                // for peers whose budget is exhausted
+                for (e, &idx) in epeers.iter().enumerate() {
+                    let j = ctx.peers[idx];
+                    if let Some(pl) = inbox.remove(&(t, round, j)) {
+                        if track_frozen {
+                            latest[e] = Some(pl.clone());
+                        }
+                        have[e] = Some(pl);
+                        missing -= 1;
+                    } else if !peer_sends(j, round) {
+                        if let Some(frozen) = latest[e].clone() {
+                            have[e] = Some(frozen);
+                            missing -= 1;
+                        }
+                        // else: j's round-0 is still in flight; wait
+                        // for it below.
+                    }
+                }
+                while missing > 0 {
+                    let now = Instant::now();
+                    if now >= consensus_deadline {
+                        break 'rounds; // T_c exhausted mid-round: keep m as-is
+                    }
+                    match ctx.rx.recv_timeout(consensus_deadline - now) {
+                        Ok(msg) => {
+                            let peer_e = (msg.epoch == t)
+                                .then(|| {
+                                    epeers
+                                        .iter()
+                                        .position(|&idx| ctx.peers[idx] == msg.from)
+                                })
+                                .flatten();
+                            if let Some(e) = peer_e {
+                                if track_frozen {
+                                    latest[e] = Some(msg.payload.clone());
+                                }
+                                if msg.round == round && have[e].is_none() {
+                                    have[e] = Some(msg.payload);
+                                    missing -= 1;
+                                    // a frozen-eligible peer may have
+                                    // just delivered its round 0
+                                    continue;
+                                }
+                            }
+                            // stale/early message: buffer for later rounds
+                            inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
+                            // re-check frozen fallbacks now that
+                            // `latest` may have been filled
+                            for (e, &idx) in epeers.iter().enumerate() {
+                                let j = ctx.peers[idx];
+                                if have[e].is_none() && !peer_sends(j, round) {
+                                    if let Some(frozen) = latest[e].clone() {
+                                        have[e] = Some(frozen);
+                                        missing -= 1;
+                                    }
+                                }
+                            }
+                        }
+                        Err(_) => break 'rounds,
+                    }
+                }
+                if missing > 0 {
+                    break 'rounds;
+                }
+                // m ← P_ii m + Σ_{j ∈ A ∩ N(i)} P_ij m_j
+                for v in m.iter_mut() {
+                    *v *= pii;
+                }
+                for (e, _) in epeers.iter().enumerate() {
+                    let pij = pw[e];
+                    let mj = have[e].as_ref().unwrap();
+                    for k in 0..=dim {
+                        m[k] += pij * mj[k];
+                    }
+                }
+                round += 1;
+                // Broadcast the post-mix state — peers at this round
+                // consume it live; peers past our budget freeze on it
+                // (the final broadcast at round == max_rounds exists
+                // only for that freeze path, so uniform Gossip skips
+                // it).  Don't start a send we can't finish inside the
+                // window.
+                if round == max_rounds && !track_frozen {
+                    break;
+                }
+                if Instant::now() >= consensus_deadline {
+                    break 'rounds;
+                }
+                let payload: Arc<[f32]> = Arc::from(&m[..]);
+                for &idx in &epeers {
+                    let _ = ctx.peer_txs[idx].send(WireMsg {
+                        from: i,
+                        epoch: t,
+                        round,
+                        payload: payload.clone(),
+                    });
+                }
+            }
+            rounds_done = round;
+        }
+    }
+    rounds_done
 }
 
 fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
@@ -332,7 +702,15 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
     let (ignore, coded, per_node_batch) = match spec.scheme {
         Scheme::FmbBackup { per_node_batch, ignore, coded, .. } => (ignore, coded, per_node_batch),
         Scheme::Fmb { per_node_batch, .. } => (0, false, per_node_batch),
-        Scheme::Amb { .. } => (0, false, 0),
+        Scheme::Amb { .. } | Scheme::AmbDg { .. } => (0, false, 0),
+    };
+
+    // AMB-DG pipeline ring (run_threaded normalized delay 0 away, so a
+    // ring here always has delay ≥ 1 and uses the pre-push pop: the
+    // batch it feeds to consensus was computed in an EARLIER epoch).
+    let mut ring = match spec.scheme {
+        Scheme::AmbDg { delay, .. } => Some(DelayedGradients::new(delay)),
+        _ => None,
     };
 
     // Engine is built and warm; rendezvous, then agree on the common t0.
@@ -351,48 +729,135 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
         let mut b_i = 0usize;
         let mut loss_i = 0.0f64;
         let compute_secs;
-        let consensus_deadline;
+        let rounds_done;
+        // What this epoch APPLIES: (batch, loss, staleness).  The
+        // undelayed schemes overwrite it with the batch just computed;
+        // the AMB-DG arm with the pipeline pop.
+        let applied: (usize, f64, usize);
 
         match spec.scheme {
-            Scheme::Amb { t_compute, t_consensus } => {
+            Scheme::AmbDg { t_compute, t_consensus, delay: _ } => {
+                // ---- pipelined epoch (AMB-DG): consensus at the head of
+                // the window, compute filling everything after it ----
+                // The absolute schedule ticks in max(T, T_c) steps: the
+                // consensus for the PREVIOUS epoch's batch and this
+                // epoch's compute share one window instead of being laid
+                // end to end.  A node thread is single-threaded, so the
+                // two are SERIALIZED within the window — the pipelining
+                // win is that under a finite gossip budget the rounds
+                // complete as soon as peers respond (milliseconds, not
+                // the T_c deadline; all nodes enter consensus together
+                // at the window head), and the ENTIRE residual window is
+                // gradient time, where AMB idles from consensus
+                // completion to its T_c deadline by construction.  A
+                // deadline-bound budget (GOSSIP_UNTIL_DEADLINE) instead
+                // spends the full T_c gossiping and leaves only
+                // max(T, T_c) − T_c to compute — prefer finite budgets
+                // for pipelined runs (DESIGN.md §pipelining).
+                let epoch_len = spec.scheme.epoch_wall(t_compute) * scale;
+                let epoch_start = start + Duration::from_secs_f64((t - 1) as f64 * epoch_len);
+                let epoch_deadline = epoch_start + Duration::from_secs_f64(epoch_len);
+                let consensus_deadline =
+                    epoch_start + Duration::from_secs_f64(t_consensus * scale);
+                sleep_until(epoch_start);
+                // Encode the delay-ripened batch against the CURRENT
+                // dual (the gradients saw the stale primal; the dual
+                // weight is today's z — the sim's `encode_msg_into`
+                // call, same kernel).
+                if on {
+                    match ring.as_mut().expect("AmbDg carries a ring").pop_ready_pre_push() {
+                        Some(p) => {
+                            epoch::encode_msg_into(&st.z, &p.grad_sum, n, p.batch, &mut m);
+                            applied = (p.batch, p.loss, t - p.epoch);
+                            ring.as_mut().unwrap().recycle(p);
+                        }
+                        None => {
+                            // Warm-up: nothing aged enough — an empty
+                            // message carries no mass, peers ignore it.
+                            m.fill(0.0);
+                            applied = (0, 0.0, 0);
+                        }
+                    }
+                } else {
+                    applied = (0, 0.0, 0);
+                }
+                rounds_done = consensus_phase(
+                    &ctx,
+                    t,
+                    on,
+                    active,
+                    act_count,
+                    dim,
+                    &mut m,
+                    &mut inbox,
+                    consensus_deadline,
+                );
+                // Compute at the STALE primal w(t) until the window ends
+                // — the dual/primal update below runs only after this,
+                // so the gradients the ring records were evaluated at
+                // the pre-update iterate, exactly the sim's delay model.
+                // An absent node idles the window out (absolute schedule).
+                if on {
+                    let compute_t0 = Instant::now();
+                    let (b, l) = anytime_compute(
+                        &mut *engine,
+                        &mut st,
+                        &mut data_rng,
+                        epoch_deadline,
+                        &mut est_chunk,
+                        slowdown,
+                        grad_chunk,
+                    );
+                    b_i = b;
+                    loss_i = l;
+                    ring.as_mut().unwrap().push(t, b_i, loss_i, &st.grad_sum);
+                    compute_secs = compute_t0.elapsed().as_secs_f64();
+                } else {
+                    compute_secs = 0.0;
+                }
+                sleep_until(epoch_deadline);
+            }
+            Scheme::Amb { t_compute, .. } => {
                 // ---- compute phase: anytime gradient accumulation ----
-                // Admission control: only start a chunk expected to finish
-                // inside the window (a gradient that cannot finish by T is
-                // abandoned — Algorithm 1's `while current_time − T0 ≤ T`).
-                let epoch_len = (t_compute + t_consensus) * scale;
+                // Admission control lives in `anytime_compute` (a
+                // gradient that cannot finish by T is never started).
+                let epoch_len = spec.scheme.epoch_wall(t_compute) * scale;
                 let epoch_start = start + Duration::from_secs_f64((t - 1) as f64 * epoch_len);
                 let compute_deadline = epoch_start + Duration::from_secs_f64(t_compute * scale);
                 let epoch_deadline = epoch_start + Duration::from_secs_f64(epoch_len);
                 sleep_until(epoch_start);
                 // An absent node idles the window out (the absolute
                 // schedule ticks on regardless — DESIGN.md §churn).
-                while on && Instant::now() + est_chunk.mul_f64(0.9) < compute_deadline {
-                    let chunk_t0 = Instant::now();
-                    loss_i +=
-                        engine.grad_chunk(&st.w, grad_chunk, &mut data_rng, &mut st.grad_sum);
-                    b_i += grad_chunk;
-                    if slowdown > 1.0 {
-                        let busy = chunk_t0.elapsed();
-                        let nap = busy.mul_f64(slowdown - 1.0);
-                        if Instant::now() + nap < compute_deadline + Duration::from_millis(2) {
-                            std::thread::sleep(nap);
-                        } else {
-                            sleep_until(compute_deadline);
-                        }
-                    }
-                    // EWMA over observed chunk times, including the nap.
-                    let observed = chunk_t0.elapsed();
-                    est_chunk = est_chunk.mul_f64(0.5) + observed.mul_f64(0.5);
-                }
-                if on && b_i == 0 {
-                    // Nothing admitted: the estimate may be stale-high
-                    // (scheduler spike, paging); decay it so the node can
-                    // re-probe instead of starving forever.
-                    est_chunk = est_chunk.mul_f64(0.5);
+                if on {
+                    let (b, l) = anytime_compute(
+                        &mut *engine,
+                        &mut st,
+                        &mut data_rng,
+                        compute_deadline,
+                        &mut est_chunk,
+                        slowdown,
+                        grad_chunk,
+                    );
+                    b_i = b;
+                    loss_i = l;
                 }
                 sleep_until(compute_deadline);
                 compute_secs = if on { t_compute * scale } else { 0.0 };
-                consensus_deadline = epoch_deadline;
+                if on {
+                    st.encode_into(n, b_i, &mut m);
+                }
+                applied = (b_i, loss_i, 0);
+                rounds_done = consensus_phase(
+                    &ctx,
+                    t,
+                    on,
+                    active,
+                    act_count,
+                    dim,
+                    &mut m,
+                    &mut inbox,
+                    epoch_deadline,
+                );
             }
             Scheme::Fmb { .. } | Scheme::FmbBackup { .. } => {
                 // ---- compute phase: race to the quota ----
@@ -483,274 +948,23 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 }
                 // The epoch's compute phase ends for everyone together.
                 ctx.phase_barrier.wait();
-                consensus_deadline = Instant::now() + Duration::from_secs_f64(t_consensus_real);
-            }
-        }
-
-        // ---- consensus phase (ACTIVE nodes only) ----
-        // An absent node neither sends nor mixes: nobody addresses it
-        // (every sender reads the same schedule), and it holds m, z, w
-        // untouched until it rejoins — the simulator's isolated-row
-        // semantics on real threads.
-        let mut rounds_done = 0usize;
-        if on {
-            st.encode_into(n, b_i, &mut m);
-        }
-        match spec.consensus {
-            // Absent this epoch: no sends, no mixing, m/z/w held.
-            _ if !on => {}
-            ConsensusMode::Exact => {
-                // All-to-all exchange among the ACTIVE set; aggregate in
-                // f64 node-index order over |A| rows so the result equals
-                // the simulator's active-mean bit-for-bit given equal
-                // inputs.
-                let payload: Arc<[f32]> = Arc::from(&m[..]);
-                for (idx, tx) in ctx.peer_txs.iter().enumerate() {
-                    if active[ctx.peers[idx]] {
-                        let _ = tx.send(WireMsg {
-                            from: i,
-                            epoch: t,
-                            round: 0,
-                            payload: payload.clone(),
-                        });
-                    }
+                let consensus_deadline =
+                    Instant::now() + Duration::from_secs_f64(t_consensus_real);
+                if on {
+                    st.encode_into(n, b_i, &mut m);
                 }
-                let mut have: Vec<Option<Arc<[f32]>>> = (0..n).map(|_| None).collect();
-                let mut missing = act_count - 1;
-                for j in 0..n {
-                    if j != i && active[j] {
-                        if let Some(pl) = inbox.remove(&(t, 0, j)) {
-                            have[j] = Some(pl);
-                            missing -= 1;
-                        }
-                    }
-                }
-                while missing > 0 {
-                    let now = Instant::now();
-                    if now >= consensus_deadline {
-                        break;
-                    }
-                    match ctx.rx.recv_timeout(consensus_deadline - now) {
-                        Ok(msg) => {
-                            if msg.epoch == t && msg.round == 0 && msg.from != i
-                                && active[msg.from]
-                                && have[msg.from].is_none()
-                            {
-                                have[msg.from] = Some(msg.payload);
-                                missing -= 1;
-                            } else {
-                                inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
-                            }
-                        }
-                        Err(_) => break,
-                    }
-                }
-                if missing == 0 {
-                    let mut sum = vec![0.0f64; dim + 1];
-                    for j in 0..n {
-                        if !active[j] {
-                            continue;
-                        }
-                        let pj: &[f32] =
-                            if j == i { &m } else { have[j].as_deref().expect("missing == 0") };
-                        for k in 0..=dim {
-                            sum[k] += pj[k] as f64;
-                        }
-                    }
-                    for (v, &s) in m.iter_mut().zip(&sum) {
-                        *v = (s / act_count as f64) as f32;
-                    }
-                }
-                // else: T_c expired with peers missing — keep own m (the
-                // node runs this epoch isolated, normalised by its own
-                // n·b_i side channel).
-            }
-            ConsensusMode::Gossip { .. } | ConsensusMode::GossipJitter { .. } => {
-                // Every node can derive every peer's round budget (the
-                // jitter draw is a pure function of (seed, node, epoch)),
-                // so when a peer has stopped gossiping we mix against its
-                // last-sent (frozen) value instead of stalling until the
-                // deadline — mirroring the simulator's `run_per_node`
-                // freeze semantics.
-                let budget_of = |node: usize| -> usize {
-                    match spec.consensus {
-                        ConsensusMode::Gossip { rounds } => rounds,
-                        ConsensusMode::GossipJitter { mean, jitter } => {
-                            epoch::gossip_jitter_rounds(spec.seed, node, t, mean, jitter)
-                        }
-                        ConsensusMode::Exact => unreachable!(),
-                    }
-                };
-                // This epoch's gossip runs over the ACTIVE subgraph:
-                // `epeers` indexes the active peers, and the mixing row
-                // is the base lazy Metropolis row when everyone is
-                // present (the static path, zero recompute) or the
-                // induced-subgraph row — derived locally from neighbour
-                // lists + the shared schedule, matching the simulator's
-                // `Topology::induced(..).metropolis().lazy()` weights —
-                // when somebody churned.
-                let epeers: Vec<usize> =
-                    (0..ctx.peers.len()).filter(|&idx| active[ctx.peers[idx]]).collect();
-                let (pii, pw): (f32, Vec<f32>) = if act_count == n {
-                    (
-                        ctx.p.at(i, i) as f32,
-                        epeers.iter().map(|&idx| ctx.p.at(i, ctx.peers[idx]) as f32).collect(),
-                    )
-                } else {
-                    // Gossip peers are the adjacency list in ascending
-                    // order, and `epeers` filters it in order, so the
-                    // helper's weights align 1:1 with `epeers`.
-                    let (d, w) = ctx.topo.induced_lazy_metropolis_row(active, i);
-                    debug_assert_eq!(w.len(), epeers.len());
-                    (d as f32, w.iter().map(|&x| x as f32).collect())
-                };
-                // A peer sends round 0 unconditionally, then round k after
-                // its k-th mix — INCLUDING its final post-budget state, so
-                // the frozen value neighbours fall back on is the peer's
-                // post-B-mix state, exactly what `run_per_node` mixes
-                // against for an exhausted node.
-                let peer_sends = |node: usize, round: usize| -> bool {
-                    round <= budget_of(node)
-                };
-                let max_rounds = if epeers.is_empty() {
-                    // Nobody to exchange with (churn isolated us): the
-                    // induced row is eᵢ, so mixing is the identity —
-                    // skip it rather than spin against the deadline.
-                    0
-                } else {
-                    budget_of(i)
-                };
-                // Frozen-peer tracking is only needed when budgets can
-                // differ across nodes (jitter); under uniform Gossip the
-                // fallback never triggers, so skip the per-message clones.
-                let track_frozen =
-                    matches!(spec.consensus, ConsensusMode::GossipJitter { .. });
-                // Round 0 is sent even on a zero budget (jitter lo = 0):
-                // it is the frozen value active peers mix against.
-                if !epeers.is_empty() {
-                    let payload: Arc<[f32]> = Arc::from(&m[..]);
-                    for &idx in &epeers {
-                        let _ = ctx.peer_txs[idx].send(WireMsg {
-                            from: i,
-                            epoch: t,
-                            round: 0,
-                            payload: payload.clone(),
-                        });
-                    }
-                }
-                // Most recent payload seen from each active peer this
-                // epoch (per-sender mpsc order makes "latest" = highest
-                // round).
-                let mut latest: Vec<Option<Arc<[f32]>>> = vec![None; epeers.len()];
-                // Round-k collection slots, reused across rounds.
-                let mut have: Vec<Option<Arc<[f32]>>> = vec![None; epeers.len()];
-                let mut round = 0usize;
-                'rounds: while round < max_rounds {
-                    // collect all active peers' round-`round` messages
-                    for h in have.iter_mut() {
-                        *h = None;
-                    }
-                    let mut missing = epeers.len();
-                    // drain buffered messages; fall back to frozen values
-                    // for peers whose budget is exhausted
-                    for (e, &idx) in epeers.iter().enumerate() {
-                        let j = ctx.peers[idx];
-                        if let Some(pl) = inbox.remove(&(t, round, j)) {
-                            if track_frozen {
-                                latest[e] = Some(pl.clone());
-                            }
-                            have[e] = Some(pl);
-                            missing -= 1;
-                        } else if !peer_sends(j, round) {
-                            if let Some(frozen) = latest[e].clone() {
-                                have[e] = Some(frozen);
-                                missing -= 1;
-                            }
-                            // else: j's round-0 is still in flight; wait
-                            // for it below.
-                        }
-                    }
-                    while missing > 0 {
-                        let now = Instant::now();
-                        if now >= consensus_deadline {
-                            break 'rounds; // T_c exhausted mid-round: keep m as-is
-                        }
-                        match ctx.rx.recv_timeout(consensus_deadline - now) {
-                            Ok(msg) => {
-                                let peer_e = (msg.epoch == t)
-                                    .then(|| {
-                                        epeers
-                                            .iter()
-                                            .position(|&idx| ctx.peers[idx] == msg.from)
-                                    })
-                                    .flatten();
-                                if let Some(e) = peer_e {
-                                    if track_frozen {
-                                        latest[e] = Some(msg.payload.clone());
-                                    }
-                                    if msg.round == round && have[e].is_none() {
-                                        have[e] = Some(msg.payload);
-                                        missing -= 1;
-                                        // a frozen-eligible peer may have
-                                        // just delivered its round 0
-                                        continue;
-                                    }
-                                }
-                                // stale/early message: buffer for later rounds
-                                inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
-                                // re-check frozen fallbacks now that
-                                // `latest` may have been filled
-                                for (e, &idx) in epeers.iter().enumerate() {
-                                    let j = ctx.peers[idx];
-                                    if have[e].is_none() && !peer_sends(j, round) {
-                                        if let Some(frozen) = latest[e].clone() {
-                                            have[e] = Some(frozen);
-                                            missing -= 1;
-                                        }
-                                    }
-                                }
-                            }
-                            Err(_) => break 'rounds,
-                        }
-                    }
-                    if missing > 0 {
-                        break 'rounds;
-                    }
-                    // m ← P_ii m + Σ_{j ∈ A ∩ N(i)} P_ij m_j
-                    for v in m.iter_mut() {
-                        *v *= pii;
-                    }
-                    for (e, _) in epeers.iter().enumerate() {
-                        let pij = pw[e];
-                        let mj = have[e].as_ref().unwrap();
-                        for k in 0..=dim {
-                            m[k] += pij * mj[k];
-                        }
-                    }
-                    round += 1;
-                    // Broadcast the post-mix state — peers at this round
-                    // consume it live; peers past our budget freeze on it
-                    // (the final broadcast at round == max_rounds exists
-                    // only for that freeze path, so uniform Gossip skips
-                    // it).  Don't start a send we can't finish inside the
-                    // window.
-                    if round == max_rounds && !track_frozen {
-                        break;
-                    }
-                    if Instant::now() >= consensus_deadline {
-                        break 'rounds;
-                    }
-                    let payload: Arc<[f32]> = Arc::from(&m[..]);
-                    for &idx in &epeers {
-                        let _ = ctx.peer_txs[idx].send(WireMsg {
-                            from: i,
-                            epoch: t,
-                            round,
-                            payload: payload.clone(),
-                        });
-                    }
-                }
-                rounds_done = round;
+                applied = (b_i, loss_i, 0);
+                rounds_done = consensus_phase(
+                    &ctx,
+                    t,
+                    on,
+                    active,
+                    act_count,
+                    dim,
+                    &mut m,
+                    &mut inbox,
+                    consensus_deadline,
+                );
             }
         }
         // purge stale buffered messages from this epoch
@@ -764,7 +978,14 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 st.primal(&mut *engine, t + 1);
             }
         }
-        rows.push(EpochRow { b: b_i, loss: loss_i, rounds: rounds_done, compute_secs });
+        rows.push(EpochRow {
+            b: b_i,
+            applied_b: applied.0,
+            applied_loss: applied.1,
+            staleness: applied.2,
+            rounds: rounds_done,
+            compute_secs,
+        });
         errors.push(if i == 0 {
             engine.error_metric(&st.w, &mut metric_rng)
         } else {
@@ -902,6 +1123,68 @@ mod tests {
         // epochs with node 1 absent lose exactly its quota
         assert_eq!(batches, vec![4 * 32, 3 * 32, 4 * 32, 3 * 32]);
         assert_eq!(out.active_counts, vec![4, 3, 4, 3]);
+    }
+
+    #[test]
+    fn amb_dg_pipelines_and_records_staleness_on_real_threads() {
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 7);
+        // Finite gossip budget: the rounds finish as soon as peers
+        // respond, so nearly the whole max(T, T_c) window is compute —
+        // the budget recommended for pipelined runs (a deadline-bound
+        // GOSSIP_UNTIL_DEADLINE budget would spend all of T_c gossiping
+        // and shrink the compute tail to max(T, T_c) − T_c).
+        let spec = RunSpec::amb_dg("dg-threaded", 0.06, 0.04, 1, 4, 6, 5)
+            .with_grad_chunk(16)
+            .with_node_log();
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        assert_eq!(out.record.epochs.len(), 6);
+        // warm-up: the first epoch applies nothing
+        assert_eq!(out.record.epochs[0].batch, 0);
+        assert!(out.record.epochs[0].mean_staleness.is_nan());
+        for e in &out.record.epochs[1..] {
+            assert!(e.batch > 0, "epoch {} applied nothing", e.epoch);
+            assert_eq!(e.max_staleness, 1, "epoch {}", e.epoch);
+            assert!((e.mean_staleness - 1.0).abs() < 1e-12);
+        }
+        // pipelined absolute schedule: epoch length max(T, T_c) = 0.06
+        for (i, e) in out.record.epochs.iter().enumerate() {
+            assert!((e.wall_time - 0.06 * (i + 1) as f64).abs() < 1e-9);
+        }
+        // every node really computed every epoch (the COMPUTED view)
+        let log = out.node_log.as_ref().unwrap();
+        for node in 0..4 {
+            for t in 0..6 {
+                assert!(log.batches[node][t] > 0, "node {node} idle in epoch {}", t + 1);
+            }
+        }
+        assert!(out.record.epochs.last().unwrap().error.is_finite());
+    }
+
+    #[test]
+    fn amb_dg_zero_delay_runs_the_stock_amb_path() {
+        // delay = 0 normalizes to Scheme::Amb: the absolute schedule is
+        // T + T_c, staleness columns are identically zero, and every
+        // epoch applies the batch it computed.
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 3);
+        let spec = RunSpec::amb_dg(
+            "dg0-threaded",
+            0.06,
+            0.04,
+            0,
+            crate::coordinator::GOSSIP_UNTIL_DEADLINE,
+            4,
+            5,
+        )
+        .with_grad_chunk(16);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        for (i, e) in out.record.epochs.iter().enumerate() {
+            assert!(e.batch > 0, "no warm-up gap at D = 0");
+            assert_eq!(e.max_staleness, 0);
+            assert!((e.mean_staleness - 0.0).abs() < 1e-12);
+            assert!((e.wall_time - 0.10 * (i + 1) as f64).abs() < 1e-9, "AMB cadence");
+        }
     }
 
     #[test]

@@ -40,7 +40,7 @@ pub fn ablate_rounds(ctx: &Ctx) -> Result<FigReport> {
     let mut errs = Vec::new();
     for (&rounds, out) in round_grid.iter().zip(&outs) {
         let rec = &out.record;
-        let final_err = rec.epochs.last().unwrap().error;
+        let final_err = super::final_error(rec)?;
         let cons: f64 =
             rec.epochs.iter().map(|e| e.consensus_err).sum::<f64>() / rec.epochs.len() as f64;
         csv.push_nums(&[rounds as f64, final_err, cons]);
@@ -108,8 +108,8 @@ pub fn ablate_bt(ctx: &Ctx) -> Result<FigReport> {
     let path = ctx.out_dir.join("ablation_bt.csv");
     csv.save(&path)?;
 
-    let ee = est.epochs.last().unwrap().error;
-    let ex = exact.epochs.last().unwrap().error;
+    let ee = super::final_error(&est)?;
+    let ex = super::final_error(&exact)?;
     Ok(FigReport {
         id: "a2",
         title: "ablation: consensus-estimated b̂(t) vs oracle b(t)",
@@ -215,7 +215,7 @@ pub fn ablate_baselines(ctx: &Ctx) -> Result<FigReport> {
             name.to_string(),
             format!("{:.1}", rec.total_time()),
             rec.total_samples().to_string(),
-            format!("{:.4e}", rec.epochs.last().unwrap().error),
+            format!("{:.4e}", super::final_error(&rec)?),
         ]);
         recs.push(rec);
     }
@@ -223,11 +223,11 @@ pub fn ablate_baselines(ctx: &Ctx) -> Result<FigReport> {
     csv.save(&path)?;
 
     // AMB should dominate on time-to-target: compute the common target.
-    let target = recs
-        .iter()
-        .map(|r| r.epochs.last().unwrap().error)
-        .fold(0.0f64, f64::max)
-        * 1.5;
+    let mut target = 0.0f64;
+    for r in &recs {
+        target = target.max(super::final_error(r)?);
+    }
+    let target = target * 1.5;
     let times: Vec<Option<f64>> = recs.iter().map(|r| r.time_to_error(target)).collect();
     let amb_t = times[0].unwrap_or(f64::INFINITY);
     let best_other = times[1..]

@@ -120,7 +120,7 @@ pub fn churn(ctx: &Ctx) -> Result<FigReport> {
         if (frac - (1.0 - it.p)).abs() > 0.2 {
             frac_ok = false;
         }
-        let final_err = out.record.epochs.last().map(|e| e.error).unwrap_or(f64::NAN);
+        let final_err = super::final_error(&out.record)?;
         if !final_err.is_finite() {
             all_finite = false;
         }

@@ -49,8 +49,8 @@ pub fn run_pair(
 
     // Target: the error both runs can reach (80th-percentile of final
     // errors, conservatively the worse of the two finals × 1.5).
-    let fa = amb.epochs.last().unwrap().error;
-    let ff = fmb.epochs.last().unwrap().error;
+    let fa = super::final_error(&amb)?;
+    let ff = super::final_error(&fmb)?;
     let target = fa.max(ff) * 1.5;
     let speedup = crate::metrics::speedup_at(&amb, &fmb, target)
         .map(|(_, _, s)| s)

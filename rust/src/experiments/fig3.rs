@@ -28,7 +28,7 @@ pub fn fig3(ctx: &Ctx) -> Result<FigReport> {
         .with_consensus(ConsensusMode::Exact);
     let fmb = ctx.run(&fmb_spec, &topo, &strag, &source, &opt)?.record;
 
-    let target = amb.epochs.last().unwrap().error.max(fmb.epochs.last().unwrap().error) * 1.5;
+    let target = super::final_error(&amb)?.max(super::final_error(&fmb)?) * 1.5;
     let speedup = crate::metrics::speedup_at(&amb, &fmb, target)
         .map(|(_, _, s)| s)
         .unwrap_or(f64::NAN);

@@ -56,10 +56,10 @@ pub fn fig4(ctx: &Ctx) -> Result<FigReport> {
             .last()
             .map(|e| e.error)
             .unwrap_or(f64::INFINITY);
-        let win = amb.epochs.last().unwrap().error <= fmb_at_t;
+        let win = super::final_error(&amb)? <= fmb_at_t;
         amb_wins += win as usize;
-        amb_final_errs.push(amb.epochs.last().unwrap().error);
-        fmb_final_errs.push(fmb.epochs.last().unwrap().error);
+        amb_final_errs.push(super::final_error(&amb)?);
+        fmb_final_errs.push(super::final_error(&fmb)?);
     }
 
     let p_amb = ctx.out_dir.join("fig4_amb_paths.csv");

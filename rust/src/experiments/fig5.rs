@@ -55,15 +55,15 @@ pub fn fig5(ctx: &Ctx) -> Result<FigReport> {
 
     // 5a shape: per-epoch error of AMB ≈ FMB (ratio near 1 at the final
     // epoch).  5b shape: per-wall-time, AMB is materially faster.
-    let ea = amb_r5.epochs.last().unwrap().error;
-    let ef = fmb_r5.epochs.last().unwrap().error;
+    let ea = super::final_error(&amb_r5)?;
+    let ef = super::final_error(&fmb_r5)?;
     let per_epoch_ratio = ea / ef;
     let target = ea.max(ef) * 1.5;
     let time_speedup = crate::metrics::speedup_at(&amb_r5, &fmb_r5, target)
         .map(|(_, _, s)| s)
         .unwrap_or(f64::NAN);
     // r=5 vs r=inf degradation (both schemes) should be modest.
-    let amb_degrade = amb_r5.epochs.last().unwrap().error / amb_inf.epochs.last().unwrap().error;
+    let amb_degrade = super::final_error(&amb_r5)? / super::final_error(&amb_inf)?;
 
     Ok(FigReport {
         id: "f5",

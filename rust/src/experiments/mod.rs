@@ -21,6 +21,7 @@
 
 pub mod ablations;
 pub mod churn;
+pub mod dg;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
@@ -266,6 +267,18 @@ pub fn mnist_source(seed: u64) -> Arc<DataSource> {
     Arc::new(DataSource::Mnist(MnistLike::mnist_shaped(seed)))
 }
 
+/// Final-epoch error of a run, as a clean `anyhow` error instead of a
+/// panic when the record is empty (e.g. an epochs = 0 spec) — the
+/// harness-side companion of the PR-2 `Consensus::{exact_average,
+/// max_error}` Result migration, so no experiment unwraps its way into
+/// a panic on a degenerate run.
+pub fn final_error(rec: &crate::metrics::RunRecord) -> Result<f64> {
+    rec.epochs
+        .last()
+        .map(|e| e.error)
+        .ok_or_else(|| anyhow::anyhow!("run '{}' recorded no epochs", rec.name))
+}
+
 /// Dual-averaging setup for a workload: β(t) = K + √(t/μ) with μ set to
 /// the expected global per-epoch batch and a radius generous enough to
 /// contain the optimum.
@@ -312,8 +325,9 @@ pub fn run_one(ctx: &Ctx, id: &str) -> Result<FigReport> {
         "f9" => fig8::fig9(ctx),
         "thm7" => thm7::thm7(ctx),
         "churn" => churn::churn(ctx),
+        "dg" => dg::dg(ctx),
         other => anyhow::bail!(
-            "unknown figure id '{other}' (try f1a f1b f3 f4 f5 f6 f7 f8 f9 thm7 churn)"
+            "unknown figure id '{other}' (try f1a f1b f3 f4 f5 f6 f7 f8 f9 thm7 churn dg)"
         ),
     }
 }
@@ -336,6 +350,28 @@ mod tests {
     fn run_one_rejects_unknown() {
         let ctx = Ctx::native(Path::new("/tmp/amb_results_test"));
         assert!(run_one(&ctx, "bogus").is_err());
+    }
+
+    #[test]
+    fn final_error_is_a_result_not_a_panic() {
+        let empty = crate::metrics::RunRecord::new("empty", None);
+        let err = final_error(&empty).unwrap_err();
+        assert!(err.to_string().contains("no epochs"));
+        let mut one = crate::metrics::RunRecord::new("one", None);
+        one.push(crate::metrics::EpochStats {
+            epoch: 1,
+            wall_time: 1.0,
+            batch: 2,
+            potential: 2,
+            loss: 0.5,
+            error: 0.25,
+            consensus_err: 0.0,
+            min_node_batch: 1,
+            max_node_batch: 1,
+            max_staleness: 0,
+            mean_staleness: 0.0,
+        });
+        assert_eq!(final_error(&one).unwrap(), 0.25);
     }
 
     #[test]

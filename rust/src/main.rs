@@ -16,6 +16,8 @@
 //!       --t-compute 14.5 --t-consensus 4.5 --rounds 5 --out run.csv
 //!   amb run --scheme fmb-coded --ignore 2 --runtime threaded \
 //!       --t-compute 0.5 --t-consensus 0.2 --time-scale 1.0
+//!   amb run --scheme amb-dg:12:3:1 --workload linreg --nodes 10 --epochs 24
+//!   amb dg --quick
 //!   amb train --epochs 40 --t-compute 0.5 --t-consensus 0.2
 //!   amb info
 
@@ -46,6 +48,7 @@ fn main() -> ExitCode {
         Some("figures") => cmd_figures(&args),
         Some("ablations") => cmd_ablations(&args),
         Some("churn") => cmd_churn(&args),
+        Some("dg") => cmd_dg(&args),
         Some("run") => cmd_run(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(&args),
@@ -67,16 +70,20 @@ fn print_usage() {
     eprintln!(
         "amb — Anytime Minibatch (ICLR 2019) reproduction\n\
          \n\
-         usage: amb <figures|ablations|churn|run|train|info> [options]\n\
+         usage: amb <figures|ablations|churn|dg|run|train|info> [options]\n\
          \n\
          figures --fig <id|all> [--out-dir results] [--pjrt] [--quick] [--seed N]\n\
          \u{20}       [--runtime sim|threaded] [--time-scale S] [--threads N]\n\
          churn   elastic-membership sweep (dropout x topology x scheme);\n\
          \u{20}       same options as figures\n\
-         run     --scheme <amb|fmb|fmb-backup|fmb-coded> --workload <linreg|logreg>\n\
+         dg      pipelined delayed-gradient sweep: wall-time AMB vs AMB-DG vs FMB\n\
+         \u{20}       under the fig-6 straggler profile, delay D in {0,1,2,4};\n\
+         \u{20}       same options as figures\n\
+         run     --scheme <amb|fmb|fmb-backup|fmb-coded|amb-dg[:T:Tc:D]>\n\
+         \u{20}       --workload <linreg|logreg>\n\
          \u{20}       [--runtime sim|threaded] [--nodes N] [--epochs N]\n\
          \u{20}       [--t-compute S] [--t-consensus S] [--rounds R] [--exact-consensus]\n\
-         \u{20}       [--per-node-batch B] [--ignore K]\n\
+         \u{20}       [--per-node-batch B] [--ignore K] [--delay D]\n\
          \u{20}       [--straggler <shiftedexp|induced|pause|none>]\n\
          \u{20}       [--churn <none|iid:P[:SEED]|markov:PDOWN:PUP[:SEED]>]\n\
          \u{20}       [--grad-chunk C] [--slowdown f1,f2,...] [--time-scale S]\n\
@@ -155,6 +162,38 @@ fn cmd_churn(args: &Args) -> anyhow::Result<()> {
     println!("{report}");
     anyhow::ensure!(report.shape_holds, "churn harness diverged");
     Ok(())
+}
+
+fn cmd_dg(args: &Args) -> anyhow::Result<()> {
+    let ctx = harness_ctx(args)?;
+    let report = experiments::dg::dg(&ctx)?;
+    println!("{report}");
+    anyhow::ensure!(report.shape_holds, "AMB-DG harness diverged");
+    Ok(())
+}
+
+/// Parse the compact AMB-DG scheme syntax `amb-dg:T:Tc:D`.
+fn parse_amb_dg(s: &str) -> anyhow::Result<Scheme> {
+    let rest = s.strip_prefix("amb-dg:").expect("caller matched the prefix");
+    let parts: Vec<&str> = rest.split(':').collect();
+    anyhow::ensure!(
+        parts.len() == 3,
+        "--scheme amb-dg:T:Tc:D takes exactly three parameters (got '{s}')"
+    );
+    let t_compute: f64 = parts[0]
+        .parse()
+        .map_err(|_| anyhow::anyhow!("amb-dg: invalid T '{}'", parts[0]))?;
+    let t_consensus: f64 = parts[1]
+        .parse()
+        .map_err(|_| anyhow::anyhow!("amb-dg: invalid Tc '{}'", parts[1]))?;
+    let delay: usize = parts[2]
+        .parse()
+        .map_err(|_| anyhow::anyhow!("amb-dg: invalid delay '{}'", parts[2]))?;
+    anyhow::ensure!(
+        t_compute > 0.0 && t_consensus > 0.0,
+        "amb-dg windows must be positive (got T={t_compute}, Tc={t_consensus})"
+    );
+    Ok(Scheme::AmbDg { t_compute, t_consensus, delay })
 }
 
 fn parse_slowdown(args: &Args) -> anyhow::Result<Vec<f64>> {
@@ -236,6 +275,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         "fmb" => Scheme::Fmb { per_node_batch, t_consensus },
         "fmb-backup" => Scheme::FmbBackup { per_node_batch, t_consensus, ignore, coded: false },
         "fmb-coded" => Scheme::FmbBackup { per_node_batch, t_consensus, ignore, coded: true },
+        // Pipelined delayed gradients: `amb-dg` takes the windows from
+        // --t-compute/--t-consensus and the staleness from --delay
+        // (default 1); the compact `amb-dg:T:Tc:D` spells out all three.
+        "amb-dg" => Scheme::AmbDg { t_compute, t_consensus, delay: args.usize_or("delay", 1)? },
+        s if s.starts_with("amb-dg:") => parse_amb_dg(s)?,
         other => anyhow::bail!("unknown scheme '{other}'"),
     };
     let consensus = if args.flag("exact-consensus") {

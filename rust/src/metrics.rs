@@ -30,6 +30,15 @@ pub struct EpochStats {
     /// min / max per-node minibatch (straggler spread diagnostic).
     pub min_node_batch: usize,
     pub max_node_batch: usize,
+    /// Largest staleness (epochs between computing a gradient batch and
+    /// applying it) over the batches that entered this epoch's update.
+    /// 0 for every undelayed scheme; D in AMB-DG steady state; > D when
+    /// a churned-out node's in-flight batch lands after it rejoins.
+    pub max_staleness: usize,
+    /// Sample-weighted mean staleness of the epoch's applied batches
+    /// (Σ b_i·D_i / b(t)); NaN when the epoch applied nothing (AMB-DG
+    /// warm-up, or b(t) = 0).
+    pub mean_staleness: f64,
 }
 
 /// A complete run: scheme label + epoch series.
@@ -79,7 +88,13 @@ impl RunRecord {
             self.epochs
                 .iter()
                 .map(|e| {
-                    acc += e.batch as f64 * (e.loss - f_star);
+                    // A b(t) = 0 epoch (an all-absent churn epoch, or
+                    // AMB-DG warm-up) records loss = NaN; zero samples
+                    // incur zero regret, and 0 · NaN = NaN must not
+                    // poison the running sum.
+                    if e.batch > 0 {
+                        acc += e.batch as f64 * (e.loss - f_star);
+                    }
                     acc
                 })
                 .collect(),
@@ -108,7 +123,8 @@ impl RunRecord {
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "epoch", "wall_time", "batch", "potential", "loss", "error",
-            "consensus_err", "min_node_batch", "max_node_batch", "regret",
+            "consensus_err", "min_node_batch", "max_node_batch",
+            "max_staleness", "mean_staleness", "regret",
         ]);
         let regret = self
             .regret_series()
@@ -124,10 +140,30 @@ impl RunRecord {
                 e.consensus_err,
                 e.min_node_batch as f64,
                 e.max_node_batch as f64,
+                e.max_staleness as f64,
+                e.mean_staleness,
                 r,
             ]);
         }
         csv
+    }
+
+    /// Staleness over the whole run: (sample-weighted mean over every
+    /// applied batch, max over epochs).  (0.0, 0) for a run that never
+    /// applied anything — undelayed schemes report exactly that shape
+    /// with mean 0.0, since all their batches apply at staleness 0.
+    pub fn staleness_summary(&self) -> (f64, usize) {
+        let mut wsum = 0.0f64;
+        let mut samples = 0usize;
+        let mut max = 0usize;
+        for e in &self.epochs {
+            if e.batch > 0 && e.mean_staleness.is_finite() {
+                wsum += e.mean_staleness * e.batch as f64;
+                samples += e.batch;
+                max = max.max(e.max_staleness);
+            }
+        }
+        (if samples > 0 { wsum / samples as f64 } else { 0.0 }, max)
     }
 
     pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
@@ -198,6 +234,8 @@ mod tests {
             consensus_err: 0.0,
             min_node_batch: batch / 2,
             max_node_batch: batch,
+            max_staleness: 0,
+            mean_staleness: if batch > 0 { 0.0 } else { f64::NAN },
         }
     }
 
@@ -209,6 +247,19 @@ mod tests {
         assert_eq!(r.regret_series().unwrap(), vec![20.0, 40.0]);
         assert_eq!(r.total_samples(), 30);
         assert_eq!(r.total_time(), 2.0);
+    }
+
+    #[test]
+    fn empty_epochs_do_not_nan_poison_regret() {
+        // AMB-DG warm-up (and all-absent churn epochs) record batch = 0
+        // with loss = NaN; zero samples incur zero regret, so the series
+        // must carry through finite.
+        let mut r = RunRecord::new("dg", Some(1.0));
+        r.push(stats(1, 1.0, 0, f64::NAN, 1.0));
+        r.push(stats(2, 2.0, 10, 3.0, 0.5));
+        r.push(stats(3, 3.0, 0, f64::NAN, 0.5));
+        r.push(stats(4, 4.0, 10, 2.0, 0.4));
+        assert_eq!(r.regret_series().unwrap(), vec![0.0, 20.0, 20.0, 30.0]);
     }
 
     #[test]
@@ -267,6 +318,32 @@ mod tests {
         let csv = r.to_csv();
         assert_eq!(csv.len(), 2);
         assert!(csv.to_string().contains("regret"));
+        assert!(csv.to_string().contains("mean_staleness"));
+    }
+
+    #[test]
+    fn staleness_summary_weights_by_batch() {
+        let mut r = RunRecord::new("dg", Some(0.0));
+        // warm-up epoch applies nothing; then staleness 1 on 30 samples
+        // and 2 on 10 samples => mean (30 + 20)/40 = 1.25, max 2
+        let mut e1 = stats(1, 1.0, 0, f64::NAN, 1.0);
+        e1.mean_staleness = f64::NAN;
+        r.push(e1);
+        let mut e2 = stats(2, 2.0, 30, 0.2, 0.5);
+        e2.max_staleness = 1;
+        e2.mean_staleness = 1.0;
+        r.push(e2);
+        let mut e3 = stats(3, 3.0, 10, 0.2, 0.4);
+        e3.max_staleness = 2;
+        e3.mean_staleness = 2.0;
+        r.push(e3);
+        let (mean, max) = r.staleness_summary();
+        assert!((mean - 1.25).abs() < 1e-12, "mean={mean}");
+        assert_eq!(max, 2);
+        // an undelayed run reports (0.0, 0)
+        let mut plain = RunRecord::new("amb", Some(0.0));
+        plain.push(stats(1, 1.0, 10, 0.1, 0.1));
+        assert_eq!(plain.staleness_summary(), (0.0, 0));
     }
 
     #[test]

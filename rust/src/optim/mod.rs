@@ -1,6 +1,6 @@
-//! Optimization layer: dual averaging (the paper's workhorse) and its
-//! β(t) schedule.
+//! Optimization layer: dual averaging (the paper's workhorse), its β(t)
+//! schedule, and the delay-aware gradient pipeline for AMB-DG.
 
 pub mod dual_avg;
 
-pub use dual_avg::{BetaSchedule, DualAveraging};
+pub use dual_avg::{BetaSchedule, DelayedGradients, DualAveraging, PendingBatch};

@@ -156,6 +156,123 @@ macro_rules! prop_assert_close {
     }};
 }
 
+/// Core optimizer & mixing properties, centralized here so the
+/// harness's own module carries the invariants every layer leans on
+/// (DESIGN.md §6).  These were previously scattered ad hoc through
+/// `optim::dual_avg` and `topology` test modules.
+#[cfg(test)]
+mod domain_props {
+    use super::forall;
+    use crate::optim::{BetaSchedule, DualAveraging};
+    use crate::topology::Topology;
+
+    /// A connected topology of a random FAMILY and size — the mixing
+    /// properties must hold on every graph shape we ship, not just
+    /// Erdős–Rényi draws.
+    fn random_topology(g: &mut super::Gen) -> Topology {
+        match g.usize_in(0, 3) {
+            0 => Topology::ring(g.usize_in(3, 20)),
+            1 => Topology::complete(g.usize_in(2, 12)),
+            2 => {
+                // expander wants even n·d; keep d modest
+                let n = 2 * g.usize_in(4, 10);
+                Topology::expander(n, 4, g.u64())
+            }
+            _ => Topology::erdos_connected(g.usize_in(2, 20), g.f64_in(0.1, 0.7), g.u64()),
+        }
+    }
+
+    /// ‖primal_step(z, t)‖ ≤ R for random z, t, R, β parameters — the
+    /// feasible-ball projection of paper eq. (7) can never leak.
+    #[test]
+    fn primal_step_stays_in_ball() {
+        forall(60, 0xD0_01, |g| {
+            let dim = g.usize_in(1, 64);
+            let da = DualAveraging::new(
+                BetaSchedule::new(g.f64_in(0.0, 5.0), g.f64_in(0.5, 100.0)),
+                g.f64_in(0.01, 3.0),
+            );
+            let z = g.vec_normal_f32(dim, 50.0);
+            let mut w = vec![0.0f32; dim];
+            da.primal_step(&z, g.usize_in(1, 50), &mut w);
+            crate::prop_assert!(
+                crate::util::norm2(&w) as f64 <= da.radius * (1.0 + 1e-5),
+                "‖w‖ = {} > R = {}",
+                crate::util::norm2(&w),
+                da.radius
+            );
+            Ok(())
+        });
+    }
+
+    /// w(1) = argmin h(w) = 0 for every dimension and schedule (paper
+    /// eq. (2) with h = ½‖·‖²).
+    #[test]
+    fn initial_primal_is_zero() {
+        forall(20, 0xD0_02, |g| {
+            let dim = g.usize_in(1, 128);
+            let da = DualAveraging::new(
+                BetaSchedule::new(g.f64_in(0.0, 4.0), g.f64_in(0.1, 1000.0)),
+                g.f64_in(0.01, 100.0),
+            );
+            crate::prop_assert!(da.initial_primal(dim) == vec![0.0f32; dim]);
+            Ok(())
+        });
+    }
+
+    /// β(t) is STRICTLY increasing in t for every (K, μ) — the paper's
+    /// App. B schedule; a delay-D pipeline (AMB-DG) relies on exactly
+    /// this plus z-as-a-sum-of-gradients, which is why β needs no
+    /// change for delayed gradients (DESIGN.md §pipelining).
+    #[test]
+    fn beta_strictly_increasing() {
+        forall(40, 0xD0_03, |g| {
+            let s = BetaSchedule::new(g.f64_in(0.0, 10.0), g.f64_in(0.01, 5000.0));
+            let mut prev = s.beta(1);
+            crate::prop_assert!(prev.is_finite() && prev > 0.0);
+            for t in 2..200 {
+                let b = s.beta(t);
+                crate::prop_assert!(b > prev, "β({t}) = {b} ≤ β({}) = {prev}", t - 1);
+                prev = b;
+            }
+            Ok(())
+        });
+    }
+
+    /// Induced-Metropolis rows are doubly stochastic over random
+    /// topology FAMILIES × random active sets, with inactive rows
+    /// exactly eᵢ (the churn engine's isolation invariant; moved here
+    /// from the ad-hoc `topology` test so every mixing property lives
+    /// in one suite).
+    #[test]
+    fn induced_metropolis_doubly_stochastic_over_random_topologies_and_active_sets() {
+        forall(40, 0x70_05, |g| {
+            let t = random_topology(g);
+            let n = t.n();
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
+            let m = t.induced(&active).metropolis();
+            crate::prop_assert!(m.is_doubly_stochastic(1e-9));
+            // inactive rows are exactly e_i: held bit-for-bit under mixing
+            for i in 0..n {
+                if !active[i] {
+                    crate::prop_assert!(m.at(i, i) == 1.0, "row {i} not identity");
+                    for j in 0..n {
+                        if j != i {
+                            crate::prop_assert!(m.at(i, j) == 0.0);
+                            crate::prop_assert!(m.at(j, i) == 0.0);
+                        }
+                    }
+                }
+            }
+            // ... and so is the lazy variant the consensus engine mixes
+            // with (the all-active induced matrix IS the base matrix).
+            let lazy = t.induced(&active).metropolis().lazy();
+            crate::prop_assert!(lazy.is_doubly_stochastic(1e-9));
+            Ok(())
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

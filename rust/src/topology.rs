@@ -733,29 +733,9 @@ mod tests {
         });
     }
 
-    #[test]
-    fn induced_metropolis_doubly_stochastic_over_random_active_sets() {
-        forall(40, 0x70_05, |g| {
-            let n = g.usize_in(2, 20);
-            let t = Topology::erdos_connected(n, g.f64_in(0.1, 0.7), g.u64());
-            let active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
-            let m = t.induced(&active).metropolis();
-            crate::prop_assert!(m.is_doubly_stochastic(1e-9));
-            // inactive rows are exactly e_i: held bit-for-bit under mixing
-            for i in 0..n {
-                if !active[i] {
-                    crate::prop_assert!(m.at(i, i) == 1.0, "row {i} not identity");
-                    for j in 0..n {
-                        if j != i {
-                            crate::prop_assert!(m.at(i, j) == 0.0);
-                            crate::prop_assert!(m.at(j, i) == 0.0);
-                        }
-                    }
-                }
-            }
-            Ok(())
-        });
-    }
+    // The induced-Metropolis doubly-stochastic / inactive-row-isolation
+    // property moved to the central `crate::prop::domain_props` suite,
+    // where it runs over random topology FAMILIES × random active sets.
 
     #[test]
     fn metropolis_doubly_stochastic_on_many_graphs() {

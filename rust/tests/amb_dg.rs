@@ -1,0 +1,247 @@
+//! AMB-DG invariants (ISSUE 5 acceptance):
+//!
+//! * `AmbDg { delay: 0 }` reproduces `Amb` BIT FOR BIT on the simulator
+//!   (through the pipeline ring, not around it) for every consensus
+//!   mode, and runs the stock AMB schedule on the threaded runtime.
+//! * sim ↔ threaded AMB-DG parity: the deterministic surfaces — the
+//!   pipelined wall-clock cadence, the staleness columns, warm-up
+//!   structure, membership — agree exactly; the stochastic surfaces
+//!   (real-hardware batch sizes) agree qualitatively, matching the
+//!   tolerance philosophy of `tests/runtime_parity.rs` (anytime batches
+//!   are hardware-dependent, so unlike FMB they cannot be compared
+//!   numerically).
+//! * AMB-DG × churn: a delayed gradient computed by a node that churns
+//!   out is still applied EXACTLY once, after it rejoins (the pipeline
+//!   freezes across absence; staleness exceeds D by the epochs missed).
+
+use std::sync::Arc;
+
+mod common;
+use common::assert_bitwise_equal;
+
+use anytime_mb::churn::ChurnSpec;
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::straggler::{Deterministic, ShiftedExp, StragglerModel};
+use anytime_mb::topology::Topology;
+use anytime_mb::{
+    ConsensusMode, RunOutput, RunSpec, Runtime, Scheme, SimRuntime, ThreadedRuntime,
+};
+
+fn linreg_factory(
+    d: usize,
+    seed: u64,
+) -> (
+    impl Fn(usize) -> Box<dyn ExecEngine> + Send + Sync,
+    Option<f64>,
+) {
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 400.0), 4.0 * (d as f64).sqrt());
+    let f_star = src.f_star();
+    (
+        move |_i: usize| -> Box<dyn ExecEngine> {
+            Box::new(NativeExec::new(src.clone(), opt.clone()))
+        },
+        f_star,
+    )
+}
+
+fn run_sim(spec: &RunSpec, topo: &Topology, strag: &dyn StragglerModel) -> RunOutput {
+    let (mk, f_star) = linreg_factory(24, 5);
+    SimRuntime::new(strag).run(spec, topo, &mk, f_star)
+}
+
+/// Acceptance: `AmbDg { delay: 0 }` ≡ `Amb` bitwise on the simulator,
+/// for every consensus mode — through the pipeline ring.
+#[test]
+fn dg_zero_delay_is_amb_bitwise_on_sim() {
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+    let modes = [
+        ConsensusMode::Exact,
+        ConsensusMode::Gossip { rounds: 5 },
+        ConsensusMode::GossipJitter { mean: 5, jitter: 2 },
+    ];
+    for mode in modes {
+        let amb = RunSpec::new("amb", Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 }, 6, 13)
+            .with_consensus(mode);
+        let dg0 = RunSpec::new(
+            "dg0",
+            Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 0 },
+            6,
+            13,
+        )
+        .with_consensus(mode);
+        let a = run_sim(&amb, &topo, &strag);
+        let d = run_sim(&dg0, &topo, &strag);
+        assert_bitwise_equal(&a, &d, &format!("D=0 vs AMB under {mode:?}"));
+    }
+}
+
+/// ... and under churn, too: the degenerate pipeline must also track
+/// AMB bitwise when membership fluctuates (active nodes push AND pop
+/// every participating epoch at D = 0).
+#[test]
+fn dg_zero_delay_is_amb_bitwise_on_sim_under_churn() {
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+    let churn = ChurnSpec::IidDropout { p: 0.25, seed: 31 };
+    let amb = RunSpec::new("amb", Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 }, 6, 13)
+        .with_churn(churn.clone());
+    let dg0 = RunSpec::new(
+        "dg0",
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 0 },
+        6,
+        13,
+    )
+    .with_churn(churn);
+    let a = run_sim(&amb, &topo, &strag);
+    let d = run_sim(&dg0, &topo, &strag);
+    assert_eq!(a.active_counts, d.active_counts);
+    assert_bitwise_equal(&a, &d, "D=0 vs AMB under churn");
+}
+
+/// Threaded: D = 0 runs the stock AMB path — same absolute T + T_c
+/// schedule (deterministic in spec units, so it compares exactly across
+/// two real-time runs), zero staleness, no warm-up gap.
+#[test]
+fn dg_zero_delay_matches_amb_schedule_on_threaded() {
+    let topo = Topology::ring(4);
+    let (mk, f_star) = linreg_factory(16, 2);
+    let amb = RunSpec::amb("amb-t", 0.06, 0.04, 3, 4, 5).with_grad_chunk(16);
+    let dg0 = RunSpec::amb_dg("dg0-t", 0.06, 0.04, 0, 3, 4, 5).with_grad_chunk(16);
+    let a = ThreadedRuntime.run(&amb, &topo, &mk, f_star);
+    let d = ThreadedRuntime.run(&dg0, &topo, &mk, f_star);
+    assert_eq!(a.record.epochs.len(), d.record.epochs.len());
+    for (x, y) in a.record.epochs.iter().zip(&d.record.epochs) {
+        // the absolute schedule is a pure function of the spec: bitwise
+        assert_eq!(x.wall_time.to_bits(), y.wall_time.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(y.max_staleness, 0);
+        assert_eq!(y.mean_staleness.to_bits(), 0.0f64.to_bits());
+        assert!(x.batch > 0 && y.batch > 0, "no warm-up gap at D = 0");
+    }
+}
+
+/// sim ↔ threaded AMB-DG parity: every deterministic surface agrees —
+/// wall cadence max(T, T_c), warm-up epochs, staleness columns,
+/// membership — and both runtimes make progress once the pipeline is
+/// warm (batch sizes themselves are hardware-dependent on threads, as
+/// for AMB; see the module doc).
+#[test]
+fn dg_parity_sim_threaded() {
+    let topo = Topology::ring(4);
+    let delay = 1usize;
+    let epochs = 6usize;
+    let spec = RunSpec::amb_dg("dg-parity", 0.06, 0.04, delay, 3, epochs, 21)
+        .with_grad_chunk(16);
+    let strag = Deterministic { unit_time: 0.01, unit_batch: 48 };
+
+    let sim = run_sim(&spec, &topo, &strag);
+    let (mk, f_star) = linreg_factory(24, 5);
+    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+
+    assert_eq!(sim.record.epochs.len(), thr.record.epochs.len());
+    assert_eq!(sim.active_counts, thr.active_counts);
+    for (t0, (es, et)) in sim.record.epochs.iter().zip(&thr.record.epochs).enumerate() {
+        let t = t0 + 1;
+        // pipelined cadence: both runtimes tick in max(T, T_c) steps
+        let expect = 0.06 * t as f64;
+        assert!((es.wall_time - expect).abs() < 1e-9, "sim wall @ {t}: {}", es.wall_time);
+        assert!((et.wall_time - expect).abs() < 1e-9, "thr wall @ {t}: {}", et.wall_time);
+        if t <= delay {
+            // warm-up: nothing applied anywhere
+            assert_eq!(es.batch, 0, "sim epoch {t}");
+            assert_eq!(et.batch, 0, "thr epoch {t}");
+            assert!(es.mean_staleness.is_nan() && et.mean_staleness.is_nan());
+        } else {
+            assert!(es.batch > 0 && et.batch > 0, "epoch {t} applied nothing");
+            assert_eq!(es.max_staleness, delay, "sim staleness @ {t}");
+            assert_eq!(et.max_staleness, delay, "thr staleness @ {t}");
+            assert!((es.mean_staleness - delay as f64).abs() < 1e-12);
+            assert!((et.mean_staleness - delay as f64).abs() < 1e-12);
+        }
+    }
+    // both runtimes learn once warm (first applied epoch vs last)
+    for (name, out) in [("sim", &sim), ("threaded", &thr)] {
+        let first = out.record.epochs[delay].error;
+        let last = out.record.epochs.last().unwrap().error;
+        assert!(
+            last.is_finite() && last < first,
+            "{name}: no progress ({first} -> {last})"
+        );
+    }
+}
+
+/// AMB-DG × churn: a batch computed before the node churns out stays in
+/// its frozen pipeline and is applied EXACTLY once after rejoin.  With
+/// a deterministic straggler every applied batch is hand-computable:
+///
+/// n = 4 ring, D = 1, 80 gradients per active epoch per node; node 3 is
+/// absent in epoch 3 only.  Node 3's pipeline: e1 push (applies
+/// nothing), e2 push + apply e1, e3 frozen, e4 push + apply e2 at
+/// staleness 2 (the epoch missed), e5 push + apply e4.  Globally:
+/// b(t) = [0, 320, 240, 320, 320] — epoch 4 proves the e2 batch was
+/// neither dropped (b = 320, not 240) nor double-applied (not 400).
+#[test]
+fn dg_churn_applies_delayed_gradient_exactly_once() {
+    let topo = Topology::ring(4);
+    let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
+    let trace = ChurnSpec::Trace {
+        active: vec![
+            vec![true],
+            vec![true],
+            vec![true],
+            vec![true, true, false, true, true],
+        ],
+    };
+    let spec = RunSpec::amb_dg("dg-churn", 2.0, 0.5, 1, 4, 5, 9)
+        .with_node_log()
+        .with_churn(trace);
+    let out = run_sim(&spec, &topo, &strag);
+
+    assert_eq!(out.active_counts, vec![4, 4, 3, 4, 4]);
+    let batches: Vec<usize> = out.record.epochs.iter().map(|e| e.batch).collect();
+    assert_eq!(batches, vec![0, 4 * 80, 3 * 80, 4 * 80, 4 * 80], "exactly-once violated");
+    let stale: Vec<usize> = out.record.epochs.iter().map(|e| e.max_staleness).collect();
+    assert_eq!(stale, vec![0, 1, 1, 2, 1], "the rejoin batch must age by the absence");
+    // epoch 4's mean: three batches at staleness 1 + node 3's at 2,
+    // sample-weighted: (3·80·1 + 80·2) / 320 = 1.25
+    assert!((out.record.epochs[3].mean_staleness - 1.25).abs() < 1e-12);
+    // computed view: node 3 worked in its four active epochs
+    let log = out.node_log.as_ref().unwrap();
+    assert_eq!(log.batches[3], vec![80, 80, 0, 80, 80]);
+    // conservation: computed = applied + still-in-flight (one 80-batch
+    // per node at the end of a D = 1 run)
+    let computed: usize = log.batches.iter().flatten().sum();
+    let applied: usize = batches.iter().sum();
+    assert_eq!(computed, applied + 4 * 80);
+}
+
+/// The pipelined cadence claim end to end: same spec, D = 0 vs D = 2 —
+/// identical compute weather (shared straggler stream), identical
+/// per-epoch COMPUTED batches, 20% shorter epochs at T = 2, T_c = 0.5.
+#[test]
+fn dg_delay_trades_staleness_for_wall_time() {
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+    let mk_spec = |d: usize| {
+        RunSpec::amb_dg(&format!("dg-d{d}"), 2.0, 0.5, d, 5, 8, 17).with_node_log()
+    };
+    let d0 = run_sim(&mk_spec(0), &topo, &strag);
+    let d2 = run_sim(&mk_spec(2), &topo, &strag);
+    // identical computed batches per (node, epoch): the delay changes
+    // WHEN a batch is applied, never what is computed
+    assert_eq!(
+        d0.node_log.as_ref().unwrap().batches,
+        d2.node_log.as_ref().unwrap().batches
+    );
+    // wall time: 8 × 2.5 vs 8 × 2.0
+    assert!((d0.record.total_time() - 20.0).abs() < 1e-9);
+    assert!((d2.record.total_time() - 16.0).abs() < 1e-9);
+    // the applied stream is the computed stream shifted by D
+    let b0: Vec<usize> = d0.record.epochs.iter().map(|e| e.batch).collect();
+    let b2: Vec<usize> = d2.record.epochs.iter().map(|e| e.batch).collect();
+    assert_eq!(&b2[2..], &b0[..6], "applied batches must be the D-shifted computed stream");
+    assert_eq!(&b2[..2], &[0, 0], "warm-up epochs apply nothing");
+}

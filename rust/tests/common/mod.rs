@@ -1,0 +1,69 @@
+//! Shared integration-test helpers (pulled in via `mod common;` — the
+//! `common/mod.rs` form keeps cargo from treating this as a test
+//! target of its own).
+
+use anytime_mb::RunOutput;
+
+/// Bitwise comparison of everything a [`RunOutput`] records — the
+/// determinism-contract assertion used by `tests/parallel_determinism.rs`
+/// (threads=1 ≡ threads=k) and `tests/amb_dg.rs` (`AmbDg { delay: 0 }`
+/// ≡ `Amb`).  One copy, so a new `EpochStats` field cannot be compared
+/// in one suite and silently skipped in the other.
+pub fn assert_bitwise_equal(a: &RunOutput, b: &RunOutput, label: &str) {
+    assert_eq!(a.record.epochs.len(), b.record.epochs.len(), "{label}: epoch count");
+    for (x, y) in a.record.epochs.iter().zip(&b.record.epochs) {
+        assert_eq!(x.batch, y.batch, "{label}: batch @ epoch {}", x.epoch);
+        assert_eq!(x.potential, y.potential, "{label}: potential @ epoch {}", x.epoch);
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{label}: loss bits @ epoch {} ({} vs {})",
+            x.epoch,
+            x.loss,
+            y.loss
+        );
+        assert_eq!(
+            x.error.to_bits(),
+            y.error.to_bits(),
+            "{label}: error bits @ epoch {} ({} vs {})",
+            x.epoch,
+            x.error,
+            y.error
+        );
+        assert_eq!(
+            x.consensus_err.to_bits(),
+            y.consensus_err.to_bits(),
+            "{label}: consensus_err bits @ epoch {}",
+            x.epoch
+        );
+        assert_eq!(
+            x.wall_time.to_bits(),
+            y.wall_time.to_bits(),
+            "{label}: wall_time bits @ epoch {}",
+            x.epoch
+        );
+        assert_eq!(
+            x.max_staleness, y.max_staleness,
+            "{label}: max_staleness @ epoch {}",
+            x.epoch
+        );
+        assert_eq!(
+            x.mean_staleness.to_bits(),
+            y.mean_staleness.to_bits(),
+            "{label}: mean_staleness bits @ epoch {}",
+            x.epoch
+        );
+    }
+    assert_eq!(a.rounds, b.rounds, "{label}: per-(node, epoch) gossip rounds");
+    assert_eq!(a.active_counts, b.active_counts, "{label}: active counts");
+    assert_eq!(a.final_w.n(), b.final_w.n(), "{label}: final_w rows");
+    for (k, (x, y)) in a
+        .final_w
+        .as_slice()
+        .iter()
+        .zip(b.final_w.as_slice())
+        .enumerate()
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: final_w[{k}] ({x} vs {y})");
+    }
+}

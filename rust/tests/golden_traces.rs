@@ -1,0 +1,205 @@
+//! Pinned bitwise golden traces for every `Scheme` × `ConsensusMode` on
+//! the sim runtime at a fixed seed, so refactors cannot silently drift
+//! numerics (ISSUE 5).
+//!
+//! Each trace compresses one run into a single line: the per-epoch
+//! batch sequence, an FNV-1a fingerprint over `final_w`'s raw f32 bits,
+//! the final loss/error/wall-time bit patterns, the final regret bits,
+//! and the staleness column.  Every quantity is covered by the
+//! determinism contract (one spec + one seed ⇒ bitwise identical output
+//! at ANY thread count), so the same pins must verify under
+//! `AMB_THREADS=1` and `AMB_THREADS=4` — CI regenerates the pin file in
+//! its serial leg and verifies it in the pooled leg, which turns the
+//! pins into a cross-thread-count golden gate even before a maintainer
+//! commits them.
+//!
+//! Workflow:
+//! * `cargo test --test golden_traces` — always checks self-consistency
+//!   (two in-process runs bitwise equal; `AmbDg { delay: 0 }` ≡ `Amb`)
+//!   and, when `tests/golden/pins.txt` exists, compares every trace
+//!   against it.
+//! * `cargo test --test golden_traces regen_golden_pins -- --ignored` —
+//!   the regen helper: writes `tests/golden/pins.txt` with fresh pins
+//!   and prints them.  Commit the file to pin numerics across refactors;
+//!   re-run the helper (and review the diff!) when a change is MEANT to
+//!   move them.
+
+use std::sync::Arc;
+
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::straggler::ShiftedExp;
+use anytime_mb::topology::Topology;
+use anytime_mb::{ConsensusMode, RunOutput, RunSpec, Runtime, Scheme, SimRuntime};
+
+const PINS_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/pins.txt");
+
+/// The pinned grid: every scheme variant (including the degenerate and
+/// a deep AMB-DG pipeline) × every consensus mode.
+fn schemes() -> Vec<Scheme> {
+    vec![
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
+        Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: false },
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: true },
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 0 },
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 2 },
+    ]
+}
+
+fn modes() -> Vec<ConsensusMode> {
+    vec![
+        ConsensusMode::Exact,
+        ConsensusMode::Gossip { rounds: 5 },
+        ConsensusMode::GossipJitter { mean: 5, jitter: 2 },
+    ]
+}
+
+fn run_sim(spec: &RunSpec) -> RunOutput {
+    let topo = Topology::paper_fig2();
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(24, 5)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 400.0), 4.0 * 24f64.sqrt());
+    let f_star = src.f_star();
+    let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+        Box::new(NativeExec::new(src.clone(), opt.clone()))
+    };
+    SimRuntime::new(&strag).run(spec, &topo, &mk, f_star)
+}
+
+/// FNV-1a over a word stream — stable, dependency-free fingerprint.
+fn fnv64(words: impl Iterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The scheme's label in a pin line (disambiguates the two AmbDg pins).
+fn scheme_label(s: &Scheme) -> String {
+    format!("{} d={}", s.name(), s.delay())
+}
+
+fn mode_label(m: &ConsensusMode) -> String {
+    match m {
+        ConsensusMode::Exact => "exact".into(),
+        ConsensusMode::Gossip { rounds } => format!("gossip{rounds}"),
+        ConsensusMode::GossipJitter { mean, jitter } => format!("jitter{mean}±{jitter}"),
+    }
+}
+
+/// One run compressed to a pin line's CONTENT (everything after the
+/// label, so `AmbDg {{ delay: 0 }}` content can be compared to `Amb`'s).
+fn trace_content(out: &RunOutput) -> String {
+    let batches: Vec<usize> = out.record.epochs.iter().map(|e| e.batch).collect();
+    let stale: Vec<usize> = out.record.epochs.iter().map(|e| e.max_staleness).collect();
+    let w_fp = fnv64(out.final_w.as_slice().iter().map(|x| x.to_bits() as u64));
+    let last = out.record.epochs.last().expect("runs record epochs");
+    let regret = match out.record.regret_series() {
+        Some(r) => format!("{:016x}", r.last().expect("non-empty").to_bits()),
+        None => "none".into(),
+    };
+    format!(
+        "batches={batches:?} stale={stale:?} w=fnv:{w_fp:016x} loss={:016x} err={:016x} \
+         wall={:016x} regret={regret}",
+        last.loss.to_bits(),
+        last.error.to_bits(),
+        last.wall_time.to_bits(),
+    )
+}
+
+/// Every pin line, in grid order.
+fn all_traces() -> Vec<String> {
+    let mut lines = Vec::new();
+    for scheme in schemes() {
+        for mode in modes() {
+            let spec = RunSpec::new(scheme.name(), scheme, 5, 13).with_consensus(mode);
+            let out = run_sim(&spec);
+            lines.push(format!(
+                "{} × {}: {}",
+                scheme_label(&scheme),
+                mode_label(&mode),
+                trace_content(&out)
+            ));
+        }
+    }
+    lines
+}
+
+#[test]
+fn golden_traces_are_self_consistent_and_match_pins() {
+    let traces = all_traces();
+
+    // Run-to-run bitwise determinism of the full trace set (at whatever
+    // thread count this process runs with).
+    let again = all_traces();
+    assert_eq!(traces, again, "same seed, same process: traces must be bitwise stable");
+
+    // AmbDg { delay: 0 } reproduces Amb bit for bit in every mode — the
+    // acceptance contract, enforced at trace granularity.
+    let n_modes = modes().len();
+    for (k, mode) in modes().iter().enumerate() {
+        let amb = traces[k].split_once(": ").expect("label: content").1;
+        let dg0 = traces[4 * n_modes + k].split_once(": ").expect("label: content").1;
+        assert_eq!(
+            amb, dg0,
+            "AmbDg {{ delay: 0 }} diverged from Amb under {}",
+            mode_label(mode)
+        );
+    }
+
+    // Compare against the pinned file when present.  CI writes it via
+    // the regen helper in the serial leg, so the pooled leg (and any
+    // committed pins) verify here.
+    match std::fs::read_to_string(PINS_PATH) {
+        Ok(pinned) => {
+            let pinned: Vec<&str> =
+                pinned.lines().filter(|l| !l.is_empty() && !l.starts_with('#')).collect();
+            assert_eq!(
+                pinned.len(),
+                traces.len(),
+                "pin file has {} traces, this build produces {} — regen the pins \
+                 (cargo test --test golden_traces regen_golden_pins -- --ignored)",
+                pinned.len(),
+                traces.len()
+            );
+            for (pin, got) in pinned.iter().zip(&traces) {
+                assert_eq!(
+                    *pin, got,
+                    "golden trace drifted — if the numerics change is intended, regen \
+                     the pins and review the diff"
+                );
+            }
+        }
+        Err(_) => {
+            eprintln!(
+                "golden_traces: no pin file at {PINS_PATH}; self-consistency checks ran, \
+                 but traces were NOT compared against pins.  Generate them with \
+                 `cargo test --test golden_traces regen_golden_pins -- --ignored`."
+            );
+        }
+    }
+}
+
+#[test]
+#[ignore = "regen helper: writes tests/golden/pins.txt; run with --ignored to refresh pins"]
+fn regen_golden_pins() {
+    let traces = all_traces();
+    let dir = std::path::Path::new(PINS_PATH).parent().expect("pins live in a directory");
+    std::fs::create_dir_all(dir).expect("create tests/golden");
+    let mut body = String::from(
+        "# Golden bitwise traces (sim runtime, seed 13, 5 epochs, paper fig-2 topology).\n\
+         # Regenerate: cargo test --test golden_traces regen_golden_pins -- --ignored\n",
+    );
+    for line in &traces {
+        body.push_str(line);
+        body.push('\n');
+    }
+    std::fs::write(PINS_PATH, &body).expect("write pins");
+    println!("wrote {} traces to {PINS_PATH}:\n{}", traces.len(), body);
+}

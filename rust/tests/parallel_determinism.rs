@@ -10,6 +10,9 @@
 use std::sync::Arc;
 use std::sync::Mutex;
 
+mod common;
+use common::assert_bitwise_equal;
+
 use anytime_mb::consensus::Consensus;
 use anytime_mb::coordinator::{ConsensusMode, RunOutput, RunSpec, Scheme};
 use anytime_mb::data::LinRegStream;
@@ -37,62 +40,16 @@ fn run_sim(spec: &RunSpec) -> RunOutput {
     SimRuntime::new(&strag).run(spec, &topo, &mk, f_star)
 }
 
-/// Bitwise comparison of everything a [`RunOutput`] records.
-fn assert_bitwise_equal(a: &RunOutput, b: &RunOutput, label: &str) {
-    assert_eq!(a.record.epochs.len(), b.record.epochs.len(), "{label}: epoch count");
-    for (x, y) in a.record.epochs.iter().zip(&b.record.epochs) {
-        assert_eq!(x.batch, y.batch, "{label}: batch @ epoch {}", x.epoch);
-        assert_eq!(x.potential, y.potential, "{label}: potential @ epoch {}", x.epoch);
-        assert_eq!(
-            x.loss.to_bits(),
-            y.loss.to_bits(),
-            "{label}: loss bits @ epoch {} ({} vs {})",
-            x.epoch,
-            x.loss,
-            y.loss
-        );
-        assert_eq!(
-            x.error.to_bits(),
-            y.error.to_bits(),
-            "{label}: error bits @ epoch {} ({} vs {})",
-            x.epoch,
-            x.error,
-            y.error
-        );
-        assert_eq!(
-            x.consensus_err.to_bits(),
-            y.consensus_err.to_bits(),
-            "{label}: consensus_err bits @ epoch {}",
-            x.epoch
-        );
-        assert_eq!(
-            x.wall_time.to_bits(),
-            y.wall_time.to_bits(),
-            "{label}: wall_time bits @ epoch {}",
-            x.epoch
-        );
-    }
-    assert_eq!(a.rounds, b.rounds, "{label}: per-(node, epoch) gossip rounds");
-    assert_eq!(a.final_w.n(), b.final_w.n(), "{label}: final_w rows");
-    for (k, (x, y)) in a
-        .final_w
-        .as_slice()
-        .iter()
-        .zip(b.final_w.as_slice())
-        .enumerate()
-    {
-        assert_eq!(x.to_bits(), y.to_bits(), "{label}: final_w[{k}] ({x} vs {y})");
-    }
-}
-
 #[test]
 fn sim_threads1_equals_threads4_for_every_scheme_and_mode() {
     let _guard = POOL_LOCK.lock().unwrap();
-    let schemes: [Scheme; 4] = [
+    let schemes: [Scheme; 6] = [
         Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
         Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
         Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: false },
         Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: true },
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 0 },
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 2 },
     ];
     let modes: [ConsensusMode; 3] = [
         ConsensusMode::Exact,
@@ -124,10 +81,14 @@ fn sim_threads1_equals_threads4_for_every_scheme_and_mode() {
 fn sim_threads1_equals_threads4_under_churn() {
     use anytime_mb::churn::ChurnSpec;
     let _guard = POOL_LOCK.lock().unwrap();
-    let schemes: [Scheme; 3] = [
+    let schemes: [Scheme; 4] = [
         Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
         Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
         Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: true },
+        // AMB-DG's pipeline rings live INSIDE the pooled node blocks —
+        // the bitwise contract must hold for the delayed scheme while
+        // membership fluctuates (frozen rings, rejoin staleness).
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 2 },
     ];
     let modes: [ConsensusMode; 3] = [
         ConsensusMode::Exact,

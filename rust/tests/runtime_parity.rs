@@ -143,6 +143,7 @@ fn every_scheme_runs_on_both_runtimes() {
         Scheme::Fmb { per_node_batch: 32, t_consensus: 0.03 },
         Scheme::FmbBackup { per_node_batch: 32, t_consensus: 0.03, ignore: 1, coded: false },
         Scheme::FmbBackup { per_node_batch: 32, t_consensus: 0.03, ignore: 1, coded: true },
+        Scheme::AmbDg { t_compute: 0.04, t_consensus: 0.03, delay: 1 },
     ];
     let sim = SimRuntime::new(&strag);
     let runtimes: Vec<(&str, &dyn Runtime)> = vec![("sim", &sim), ("threaded", &ThreadedRuntime)];
@@ -157,6 +158,17 @@ fn every_scheme_runs_on_both_runtimes() {
                 scheme.name()
             );
             for e in &out.record.epochs {
+                // A delayed pipeline applies nothing during its first
+                // `delay` warm-up epochs — by design, on BOTH runtimes.
+                if e.epoch <= scheme.delay() {
+                    assert_eq!(
+                        e.batch, 0,
+                        "{} on {rt_name}: warm-up epoch {} applied work",
+                        scheme.name(),
+                        e.epoch
+                    );
+                    continue;
+                }
                 assert!(
                     e.batch > 0,
                     "{} on {rt_name}: empty epoch {}",
