@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::churn::ChurnSpec;
 use crate::coordinator::{ConsensusMode, RunSpec, Scheme};
+use crate::net::{FabricSpec, NetworkModel};
 use crate::util::json::Json;
 
 /// A full experiment description: scheduler + workload + environment.
@@ -97,11 +98,28 @@ impl ExperimentConfig {
                 ),
             ]),
         };
+        // util::json has no infinity literal, so unconstrained bandwidth
+        // (f64::INFINITY) is encoded as 0 — an otherwise-invalid value
+        // the parser maps back.
+        let enc_bw = |bw: f64| if bw.is_finite() { bw } else { 0.0 };
+        let network = match &self.run.network {
+            NetworkModel::Abstract => Json::obj(vec![("kind", Json::str("abstract"))]),
+            NetworkModel::Fabric(f) => Json::obj(vec![
+                ("kind", Json::str("fabric")),
+                ("latency", Json::num(f.local.latency)),
+                ("bandwidth", Json::num(enc_bw(f.local.bandwidth))),
+                ("wan_latency", Json::num(f.wan.latency)),
+                ("wan_bandwidth", Json::num(enc_bw(f.wan.bandwidth))),
+                ("groups", Json::num(f.groups as f64)),
+                ("min_gap", Json::num(f.min_gap)),
+            ]),
+        };
         Json::obj(vec![
             ("name", Json::str(&self.run.name)),
             ("scheme", scheme),
             ("consensus", consensus),
             ("churn", churn),
+            ("network", network),
             ("epochs", Json::num(self.run.epochs as f64)),
             ("seed", Json::num(self.run.seed as f64)),
             ("exact_bt", Json::Bool(self.run.exact_bt)),
@@ -244,6 +262,66 @@ impl ExperimentConfig {
                 }
             }
         };
+        // Optional network block; absent (pre-fabric configs) means the
+        // abstract round budget, so old config files keep loading
+        // unchanged.  Bandwidth 0 decodes to f64::INFINITY (see to_json).
+        let network = match j.get("network") {
+            None => NetworkModel::Abstract,
+            Some(nj) => match nj.get("kind").and_then(|v| v.as_str()) {
+                Some("abstract") => NetworkModel::Abstract,
+                Some("fabric") => {
+                    let num = |k: &str| -> Result<f64> {
+                        nj.get(k).and_then(|v| v.as_f64()).with_context(|| format!("network.{k}"))
+                    };
+                    let dec_bw = |bw: f64| -> Result<f64> {
+                        if bw == 0.0 {
+                            Ok(f64::INFINITY)
+                        } else if bw > 0.0 {
+                            Ok(bw)
+                        } else {
+                            bail!("network bandwidth must be >= 0 (0 = unconstrained)")
+                        }
+                    };
+                    let lat = num("latency")?;
+                    let bw = dec_bw(num("bandwidth")?)?;
+                    if !(lat.is_finite() && lat >= 0.0) {
+                        bail!("network.latency must be finite and >= 0 (got {lat})");
+                    }
+                    let mut fab = FabricSpec::uniform(lat, bw);
+                    let min_gap = match nj.get("min_gap") {
+                        None => 0.0,
+                        Some(v) => v.as_f64().context("network.min_gap must be a number")?,
+                    };
+                    if !(min_gap.is_finite() && min_gap >= 0.0) {
+                        bail!("network.min_gap must be finite and >= 0 (got {min_gap})");
+                    }
+                    fab = fab.with_min_gap(min_gap);
+                    let groups = match nj.get("groups") {
+                        None => 1,
+                        Some(v) => {
+                            let g = v.as_usize().context("network.groups must be a number")?;
+                            if g == 0 {
+                                bail!("network.groups must be >= 1");
+                            }
+                            g
+                        }
+                    };
+                    let wan_lat = match nj.get("wan_latency") {
+                        None => lat,
+                        Some(v) => v.as_f64().context("network.wan_latency")?,
+                    };
+                    let wan_bw = match nj.get("wan_bandwidth") {
+                        None => bw,
+                        Some(v) => dec_bw(v.as_f64().context("network.wan_bandwidth")?)?,
+                    };
+                    if !(wan_lat.is_finite() && wan_lat >= 0.0) {
+                        bail!("network.wan_latency must be finite and >= 0 (got {wan_lat})");
+                    }
+                    NetworkModel::Fabric(fab.with_wan(wan_lat, wan_bw, groups))
+                }
+                other => bail!("unknown network kind {other:?}"),
+            },
+        };
         Ok(ExperimentConfig {
             run: RunSpec {
                 name: req_str("name")?.to_string(),
@@ -280,6 +358,7 @@ impl ExperimentConfig {
                     }
                 },
                 churn,
+                network,
             },
             workload: req_str("workload")?.to_string(),
             straggler: req_str("straggler")?.to_string(),
@@ -442,6 +521,52 @@ mod tests {
             active: vec![Vec::new(); cfg.nodes],
         });
         assert!(ExperimentConfig::from_json(&cfg.to_json().to_string()).is_err());
+    }
+
+    #[test]
+    fn network_roundtrip_all_kinds() {
+        let mut cfg = preset("fig1a_amb").unwrap();
+        for network in [
+            NetworkModel::Abstract,
+            NetworkModel::Fabric(FabricSpec::uniform(0.005, 2.0e5)),
+            // unconstrained bandwidth survives the 0-encoding round trip
+            NetworkModel::Fabric(FabricSpec::ideal()),
+            NetworkModel::Fabric(
+                FabricSpec::uniform(0.001, 1.0e6).with_wan(0.05, 1.0e5, 2).with_min_gap(0.002),
+            ),
+        ] {
+            cfg.run = cfg.run.clone().with_network(network.clone());
+            let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+            assert_eq!(back.run.network, network);
+        }
+        // configs written before the network field default to abstract
+        let pre_net = preset("fig1a_amb").unwrap().to_json().to_string();
+        assert!(pre_net.contains("\"network\":{\"kind\":\"abstract\"}"));
+        let stripped = pre_net.replace(",\"network\":{\"kind\":\"abstract\"}", "");
+        let back = ExperimentConfig::from_json(&stripped).unwrap();
+        assert!(back.run.network.is_abstract());
+        // invalid values rejected at load time
+        cfg.run = cfg
+            .run
+            .clone()
+            .with_network(NetworkModel::Fabric(FabricSpec::uniform(0.005, 2.0e5)));
+        let text = cfg.to_json().to_string();
+        assert!(ExperimentConfig::from_json(
+            &text.replace("\"latency\":0.005", "\"latency\":-1")
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &text.replace("\"bandwidth\":200000", "\"bandwidth\":-5")
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &text.replace("\"groups\":1", "\"groups\":0")
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            &text.replace("\"kind\":\"fabric\"", "\"kind\":\"carrier-pigeon\"")
+        )
+        .is_err());
     }
 
     #[test]

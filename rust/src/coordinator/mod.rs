@@ -35,6 +35,7 @@ pub mod threaded;
 
 use crate::churn::ChurnSpec;
 use crate::exec::ExecEngine;
+use crate::net::NetworkModel;
 use crate::metrics::RunRecord;
 use crate::topology::Topology;
 use crate::util::matrix::NodeMatrix;
@@ -222,6 +223,14 @@ pub struct RunSpec {
     /// hold their dual/primal state until they rejoin (DESIGN.md
     /// §churn).
     pub churn: ChurnSpec,
+    /// Communication model for the consensus phase.  `Abstract`
+    /// (default) charges T_c for the configured round budget as-is —
+    /// the paper's model, bit-for-bit today's behavior.
+    /// `Fabric` measures per-node rounds from a discrete-event link
+    /// simulation within T_c (sim runtime + `ConsensusMode::Gossip`
+    /// only; the configured rounds become the per-epoch cap).  See
+    /// DESIGN.md §network-fabric.
+    pub network: NetworkModel,
 }
 
 impl RunSpec {
@@ -241,6 +250,7 @@ impl RunSpec {
             slowdown: Vec::new(),
             time_scale: 1.0,
             churn: ChurnSpec::None,
+            network: NetworkModel::Abstract,
         }
     }
 
@@ -320,6 +330,11 @@ impl RunSpec {
 
     pub fn with_churn(mut self, churn: ChurnSpec) -> RunSpec {
         self.churn = churn;
+        self
+    }
+
+    pub fn with_network(mut self, network: NetworkModel) -> RunSpec {
+        self.network = network;
         self
     }
 }
@@ -454,6 +469,15 @@ mod tests {
         let dg = RunSpec::amb_dg("dg", 2.5, 0.5, 2, 7, 20, 1);
         assert_eq!(dg.scheme, Scheme::AmbDg { t_compute: 2.5, t_consensus: 0.5, delay: 2 });
         assert_eq!(dg.consensus, ConsensusMode::Gossip { rounds: 7 });
+        // the network model defaults to the paper's abstract budget and
+        // is opt-in per spec
+        assert!(c.network.is_abstract() && dg.network.is_abstract());
+        let nf = RunSpec::amb("n", 1.0, 0.2, 5, 10, 1)
+            .with_network(NetworkModel::Fabric(crate::net::FabricSpec::uniform(0.005, 2.0e5)));
+        assert_eq!(
+            nf.network,
+            NetworkModel::Fabric(crate::net::FabricSpec::uniform(0.005, 2.0e5))
+        );
     }
 
     #[test]

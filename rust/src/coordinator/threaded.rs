@@ -149,6 +149,12 @@ fn run_threaded(
         spec.slowdown.is_empty() || spec.slowdown.len() == n,
         "slowdown must be empty or one factor per node"
     );
+    assert!(
+        spec.network.is_abstract(),
+        "NetworkModel::Fabric is sim-only: the threaded runtime's channels ARE its network, \
+         so measured rounds come from real wall-clock deadlines, not the event fabric — run \
+         fabric specs with --runtime sim"
+    );
     let p = Arc::new(topo.metropolis().lazy());
 
     // Under Exact consensus the communication graph is all-to-all

@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use super::{sweep, Ctx, FigReport};
 use crate::coordinator::{ConsensusMode, RunSpec};
+use crate::net::{FabricSpec, NetworkModel};
 use crate::straggler::ShiftedExp;
 use crate::topology::Topology;
 
@@ -77,6 +78,64 @@ pub fn fig5(ctx: &Ctx) -> Result<FigReport> {
     })
 }
 
+/// Measured-rounds mode (`f5n`, ISSUE 6): instead of GRANTING r = 5
+/// rounds, run the fig-5 consensus comparison on the event fabric and
+/// MEASURE how many rounds fit in T_c = 0.5 s on two 20-node graphs with
+/// identical links — a ring and a hub-spoke.  The hub's single egress
+/// port serializes one 4100-byte row per spoke per round, so the same
+/// link budget buys it far fewer rounds: the congestion the abstract
+/// budget can't see, surfaced per node in `fig5_net_rounds.csv`.
+pub fn fig5_net(ctx: &Ctx) -> Result<FigReport> {
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 600 };
+    let source = super::linreg_source(ctx.seed); // d = 1024 → 4100 B rows
+    let epochs = ctx.scaled(12);
+    let opt = super::optimizer_for(&source, 12_000.0);
+    // 5 ms, 200 kB/s uniform links; the Gossip budget (8) is the cap the
+    // measurement may not exceed, not a grant.
+    let fabric = NetworkModel::Fabric(FabricSpec::uniform(0.005, 2.0e5));
+
+    let topos = [("ring", Topology::ring(20)), ("hub-spoke", Topology::hub_spoke(19))];
+    let mut outputs = Vec::new();
+    let mut means = Vec::new();
+    let mut rounds_csv = String::from("topology,node,rounds_per_tc\n");
+    let mut errors = Vec::new();
+    for (name, topo) in &topos {
+        let spec = RunSpec::amb(&format!("net-{name}"), 2.5, 0.5, 8, epochs, ctx.seed)
+            .with_network(fabric.clone());
+        let out = ctx.run(&spec, topo, &strag, &source, &opt)?;
+        // static membership + epoch-invariant fabric: epoch 0's
+        // measurement is THE measurement
+        let per_node: Vec<usize> = out.rounds.iter().map(|r| r[0]).collect();
+        for (i, r) in per_node.iter().enumerate() {
+            rounds_csv.push_str(&format!("{name},{i},{r}\n"));
+        }
+        means.push(per_node.iter().sum::<usize>() as f64 / per_node.len() as f64);
+        errors.push(super::final_error(&out.record)?);
+        let p = ctx.out_dir.join(format!("fig5_net_{name}.csv"));
+        out.record.save_csv(&p)?;
+        outputs.push(p);
+    }
+    let rounds_path = ctx.out_dir.join("fig5_net_rounds.csv");
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(&rounds_path, rounds_csv)?;
+    outputs.push(rounds_path);
+
+    let (ring_mean, hub_mean) = (means[0], means[1]);
+    Ok(FigReport {
+        id: "f5n",
+        title: "measured gossip rounds per T_c: ring vs hub-spoke on identical links",
+        paper: "beyond the paper: the fixed round budget r becomes a measured property".into(),
+        measured: format!(
+            "mean rounds/T_c: ring {ring_mean:.2}, hub-spoke {hub_mean:.2} (cap 8); final errors {:.3e} / {:.3e}",
+            errors[0], errors[1]
+        ),
+        shape_holds: ring_mean > 0.0
+            && hub_mean < ring_mean
+            && errors.iter().all(|e| e.is_finite()),
+        outputs,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +146,19 @@ mod tests {
         let ctx = Ctx::native(&dir).quick();
         let rep = fig5(&ctx).unwrap();
         assert!(rep.shape_holds, "{rep}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig5_net_quick() {
+        let dir = std::env::temp_dir().join("amb_fig5_net_test");
+        let ctx = Ctx::native(&dir).quick();
+        let rep = fig5_net(&ctx).unwrap();
+        assert!(rep.shape_holds, "{rep}");
+        // the rounds CSV lists both topologies, one row per node
+        let csv = std::fs::read_to_string(dir.join("fig5_net_rounds.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 1 + 2 * 20, "{csv}");
+        assert!(csv.contains("hub-spoke,0,"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

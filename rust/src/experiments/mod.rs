@@ -317,8 +317,10 @@ pub fn run_one(ctx: &Ctx, id: &str) -> Result<FigReport> {
         "f1a" => fig1::fig1a(ctx),
         "f1b" => fig1::fig1b(ctx),
         "f3" => fig3::fig3(ctx),
+        "f3n" => fig3::fig3_net(ctx),
         "f4" => fig4::fig4(ctx),
         "f5" => fig5::fig5(ctx),
+        "f5n" => fig5::fig5_net(ctx),
         "f6" => fig6::fig6(ctx),
         "f7" => fig7::fig7(ctx),
         "f8" => fig8::fig8(ctx),
@@ -327,7 +329,7 @@ pub fn run_one(ctx: &Ctx, id: &str) -> Result<FigReport> {
         "churn" => churn::churn(ctx),
         "dg" => dg::dg(ctx),
         other => anyhow::bail!(
-            "unknown figure id '{other}' (try f1a f1b f3 f4 f5 f6 f7 f8 f9 thm7 churn dg)"
+            "unknown figure id '{other}' (try f1a f1b f3 f3n f4 f5 f5n f6 f7 f8 f9 thm7 churn dg)"
         ),
     }
 }

@@ -29,6 +29,7 @@ pub mod exec;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod optim;
 pub mod prop;
 pub mod runtime;
@@ -42,6 +43,7 @@ pub use coordinator::threaded::ThreadedRuntime;
 pub use coordinator::{
     ConsensusMode, EngineFactory, RunOutput, RunSpec, Runtime, RuntimeKind, Scheme,
 };
+pub use net::{FabricSpec, NetworkModel};
 
 /// THE entry point: execute one [`RunSpec`] on any [`Runtime`].
 ///

@@ -86,6 +86,7 @@ fn print_usage() {
          \u{20}       [--per-node-batch B] [--ignore K] [--delay D]\n\
          \u{20}       [--straggler <shiftedexp|induced|pause|none>]\n\
          \u{20}       [--churn <none|iid:P[:SEED]|markov:PDOWN:PUP[:SEED]>]\n\
+         \u{20}       [--net <abstract|ideal|lat=S,bw=B[,wan-lat=S,wan-bw=B,groups=G,gap=S]>]\n\
          \u{20}       [--grad-chunk C] [--slowdown f1,f2,...] [--time-scale S]\n\
          \u{20}       [--pjrt] [--seed N] [--threads N] [--out FILE.csv]\n\
          train   [--workload <transformer|linreg>] [--nodes N] [--epochs N]\n\
@@ -291,11 +292,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         None => anytime_mb::ChurnSpec::None,
         Some(s) => anytime_mb::ChurnSpec::parse(s, seed)?,
     };
+    let network = match args.get("net") {
+        None => anytime_mb::NetworkModel::Abstract,
+        Some(s) => anytime_mb::NetworkModel::parse(s)?,
+    };
     let spec = RunSpec::new(scheme.name(), scheme, epochs, seed)
         .with_consensus(consensus)
         .with_grad_chunk(args.usize_or("grad-chunk", 16)?)
         .with_slowdown(parse_slowdown(args)?)
-        .with_churn(churn);
+        .with_churn(churn)
+        .with_network(network);
 
     let expected_batch = (nodes * per_node_batch) as f64;
     let opt = experiments::optimizer_for(&source, expected_batch);
@@ -311,11 +317,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let out = ctx.run(&spec, &topo, &*strag, &source, &opt)?;
 
     println!(
-        "# runtime={} scheme={} consensus={:?} churn={}",
+        "# runtime={} scheme={} consensus={:?} churn={} net={}",
         ctx.runtime.name(),
         spec.scheme.name(),
         spec.consensus,
-        spec.churn.name()
+        spec.churn.name(),
+        spec.network.name()
     );
     println!(
         "{:<6} {:>10} {:>8} {:>12} {:>12} {:>12}",

@@ -1,0 +1,194 @@
+//! Deterministic discrete-event queue — the fabric's scheduler core.
+//!
+//! A [`std::collections::BinaryHeap`] min-heap of `(time, seq)`-ordered
+//! entries (the executor pattern of SNIPPETS.md Snippet 1): absolute
+//! `f64` timestamps compared with `total_cmp`, plus a monotone sequence
+//! number breaking ties so two events at the same instant pop in push
+//! order (FIFO).  Every pop order — and everything derived from one —
+//! is therefore a pure function of the push sequence, independent of
+//! heap internals, which is what lets fabric-measured round counts join
+//! the bitwise determinism contract (DESIGN.md §network-fabric).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled event.  The `Ord` is REVERSED (earlier time = greater)
+/// because `BinaryHeap` is a max-heap and we need the earliest event on
+/// top — SNIPPETS.md Snippet 1's `other.cmp(&self)` trick, extended
+/// with the sequence tie-break.
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed on time (min-heap), then reversed on seq (FIFO ties)
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event queue with an absolute virtual clock.
+///
+/// `now` only moves forward ([`EventQueue::pop`] advances it to the
+/// popped event's timestamp); scheduling into the past is a logic error
+/// and panics rather than silently reordering causality.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event;
+    /// 0.0 before the first pop).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute `time` (≥ `now`, finite).
+    pub fn push(&mut self, time: f64, payload: T) {
+        assert!(time.is_finite(), "event time must be finite (got {time})");
+        assert!(
+            time >= self.now,
+            "event scheduled in the past: {time} < now {}",
+            self.now
+        );
+        self.heap.push(Entry { time, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Timestamp of the earliest pending event, if any — lets a driver
+    /// stop cleanly at a deadline without popping past it.
+    pub fn next_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Pop the earliest event, advancing `now` to its timestamp.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        Some((e.time, e.payload))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.next_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_times_pop_in_push_order() {
+        // The tie-break is the determinism linchpin: an ideal (zero
+        // latency, unconstrained bandwidth) fabric schedules EVERYTHING
+        // at t = 0, and the pop order must still be reproducible.
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(0.0, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((0.0, i)), "FIFO violated at {i}");
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 10);
+        q.push(5.0, 50);
+        assert_eq!(q.pop(), Some((1.0, 10)));
+        assert_eq!(q.now(), 1.0);
+        // scheduling from a handler: at `now`, and later
+        q.push(1.0, 11);
+        q.push(2.0, 20);
+        assert_eq!(q.pop(), Some((1.0, 11)));
+        assert_eq!(q.pop(), Some((2.0, 20)));
+        assert_eq!(q.pop(), Some((5.0, 50)));
+    }
+
+    #[test]
+    fn now_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(0.5, ());
+        q.push(0.5, ());
+        q.push(1.5, ());
+        let mut last = 0.0;
+        while let Some((t, ())) = q.pop() {
+            assert!(t >= last);
+            assert_eq!(q.now(), t);
+            last = t;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "in the past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push(2.0, ());
+        q.pop();
+        q.push(1.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_infinite_time() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, ());
+    }
+}

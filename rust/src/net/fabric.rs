@@ -1,0 +1,418 @@
+//! The network fabric: schedules one consensus phase's per-link gossip
+//! transmissions as discrete events and measures how many synchronous
+//! gossip rounds each node completes within the communication budget
+//! `T_c` (ISSUE 6 tentpole).
+//!
+//! Protocol model.  Gossip round `k` at node `i`: transmit `i`'s
+//! round-`k` row to every active neighbor, and complete round `k` once
+//! round-`k` rows from ALL active neighbors have been received (the
+//! synchronous Metropolis mix of `consensus::Protocol` needs every
+//! neighbor's row before it can average).  Round `k+1` sends start the
+//! instant round `k` completes.  The per-node result `r_i` = rounds
+//! completed by `T_c`, capped at the configured round budget — fed to
+//! `InducedConsensus::run_per_node`, the same per-node freeze machinery
+//! the jitter ablation uses, so a node that measured fewer rounds stops
+//! mixing early and holds its value (DESIGN.md §network-fabric).
+//!
+//! Timing model per message on edge `(i, j)` with class `c`:
+//! sender-egress serialization (`c.tx_time(bytes)`, queued FIFO behind
+//! `i`'s other sends, optionally paced by a rate limiter) → propagation
+//! `c.latency` → receiver-ingress serialization (queued behind `j`'s
+//! other receives).  Both ports store-and-forward one message at a
+//! time, which is what produces hub-spoke uplink contention: the hub's
+//! single egress port serializes a row per spoke, back to back.
+
+use std::collections::HashMap;
+
+use crate::net::event::EventQueue;
+use crate::net::link::{LinkClass, Port};
+use crate::topology::Topology;
+
+/// Fabric parameters: a local (LAN) link class for every edge, an
+/// optional WAN class for edges crossing contiguous node groups, and an
+/// optional per-node egress rate-limiter gap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricSpec {
+    /// Link class for intra-group edges (and ALL edges when `groups <= 1`).
+    pub local: LinkClass,
+    /// Link class for inter-group edges.  Equal to `local` unless
+    /// configured, so a uniform fabric needs no group awareness.
+    pub wan: LinkClass,
+    /// Number of contiguous node groups for WAN/LAN classification
+    /// (`<= 1` means a single site — every edge is `local`).
+    pub groups: usize,
+    /// Minimum gap (seconds) between egress transmission STARTS at each
+    /// node; 0 disables pacing.
+    pub min_gap: f64,
+}
+
+impl FabricSpec {
+    /// Uniform fabric: every edge shares one latency/bandwidth class.
+    pub fn uniform(latency: f64, bandwidth: f64) -> FabricSpec {
+        let c = LinkClass::new(latency, bandwidth);
+        FabricSpec { local: c, wan: c, groups: 1, min_gap: 0.0 }
+    }
+
+    /// Zero-latency, unconstrained-bandwidth fabric — must reproduce the
+    /// abstract round budget bitwise (every participant measures the cap).
+    pub fn ideal() -> FabricSpec {
+        FabricSpec::uniform(0.0, f64::INFINITY)
+    }
+
+    /// Split the node range into `groups` contiguous blocks and give
+    /// cross-block edges the `wan` class.
+    pub fn with_wan(mut self, latency: f64, bandwidth: f64, groups: usize) -> FabricSpec {
+        assert!(groups >= 1, "WAN split needs at least one group");
+        self.wan = LinkClass::new(latency, bandwidth);
+        self.groups = groups;
+        self
+    }
+
+    pub fn with_min_gap(mut self, min_gap: f64) -> FabricSpec {
+        assert!(
+            min_gap.is_finite() && min_gap >= 0.0,
+            "min_gap must be finite and >= 0 (got {min_gap})"
+        );
+        self.min_gap = min_gap;
+        self
+    }
+
+    /// Group of node `i` out of `n`: contiguous equal blocks (the same
+    /// integer split `Topology::induced` uses for ranges).
+    pub fn group_of(&self, i: usize, n: usize) -> usize {
+        if self.groups <= 1 {
+            0
+        } else {
+            i * self.groups / n
+        }
+    }
+
+    /// Link class of edge `(i, j)` in an `n`-node run.
+    pub fn class(&self, i: usize, j: usize, n: usize) -> LinkClass {
+        if self.group_of(i, n) == self.group_of(j, n) {
+            self.local
+        } else {
+            self.wan
+        }
+    }
+}
+
+/// Fabric events.  `Arrive` = the message's last bit reaches `dst`'s
+/// ingress (after egress serialization + propagation); `Deliver` = the
+/// ingress port finished serializing it to `dst`.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive { src: usize, dst: usize, round: usize },
+    Deliver { src: usize, dst: usize, round: usize },
+}
+
+/// Queue node `src`'s round-`round` transmissions to all its active
+/// neighbors at time `t` (free function: `egress` is borrowed per-node
+/// while the event queue is borrowed whole).
+#[allow(clippy::too_many_arguments)]
+fn send_round(
+    q: &mut EventQueue<Ev>,
+    egress: &mut Port,
+    fab: &FabricSpec,
+    topo: &Topology,
+    active: &[bool],
+    src: usize,
+    round: usize,
+    t: f64,
+    msg_bytes: usize,
+) {
+    let n = topo.n();
+    for &dst in topo.neighbors(src) {
+        if !active[dst] {
+            continue;
+        }
+        let c = fab.class(src, dst, n);
+        let (_start, end) = egress.occupy(t, c.tx_time(msg_bytes));
+        q.push(end + c.latency, Ev::Arrive { src, dst, round });
+    }
+}
+
+/// Measure per-node completed gossip rounds within `t_c`.
+///
+/// `out[i]` is set to the measured rounds for every node: 0 for
+/// inactive nodes and for active nodes with no active neighbor (which
+/// the epoch loop also excludes from participation), otherwise the
+/// number of fully completed rounds at virtual time `<= t_c`, capped at
+/// `cap`.  Deterministic: event order is a pure function of the
+/// adjacency lists and `(fab, msg_bytes, t_c, cap, active)`.
+pub fn measure_rounds(
+    fab: &FabricSpec,
+    topo: &Topology,
+    active: &[bool],
+    msg_bytes: usize,
+    t_c: f64,
+    cap: usize,
+    out: &mut [usize],
+) {
+    let n = topo.n();
+    assert_eq!(active.len(), n, "active mask shape");
+    assert_eq!(out.len(), n, "output shape");
+    assert!(t_c.is_finite() && t_c >= 0.0, "T_c must be finite and >= 0 (got {t_c})");
+    out.fill(0);
+    if cap == 0 {
+        return;
+    }
+
+    // A node participates iff active with at least one active neighbor
+    // — the same rule `coordinator::sim` uses for its rounds log.
+    let need: Vec<usize> = (0..n)
+        .map(|i| {
+            if active[i] {
+                topo.neighbors(i).iter().filter(|&&j| active[j]).count()
+            } else {
+                0
+            }
+        })
+        .collect();
+
+    let mut egress: Vec<Port> = (0..n).map(|_| Port::new(fab.min_gap)).collect();
+    let mut ingress: Vec<Port> = (0..n).map(|_| Port::new(0.0)).collect();
+    // got[i][k-1]: round-k rows received at i so far.
+    let mut got: Vec<Vec<usize>> = (0..n).map(|_| vec![0; cap]).collect();
+    let mut done: Vec<usize> = vec![0; n];
+    let mut q: EventQueue<Ev> = EventQueue::new();
+
+    // Round 1 starts at t = 0 on every participant.
+    for i in 0..n {
+        if need[i] > 0 {
+            send_round(&mut q, &mut egress[i], fab, topo, active, i, 1, 0.0, msg_bytes);
+        }
+    }
+
+    while q.next_time().map(|t| t <= t_c).unwrap_or(false) {
+        let (t, ev) = q.pop().expect("peeked");
+        match ev {
+            Ev::Arrive { src, dst, round } => {
+                let c = fab.class(src, dst, n);
+                let (_start, end) = ingress[dst].occupy(t, c.tx_time(msg_bytes));
+                q.push(end, Ev::Deliver { src, dst, round });
+            }
+            Ev::Deliver { src: _, dst, round } => {
+                got[dst][round - 1] += 1;
+                // Completing round k can cascade: the row that closes
+                // round k may already have banked everything round k+1
+                // needs (counterpart rows can arrive out of round order
+                // thanks to per-edge timing).
+                while done[dst] < cap && got[dst][done[dst]] == need[dst] {
+                    done[dst] += 1;
+                    if done[dst] < cap {
+                        let next = done[dst] + 1;
+                        send_round(
+                            &mut q,
+                            &mut egress[dst],
+                            fab,
+                            topo,
+                            active,
+                            dst,
+                            next,
+                            t,
+                            msg_bytes,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    for i in 0..n {
+        if need[i] > 0 {
+            out[i] = done[i];
+        }
+    }
+}
+
+/// Per-epoch fabric driver with memoized measurements: round counts
+/// depend only on the active set (the fabric itself is epoch-invariant),
+/// so churn patterns that revisit an active set reuse the measurement.
+/// Cache policy mirrors `InducedConsensus`: clear on overflow past
+/// `MAX_CACHED_SETS` rather than LRU bookkeeping.
+pub struct FabricRounds {
+    spec: FabricSpec,
+    msg_bytes: usize,
+    t_c: f64,
+    cap: usize,
+    cache: HashMap<Vec<bool>, Vec<usize>>,
+}
+
+impl FabricRounds {
+    const MAX_CACHED_SETS: usize = 64;
+
+    pub fn new(spec: FabricSpec, msg_bytes: usize, t_c: f64, cap: usize) -> FabricRounds {
+        FabricRounds { spec, msg_bytes, t_c, cap, cache: HashMap::new() }
+    }
+
+    /// Measured rounds for this active set (computed on first sight).
+    pub fn rounds(&mut self, topo: &Topology, active: &[bool]) -> &[usize] {
+        if !self.cache.contains_key(active) {
+            if self.cache.len() >= Self::MAX_CACHED_SETS {
+                self.cache.clear();
+            }
+            let mut out = vec![0; topo.n()];
+            measure_rounds(
+                &self.spec,
+                topo,
+                active,
+                self.msg_bytes,
+                self.t_c,
+                self.cap,
+                &mut out,
+            );
+            self.cache.insert(active.to_vec(), out);
+        }
+        &self.cache[active]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_active(n: usize) -> Vec<bool> {
+        vec![true; n]
+    }
+
+    fn mean(xs: &[usize]) -> f64 {
+        xs.iter().sum::<usize>() as f64 / xs.len() as f64
+    }
+
+    #[test]
+    fn ideal_fabric_hits_cap_everywhere() {
+        // Zero latency + unconstrained bandwidth: all cap rounds finish
+        // at t = 0 regardless of topology — the abstract-parity pin.
+        for topo in [Topology::ring(8), Topology::hub_spoke(7), Topology::paper_fig2()] {
+            let n = topo.n();
+            let mut out = vec![0; n];
+            measure_rounds(&FabricSpec::ideal(), &topo, &all_active(n), 4100, 0.5, 7, &mut out);
+            assert_eq!(out, vec![7; n], "topology n={n}");
+        }
+    }
+
+    #[test]
+    fn serialization_math_on_a_pair() {
+        // complete(2): each round = egress tx + latency + ingress tx, so
+        // with tx = 1000 B / 1e5 B/s = 0.01 and latency 0.03 a round
+        // takes 0.05; T_c = 0.26 fits exactly 5 rounds (5th at 0.25).
+        let topo = Topology::complete(2);
+        let fab = FabricSpec::uniform(0.03, 1.0e5);
+        let mut out = vec![0; 2];
+        measure_rounds(&fab, &topo, &all_active(2), 1000, 0.26, 10, &mut out);
+        assert_eq!(out, vec![5, 5]);
+        // One microsecond under the 5th completion: only 4 rounds.
+        measure_rounds(&fab, &topo, &all_active(2), 1000, 0.2499, 10, &mut out);
+        assert_eq!(out, vec![4, 4]);
+    }
+
+    #[test]
+    fn rate_limiter_bounds_round_rate() {
+        // Ideal links but a 0.1 s egress gap: round k's send can start
+        // no earlier than (k-1) * 0.1, so T_c = 0.45 fits 5 rounds
+        // (sends at 0.0..0.4) and not 6.
+        let topo = Topology::complete(2);
+        let fab = FabricSpec::ideal().with_min_gap(0.1);
+        let mut out = vec![0; 2];
+        measure_rounds(&fab, &topo, &all_active(2), 1000, 0.45, 100, &mut out);
+        assert_eq!(out, vec![5, 5]);
+    }
+
+    #[test]
+    fn wan_edges_slow_cross_group_rounds() {
+        let topo = Topology::complete(4);
+        let lan = FabricSpec::uniform(0.001, 1.0e6);
+        let mixed = FabricSpec::uniform(0.001, 1.0e6).with_wan(0.05, 1.0e5, 2);
+        // Sanity on the classifier: nodes {0,1} vs {2,3}.
+        assert_eq!(mixed.group_of(1, 4), 0);
+        assert_eq!(mixed.group_of(2, 4), 1);
+        assert_eq!(mixed.class(0, 1, 4), mixed.local);
+        assert_ne!(mixed.class(1, 2, 4), mixed.local);
+        let mut fast = vec![0; 4];
+        let mut slow = vec![0; 4];
+        measure_rounds(&lan, &topo, &all_active(4), 4100, 0.5, 50, &mut fast);
+        measure_rounds(&mixed, &topo, &all_active(4), 4100, 0.5, 50, &mut slow);
+        assert!(fast.iter().all(|&r| r > 0));
+        assert!(
+            mean(&slow) < mean(&fast),
+            "WAN-crossing rounds should complete slower: {slow:?} vs {fast:?}"
+        );
+    }
+
+    #[test]
+    fn hub_uplink_contention_vs_ring() {
+        // The acceptance shape: 20 nodes, same uniform links, same
+        // deadline — the hub's egress port serializes 19 rows per round
+        // while ring nodes send 2, so hub-spoke completes fewer rounds.
+        let ring = Topology::ring(20);
+        let hub = Topology::hub_spoke(19);
+        let fab = FabricSpec::uniform(0.005, 2.0e5);
+        let mut r_ring = vec![0; 20];
+        let mut r_hub = vec![0; 20];
+        measure_rounds(&fab, &ring, &all_active(20), 4100, 0.5, 8, &mut r_ring);
+        measure_rounds(&fab, &hub, &all_active(20), 4100, 0.5, 8, &mut r_hub);
+        assert!(mean(&r_ring) > 0.0, "ring must make progress: {r_ring:?}");
+        assert!(
+            mean(&r_hub) < mean(&r_ring),
+            "hub-spoke should complete fewer rounds: hub {r_hub:?} vs ring {r_ring:?}"
+        );
+    }
+
+    #[test]
+    fn inactive_and_isolated_nodes_measure_zero() {
+        // Path 0-1-2 induced from ring(4) by deactivating 3... use
+        // ring(4) with node 2 down: 1 and 3 keep one active neighbor
+        // each (0), 0 keeps two; 2 contributes nothing.
+        let topo = Topology::ring(4);
+        let active = vec![true, true, false, true];
+        let mut out = vec![0; 4];
+        measure_rounds(&FabricSpec::ideal(), &topo, &active, 100, 0.5, 3, &mut out);
+        assert_eq!(out[2], 0, "inactive node");
+        assert_eq!(out, vec![3, 3, 0, 3]);
+        // All nodes isolated: everyone measures 0 rounds.
+        let alone = vec![true, false, false, false];
+        measure_rounds(&FabricSpec::ideal(), &topo, &alone, 100, 0.5, 3, &mut out);
+        assert_eq!(out, vec![0; 4]);
+    }
+
+    #[test]
+    fn zero_cap_and_zero_deadline() {
+        let topo = Topology::ring(4);
+        let mut out = vec![7; 4];
+        measure_rounds(&FabricSpec::ideal(), &topo, &all_active(4), 100, 0.5, 0, &mut out);
+        assert_eq!(out, vec![0; 4], "cap 0 measures 0");
+        // T_c = 0 still completes ideal rounds (they finish AT t = 0).
+        measure_rounds(&FabricSpec::ideal(), &topo, &all_active(4), 100, 0.0, 4, &mut out);
+        assert_eq!(out, vec![4; 4]);
+        // ...but any positive latency pushes everything past a zero deadline.
+        measure_rounds(&FabricSpec::uniform(0.01, 1e6), &topo, &all_active(4), 100, 0.0, 4, &mut out);
+        assert_eq!(out, vec![0; 4]);
+    }
+
+    #[test]
+    fn measurement_is_deterministic() {
+        let topo = Topology::hub_spoke(9);
+        let fab = FabricSpec::uniform(0.002, 1.0e5).with_min_gap(0.001);
+        let mut a = vec![0; 10];
+        let mut b = vec![0; 10];
+        measure_rounds(&fab, &topo, &all_active(10), 4100, 0.5, 20, &mut a);
+        measure_rounds(&fab, &topo, &all_active(10), 4100, 0.5, 20, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fabric_rounds_caches_by_active_set() {
+        let topo = Topology::ring(6);
+        let mut fr = FabricRounds::new(FabricSpec::uniform(0.01, 1.0e5), 1000, 0.5, 10);
+        let all = all_active(6);
+        let first = fr.rounds(&topo, &all).to_vec();
+        assert_eq!(fr.cache.len(), 1);
+        let again = fr.rounds(&topo, &all).to_vec();
+        assert_eq!(first, again);
+        assert_eq!(fr.cache.len(), 1, "revisited set must not grow the cache");
+        let partial = vec![true, true, true, true, false, true];
+        let _ = fr.rounds(&topo, &partial);
+        assert_eq!(fr.cache.len(), 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Link-level building blocks: latency/bandwidth link classes, NIC
+//! ports with store-and-forward serialization, and an optional
+//! rate-limiter pacing egress transmissions (the clocked-engine idiom
+//! from the gwr reference in SNIPPETS.md).
+//!
+//! All times are absolute seconds on the fabric's virtual clock; all
+//! sizes are bytes.  `bandwidth = f64::INFINITY` means unconstrained
+//! (zero serialization time), which is what makes the ideal fabric
+//! reproduce the abstract consensus path bitwise.
+
+/// A class of physical link: propagation latency (seconds, one-way) and
+/// bandwidth (bytes/second).  `Copy` so edge classification stays
+/// allocation-free in the event loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkClass {
+    pub latency: f64,
+    pub bandwidth: f64,
+}
+
+impl LinkClass {
+    /// Zero-latency, unconstrained-bandwidth link — the fabric that must
+    /// reproduce `NetworkModel::Abstract` bit for bit.
+    pub const IDEAL: LinkClass = LinkClass { latency: 0.0, bandwidth: f64::INFINITY };
+
+    pub fn new(latency: f64, bandwidth: f64) -> LinkClass {
+        assert!(
+            latency.is_finite() && latency >= 0.0,
+            "link latency must be finite and >= 0 (got {latency})"
+        );
+        assert!(
+            bandwidth > 0.0,
+            "link bandwidth must be > 0 bytes/s or infinite (got {bandwidth})"
+        );
+        LinkClass { latency, bandwidth }
+    }
+
+    /// Serialization (transmission) time for `bytes` on this link.
+    pub fn tx_time(&self, bytes: usize) -> f64 {
+        if self.bandwidth.is_finite() {
+            bytes as f64 / self.bandwidth
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Paces transmission STARTS to at least `min_gap` seconds apart —
+/// models a token-bucket-style shaper on a node's egress.
+#[derive(Debug, Clone)]
+pub struct RateLimiter {
+    min_gap: f64,
+    next_start: f64,
+}
+
+impl RateLimiter {
+    pub fn new(min_gap: f64) -> RateLimiter {
+        assert!(
+            min_gap.is_finite() && min_gap >= 0.0,
+            "rate-limiter min gap must be finite and >= 0 (got {min_gap})"
+        );
+        RateLimiter { min_gap, next_start: 0.0 }
+    }
+
+    /// Earliest permitted start at or after `t`; reserves the slot.
+    pub fn reserve(&mut self, t: f64) -> f64 {
+        let start = t.max(self.next_start);
+        self.next_start = start + self.min_gap;
+        start
+    }
+}
+
+/// One NIC port (egress or ingress) on a node.  Store-and-forward: the
+/// port serializes one message at a time, so a second message queued at
+/// the same instant starts only when the first finishes — this is where
+/// hub-spoke uplink contention comes from.
+#[derive(Debug, Clone)]
+pub struct Port {
+    free_at: f64,
+    limiter: Option<RateLimiter>,
+}
+
+impl Port {
+    /// `min_gap > 0` attaches a rate limiter; 0 means unpaced.
+    pub fn new(min_gap: f64) -> Port {
+        let limiter = if min_gap > 0.0 { Some(RateLimiter::new(min_gap)) } else { None };
+        Port { free_at: 0.0, limiter }
+    }
+
+    /// Occupy the port for a transmission of duration `dur` requested at
+    /// time `now`; returns `(start, end)`.  Queueing delay (port busy)
+    /// and pacing (limiter) both push `start` later.
+    pub fn occupy(&mut self, now: f64, dur: f64) -> (f64, f64) {
+        let mut start = now.max(self.free_at);
+        if let Some(l) = self.limiter.as_mut() {
+            start = l.reserve(start);
+        }
+        let end = start + dur;
+        self.free_at = end;
+        (start, end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_time_math() {
+        let l = LinkClass::new(0.01, 1.0e5);
+        assert_eq!(l.tx_time(1000), 0.01); // 1000 B at 100 kB/s
+        assert_eq!(l.tx_time(0), 0.0);
+        assert_eq!(LinkClass::IDEAL.tx_time(1_000_000), 0.0);
+        assert_eq!(LinkClass::IDEAL.latency, 0.0);
+    }
+
+    #[test]
+    fn port_serializes_back_to_back() {
+        // Three messages requested at t=0 on one port: they queue.
+        let mut p = Port::new(0.0);
+        assert_eq!(p.occupy(0.0, 0.1), (0.0, 0.1));
+        assert_eq!(p.occupy(0.0, 0.1), (0.1, 0.2));
+        assert_eq!(p.occupy(0.0, 0.1), (0.2, 0.30000000000000004));
+        // A later request after the port drains starts immediately.
+        assert_eq!(p.occupy(1.0, 0.1), (1.0, 1.1));
+    }
+
+    #[test]
+    fn ideal_port_is_transparent() {
+        // Zero-duration transmissions never occupy the port: every
+        // request at t starts and ends at t — the bitwise-parity path.
+        let mut p = Port::new(0.0);
+        for _ in 0..5 {
+            assert_eq!(p.occupy(0.0, 0.0), (0.0, 0.0));
+        }
+        assert_eq!(p.occupy(2.5, 0.0), (2.5, 2.5));
+    }
+
+    #[test]
+    fn rate_limiter_paces_starts() {
+        let mut r = RateLimiter::new(0.5);
+        assert_eq!(r.reserve(0.0), 0.0);
+        assert_eq!(r.reserve(0.0), 0.5);
+        assert_eq!(r.reserve(0.6), 1.0);
+        assert_eq!(r.reserve(3.0), 3.0); // gap already elapsed
+    }
+
+    #[test]
+    fn port_with_limiter_combines_queueing_and_pacing() {
+        // dur 0.1 but min gap 0.3: pacing dominates the start spacing.
+        let mut p = Port::new(0.3);
+        assert_eq!(p.occupy(0.0, 0.1), (0.0, 0.1));
+        let (s2, e2) = p.occupy(0.0, 0.1);
+        assert_eq!((s2, e2), (0.3, 0.4));
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth")]
+    fn rejects_zero_bandwidth() {
+        LinkClass::new(0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "latency")]
+    fn rejects_negative_latency() {
+        LinkClass::new(-1.0, 1.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Network fabric for the consensus plane (ISSUE 6).
+//!
+//! `Abstract` is the paper's model: T_c buys a fixed, configured number
+//! of gossip rounds regardless of topology or message size.  `Fabric`
+//! replaces that free parameter with a measurement — a deterministic
+//! discrete-event simulation of per-link transmissions (latency,
+//! bandwidth, port contention, optional pacing) that derives "rounds
+//! completed within T_c" per node, then feeds the per-node budgets to
+//! the same freeze machinery the jitter ablation uses.  Message size
+//! comes from the wire-row codec: `dim + 1` f32s per gossip row.
+//!
+//! Everything is a pure function of (spec, seed): the event queue
+//! breaks timestamp ties by push order, so fabric runs join the
+//! threads=1 ≡ threads=k bitwise contract and the golden-trace gate.
+
+pub mod event;
+pub mod fabric;
+pub mod link;
+
+pub use event::EventQueue;
+pub use fabric::{measure_rounds, FabricRounds, FabricSpec};
+pub use link::{LinkClass, Port, RateLimiter};
+
+use anyhow::{bail, Result};
+
+/// How the consensus phase's communication is modeled.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetworkModel {
+    /// Abstract round budget (paper model, default): `ConsensusMode`
+    /// alone decides how many gossip rounds run.
+    Abstract,
+    /// Discrete-event link fabric: per-node rounds are measured from
+    /// topology, message size, and congestion within `T_c`.
+    Fabric(FabricSpec),
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel::Abstract
+    }
+}
+
+impl NetworkModel {
+    pub fn is_abstract(&self) -> bool {
+        matches!(self, NetworkModel::Abstract)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetworkModel::Abstract => "abstract",
+            NetworkModel::Fabric(_) => "fabric",
+        }
+    }
+
+    /// Parse the `--net` CLI value.
+    ///
+    /// * `abstract` — the default paper model;
+    /// * `ideal` — zero-latency, unconstrained-bandwidth fabric (the
+    ///   bitwise-parity configuration);
+    /// * `key=val,...` — a fabric from keys `lat` (s), `bw` (bytes/s,
+    ///   `inf` allowed), `wan-lat`, `wan-bw`, `groups`, `gap` (s).
+    ///   WAN keys default to the local values; `groups` defaults to 1.
+    pub fn parse(s: &str) -> Result<NetworkModel> {
+        let s = s.trim();
+        match s {
+            "" => bail!("empty --net value (try 'abstract', 'ideal', or 'lat=...,bw=...')"),
+            "abstract" => return Ok(NetworkModel::Abstract),
+            "ideal" => return Ok(NetworkModel::Fabric(FabricSpec::ideal())),
+            _ => {}
+        }
+        let mut lat = 0.0f64;
+        let mut bw = f64::INFINITY;
+        let mut wan_lat: Option<f64> = None;
+        let mut wan_bw: Option<f64> = None;
+        let mut groups = 1usize;
+        let mut gap = 0.0f64;
+        for part in s.split(',') {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("--net: expected key=value, got '{part}'");
+            };
+            let (k, v) = (k.trim(), v.trim());
+            let fval = |key: &str| -> Result<f64> {
+                match v.parse::<f64>() {
+                    Ok(x) => Ok(x),
+                    Err(_) => bail!("--net: {key}='{v}' is not a number"),
+                }
+            };
+            match k {
+                "lat" => lat = fval(k)?,
+                "bw" => bw = fval(k)?,
+                "wan-lat" => wan_lat = Some(fval(k)?),
+                "wan-bw" => wan_bw = Some(fval(k)?),
+                "gap" => gap = fval(k)?,
+                "groups" => {
+                    groups = match v.parse::<usize>() {
+                        Ok(g) if g >= 1 => g,
+                        _ => bail!("--net: groups='{v}' must be an integer >= 1"),
+                    }
+                }
+                _ => bail!(
+                    "--net: unknown key '{k}' (known: lat, bw, wan-lat, wan-bw, groups, gap)"
+                ),
+            }
+        }
+        if !(lat.is_finite() && lat >= 0.0) {
+            bail!("--net: lat must be finite and >= 0");
+        }
+        if !(bw > 0.0) {
+            bail!("--net: bw must be > 0 (use 'inf' for unconstrained)");
+        }
+        let mut fab = FabricSpec::uniform(lat, bw).with_min_gap(gap);
+        if wan_lat.is_some() || wan_bw.is_some() || groups > 1 {
+            let wl = wan_lat.unwrap_or(lat);
+            let wb = wan_bw.unwrap_or(bw);
+            if !(wl.is_finite() && wl >= 0.0) {
+                bail!("--net: wan-lat must be finite and >= 0");
+            }
+            if !(wb > 0.0) {
+                bail!("--net: wan-bw must be > 0 (use 'inf' for unconstrained)");
+            }
+            fab = fab.with_wan(wl, wb, groups);
+        }
+        Ok(NetworkModel::Fabric(fab))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_named_forms() {
+        assert_eq!(NetworkModel::parse("abstract").unwrap(), NetworkModel::Abstract);
+        assert_eq!(
+            NetworkModel::parse("ideal").unwrap(),
+            NetworkModel::Fabric(FabricSpec::ideal())
+        );
+        assert!(NetworkModel::parse("").is_err());
+        assert!(NetworkModel::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_uniform_fabric() {
+        let m = NetworkModel::parse("lat=0.005,bw=2e5").unwrap();
+        assert_eq!(m, NetworkModel::Fabric(FabricSpec::uniform(0.005, 2.0e5)));
+        assert_eq!(m.name(), "fabric");
+        assert!(!m.is_abstract());
+    }
+
+    #[test]
+    fn parse_inf_bandwidth_and_gap() {
+        let m = NetworkModel::parse("lat=0.01,bw=inf,gap=0.002").unwrap();
+        assert_eq!(
+            m,
+            NetworkModel::Fabric(FabricSpec::uniform(0.01, f64::INFINITY).with_min_gap(0.002))
+        );
+    }
+
+    #[test]
+    fn parse_wan_split() {
+        let m = NetworkModel::parse("lat=0.001,bw=1e6,wan-lat=0.05,wan-bw=1e5,groups=2").unwrap();
+        let want = FabricSpec::uniform(0.001, 1.0e6).with_wan(0.05, 1.0e5, 2);
+        assert_eq!(m, NetworkModel::Fabric(want));
+        // groups alone (WAN class defaults to local values)
+        let m = NetworkModel::parse("lat=0.001,bw=1e6,groups=4").unwrap();
+        let want = FabricSpec::uniform(0.001, 1.0e6).with_wan(0.001, 1.0e6, 4);
+        assert_eq!(m, NetworkModel::Fabric(want));
+    }
+
+    #[test]
+    fn parse_rejections() {
+        assert!(NetworkModel::parse("lat=fast").is_err());
+        assert!(NetworkModel::parse("bw=0").is_err());
+        assert!(NetworkModel::parse("lat=-1").is_err());
+        assert!(NetworkModel::parse("groups=0").is_err());
+        assert!(NetworkModel::parse("speed=9").is_err());
+        assert!(NetworkModel::parse("lat").is_err());
+        assert!(NetworkModel::parse("wan-bw=0,groups=2").is_err());
+    }
+
+    #[test]
+    fn default_is_abstract() {
+        assert_eq!(NetworkModel::default(), NetworkModel::Abstract);
+        assert!(NetworkModel::default().is_abstract());
+        assert_eq!(NetworkModel::Abstract.name(), "abstract");
+    }
+}

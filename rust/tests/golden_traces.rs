@@ -28,10 +28,13 @@ use std::sync::Arc;
 
 use anytime_mb::data::LinRegStream;
 use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::net::FabricSpec;
 use anytime_mb::optim::{BetaSchedule, DualAveraging};
 use anytime_mb::straggler::ShiftedExp;
 use anytime_mb::topology::Topology;
-use anytime_mb::{ConsensusMode, RunOutput, RunSpec, Runtime, Scheme, SimRuntime};
+use anytime_mb::{
+    ConsensusMode, NetworkModel, RunOutput, RunSpec, Runtime, Scheme, SimRuntime,
+};
 
 const PINS_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/pins.txt");
 
@@ -113,7 +116,11 @@ fn trace_content(out: &RunOutput) -> String {
     )
 }
 
-/// Every pin line, in grid order.
+/// Every pin line: the scheme × mode grid, then the network-fabric pins
+/// (ISSUE 6) — an ideal fabric whose content must equal the abstract
+/// `amb × gossip5` grid line bitwise, and a bandwidth-constrained fabric
+/// (100-byte wire rows at 2 kB/s make T_c = 0.5 bind below the cap of 8)
+/// pinning the measured-rounds numerics themselves.
 fn all_traces() -> Vec<String> {
     let mut lines = Vec::new();
     for scheme in schemes() {
@@ -127,6 +134,18 @@ fn all_traces() -> Vec<String> {
                 trace_content(&out)
             ));
         }
+    }
+    let amb = Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 };
+    let fabrics = [
+        ("gossip5+ideal-fabric", 5usize, FabricSpec::ideal()),
+        ("gossip8+fabric", 8, FabricSpec::uniform(0.005, 2.0e3)),
+    ];
+    for (label, rounds, fab) in fabrics {
+        let spec = RunSpec::new(amb.name(), amb, 5, 13)
+            .with_consensus(ConsensusMode::Gossip { rounds })
+            .with_network(NetworkModel::Fabric(fab));
+        let out = run_sim(&spec);
+        lines.push(format!("{} × {}: {}", scheme_label(&amb), label, trace_content(&out)));
     }
     lines
 }
@@ -152,6 +171,24 @@ fn golden_traces_are_self_consistent_and_match_pins() {
             mode_label(mode)
         );
     }
+
+    // ISSUE 6 acceptance: the ideal fabric (zero latency, unconstrained
+    // bandwidth) reproduces the abstract `amb × gossip5` trace bitwise —
+    // compare content against grid index 1 (amb is scheme 0, gossip5 is
+    // mode 1).  The constrained-fabric pin (last line) must differ: the
+    // link budget binds, which is the whole point of measuring.
+    let n_grid = schemes().len() * n_modes;
+    let amb_gossip5 = traces[1].split_once(": ").expect("label: content").1;
+    let ideal_fab = traces[n_grid].split_once(": ").expect("label: content").1;
+    assert_eq!(
+        amb_gossip5, ideal_fab,
+        "ideal fabric diverged from the abstract gossip run"
+    );
+    let constrained = traces[n_grid + 1].split_once(": ").expect("label: content").1;
+    assert_ne!(
+        amb_gossip5, constrained,
+        "the constrained fabric should bind below the abstract budget"
+    );
 
     // Compare against the pinned file when present.  CI writes it via
     // the regen helper in the serial leg, so the pooled leg (and any

@@ -1,0 +1,162 @@
+//! Network-fabric acceptance tests (ISSUE 6): the ideal fabric (zero
+//! latency, unconstrained bandwidth) must reproduce abstract runs
+//! bitwise — rounds log, per-epoch stats, and final primal — with and
+//! without churn; a congested hub-spoke fabric must measurably complete
+//! fewer gossip rounds per T_c than a ring on identical links; and
+//! fabric runs must be bit-reproducible and restricted to the sim
+//! runtime's Gossip mode.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::net::FabricSpec;
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::straggler::ShiftedExp;
+use anytime_mb::topology::Topology;
+use anytime_mb::{
+    ChurnSpec, ConsensusMode, NetworkModel, RunOutput, RunSpec, Runtime, Scheme, SimRuntime,
+};
+
+fn run_sim(spec: &RunSpec, topo: &Topology) -> RunOutput {
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(24, 5)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 400.0), 4.0 * 24f64.sqrt());
+    let f_star = src.f_star();
+    let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+        Box::new(NativeExec::new(src.clone(), opt.clone()))
+    };
+    SimRuntime::new(&strag).run(spec, topo, &mk, f_star)
+}
+
+/// Full-output bitwise equality: primal bits, per-epoch stat bits, the
+/// rounds log, and the membership log.
+fn assert_bitwise_eq(a: &RunOutput, b: &RunOutput, what: &str) {
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds log");
+    assert_eq!(a.active_counts, b.active_counts, "{what}: active counts");
+    assert_eq!(a.final_w.as_slice().len(), b.final_w.as_slice().len(), "{what}: w shape");
+    for (i, (x, y)) in a.final_w.as_slice().iter().zip(b.final_w.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: final_w word {i}");
+    }
+    assert_eq!(a.record.epochs.len(), b.record.epochs.len(), "{what}: epoch count");
+    for (x, y) in a.record.epochs.iter().zip(&b.record.epochs) {
+        assert_eq!(x.batch, y.batch, "{what}: batch @ {}", x.epoch);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss @ {}", x.epoch);
+        assert_eq!(x.error.to_bits(), y.error.to_bits(), "{what}: error @ {}", x.epoch);
+        assert_eq!(
+            x.consensus_err.to_bits(),
+            y.consensus_err.to_bits(),
+            "{what}: consensus_err @ {}",
+            x.epoch
+        );
+        assert_eq!(
+            x.wall_time.to_bits(),
+            y.wall_time.to_bits(),
+            "{what}: wall_time @ {}",
+            x.epoch
+        );
+    }
+}
+
+fn ideal() -> NetworkModel {
+    NetworkModel::Fabric(FabricSpec::ideal())
+}
+
+#[test]
+fn ideal_fabric_reproduces_abstract_across_schemes() {
+    // The ISSUE 6 acceptance pin, over every scheme family that
+    // gossips: an ideal fabric measures the full cap for every node, so
+    // the run must be bitwise the abstract run.
+    let topo = Topology::paper_fig2();
+    let schemes = [
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
+        Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 2 },
+    ];
+    for scheme in schemes {
+        let base = RunSpec::new(scheme.name(), scheme, 5, 13)
+            .with_consensus(ConsensusMode::Gossip { rounds: 5 });
+        let abstract_out = run_sim(&base, &topo);
+        let fabric_out = run_sim(&base.clone().with_network(ideal()), &topo);
+        assert_bitwise_eq(&abstract_out, &fabric_out, scheme.name());
+        // and the rounds really are the cap, not coincidentally zero
+        assert!(fabric_out.rounds.iter().all(|r| r == &vec![5usize; base.epochs]));
+    }
+}
+
+#[test]
+fn ideal_fabric_reproduces_abstract_under_churn() {
+    // Churn exercises the per-node freeze path (inactive rows restored
+    // after every mix): the ideal fabric must still match bitwise
+    // because uniform budgets freeze nothing and restores of inactive
+    // e_i rows are bitwise no-ops.
+    let topo = Topology::ring(8);
+    let base = RunSpec::amb("churned", 2.0, 0.5, 5, 6, 13)
+        .with_churn(ChurnSpec::IidDropout { p: 0.3, seed: 11 });
+    let abstract_out = run_sim(&base, &topo);
+    let fabric_out = run_sim(&base.clone().with_network(ideal()), &topo);
+    // the schedule must actually drop somebody for this test to bite
+    assert!(
+        abstract_out.active_counts.iter().any(|&a| a < 8),
+        "churn schedule dropped nobody — raise p or change seed"
+    );
+    assert_bitwise_eq(&abstract_out, &fabric_out, "iid-churn");
+}
+
+#[test]
+fn hub_spoke_completes_fewer_rounds_than_ring() {
+    // Same 20 nodes, same uniform 5 ms / 200 kB/s links, same T_c and
+    // cap: the hub's egress port serializes 19 rows per round where a
+    // ring node sends 2, so the measured budget collapses.
+    let fab = NetworkModel::Fabric(FabricSpec::uniform(0.005, 2.0e5));
+    let spec = RunSpec::amb("contention", 2.0, 0.5, 8, 4, 13).with_network(fab);
+    let ring = run_sim(&spec, &Topology::ring(20));
+    let hub = run_sim(&spec, &Topology::hub_spoke(19));
+    let mean = |out: &RunOutput| {
+        out.rounds.iter().map(|r| r[0]).sum::<usize>() as f64 / out.rounds.len() as f64
+    };
+    let (rm, hm) = (mean(&ring), mean(&hub));
+    assert!(rm > 0.0, "ring made no progress");
+    assert!(hm < rm, "expected uplink contention: hub {hm} vs ring {rm}");
+    // per-node measurements are epoch-invariant under static membership
+    for out in [&ring, &hub] {
+        for r in &out.rounds {
+            assert!(r.iter().all(|&x| x == r[0]), "rounds drifted: {r:?}");
+        }
+    }
+}
+
+#[test]
+fn fabric_runs_are_bit_reproducible() {
+    let fab = NetworkModel::Fabric(FabricSpec::uniform(0.002, 1.0e5).with_min_gap(0.001));
+    let spec = RunSpec::amb("repro", 2.0, 0.5, 10, 5, 13).with_network(fab);
+    let topo = Topology::hub_spoke(9);
+    let a = run_sim(&spec, &topo);
+    let b = run_sim(&spec, &topo);
+    assert_bitwise_eq(&a, &b, "repeat run");
+}
+
+#[test]
+fn fabric_rejects_non_gossip_modes() {
+    let topo = Topology::ring(4);
+    for mode in [
+        ConsensusMode::Exact,
+        ConsensusMode::GossipJitter { mean: 5, jitter: 2 },
+    ] {
+        let spec = RunSpec::amb("bad", 2.0, 0.5, 5, 2, 13)
+            .with_consensus(mode)
+            .with_network(ideal());
+        let err = catch_unwind(AssertUnwindSafe(|| run_sim(&spec, &topo)))
+            .expect_err("Fabric must reject non-Gossip consensus");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("requires ConsensusMode::Gossip"),
+            "unexpected panic message: {msg}"
+        );
+    }
+}
