@@ -99,6 +99,55 @@ fn main() {
             grid_rows.push((format!("{label}_d{d}"), t_legacy, t_flat, t_sparse));
         }
     }
+
+    // ---- L3: n-scaling grid (ISSUE 7) — the plane from n=64 to n=1e5 -------
+    // Narrow d keeps the per-round cost ∝ nnz·d, so these rows time the
+    // MIXING layer itself: CSR build (never materialises n² entries) and
+    // 5 gossip rounds.  The legacy dense-walk baseline (one `at(i, j)`
+    // probe per matrix entry) runs only at n ≤ 1024 — at n = 10⁵ a dense
+    // P would be 10¹⁰ entries before the first round, which is exactly
+    // what the sparse-first representation exists to avoid.  Still under
+    // the 1-thread pin, so the JSON is host-independent.
+    let mut nscale_rows: Vec<(String, usize, usize, f64, f64, Option<f64>)> = Vec::new();
+    {
+        let d = 16usize;
+        for n in [64usize, 1024, 16384, 100_000] {
+            for fam in ["ring", "small_world"] {
+                let topo = match fam {
+                    "ring" => Topology::ring(n),
+                    _ => Topology::small_world(n, 3, 0.1, 7),
+                };
+                let label = format!("{fam}_n{n}");
+                let t_build = b
+                    .bench(&format!("L3/csr_build_{label}"), || topo.metropolis().lazy().nnz())
+                    .mean;
+                let p = topo.metropolis().lazy();
+                let nnz = p.nnz();
+                let seed_rows = random_arena(&mut rng, n, d);
+                let mut cons = Consensus::new(p.clone());
+                let mut msgs = seed_rows.clone();
+                let t_mix = b
+                    .bench(&format!("L3/consensus_sparse_{label}_d{d}_5r"), || {
+                        cons.run(&mut msgs, 5);
+                        msgs.row(0)[0]
+                    })
+                    .mean;
+                let t_legacy = (n <= 1024).then(|| {
+                    let mut legacy = seed_rows.to_rows();
+                    let mut scratch = vec![vec![0.0f32; d]; n];
+                    b.bench(&format!("L3/consensus_legacy_densewalk_{label}_d{d}_5r"), || {
+                        for _ in 0..5 {
+                            legacy_vecvec_mix_into(&p, &legacy, &mut scratch);
+                            std::mem::swap(&mut legacy, &mut scratch);
+                        }
+                        legacy[0][0]
+                    })
+                    .mean
+                });
+                nscale_rows.push((label, n, nnz, t_build, t_mix, t_legacy));
+            }
+        }
+    }
     // (the 1-thread pin stays on through the baseline rows below — the
     // gradient/primal benches never touch the pool, and the baseline
     // sim-epoch row must stay host-independent and comparable to the
@@ -247,6 +296,28 @@ fn main() {
         );
     }
 
+    // n-scaling table (the ISSUE-7 acceptance bar: build + mix stay
+    // ∝ nnz while the dense walk, where it can run at all, falls behind).
+    println!("\n== n-scaling: CSR build + 5 sparse rounds, d=16 (1 thread) ==");
+    for (name, n, nnz, t_build, t_mix, t_legacy) in &nscale_rows {
+        let legacy_cell = match t_legacy {
+            Some(t) => format!(
+                "densewalk {:>9} ({:.1}x)",
+                anytime_mb::bench_harness::fmt_time(*t),
+                t / t_mix
+            ),
+            None => format!("densewalk —         (n²={:.1e})", (*n as f64) * (*n as f64)),
+        };
+        println!(
+            "  {:<22} nnz {:>8} | build {:>9} | mix {:>9} | {}",
+            name,
+            nnz,
+            anytime_mb::bench_harness::fmt_time(*t_build),
+            anytime_mb::bench_harness::fmt_time(*t_mix),
+            legacy_cell,
+        );
+    }
+
     // Serial-vs-parallel scaling table (the ISSUE-3 acceptance bar:
     // >1x on the n=64, d=8192 grid when more than one core exists).
     println!("\n== pool scaling: threads ∈ {{1, 2, 4}} (speedup vs t=1) ==");
@@ -311,6 +382,23 @@ fn main() {
                     ("dense_speedup", Json::num(t_legacy / t_flat)),
                     ("sparse_speedup", Json::num(t_legacy / t_sparse)),
                 ])
+            })),
+        ),
+        (
+            "n_scaling",
+            Json::arr(nscale_rows.iter().map(|(name, n, nnz, t_build, t_mix, t_legacy)| {
+                let mut fields = vec![
+                    ("grid", Json::str(name)),
+                    ("n", Json::num(*n as f64)),
+                    ("nnz", Json::num(*nnz as f64)),
+                    ("csr_build_s", Json::num(*t_build)),
+                    ("sparse_mix5_s", Json::num(*t_mix)),
+                ];
+                if let Some(t) = t_legacy {
+                    fields.push(("legacy_densewalk_mix5_s", Json::num(*t)));
+                    fields.push(("dense_vs_sparse_speedup", Json::num(t / t_mix)));
+                }
+                Json::obj(fields)
             })),
         ),
         (

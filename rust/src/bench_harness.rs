@@ -21,13 +21,12 @@ pub fn legacy_vecvec_mix_into(p: &MixMatrix, msgs: &[Vec<f32>], out: &mut [Vec<f
     let n = p.n();
     let d = msgs[0].len();
     for i in 0..n {
-        let row = p.row(i);
         let oi = &mut out[i];
         for v in oi.iter_mut() {
             *v = 0.0;
         }
         for j in 0..n {
-            let pij = row[j] as f32;
+            let pij = p.at(i, j) as f32;
             if pij == 0.0 {
                 continue;
             }

@@ -72,6 +72,12 @@ impl ExperimentConfig {
                 ("mean", Json::num(mean as f64)),
                 ("jitter", Json::num(jitter as f64)),
             ]),
+            ConsensusMode::Hierarchical { shards, intra_rounds, inter_rounds } => Json::obj(vec![
+                ("kind", Json::str("hierarchical")),
+                ("shards", Json::num(shards as f64)),
+                ("intra_rounds", Json::num(intra_rounds as f64)),
+                ("inter_rounds", Json::num(inter_rounds as f64)),
+            ]),
         };
         let churn = match &self.run.churn {
             ChurnSpec::None => Json::obj(vec![("kind", Json::str("none"))]),
@@ -185,6 +191,24 @@ impl ExperimentConfig {
                 mean: cj.get("mean").and_then(|v| v.as_usize()).context("mean")?,
                 jitter: cj.get("jitter").and_then(|v| v.as_usize()).context("jitter")?,
             },
+            Some("hierarchical") => {
+                let shards =
+                    cj.get("shards").and_then(|v| v.as_usize()).context("shards")?;
+                if shards == 0 {
+                    bail!("consensus.shards must be >= 1");
+                }
+                ConsensusMode::Hierarchical {
+                    shards,
+                    intra_rounds: cj
+                        .get("intra_rounds")
+                        .and_then(|v| v.as_usize())
+                        .context("intra_rounds")?,
+                    inter_rounds: cj
+                        .get("inter_rounds")
+                        .and_then(|v| v.as_usize())
+                        .context("inter_rounds")?,
+                }
+            }
             other => bail!("unknown consensus kind {other:?}"),
         };
 
@@ -479,6 +503,31 @@ mod tests {
         assert_eq!(back.run.grad_chunk, 64);
         assert_eq!(back.run.slowdown, vec![3.0, 1.0]);
         assert!((back.run.time_scale - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hierarchical_consensus_roundtrip() {
+        let mut cfg = preset("fig1a_amb").unwrap();
+        for consensus in [
+            ConsensusMode::Hierarchical { shards: 1, intra_rounds: 5, inter_rounds: 0 },
+            ConsensusMode::Hierarchical { shards: 8, intra_rounds: 6, inter_rounds: 4 },
+        ] {
+            cfg.run = cfg.run.clone().with_consensus(consensus);
+            let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+            assert_eq!(back.run.consensus, consensus);
+        }
+        // zero shards rejected at load time
+        let text = cfg.to_json().to_string();
+        assert!(text.contains("\"kind\":\"hierarchical\""));
+        assert!(ExperimentConfig::from_json(
+            &text.replace("\"shards\":8", "\"shards\":0")
+        )
+        .is_err());
+        // missing budget fields are errors, not silent defaults
+        assert!(ExperimentConfig::from_json(
+            &text.replace(",\"inter_rounds\":4", "")
+        )
+        .is_err());
     }
 
     #[test]

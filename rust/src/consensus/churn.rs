@@ -3,23 +3,34 @@
 //! A churn run mixes over [`Topology::induced`] subgraphs — inactive
 //! nodes are isolated (Metropolis row eᵢ) so they hold their message
 //! bit-for-bit and contribute nothing, while the active block stays
-//! doubly stochastic and conserves the ACTIVE-set mean.  Building an
-//! induced matrix is O(n²) and churn rebuilds per epoch, so this engine
-//! **memoizes by active-set key**: each distinct active set pays the
-//! build once, and the common "nobody churned" epoch takes the
-//! preloaded base matrix with ZERO rebuild or lookup-allocation cost.
+//! doubly stochastic and conserves the ACTIVE-set mean.  Induced
+//! matrices are built directly in CSR via
+//! [`Topology::induced_metropolis_lazy_csr`] — O(n + E) per build, no
+//! n² materialisation (bitwise the old dense composition, pinned in
+//! `topology::tests`) — so a fresh active set per epoch costs an
+//! edge-proportional rebuild, not a quadratic one.  A small LRU keyed
+//! by the churned vertex set still absorbs periodic schedules (Markov
+//! flapping, repeating traces), and the common "nobody churned" epoch
+//! takes the preloaded base matrix with ZERO rebuild or
+//! lookup-allocation cost.
+//!
+//! (The previous design memoized DENSE O(n²) copies behind a 64-entry
+//! clear-on-overflow cache: under iid churn nearly every epoch is a
+//! never-seen set, so the cache cleared constantly while each retained
+//! entry cost n² memory.  With the CSR build a miss is cheap, so the
+//! cache only needs to be big enough for short periodic schedules.)
 //!
 //! The rounds themselves are the stock [`MixMatrix::mix_into`] blocked
 //! CSR kernel (row-partitioned across the worker pool, per-row op order
 //! fixed), so every bitwise pin from PR 2/3 — and the threads=1 ≡
 //! threads=k contract — holds for churn runs unchanged.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::topology::{MixMatrix, Topology};
 use crate::util::matrix::NodeMatrix;
 
-/// Dense synchronous consensus with a per-active-set matrix cache.
+/// Sparse synchronous consensus with a small per-active-set LRU.
 ///
 /// The all-active matrix is exactly `topo.metropolis().lazy()` — the
 /// matrix the static-membership [`super::Consensus`] engine uses — so a
@@ -28,25 +39,32 @@ pub struct InducedConsensus {
     topo: Topology,
     /// The all-active (P + I)/2 Metropolis matrix (zero-rebuild path).
     base: MixMatrix,
-    /// Induced lazy matrices memoized by active-set key.
+    /// Induced lazy CSR matrices memoized by active-set key.
     cache: HashMap<Vec<bool>, MixMatrix>,
+    /// Recency order of `cache`'s keys (front = least recently used).
+    lru: VecDeque<Vec<bool>>,
     /// Scratch arena double-buffered against the caller's messages.
     scratch: NodeMatrix,
 }
 
 impl InducedConsensus {
-    /// Cache cap: under high-rate i.i.d. dropout on a large cluster,
-    /// nearly every epoch draws a NEVER-seen active set, and each dense
-    /// matrix is O(n²) — unbounded memoization would retain
-    /// O(epochs · n²) memory over a long run.  When the cap is reached
-    /// the cache is cleared (epoch-style eviction: periodic schedules
-    /// re-warm in one build each; pure-random ones were not reusing
-    /// entries anyway).
-    pub const MAX_CACHED_SETS: usize = 64;
+    /// LRU capacity.  Each cached matrix is CSR — O(edges), not O(n²) —
+    /// and a miss is an O(n + E) rebuild, so the cache exists only to
+    /// absorb short periodic schedules (Markov flapping between a few
+    /// sets, repeating traces); non-repeating iid churn just streams
+    /// through it, evicting the oldest entry each epoch instead of the
+    /// old clear-the-world behaviour.
+    pub const MAX_CACHED_SETS: usize = 8;
 
     pub fn new(topo: Topology) -> InducedConsensus {
         let base = topo.metropolis().lazy();
-        InducedConsensus { topo, base, cache: HashMap::new(), scratch: NodeMatrix::new(0, 0) }
+        InducedConsensus {
+            topo,
+            base,
+            cache: HashMap::new(),
+            lru: VecDeque::new(),
+            scratch: NodeMatrix::new(0, 0),
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -60,6 +78,12 @@ impl InducedConsensus {
         self.cache.len()
     }
 
+    /// Whether `active`'s induced matrix is currently resident (cache
+    /// diagnostic; the all-active set is always "cached" via the base).
+    pub fn is_cached(&self, active: &[bool]) -> bool {
+        active.iter().all(|&a| a) || self.cache.contains_key(active)
+    }
+
     /// The ONE build-and-memoize site: make sure `active`'s induced
     /// matrix is cached (no-op for the all-active set, which
     /// short-circuits to the base matrix) and report whether the set is
@@ -68,14 +92,25 @@ impl InducedConsensus {
     fn ensure_cached(&mut self, active: &[bool]) -> bool {
         assert_eq!(active.len(), self.topo.n(), "active mask must cover every node");
         let all = active.iter().all(|&a| a);
-        if !all && !self.cache.contains_key(active) {
-            if self.cache.len() >= Self::MAX_CACHED_SETS {
-                self.cache.clear();
-            }
-            let m = self.topo.induced(active).metropolis().lazy();
-            self.cache.insert(active.to_vec(), m);
+        if all {
+            return true;
         }
-        all
+        if self.cache.contains_key(active) {
+            // refresh recency (cap is tiny, the scan is cheap)
+            if let Some(pos) = self.lru.iter().position(|k| k == active) {
+                let k = self.lru.remove(pos).unwrap();
+                self.lru.push_back(k);
+            }
+        } else {
+            if self.cache.len() >= Self::MAX_CACHED_SETS {
+                let oldest = self.lru.pop_front().expect("cache non-empty at cap");
+                self.cache.remove(&oldest);
+            }
+            let m = self.topo.induced_metropolis_lazy_csr(active);
+            self.cache.insert(active.to_vec(), m);
+            self.lru.push_back(active.to_vec());
+        }
+        false
     }
 
     /// The mixing matrix for `active` (building + memoizing on first
@@ -292,9 +327,34 @@ mod tests {
     }
 
     #[test]
+    fn lru_evicts_oldest_not_everything() {
+        // Fill the cache to the cap, touch the first entry again, then
+        // insert one more: the refreshed entry must survive (true LRU),
+        // and the count stays pinned at the cap.
+        let n = 12;
+        let topo = Topology::complete(n);
+        let mut ind = InducedConsensus::new(topo);
+        let mut g = crate::prop::Gen::new(0xCE_07);
+        let mut msgs = random_msgs(&mut g, n, 2);
+        let mask = |drop: usize| -> Vec<bool> {
+            (0..n).map(|i| i != drop).collect()
+        };
+        for drop in 0..InducedConsensus::MAX_CACHED_SETS {
+            ind.run(&mut msgs, 1, &mask(drop));
+        }
+        assert_eq!(ind.cached_sets(), InducedConsensus::MAX_CACHED_SETS);
+        ind.run(&mut msgs, 1, &mask(0)); // refresh the oldest
+        ind.run(&mut msgs, 1, &mask(InducedConsensus::MAX_CACHED_SETS)); // evicts mask(1)
+        assert_eq!(ind.cached_sets(), InducedConsensus::MAX_CACHED_SETS);
+        assert!(ind.is_cached(&mask(0)), "refreshed entry must survive eviction");
+        assert!(!ind.is_cached(&mask(1)), "least-recently-used entry must be the one evicted");
+        assert!(ind.is_cached(&mask(InducedConsensus::MAX_CACHED_SETS)));
+    }
+
+    #[test]
     fn cache_is_bounded_under_nonrepeating_active_sets() {
         // 10 nodes admit > MAX_CACHED_SETS distinct active sets; the
-        // cache must never exceed the cap (epoch-style eviction), and
+        // cache must never exceed the cap (oldest-entry eviction), and
         // results stay correct after eviction (rebuild on demand).
         let n = 10;
         let topo = Topology::complete(n);

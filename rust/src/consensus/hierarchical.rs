@@ -1,0 +1,456 @@
+//! Two-level (hierarchical) consensus for large n (ROADMAP item 2).
+//!
+//! Flat gossip needs Θ(1/(1−λ₂)) rounds, and λ₂ → 1 as sparse graphs
+//! grow — at n ≈ 10⁵ a ring needs millions of rounds per epoch.  The
+//! standard systems answer is hierarchy: partition the nodes into
+//! `shards` contiguous blocks, gossip INSIDE each shard (cheap: small
+//! diameter), then let one aggregator per shard exchange shard-level
+//! aggregates on a ring of shards, and broadcast the resulting
+//! correction back to its members.  One epoch of
+//! [`HierarchicalConsensus::run`] is:
+//!
+//! 1. **intra**: `intra_rounds` of induced-subgraph gossip over the base
+//!    topology MINUS every cross-shard edge ([`InducedConsensus`] — so
+//!    churn composes exactly like the flat engine: inactive nodes are
+//!    isolated and hold their rows bit-for-bit);
+//! 2. **aggregate**: per-shard f64 means over the ACTIVE members (the
+//!    shard mean is invariant under step 1 — intra mixing is doubly
+//!    stochastic — so the aggregator's estimate is exact);
+//! 3. **inter**: `inter_rounds` of serial f64 mixing of the shard means
+//!    over the lazy WEIGHTED Metropolis ring of non-empty shards.  The
+//!    chain targets π_s ∝ A_s (the shard's active count):
+//!    `Q_st = (1/d_s)·min(1, A_t/A_s)` for ring neighbours, made lazy as
+//!    (Q+I)/2.  Rows sum to 1 and detailed balance `A_s Q_st = A_t Q_ts`
+//!    holds, so `Σ_s A_s v_s` is INVARIANT every round and the means
+//!    converge to the global active mean `Σ A_s v_s / Σ A_s`;
+//! 4. **broadcast**: every active node shifts by its shard's mean-shift,
+//!    `y_i += v_s(after) − v_s(before)`, computed in f64 and cast back
+//!    to f32.  The correction sums to zero across the active set (step
+//!    3's invariant), so the GLOBAL active mean is conserved to f64/f32
+//!    rounding; intra-shard disagreement left by finite `intra_rounds`
+//!    is preserved, not papered over — `inter_rounds = 0` is pure
+//!    shard-local gossip, and `shards = 1` is bitwise the flat engine.
+//!
+//! Everything here is O(n + E + shards·inter_rounds·d) per epoch; the
+//! inter stage runs serially on the main thread (shard counts are tiny
+//! next to n), so the threads=1 ≡ threads=k bitwise contract holds via
+//! the intra stage's pooled-but-order-fixed kernel alone.
+
+use crate::consensus::churn::InducedConsensus;
+use crate::topology::Topology;
+use crate::util::matrix::NodeMatrix;
+
+/// Two-level consensus: intra-shard induced gossip + inter-shard
+/// aggregator exchange.  See the module docs for the epoch algebra.
+pub struct HierarchicalConsensus {
+    n: usize,
+    shards: usize,
+    /// node → shard id (contiguous balanced blocks).
+    shard_of: Vec<usize>,
+    /// shard → `[lo, hi)` node range.
+    bounds: Vec<(usize, usize)>,
+    /// Induced-gossip engine over the base topology minus cross-shard
+    /// edges (shard-local mixing that composes with churn).
+    intra: InducedConsensus,
+    /// Scratch: per-shard active counts, flattened `[shards × d]` mean
+    /// buffers (current / next / initial) — reused across epochs.
+    counts: Vec<usize>,
+    v: Vec<f64>,
+    v_next: Vec<f64>,
+    v0: Vec<f64>,
+}
+
+impl HierarchicalConsensus {
+    /// Partition `topo`'s nodes into `shards` contiguous balanced blocks
+    /// (the first `n % shards` blocks get one extra node) and build the
+    /// shard-local intra topology.  `shards` is clamped to `[1, n]`.
+    pub fn new(topo: &Topology, shards: usize) -> HierarchicalConsensus {
+        let n = topo.n();
+        let shards = shards.clamp(1, n);
+        let base = n / shards;
+        let extra = n % shards;
+        let mut bounds = Vec::with_capacity(shards);
+        let mut shard_of = vec![0usize; n];
+        let mut lo = 0usize;
+        for s in 0..shards {
+            let hi = lo + base + usize::from(s < extra);
+            bounds.push((lo, hi));
+            for node in shard_of.iter_mut().take(hi).skip(lo) {
+                *node = s;
+            }
+            lo = hi;
+        }
+        // Shard-local subgraph: drop every cross-shard edge.
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for &j in topo.neighbors(i) {
+                if i < j && shard_of[i] == shard_of[j] {
+                    edges.push((i, j));
+                }
+            }
+        }
+        let intra_topo = Topology::from_edges(n, &edges);
+        HierarchicalConsensus {
+            n,
+            shards,
+            shard_of,
+            bounds,
+            intra: InducedConsensus::new(intra_topo),
+            counts: vec![0; shards],
+            v: Vec::new(),
+            v_next: Vec::new(),
+            v0: Vec::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn shard_of(&self, i: usize) -> usize {
+        self.shard_of[i]
+    }
+
+    /// One consensus phase: intra gossip, aggregate, inter exchange,
+    /// broadcast.  Inactive rows come back bitwise untouched.
+    pub fn run(
+        &mut self,
+        msgs: &mut NodeMatrix,
+        intra_rounds: usize,
+        inter_rounds: usize,
+        active: &[bool],
+    ) {
+        let n = self.n;
+        assert_eq!(msgs.n(), n);
+        assert_eq!(active.len(), n, "active mask must cover every node");
+        let d = msgs.d();
+
+        // 1. intra-shard gossip (induced by the churn mask).
+        self.intra.run(msgs, intra_rounds, active);
+        if inter_rounds == 0 {
+            return;
+        }
+
+        // 2. per-shard active counts + f64 means (ascending node order
+        // within each shard — the serial op sequence).
+        for (s, &(lo, hi)) in self.bounds.iter().enumerate() {
+            self.counts[s] = (lo..hi).filter(|&i| active[i]).count();
+        }
+        let ranks: Vec<usize> =
+            (0..self.shards).filter(|&s| self.counts[s] > 0).collect();
+        let m = ranks.len();
+        if m < 2 {
+            return; // nothing to exchange with
+        }
+        self.v.clear();
+        self.v.resize(m * d, 0.0);
+        for (r, &s) in ranks.iter().enumerate() {
+            let (lo, hi) = self.bounds[s];
+            let acc = &mut self.v[r * d..(r + 1) * d];
+            for i in lo..hi {
+                if active[i] {
+                    for (a, &x) in acc.iter_mut().zip(msgs.row(i)) {
+                        *a += x as f64;
+                    }
+                }
+            }
+            let c = self.counts[s] as f64;
+            for a in acc.iter_mut() {
+                *a /= c;
+            }
+        }
+        self.v0.clear();
+        self.v0.extend_from_slice(&self.v);
+
+        // 3. inter exchange on the lazy weighted-Metropolis ring of the
+        // m non-empty shards (π_s ∝ A_s; Σ A_s v_s invariant).  Rows are
+        // built once per call — (col, weight) in ascending-rank order —
+        // then applied serially in f64.
+        let rows = self.inter_ring_rows(&ranks, m);
+        self.v_next.clear();
+        self.v_next.resize(m * d, 0.0);
+        for _ in 0..inter_rounds {
+            for (r, row) in rows.iter().enumerate() {
+                let out = &mut self.v_next[r * d..(r + 1) * d];
+                out.fill(0.0);
+                for &(c, w) in row {
+                    let src = &self.v[c * d..(c + 1) * d];
+                    for (o, &x) in out.iter_mut().zip(src) {
+                        *o += w * x;
+                    }
+                }
+            }
+            std::mem::swap(&mut self.v, &mut self.v_next);
+        }
+
+        // 4. broadcast the shard's mean-shift to its active members.
+        let mut rank_of = vec![usize::MAX; self.shards];
+        for (r, &s) in ranks.iter().enumerate() {
+            rank_of[s] = r;
+        }
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            let r = rank_of[self.shard_of[i]];
+            let (after, before) =
+                (&self.v[r * d..(r + 1) * d], &self.v0[r * d..(r + 1) * d]);
+            for (k, y) in msgs.row_mut(i).iter_mut().enumerate() {
+                *y = (*y as f64 + (after[k] - before[k])) as f32;
+            }
+        }
+    }
+
+    /// The lazy weighted-Metropolis ring rows over `m` non-empty shards:
+    /// row r is a sorted `(rank, weight)` list.  Target weights are the
+    /// active counts A; `Q_st = (1/d_s)·min(1, A_t/A_s)` for ring
+    /// neighbours (`d_s` = 1 when m = 2, else 2), then (Q+I)/2, so rows
+    /// sum to 1, `A_s Q_st = A_t Q_ts` (detailed balance), and every
+    /// diagonal is ≥ 0.5 (aperiodic — an unweighted even ring would
+    /// oscillate forever without the lazy step).
+    fn inter_ring_rows(&self, ranks: &[usize], m: usize) -> Vec<Vec<(usize, f64)>> {
+        debug_assert!(m >= 2);
+        let deg = if m == 2 { 1.0 } else { 2.0 };
+        let mut rows = Vec::with_capacity(m);
+        for r in 0..m {
+            let a_r = self.counts[ranks[r]] as f64;
+            let mut nbrs = vec![(r + 1) % m, (r + m - 1) % m];
+            nbrs.sort_unstable();
+            nbrs.dedup();
+            nbrs.retain(|&c| c != r);
+            let mut row: Vec<(usize, f64)> = Vec::with_capacity(nbrs.len() + 1);
+            let mut off = 0.0f64;
+            for &c in &nbrs {
+                let a_c = self.counts[ranks[c]] as f64;
+                let q = (1.0 / deg) * (a_c / a_r).min(1.0);
+                off += q;
+                row.push((c, q * 0.5)); // lazy halving
+            }
+            let diag = (1.0 - off) * 0.5 + 0.5;
+            row.push((r, diag));
+            row.sort_unstable_by_key(|&(c, _)| c);
+            rows.push(row);
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    fn random_msgs(g: &mut crate::prop::Gen, n: usize, d: usize) -> NodeMatrix {
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal_f32(d, 3.0)).collect();
+        NodeMatrix::from_rows(&rows)
+    }
+
+    fn random_active(g: &mut crate::prop::Gen, n: usize) -> Vec<bool> {
+        let mut active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
+        let forced = g.usize_in(0, n - 1);
+        active[forced] = true;
+        active
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        let topo = Topology::ring(10);
+        let h = HierarchicalConsensus::new(&topo, 3);
+        assert_eq!(h.shards(), 3);
+        // 10 = 4 + 3 + 3, contiguous
+        let sizes: Vec<usize> =
+            (0..3).map(|s| (0..10).filter(|&i| h.shard_of(i) == s).count()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        for i in 1..10 {
+            assert!(h.shard_of(i) >= h.shard_of(i - 1), "blocks must be contiguous");
+        }
+        // shards > n clamps to n (singleton shards)
+        let h1 = HierarchicalConsensus::new(&Topology::ring(4), 99);
+        assert_eq!(h1.shards(), 4);
+    }
+
+    #[test]
+    fn single_shard_is_the_flat_engine_bitwise() {
+        // shards = 1 keeps every edge and never builds an inter ring, so
+        // the result is bit-for-bit the flat induced-gossip engine.
+        forall(15, 0x41_01, |g| {
+            let n = g.usize_in(2, 12);
+            let d = g.usize_in(1, 8);
+            let topo = Topology::erdos_connected(n, 0.4, g.u64());
+            let active = random_active(g, n);
+            let rounds = g.usize_in(0, 6);
+            let msgs0 = random_msgs(g, n, d);
+
+            let mut flat = InducedConsensus::new(topo.clone());
+            let mut a = msgs0.clone();
+            flat.run(&mut a, rounds, &active);
+
+            let mut h = HierarchicalConsensus::new(&topo, 1);
+            let mut b = msgs0;
+            h.run(&mut b, rounds, 3, &active);
+
+            for i in 0..n {
+                for k in 0..d {
+                    crate::prop_assert!(
+                        a.row(i)[k].to_bits() == b.row(i)[k].to_bits(),
+                        "({i},{k}) flat={} hier={}",
+                        a.row(i)[k],
+                        b.row(i)[k]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_inter_rounds_is_pure_intra_gossip_bitwise() {
+        // inter_rounds = 0 must be exactly shard-local induced gossip —
+        // no broadcast, no hidden averaging.
+        forall(15, 0x41_02, |g| {
+            let n = g.usize_in(4, 16);
+            let d = g.usize_in(1, 6);
+            let shards = g.usize_in(2, 4);
+            let topo = Topology::erdos_connected(n, 0.5, g.u64());
+            let active = random_active(g, n);
+            let rounds = g.usize_in(1, 5);
+            let msgs0 = random_msgs(g, n, d);
+
+            let mut h = HierarchicalConsensus::new(&topo, shards);
+            let mut a = msgs0.clone();
+            h.run(&mut a, rounds, 0, &active);
+
+            // reference: induced gossip over the shard-local subgraph
+            let intra_edges: Vec<(usize, usize)> = (0..n)
+                .flat_map(|i| {
+                    let h = &h;
+                    topo.neighbors(i)
+                        .iter()
+                        .filter(move |&&j| i < j && h.shard_of(i) == h.shard_of(j))
+                        .map(move |&j| (i, j))
+                })
+                .collect();
+            let mut flat = InducedConsensus::new(Topology::from_edges(n, &intra_edges));
+            let mut b = msgs0;
+            flat.run(&mut b, rounds, &active);
+
+            for i in 0..n {
+                crate::prop_assert!(a.row(i) == b.row(i), "row {i} differs");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conserves_global_active_mean() {
+        // The tentpole invariant: across random topologies, shard
+        // counts, churn masks, and round budgets, the ACTIVE-set mean is
+        // conserved (intra mixing is doubly stochastic; the inter
+        // correction sums to zero by the weighted chain's π-invariance).
+        forall(30, 0x41_03, |g| {
+            let n = g.usize_in(4, 20);
+            let d = g.usize_in(1, 6);
+            let shards = g.usize_in(1, 5);
+            let topo = Topology::erdos_connected(n, 0.4, g.u64());
+            let active = random_active(g, n);
+            let msgs0 = random_msgs(g, n, d);
+            let before = InducedConsensus::active_mean_f64(&msgs0, &active).unwrap();
+
+            let mut h = HierarchicalConsensus::new(&topo, shards);
+            let mut msgs = msgs0;
+            h.run(&mut msgs, g.usize_in(0, 8), g.usize_in(0, 12), &active);
+
+            let after = InducedConsensus::active_mean_f64(&msgs, &active).unwrap();
+            for k in 0..d {
+                crate::prop_assert_close!(before[k], after[k], 1e-4);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inactive_rows_bitwise_held() {
+        forall(20, 0x41_04, |g| {
+            let n = g.usize_in(4, 16);
+            let shards = g.usize_in(1, 4);
+            let topo = Topology::erdos_connected(n, 0.5, g.u64());
+            let active = random_active(g, n);
+            let msgs0 = random_msgs(g, n, 4);
+            let mut h = HierarchicalConsensus::new(&topo, shards);
+            let mut msgs = msgs0.clone();
+            h.run(&mut msgs, g.usize_in(0, 5), g.usize_in(0, 5), &active);
+            for i in 0..n {
+                if !active[i] {
+                    crate::prop_assert!(msgs.row(i) == msgs0.row(i), "inactive row {i} drifted");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn converges_to_global_active_mean() {
+        // Enough intra AND inter rounds drive every active node to the
+        // GLOBAL active mean — the hierarchy is consensus, not just
+        // shard-local averaging.  Complete base graph keeps every shard
+        // block internally connected under this mask.
+        let n = 12;
+        let topo = Topology::complete(n);
+        let mut g = crate::prop::Gen::new(0x41_05);
+        let msgs0 = random_msgs(&mut g, n, 4);
+        let mut active = vec![true; n];
+        active[2] = false;
+        active[9] = false;
+        let want = InducedConsensus::active_mean_f64(&msgs0, &active).unwrap();
+
+        let mut h = HierarchicalConsensus::new(&topo, 3);
+        let mut msgs = msgs0;
+        h.run(&mut msgs, 200, 400, &active);
+        for i in 0..n {
+            if active[i] {
+                for k in 0..4 {
+                    assert!(
+                        (msgs.row(i)[k] as f64 - want[k]).abs() < 1e-4,
+                        "node {i} col {k}: {} vs {}",
+                        msgs.row(i)[k],
+                        want[k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inter_ring_rows_are_stochastic_and_detailed_balanced() {
+        // Unequal shard populations: rows sum to 1 and A_s·Q_st = A_t·Q_ts
+        // (the invariance that makes the broadcast conserve the mean).
+        let topo = Topology::ring(10);
+        let mut h = HierarchicalConsensus::new(&topo, 4); // blocks 3,3,2,2
+        let active = vec![true; 10];
+        // populate counts the way run() does
+        for (s, &(lo, hi)) in h.bounds.clone().iter().enumerate() {
+            h.counts[s] = (lo..hi).filter(|&i| active[i]).count();
+        }
+        let ranks: Vec<usize> = (0..4).collect();
+        let rows = h.inter_ring_rows(&ranks, 4);
+        let q = |r: usize, c: usize| -> f64 {
+            rows[r].iter().find(|&&(cc, _)| cc == c).map_or(0.0, |&(_, w)| w)
+        };
+        for (r, row) in rows.iter().enumerate() {
+            let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+            assert!((sum - 1.0).abs() < 1e-12, "row {r} sums to {sum}");
+            assert!(q(r, r) >= 0.5, "lazy diagonal must dominate");
+        }
+        for r in 0..4 {
+            for c in 0..4 {
+                let lhs = h.counts[r] as f64 * q(r, c);
+                let rhs = h.counts[c] as f64 * q(c, r);
+                assert!((lhs - rhs).abs() < 1e-12, "detailed balance ({r},{c})");
+            }
+        }
+    }
+}

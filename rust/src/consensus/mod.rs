@@ -15,6 +15,7 @@
 //! untouched, so results are bit-identical at any thread count.
 
 pub mod churn;
+pub mod hierarchical;
 pub mod push_sum;
 pub mod sparse;
 

@@ -151,6 +151,73 @@ fn build_in_csr(g: &Digraph, in_ptr: &mut Vec<usize>, in_src: &mut Vec<u32>, in_
     }
 }
 
+/// Build the in-edge CSR of `g.induced(active)` straight from the base
+/// digraph + mask — O(n + E) with flat temporaries only: neither the
+/// induced [`Digraph`] (one heap list per node, rebuilt per churn epoch)
+/// nor a per-destination list-of-lists is materialised.  Count pass,
+/// prefix sum, then an ascending-source fill pass, so each destination's
+/// source list is ascending exactly as [`build_in_csr`] produces it;
+/// shares use INDUCED out-degrees (inactive source ⇒ degree 0 ⇒ self
+/// share 1).  Pinned bitwise against the composed build by
+/// `tests::induced_in_csr_matches_materialised_build_bitwise`.
+fn build_induced_in_csr(
+    g: &Digraph,
+    active: &[bool],
+    in_ptr: &mut Vec<usize>,
+    in_src: &mut Vec<u32>,
+    in_share: &mut Vec<f64>,
+) {
+    let n = g.n();
+    assert_eq!(active.len(), n, "active mask must cover every node");
+    let deg: Vec<usize> = (0..n)
+        .map(|i| {
+            if active[i] {
+                g.out[i].iter().filter(|&&j| active[j]).count()
+            } else {
+                0
+            }
+        })
+        .collect();
+    // in-degree counts: every node keeps its self edge
+    let mut count = vec![1usize; n];
+    for i in 0..n {
+        if active[i] {
+            for &j in &g.out[i] {
+                if active[j] {
+                    count[j] += 1;
+                }
+            }
+        }
+    }
+    in_ptr.clear();
+    in_ptr.push(0);
+    let mut total = 0usize;
+    for &c in &count {
+        total += c;
+        in_ptr.push(total);
+    }
+    in_src.clear();
+    in_src.resize(total, 0);
+    in_share.clear();
+    in_share.resize(total, 0.0);
+    let mut cur: Vec<usize> = in_ptr[..n].to_vec();
+    for i in 0..n {
+        let share = 1.0 / (1.0 + deg[i] as f64);
+        in_src[cur[i]] = i as u32;
+        in_share[cur[i]] = share;
+        cur[i] += 1;
+        if active[i] {
+            for &j in &g.out[i] {
+                if active[j] {
+                    in_src[cur[j]] = i as u32;
+                    in_share[cur[j]] = share;
+                    cur[j] += 1;
+                }
+            }
+        }
+    }
+}
+
 impl PushSum {
     /// Initialise from the per-node value arena.
     pub fn new(g: Digraph, values: &NodeMatrix) -> PushSum {
@@ -180,15 +247,22 @@ impl PushSum {
     }
 
     /// Restrict subsequent rounds to the `active` subgraph: the in-edge
-    /// CSR is rebuilt in place over [`Digraph::induced`] while (x, φ)
+    /// CSR is rebuilt in place over the induced arc set while (x, φ)
     /// carry over — an inactive node's only in-edge is its self-share 1,
     /// so it holds its state bit-for-bit and a rejoining node re-enters
     /// the ratio average with whatever it held (churn semantics,
     /// DESIGN.md §churn).  Total mass over the whole vertex set is still
-    /// conserved, so the active-set mass is too.
+    /// conserved, so the active-set mass is too.  The build reads the
+    /// base digraph + mask directly ([`build_induced_in_csr`]) — no
+    /// induced [`Digraph`] is materialised on the per-epoch churn path.
     pub fn set_active(&mut self, active: &[bool]) {
-        let induced = self.g.induced(active);
-        build_in_csr(&induced, &mut self.in_ptr, &mut self.in_src, &mut self.in_share);
+        build_induced_in_csr(
+            &self.g,
+            active,
+            &mut self.in_ptr,
+            &mut self.in_src,
+            &mut self.in_share,
+        );
     }
 
     /// Undo [`PushSum::set_active`]: rebuild the CSR over the full base
@@ -362,6 +436,32 @@ mod tests {
                 assert!(g.out[i].contains(&j), "induced invented arc ({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn induced_in_csr_matches_materialised_build_bitwise() {
+        // The mask-direct CSR build must reproduce the composed
+        // `build_in_csr(&g.induced(active), ..)` exactly — same pointers,
+        // same ascending source lists, bit-identical shares.
+        forall(20, 0x50_06, |g| {
+            let n = g.usize_in(2, 14);
+            let dg = Digraph::random_strongly_connected(n, 0.4, g.u64());
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.6)).collect();
+
+            let (mut fp, mut fs, mut fw) = (Vec::new(), Vec::new(), Vec::new());
+            build_induced_in_csr(&dg, &active, &mut fp, &mut fs, &mut fw);
+
+            let (mut sp, mut ss, mut sw) = (Vec::new(), Vec::new(), Vec::new());
+            build_in_csr(&dg.induced(&active), &mut sp, &mut ss, &mut sw);
+
+            crate::prop_assert!(fp == sp, "in_ptr mismatch");
+            crate::prop_assert!(fs == ss, "in_src mismatch");
+            crate::prop_assert!(
+                fw.iter().zip(&sw).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "in_share drifted"
+            );
+            Ok(())
+        });
     }
 
     #[test]

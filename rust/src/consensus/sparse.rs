@@ -56,9 +56,46 @@ impl SparseMix {
     /// edges (their message is held bit-for-bit), active nodes mix over
     /// active neighbours with induced degrees — the sparse engine's face
     /// of the churn semantics, numerically equivalent to the dense
-    /// induced engine (tested below).
+    /// induced engine (tested below).  Built straight from the base
+    /// graph + mask in O(n + E) — the induced `Topology` (one heap
+    /// adjacency list per node, per epoch under churn) is never
+    /// materialised; the weight arithmetic replays
+    /// [`SparseMix::metropolis`]-over-the-induced-graph exactly.
     pub fn metropolis_active(topo: &Topology, lazy: bool, active: &[bool]) -> SparseMix {
-        SparseMix::metropolis(&topo.induced(active), lazy)
+        assert_eq!(active.len(), topo.n(), "active mask must cover every node");
+        let n = topo.n();
+        let deg_act: Vec<usize> = (0..n)
+            .map(|i| {
+                if active[i] {
+                    topo.neighbors(i).iter().filter(|&&k| active[k]).count()
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let mut self_w = vec![0.0f32; n];
+        let mut edge_ptr = Vec::with_capacity(n + 1);
+        let mut edge_cols = Vec::new();
+        let mut edge_w = Vec::new();
+        edge_ptr.push(0);
+        for i in 0..n {
+            let mut off = 0.0f64;
+            if active[i] {
+                for &j in topo.neighbors(i) {
+                    if !active[j] {
+                        continue;
+                    }
+                    let w = 1.0 / (1.0 + deg_act[i].max(deg_act[j]) as f64);
+                    let w = if lazy { w * 0.5 } else { w };
+                    edge_cols.push(j as u32);
+                    edge_w.push(w as f32);
+                    off += w;
+                }
+            }
+            edge_ptr.push(edge_cols.len());
+            self_w[i] = (1.0 - off) as f32;
+        }
+        SparseMix { n, self_w, edge_ptr, edge_cols, edge_w }
     }
 
     pub fn n(&self) -> usize {
@@ -209,6 +246,33 @@ mod tests {
                 if !active[i] {
                     crate::prop_assert!(b.row(i) == msgs0.row(i), "sparse moved inactive row {i}");
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn metropolis_active_matches_materialised_induced_build_bitwise() {
+        // The O(n+E) mask-direct build must reproduce the old
+        // `metropolis(&topo.induced(active))` composition field for
+        // field, bit for bit.
+        forall(20, 0x5A_04, |g| {
+            let n = g.usize_in(2, 18);
+            let topo = Topology::erdos_connected(n, 0.4, g.u64());
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.6)).collect();
+            for lazy in [false, true] {
+                let fast = SparseMix::metropolis_active(&topo, lazy, &active);
+                let slow = SparseMix::metropolis(&topo.induced(&active), lazy);
+                crate::prop_assert!(fast.edge_ptr == slow.edge_ptr, "edge_ptr (lazy={lazy})");
+                crate::prop_assert!(fast.edge_cols == slow.edge_cols, "edge_cols (lazy={lazy})");
+                crate::prop_assert!(
+                    fast.self_w.iter().zip(&slow.self_w).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "self weights drifted (lazy={lazy})"
+                );
+                crate::prop_assert!(
+                    fast.edge_w.iter().zip(&slow.edge_w).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "edge weights drifted (lazy={lazy})"
+                );
             }
             Ok(())
         });

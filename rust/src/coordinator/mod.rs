@@ -148,6 +148,14 @@ pub enum ConsensusMode {
     /// Per-node round counts r_i(t) ~ Uniform{mean−jitter, …, mean+jitter}
     /// (network-delay variability of paper Sec. 3).
     GossipJitter { mean: usize, jitter: usize },
+    /// Two-level consensus for large n (sim only; DESIGN.md §consensus):
+    /// `intra_rounds` of gossip inside each of `shards` contiguous node
+    /// blocks (induced by the churn mask, shard-local edges only), then
+    /// `inter_rounds` of aggregator exchange on a weighted ring of
+    /// shards, broadcast back as a per-shard mean correction.  Conserves
+    /// the global active-set mean; `shards = 1` is bitwise
+    /// `Gossip { rounds: intra_rounds }`.
+    Hierarchical { shards: usize, intra_rounds: usize, inter_rounds: usize },
 }
 
 /// Gossip budget meaning "as many rounds as fit in T_c" — a

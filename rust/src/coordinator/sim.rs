@@ -34,6 +34,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::churn::ChurnSchedule;
 use crate::consensus::churn::InducedConsensus;
+use crate::consensus::hierarchical::HierarchicalConsensus;
 use crate::consensus::Consensus;
 use crate::coordinator::epoch::{self, NodeState};
 use crate::coordinator::{
@@ -651,6 +652,16 @@ fn epoch_loop<B: NodeBlocks>(
     // by active-set key (consensus::churn).
     let mut cons = InducedConsensus::new(topo.clone());
 
+    // Two-level engine, built only when the spec asks for it (the shard
+    // partition and intra topology are fixed for the whole run; churn
+    // composes per epoch through the active mask).
+    let mut hier = match spec.consensus {
+        ConsensusMode::Hierarchical { shards, .. } => {
+            Some(HierarchicalConsensus::new(topo, shards))
+        }
+        _ => None,
+    };
+
     // Network fabric (ISSUE 6): when the spec opts out of the abstract
     // round budget, a discrete-event link simulation measures how many
     // gossip rounds fit in T_c per node, with the configured Gossip
@@ -675,6 +686,11 @@ fn epoch_loop<B: NodeBlocks>(
             "NetworkModel::Fabric requires ConsensusMode::Gossip: GossipJitter is the abstract \
              stand-in for the per-node round variability the fabric measures — use one or the \
              other"
+        ),
+        (NetworkModel::Fabric(_), ConsensusMode::Hierarchical { .. }) => panic!(
+            "NetworkModel::Fabric requires ConsensusMode::Gossip: the hierarchical scheme's \
+             aggregator exchange has no per-link fabric model (only flat gossip rounds are \
+             measured)"
         ),
     };
 
@@ -792,6 +808,26 @@ fn epoch_loop<B: NodeBlocks>(
                     };
                 }
                 cons.run_per_node(&mut msgs, &rounds_buf, active);
+            }
+            ConsensusMode::Hierarchical { intra_rounds, inter_rounds, .. } => {
+                assert!(
+                    intra_rounds <= MAX_SIM_GOSSIP_ROUNDS
+                        && inter_rounds <= MAX_SIM_GOSSIP_ROUNDS,
+                    "Hierarchical {{ intra_rounds: {intra_rounds}, inter_rounds: \
+                     {inter_rounds} }}: the sim executes these budgets literally — use \
+                     finite values"
+                );
+                if act > 0 {
+                    hier.as_mut()
+                        .expect("hierarchical engine built for Hierarchical mode")
+                        .run(&mut msgs, intra_rounds, inter_rounds, active);
+                }
+                // The rounds log records per-node GOSSIP rounds; the
+                // aggregator exchange is shard-level, so active nodes
+                // log the intra budget and absent nodes 0.
+                for (i, r) in rounds_buf.iter_mut().enumerate() {
+                    *r = if active[i] { intra_rounds } else { 0 };
+                }
             }
         }
         for i in 0..n {
@@ -1259,6 +1295,77 @@ mod tests {
         // measure zero rounds, present ones hit the ideal-fabric cap
         assert_eq!(out.rounds[3], vec![4, 0, 4, 0]);
         assert_eq!(out.active_counts, vec![4, 3, 3, 3]);
+    }
+
+    #[test]
+    fn hierarchical_single_shard_matches_gossip_bitwise() {
+        // shards = 1 keeps every edge and the inter ring never forms,
+        // so a hierarchical run IS the flat Gossip run bit for bit.
+        let go = |mode: ConsensusMode| {
+            let topo = Topology::paper_fig2();
+            let (src, opt) = linreg_setup(16, 5);
+            let strag = ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 40 };
+            let spec = RunSpec::amb("hier", 2.0, 0.5, 5, 6, 19).with_consensus(mode);
+            run_on(&spec, &topo, &strag, src, opt)
+        };
+        let flat = go(ConsensusMode::Gossip { rounds: 5 });
+        let hier = go(ConsensusMode::Hierarchical {
+            shards: 1,
+            intra_rounds: 5,
+            inter_rounds: 3,
+        });
+        assert_eq!(flat.rounds, hier.rounds);
+        for (a, b) in flat.final_w.as_slice().iter().zip(hier.final_w.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in flat.record.epochs.iter().zip(&hier.record.epochs) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+            assert_eq!(a.consensus_err.to_bits(), b.consensus_err.to_bits());
+        }
+    }
+
+    #[test]
+    fn hierarchical_converges_and_composes_with_churn() {
+        use crate::churn::ChurnSpec;
+        let topo = Topology::small_world(24, 3, 0.2, 11);
+        let (src, opt) = linreg_setup(16, 5);
+        let strag = ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 40 };
+        let spec = RunSpec::amb("hier-churn", 2.0, 0.5, 5, 12, 19)
+            .with_consensus(ConsensusMode::Hierarchical {
+                shards: 4,
+                intra_rounds: 6,
+                inter_rounds: 4,
+            })
+            .with_churn(ChurnSpec::IidDropout { p: 0.15, seed: 9 });
+        let out = run_on(&spec, &topo, &strag, src, opt);
+        assert_eq!(out.record.epochs.len(), 12);
+        let first = out.record.epochs[0].error;
+        let last = out.record.epochs.last().unwrap().error;
+        assert!(last < first, "no progress: {first} -> {last}");
+        // the rounds log follows membership: intra budget or 0
+        for (i, rs) in out.rounds.iter().enumerate() {
+            for (t, &r) in rs.iter().enumerate() {
+                assert!(r == 6 || r == 0, "node {i} epoch {t}: rounds {r}");
+            }
+        }
+        assert!(out.active_counts.iter().any(|&a| a < 24), "churn never bit");
+    }
+
+    #[test]
+    #[should_panic(expected = "requires ConsensusMode::Gossip")]
+    fn fabric_with_hierarchical_consensus_is_rejected() {
+        let topo = Topology::ring(4);
+        let (src, opt) = linreg_setup(8, 7);
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
+        let spec = RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
+            .with_consensus(ConsensusMode::Hierarchical {
+                shards: 2,
+                intra_rounds: 3,
+                inter_rounds: 2,
+            })
+            .with_network(NetworkModel::Fabric(crate::net::FabricSpec::ideal()));
+        let _ = run_on(&spec, &topo, &strag, src, opt);
     }
 
     #[test]

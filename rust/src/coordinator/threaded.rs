@@ -155,6 +155,11 @@ fn run_threaded(
          so measured rounds come from real wall-clock deadlines, not the event fabric — run \
          fabric specs with --runtime sim"
     );
+    assert!(
+        !matches!(spec.consensus, ConsensusMode::Hierarchical { .. }),
+        "ConsensusMode::Hierarchical is sim-only: the threaded runtime has no \
+         shard-aggregator wire protocol — run this spec on --runtime sim"
+    );
     let p = Arc::new(topo.metropolis().lazy());
 
     // Under Exact consensus the communication graph is all-to-all
@@ -480,7 +485,9 @@ fn consensus_phase(
                     ConsensusMode::GossipJitter { mean, jitter } => {
                         epoch::gossip_jitter_rounds(spec.seed, node, t, mean, jitter)
                     }
-                    ConsensusMode::Exact => unreachable!(),
+                    ConsensusMode::Exact | ConsensusMode::Hierarchical { .. } => {
+                        unreachable!()
+                    }
                 }
             };
             // This epoch's gossip runs over the ACTIVE subgraph:
@@ -654,6 +661,10 @@ fn consensus_phase(
             }
             rounds_done = round;
         }
+        ConsensusMode::Hierarchical { .. } => panic!(
+            "ConsensusMode::Hierarchical is sim-only: the threaded runtime has no \
+             shard-aggregator wire protocol — run this spec on `--runtime sim`"
+        ),
     }
     rounds_done
 }

@@ -29,6 +29,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod scale;
 pub mod sweep;
 pub mod thm7;
 
@@ -328,8 +329,9 @@ pub fn run_one(ctx: &Ctx, id: &str) -> Result<FigReport> {
         "thm7" => thm7::thm7(ctx),
         "churn" => churn::churn(ctx),
         "dg" => dg::dg(ctx),
+        "scale" => scale::scale(ctx),
         other => anyhow::bail!(
-            "unknown figure id '{other}' (try f1a f1b f3 f3n f4 f5 f5n f6 f7 f8 f9 thm7 churn dg)"
+            "unknown figure id '{other}' (try f1a f1b f3 f3n f4 f5 f5n f6 f7 f8 f9 thm7 churn dg scale)"
         ),
     }
 }

@@ -1,0 +1,210 @@
+//! ISSUE 7 n-scaling acceptance harness: the consensus plane two orders
+//! of magnitude past the paper's n ≈ 64 — small-world clusters under
+//! i.i.d. churn, run end-to-end on the sim runtime with flat gossip and
+//! with the hierarchical (shard + aggregator-ring) scheme.
+//!
+//! What it certifies, per grid point:
+//!
+//! * the mixing layer's footprint scales with EDGES, not n² (the CSR
+//!   build path never materialises dense rows — `nnz ≤ 8n` on the
+//!   small-world family, vs n² dense entries);
+//! * a full optimisation run at n = 10⁵ completes in wall-clock minutes
+//!   (the old dense plane was n² per gossip round — 10¹⁰ multiplies —
+//!   before it ran out of memory building P);
+//! * both consensus schemes drive the workload to a finite, sane final
+//!   loss with churn resampling the active set every epoch.
+//!
+//! The grid runs SERIALLY (unlike the figure sweeps): each point's
+//! wall-clock is part of the acceptance evidence, so points must not
+//! perturb each other's timing.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{Ctx, FigReport};
+use crate::churn::ChurnSpec;
+use crate::coordinator::sim::SimRuntime;
+use crate::coordinator::{ConsensusMode, RunSpec, Runtime, Scheme};
+use crate::data::LinRegStream;
+use crate::exec::{DataSource, ExecEngine, NativeExec};
+use crate::straggler::Deterministic;
+use crate::topology::Topology;
+use crate::util::csv::Csv;
+
+/// One (n, consensus) grid point's acceptance evidence.
+pub struct ScalePoint {
+    pub n: usize,
+    pub consensus: &'static str,
+    /// Stored entries in the mixing matrix (CSR).
+    pub nnz: usize,
+    pub wall_secs: f64,
+    pub final_loss: f64,
+    pub final_error: f64,
+    pub final_consensus_err: f64,
+}
+
+/// Run one end-to-end sim at cluster size `n` and measure it.
+///
+/// The workload is deliberately narrow (d = 16 linear regression): the
+/// quantity under test is the consensus plane, and a narrow model keeps
+/// the per-epoch gradient cost at O(n) so mixing dominates.
+pub fn scale_point(
+    n: usize,
+    consensus: ConsensusMode,
+    label: &'static str,
+    epochs: usize,
+    seed: u64,
+) -> Result<ScalePoint> {
+    let topo = Topology::small_world(n, 3, 0.1, seed ^ 0x5c);
+    let nnz = topo.metropolis().nnz();
+
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(16, seed)));
+    let f_star = src.f_star();
+    let opt = super::optimizer_for(&src, (4 * n) as f64);
+    let mk = {
+        let src = src.clone();
+        move |_i: usize| -> Box<dyn ExecEngine> {
+            Box::new(NativeExec::new(src.clone(), opt.clone()))
+        }
+    };
+    // Deterministic unit speed: every node contributes 2·unit_batch
+    // gradients per T = 2.0 compute phase — stragglers are not under
+    // test here, the plane is.
+    let strag = Deterministic { unit_time: 1.0, unit_batch: 4 };
+    let spec = RunSpec::new(
+        label,
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
+        epochs,
+        seed,
+    )
+    .with_consensus(consensus)
+    .with_churn(ChurnSpec::IidDropout { p: 0.1, seed: seed ^ 0xC4 });
+
+    let t0 = Instant::now();
+    let out = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star);
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    let last = out
+        .record
+        .epochs
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("scale run '{label}' (n={n}) recorded no epochs"))?;
+    Ok(ScalePoint {
+        n,
+        consensus: label,
+        nnz,
+        wall_secs,
+        final_loss: last.loss,
+        final_error: last.error,
+        final_consensus_err: last.consensus_err,
+    })
+}
+
+/// The per-n consensus configurations under test: flat sparse gossip and
+/// the two-level hierarchy (~1000-node shards, budget 3 intra + 2 inter).
+fn modes_for(n: usize) -> [(ConsensusMode, &'static str); 2] {
+    [
+        (ConsensusMode::Gossip { rounds: 3 }, "gossip3"),
+        (
+            ConsensusMode::Hierarchical {
+                shards: (n / 1000).max(4),
+                intra_rounds: 3,
+                inter_rounds: 2,
+            },
+            "hier",
+        ),
+    ]
+}
+
+pub fn scale(ctx: &Ctx) -> Result<FigReport> {
+    // Quick mode (the CI smoke) stops at n = 10⁴; the full harness runs
+    // the 10⁵ acceptance point.
+    let ns: &[usize] = if ctx.quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    let epochs = ctx.scaled(4);
+
+    let mut points = Vec::new();
+    for &n in ns {
+        for (mode, label) in modes_for(n) {
+            points.push(scale_point(n, mode, label, epochs, ctx.seed)?);
+        }
+    }
+
+    let mut csv = Csv::new(&[
+        "n", "consensus", "nnz", "dense_entries", "wall_secs", "loss", "error", "consensus_err",
+    ]);
+    for p in &points {
+        csv.push(&[
+            p.n.to_string(),
+            p.consensus.to_string(),
+            p.nnz.to_string(),
+            (p.n * p.n).to_string(),
+            format!("{:.3}", p.wall_secs),
+            format!("{:e}", p.final_loss),
+            format!("{:e}", p.final_error),
+            format!("{:e}", p.final_consensus_err),
+        ]);
+    }
+    let path = ctx.out_dir.join("scale_sweep.csv");
+    csv.save(&path)?;
+
+    // Acceptance shapes: (a) sparse footprint — stored entries a small
+    // constant multiple of n on the small-world family (dense is n²);
+    // (b) every run finishes with finite, non-degenerate numerics;
+    // (c) each point completes within a generous per-run wall budget
+    // (the 10⁵ point takes seconds when mixing is O(E·d); the budget
+    // only trips if the plane regresses toward n²).
+    let sparse = points.iter().all(|p| p.nnz <= 8 * p.n);
+    let finite = points
+        .iter()
+        .all(|p| p.final_loss.is_finite() && p.final_error.is_finite());
+    let fast = points.iter().all(|p| p.wall_secs < 600.0);
+
+    let big = points.iter().max_by_key(|p| p.n).expect("non-empty grid");
+    Ok(FigReport {
+        id: "scale",
+        title: "consensus plane at n up to 1e5 (sparse-first mixing + hierarchy)",
+        paper: "mixing memory/time ∝ edges (not n²); 1e5-node churn sweep in minutes".into(),
+        measured: format!(
+            "n={}: nnz={} ({}x n, dense would be {:.1e}), wall {:.1}s/run; sparse={sparse} \
+             finite={finite} fast={fast}",
+            big.n,
+            big.nnz,
+            big.nnz / big.n,
+            (big.n * big.n) as f64,
+            big.wall_secs,
+        ),
+        shape_holds: sparse && finite && fast,
+        outputs: vec![path],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature grid exercises the exact harness path (both consensus
+    /// modes, churn, CSV row shape) without large-n cost; the full grid
+    /// is covered by `amb figures --fig scale` / the CI quick smoke.
+    #[test]
+    fn scale_point_runs_both_modes_small() {
+        for (mode, label) in modes_for(512) {
+            let p = scale_point(512, mode, label, 3, 11).unwrap();
+            assert_eq!(p.n, 512);
+            assert!(p.nnz <= 8 * p.n, "{label}: nnz {} vs n {}", p.nnz, p.n);
+            assert!(p.nnz >= 2 * p.n, "{label}: small-world P should have ≥ ring nnz");
+            assert!(p.final_loss.is_finite() && p.final_error.is_finite(), "{label}");
+            assert!(p.wall_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn hier_shard_count_scales_with_n() {
+        let (m, _) = modes_for(100_000)[1];
+        match m {
+            ConsensusMode::Hierarchical { shards, .. } => assert_eq!(shards, 100),
+            other => panic!("expected hierarchical, got {other:?}"),
+        }
+    }
+}

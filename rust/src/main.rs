@@ -83,6 +83,8 @@ fn print_usage() {
          \u{20}       --workload <linreg|logreg>\n\
          \u{20}       [--runtime sim|threaded] [--nodes N] [--epochs N]\n\
          \u{20}       [--t-compute S] [--t-consensus S] [--rounds R] [--exact-consensus]\n\
+         \u{20}       [--shards S [--intra R] [--inter R]] (hierarchical consensus, sim only)\n\
+         \u{20}       [--topology <ring|small-world|expander|erdos|fig2>]\n\
          \u{20}       [--per-node-batch B] [--ignore K] [--delay D]\n\
          \u{20}       [--straggler <shiftedexp|induced|pause|none>]\n\
          \u{20}       [--churn <none|iid:P[:SEED]|markov:PDOWN:PUP[:SEED]>]\n\
@@ -228,10 +230,29 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let ignore = args.usize_or("ignore", 1)?;
     let seed = args.u64_or("seed", 42)?;
 
-    let topo = if nodes == 10 {
-        Topology::paper_fig2()
-    } else {
-        Topology::erdos_connected(nodes, 0.3, seed ^ 0x70)
+    // --topology picks the graph family explicitly; the default keeps the
+    // historical behaviour (fig-2 at n=10, Erdős–Rényi otherwise).  The
+    // sparse families (ring/small-world/expander) are O(n·k) to build and
+    // the intended choice at large --nodes — erdos is O(n²) edge sampling.
+    let topo = match args.get("topology") {
+        None => {
+            if nodes == 10 {
+                Topology::paper_fig2()
+            } else {
+                Topology::erdos_connected(nodes, 0.3, seed ^ 0x70)
+            }
+        }
+        Some("fig2") => {
+            anyhow::ensure!(nodes == 10, "--topology fig2 has intrinsic n=10 (got --nodes {nodes})");
+            Topology::paper_fig2()
+        }
+        Some("ring") => Topology::ring(nodes),
+        Some("small-world") => Topology::small_world(nodes, 3, 0.1, seed ^ 0x70),
+        Some("expander") => Topology::expander(nodes, 6, seed ^ 0x70),
+        Some("erdos") => Topology::erdos_connected(nodes, 0.3, seed ^ 0x70),
+        Some(other) => {
+            anyhow::bail!("unknown topology '{other}' (ring|small-world|expander|erdos|fig2)")
+        }
     };
 
     let source = match args.str_or("workload", "linreg") {
@@ -283,7 +304,21 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         s if s.starts_with("amb-dg:") => parse_amb_dg(s)?,
         other => anyhow::bail!("unknown scheme '{other}'"),
     };
-    let consensus = if args.flag("exact-consensus") {
+    let consensus = if args.get("shards").is_some() {
+        anyhow::ensure!(
+            !args.flag("exact-consensus"),
+            "--shards selects hierarchical consensus; drop --exact-consensus"
+        );
+        let shards = args.usize_or("shards", 1)?;
+        anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+        // intra budget defaults to --rounds so `--shards S` alone mirrors
+        // the flat gossip budget inside each shard.
+        ConsensusMode::Hierarchical {
+            shards,
+            intra_rounds: args.usize_or("intra", rounds)?,
+            inter_rounds: args.usize_or("inter", 3)?,
+        }
+    } else if args.flag("exact-consensus") {
         ConsensusMode::Exact
     } else {
         ConsensusMode::Gossip { rounds }

@@ -271,6 +271,83 @@ mod domain_props {
             Ok(())
         });
     }
+
+    /// The O(n + E) lazy CSR build path is ENTRYWISE BITWISE the
+    /// composed build (`induced().metropolis().lazy()`) over random
+    /// topology families × active sets — ISSUE 7's substitution
+    /// guarantee for the churn engine as a property, not just the fixed
+    /// pin in `topology::tests`.
+    #[test]
+    fn induced_lazy_csr_matches_composed_build_over_families_and_active_sets() {
+        forall(40, 0x70_09, |g| {
+            let t = random_topology(g);
+            let n = t.n();
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
+            let direct = t.induced_metropolis_lazy_csr(&active);
+            let composed = t.induced(&active).metropolis().lazy();
+            crate::prop_assert!(
+                direct.nnz() == composed.nnz(),
+                "nnz {} vs {}",
+                direct.nnz(),
+                composed.nnz()
+            );
+            for i in 0..n {
+                for j in 0..n {
+                    crate::prop_assert!(
+                        direct.at(i, j).to_bits() == composed.at(i, j).to_bits(),
+                        "entry ({i},{j}): {} vs {}",
+                        direct.at(i, j),
+                        composed.at(i, j)
+                    );
+                }
+            }
+            crate::prop_assert!(direct.is_doubly_stochastic(1e-9));
+            Ok(())
+        });
+    }
+
+    /// The hierarchical scheme conserves the GLOBAL active-set mean:
+    /// shard means mix on an A_s-weighted aggregator ring whose detailed
+    /// balance keeps Σ_s A_s·v_s invariant every round
+    /// (consensus::hierarchical) — over random families, shard counts,
+    /// round budgets, and active sets.
+    #[test]
+    fn hierarchical_consensus_conserves_global_active_mean_over_families() {
+        use crate::consensus::hierarchical::HierarchicalConsensus;
+        use crate::util::matrix::NodeMatrix;
+        let active_mean = |msgs: &NodeMatrix, active: &[bool], c: usize| -> f64 {
+            let (mut s, mut k) = (0.0f64, 0usize);
+            for i in 0..msgs.n() {
+                if active[i] {
+                    s += msgs.row(i)[c] as f64;
+                    k += 1;
+                }
+            }
+            s / k as f64
+        };
+        forall(30, 0x41_10, |g| {
+            let t = random_topology(g);
+            let n = t.n();
+            let d = g.usize_in(1, 6);
+            let mut active: Vec<bool> = (0..n).map(|_| g.bool(0.8)).collect();
+            // at least one active node, so the mean is well defined
+            let pin = g.usize_in(0, n - 1);
+            active[pin] = true;
+            let mut msgs = NodeMatrix::new(n, d);
+            for i in 0..n {
+                for c in 0..d {
+                    msgs.row_mut(i)[c] = g.f32_in(-4.0, 4.0);
+                }
+            }
+            let before: Vec<f64> = (0..d).map(|c| active_mean(&msgs, &active, c)).collect();
+            let mut h = HierarchicalConsensus::new(&t, g.usize_in(1, 5));
+            h.run(&mut msgs, g.usize_in(0, 6), g.usize_in(0, 8), &active);
+            for c in 0..d {
+                crate::prop_assert_close!(active_mean(&msgs, &active, c), before[c], 1e-4);
+            }
+            Ok(())
+        });
+    }
 }
 
 #[cfg(test)]

@@ -236,19 +236,28 @@ impl Topology {
     ///   P_ij = 1 / (1 + max(d_i, d_j))   for (i,j) ∈ E
     ///   P_ii = 1 − Σ_{j≠i} P_ij
     /// Symmetric and doubly stochastic for any graph.
+    ///
+    /// Built directly in CSR, O(n + E): per row, the off-diagonal sum
+    /// runs over the ascending neighbour list — bitwise the dense row
+    /// sum, whose interleaved structural zeros were exact additive
+    /// identities on the non-negative accumulator — and the diagonal is
+    /// emitted at its sorted column slot.  n² is never materialised
+    /// (pinned against an in-test dense reference by
+    /// `csr_metropolis_matches_dense_reference_bitwise`).
     pub fn metropolis(&self) -> MixMatrix {
         let n = self.n;
-        let mut p = vec![0.0f64; n * n];
+        let mut m = MixMatrix::with_capacity(n, 2 * self.edge_count() + n);
+        let mut ws: Vec<f64> = Vec::new();
         for i in 0..n {
-            for &j in &self.adj[i] {
-                p[i * n + j] = 1.0 / (1.0 + self.degree(i).max(self.degree(j)) as f64);
-            }
+            let di = self.degree(i);
+            ws.clear();
+            ws.extend(
+                self.adj[i].iter().map(|&j| 1.0 / (1.0 + di.max(self.degree(j)) as f64)),
+            );
+            let off: f64 = ws.iter().sum();
+            m.push_row_with_diag(i, &self.adj[i], &ws, 1.0 - off);
         }
-        for i in 0..n {
-            let off: f64 = (0..n).filter(|&j| j != i).map(|j| p[i * n + j]).sum();
-            p[i * n + i] = 1.0 - off;
-        }
-        MixMatrix::from_rows(n, p)
+        m
     }
 
     /// Subgraph induced by the per-node `active` mask, KEEPING the node
@@ -306,87 +315,234 @@ impl Topology {
         let pii = (1.0 - off) * 0.5 + 0.5;
         (pii, w_met.into_iter().map(|x| x * 0.5).collect())
     }
+
+    /// The full induced LAZY Metropolis matrix
+    /// `induced(active).metropolis().lazy()` built directly in CSR in
+    /// O(n + E): induced degrees are precomputed once, then every row
+    /// replays [`Topology::induced_lazy_metropolis_row`]'s op sequence
+    /// (itself pinned bitwise against the materialised composition), so
+    /// the result is entry-for-entry BITWISE the dense build — without
+    /// materialising the induced graph, a dense matrix, or any O(n) row.
+    /// This is the churn engine's per-epoch build path
+    /// (`consensus::churn::InducedConsensus`): at n = 10⁵ under iid
+    /// churn the dense composition cost O(n²) per epoch; this costs
+    /// O(edges).  Inactive rows are the identity eᵢ (held messages).
+    pub fn induced_metropolis_lazy_csr(&self, active: &[bool]) -> MixMatrix {
+        assert_eq!(active.len(), self.n, "active mask must cover every node");
+        let n = self.n;
+        let deg_act: Vec<usize> = (0..n)
+            .map(|i| {
+                if active[i] {
+                    self.adj[i].iter().filter(|&&k| active[k]).count()
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let mut m = MixMatrix::with_capacity(n, 2 * self.edge_count() + n);
+        let mut cols: Vec<usize> = Vec::new();
+        let mut ws: Vec<f64> = Vec::new();
+        for i in 0..n {
+            if !active[i] {
+                // induced().metropolis() gives the identity row; lazy()
+                // maps it to fl(1.0·0.5) + 0.5 = 1.0 exactly.
+                m.push_entry(i, 1.0);
+                m.seal_row();
+                continue;
+            }
+            let di = deg_act[i];
+            cols.clear();
+            ws.clear();
+            for &j in &self.adj[i] {
+                if active[j] {
+                    cols.push(j);
+                    ws.push(1.0 / (1.0 + di.max(deg_act[j]) as f64));
+                }
+            }
+            let off: f64 = ws.iter().sum();
+            let pii = (1.0 - off) * 0.5 + 0.5;
+            for w in ws.iter_mut() {
+                *w *= 0.5;
+            }
+            m.push_row_with_diag(i, &cols, &ws, pii);
+        }
+        m
+    }
 }
 
-/// Dense doubly-stochastic mixing matrix (row-major), with a compressed
-/// f32 view of its non-zero pattern built once at construction so the
-/// per-round [`MixMatrix::mix_into`] kernel touches only real edges and
-/// never re-converts weights.
+/// Doubly-stochastic mixing matrix stored sparse-first: CSR over the
+/// non-zero entries of each row, in ascending column order, at BOTH
+/// precisions — f64 (what the dense representation used to store; feeds
+/// `at`, `lazy`, and the spectral diagnostics) and f32 (the exact
+/// entries and accumulation order the flat mixing kernel always used,
+/// so mixing stays bit-identical to the legacy nested-Vec kernel).
+/// Memory scales with edges, never n² — the paper's graphs (ring,
+/// torus, small-world, hub-spoke) all have O(n) edges, so this is what
+/// lets the consensus plane reach n ≈ 10⁵ (ROADMAP item 2).  Dense is
+/// the derived special case via [`MixMatrix::from_rows`].
 #[derive(Debug, Clone)]
 pub struct MixMatrix {
     n: usize,
-    p: Vec<f64>,
-    /// CSR over the non-zero (after f32 cast) entries of each row, in
-    /// ascending column order — the exact entries and accumulation order
-    /// the nested-Vec kernel used, so flat mixing stays bit-identical.
+    /// Row i's entries live at `nz_ptr[i]..nz_ptr[i+1]`.
     nz_ptr: Vec<usize>,
+    /// Ascending column indices (the diagonal sits at its sorted slot).
     nz_cols: Vec<u32>,
+    /// f32 kernel weights (filter: entries whose f32 cast is zero are
+    /// not stored — the pattern the kernel always skipped).
     nz_w: Vec<f32>,
+    /// The same entries at full f64 precision.
+    nz_w64: Vec<f64>,
 }
 
 impl MixMatrix {
+    /// Build from a dense row-major n×n matrix — the dense-interop /
+    /// test constructor (dense is now the derived special case; the
+    /// Metropolis builders emit CSR directly and never touch n²).
     pub fn from_rows(n: usize, p: Vec<f64>) -> MixMatrix {
         assert_eq!(p.len(), n * n);
-        let mut nz_ptr = Vec::with_capacity(n + 1);
-        let mut nz_cols = Vec::new();
-        let mut nz_w = Vec::new();
-        nz_ptr.push(0);
+        let mut m = MixMatrix::with_capacity(n, 0);
         for i in 0..n {
             for j in 0..n {
-                let w = p[i * n + j] as f32;
-                if w != 0.0 {
-                    nz_cols.push(j as u32);
-                    nz_w.push(w);
-                }
+                m.push_entry(j, p[i * n + j]);
             }
-            nz_ptr.push(nz_cols.len());
+            m.seal_row();
         }
-        MixMatrix { n, p, nz_ptr, nz_cols, nz_w }
+        m
+    }
+
+    /// Empty matrix ready for row-by-row construction.
+    fn with_capacity(n: usize, nnz_hint: usize) -> MixMatrix {
+        let mut nz_ptr = Vec::with_capacity(n + 1);
+        nz_ptr.push(0);
+        MixMatrix {
+            n,
+            nz_ptr,
+            nz_cols: Vec::with_capacity(nnz_hint),
+            nz_w: Vec::with_capacity(nnz_hint),
+            nz_w64: Vec::with_capacity(nnz_hint),
+        }
+    }
+
+    /// Append one entry to the row under construction.  Columns must
+    /// arrive in ascending order (caller's contract); entries whose f32
+    /// cast is zero are dropped — the exact filter `from_rows` always
+    /// applied, so direct CSR builds match the dense path entry for
+    /// entry.
+    fn push_entry(&mut self, j: usize, w: f64) {
+        let wf = w as f32;
+        if wf != 0.0 {
+            self.nz_cols.push(j as u32);
+            self.nz_w.push(wf);
+            self.nz_w64.push(w);
+        }
+    }
+
+    /// Close the row under construction.
+    fn seal_row(&mut self) {
+        self.nz_ptr.push(self.nz_cols.len());
+    }
+
+    /// Append a row given its off-diagonal entries `(cols[k], ws[k])` in
+    /// ascending column order (none equal to `i`), inserting `diag` at
+    /// column `i`'s sorted slot.  Seals the row.
+    fn push_row_with_diag(&mut self, i: usize, cols: &[usize], ws: &[f64], diag: f64) {
+        debug_assert_eq!(cols.len(), ws.len());
+        let mut placed = false;
+        for (k, &j) in cols.iter().enumerate() {
+            if !placed && j > i {
+                self.push_entry(i, diag);
+                placed = true;
+            }
+            self.push_entry(j, ws[k]);
+        }
+        if !placed {
+            self.push_entry(i, diag);
+        }
+        self.seal_row();
     }
 
     pub fn n(&self) -> usize {
         self.n
     }
 
-    #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
-        self.p[i * self.n + j]
+    /// Stored non-zero count — the memory footprint scales with this,
+    /// not n².
+    pub fn nnz(&self) -> usize {
+        self.nz_cols.len()
     }
 
-    pub fn row(&self, i: usize) -> &[f64] {
-        &self.p[i * self.n..(i + 1) * self.n]
+    /// Entry (i, j) at f64 precision; structural zeros return 0.0.
+    /// Binary search over the row's ascending columns — O(log deg).
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        let (lo, hi) = (self.nz_ptr[i], self.nz_ptr[i + 1]);
+        match self.nz_cols[lo..hi].binary_search(&(j as u32)) {
+            Ok(k) => self.nz_w64[lo + k],
+            Err(_) => 0.0,
+        }
     }
 
     /// Lazy (PSD) version: (P + I)/2.  Keeps double stochasticity and
     /// makes all eigenvalues non-negative, matching the paper's PSD
-    /// assumption.
+    /// assumption.  Pure pattern-preserving map over the stored entries
+    /// (plus a 0.5 diagonal insertion for any row that stored none),
+    /// replaying the dense op order — halve every entry, then add 0.5 on
+    /// the diagonal — so the result is bitwise the dense composition.
     pub fn lazy(&self) -> MixMatrix {
         let n = self.n;
-        let mut p = self.p.clone();
-        for v in p.iter_mut() {
-            *v *= 0.5;
-        }
+        let mut m = MixMatrix::with_capacity(n, self.nz_cols.len() + n);
         for i in 0..n {
-            p[i * n + i] += 0.5;
+            let (lo, hi) = (self.nz_ptr[i], self.nz_ptr[i + 1]);
+            let mut placed = false;
+            for e in lo..hi {
+                let j = self.nz_cols[e] as usize;
+                let h = self.nz_w64[e] * 0.5;
+                if j == i {
+                    m.push_entry(i, h + 0.5);
+                    placed = true;
+                } else {
+                    if !placed && j > i {
+                        m.push_entry(i, 0.5);
+                        placed = true;
+                    }
+                    m.push_entry(j, h);
+                }
+            }
+            if !placed {
+                m.push_entry(i, 0.5);
+            }
+            m.seal_row();
         }
-        MixMatrix::from_rows(n, p)
+        m
     }
 
     /// max |row sum − 1|, max |col sum − 1|, min entry — stochasticity
-    /// diagnostics.
+    /// diagnostics.  Row/column sums accumulate the stored entries in
+    /// ascending row/column order (the structural zeros the dense loop
+    /// added were exact additive identities); when the pattern is not
+    /// full, structural zeros participate in the min.
     pub fn stochasticity_error(&self) -> (f64, f64, f64) {
         let n = self.n;
         let mut row_err = 0.0f64;
-        let mut col_err = 0.0f64;
-        let mut min_entry = f64::INFINITY;
+        let mut col_sums = vec![0.0f64; n];
         for i in 0..n {
-            let rs: f64 = self.row(i).iter().sum();
+            let (lo, hi) = (self.nz_ptr[i], self.nz_ptr[i + 1]);
+            let rs: f64 = self.nz_w64[lo..hi].iter().sum();
             row_err = row_err.max((rs - 1.0).abs());
-            let cs: f64 = (0..n).map(|j| self.at(j, i)).sum();
+            for e in lo..hi {
+                col_sums[self.nz_cols[e] as usize] += self.nz_w64[e];
+            }
+        }
+        let mut col_err = 0.0f64;
+        for &cs in &col_sums {
             col_err = col_err.max((cs - 1.0).abs());
         }
-        for &v in &self.p {
+        let mut min_entry = f64::INFINITY;
+        for &v in &self.nz_w64 {
             min_entry = min_entry.min(v);
+        }
+        if self.nz_cols.len() < n * n {
+            min_entry = min_entry.min(0.0);
         }
         (row_err, col_err, min_entry)
     }
@@ -411,12 +567,14 @@ impl MixMatrix {
         let mut lambda = 0.0;
         let mut w = vec![0.0f64; n];
         for _ in 0..2000 {
-            // w = P v
+            // w = P v over the CSR pattern in ascending-column order —
+            // the dense loop's op sequence minus its exact-identity
+            // zero terms.
             for i in 0..n {
                 let mut acc = 0.0;
-                let row = self.row(i);
-                for j in 0..n {
-                    acc += row[j] * v[j];
+                let (lo, hi) = (self.nz_ptr[i], self.nz_ptr[i + 1]);
+                for e in lo..hi {
+                    acc += self.nz_w64[e] * v[self.nz_cols[e] as usize];
                 }
                 w[i] = acc;
             }
@@ -736,6 +894,92 @@ mod tests {
     // The induced-Metropolis doubly-stochastic / inactive-row-isolation
     // property moved to the central `crate::prop::domain_props` suite,
     // where it runs over random topology FAMILIES × random active sets.
+
+    /// Reference implementation of the pre-sparse dense Metropolis
+    /// build: full n² row-major matrix, off-diagonal sums taken over the
+    /// whole row including structural zeros.  The CSR-direct build must
+    /// reproduce it bitwise.
+    fn dense_metropolis_reference(t: &Topology) -> MixMatrix {
+        let n = t.n();
+        let mut p = vec![0.0f64; n * n];
+        for i in 0..n {
+            for &j in t.neighbors(i) {
+                p[i * n + j] = 1.0 / (1.0 + t.degree(i).max(t.degree(j)) as f64);
+            }
+        }
+        for i in 0..n {
+            let off: f64 = (0..n).filter(|&j| j != i).map(|j| p[i * n + j]).sum();
+            p[i * n + i] = 1.0 - off;
+        }
+        MixMatrix::from_rows(n, p)
+    }
+
+    #[test]
+    fn csr_metropolis_matches_dense_reference_bitwise() {
+        forall(25, 0x70_07, |g| {
+            let n = g.usize_in(2, 24);
+            let t = Topology::erdos_connected(n, g.f64_in(0.05, 0.9), g.u64());
+            let direct = t.metropolis();
+            let dense = dense_metropolis_reference(&t);
+            crate::prop_assert!(direct.nnz() == dense.nnz(), "nnz {} vs {}", direct.nnz(), dense.nnz());
+            for i in 0..n {
+                for j in 0..n {
+                    crate::prop_assert!(
+                        direct.at(i, j).to_bits() == dense.at(i, j).to_bits(),
+                        "({i},{j}): direct {} vs dense {}",
+                        direct.at(i, j),
+                        dense.at(i, j)
+                    );
+                }
+            }
+            // ... and the lazy transform composes identically.
+            let dl = direct.lazy();
+            let rl = dense.lazy();
+            for i in 0..n {
+                for j in 0..n {
+                    crate::prop_assert!(dl.at(i, j).to_bits() == rl.at(i, j).to_bits());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn induced_lazy_csr_matches_dense_composition_bitwise() {
+        // The O(n+E) churn build path must be entry-for-entry bitwise
+        // the three-step dense composition it replaces.
+        forall(25, 0x70_08, |g| {
+            let n = g.usize_in(2, 20);
+            let t = Topology::erdos_connected(n, g.f64_in(0.1, 0.7), g.u64());
+            let active: Vec<bool> = (0..n).map(|_| g.bool(0.7)).collect();
+            let fast = t.induced_metropolis_lazy_csr(&active);
+            let slow = t.induced(&active).metropolis().lazy();
+            crate::prop_assert!(fast.nnz() == slow.nnz(), "nnz {} vs {}", fast.nnz(), slow.nnz());
+            for i in 0..n {
+                for j in 0..n {
+                    crate::prop_assert!(
+                        fast.at(i, j).to_bits() == slow.at(i, j).to_bits(),
+                        "({i},{j}): fast {} vs slow {}",
+                        fast.at(i, j),
+                        slow.at(i, j)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mix_matrix_memory_scales_with_edges_not_n_squared() {
+        // ring: every row stores 2 neighbours + the diagonal.
+        let n = 4096;
+        let m = Topology::ring(n).metropolis();
+        assert_eq!(m.nnz(), 3 * n);
+        assert_eq!(m.lazy().nnz(), 3 * n);
+        // small-world stays O(n·k), nowhere near n².
+        let sw = Topology::small_world(n, 3, 0.1, 7).metropolis();
+        assert!(sw.nnz() <= n * (2 * 3 + 1) + n, "nnz {}", sw.nnz());
+    }
 
     #[test]
     fn metropolis_doubly_stochastic_on_many_graphs() {

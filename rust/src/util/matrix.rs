@@ -146,6 +146,13 @@ pub struct NodeMatrixF64 {
 node_matrix_impl!(NodeMatrix, f32);
 node_matrix_impl!(NodeMatrixF64, f64);
 
+/// Below this row width the column-partitioned mean degenerates: each
+/// worker owns so few columns that its strided pass touches every cache
+/// line of the `[n × d]` buffer anyway, multiplying memory traffic by
+/// the worker count.  Narrow arenas (the large-n consensus plane, where
+/// d is a handful and n reaches 10⁵) stream row-major serially instead.
+const COL_PAR_MIN_WIDTH: usize = 256;
+
 impl NodeMatrix {
     /// Column-wise mean accumulated in f64 (the exact row average that
     /// ε-perfect consensus would deliver).  `None` when the arena has no
@@ -156,7 +163,10 @@ impl NodeMatrix {
     /// over all rows in ascending-row order — the serial op sequence per
     /// column — so pooled and serial results are bit-identical.  (The
     /// grain scales with `n` because each output element costs `n`
-    /// reads.)
+    /// reads.)  Narrow arenas take a single row-major streaming pass:
+    /// the per-column accumulation order is ascending-row in BOTH loop
+    /// nestings, so the two paths are bit-identical too — the width
+    /// threshold is a pure performance knob.
     pub fn mean_rows_f64(&self) -> Option<Vec<f64>> {
         if self.n == 0 {
             return None;
@@ -166,6 +176,18 @@ impl NodeMatrix {
             return Some(avg);
         }
         let (n, d, data) = (self.n, self.d, &self.data);
+        if d < COL_PAR_MIN_WIDTH {
+            for i in 0..n {
+                let row = &data[i * d..(i + 1) * d];
+                for (a, &v) in avg.iter_mut().zip(row) {
+                    *a += v as f64;
+                }
+            }
+            for a in avg.iter_mut() {
+                *a /= n as f64;
+            }
+            return Some(avg);
+        }
         let grain = (crate::util::pool::MIN_ELEMS_PER_THREAD / n.max(1)).max(1);
         crate::util::pool::par_chunks_grained(&mut avg, 1, grain, |c0, cols| {
             for i in 0..n {
@@ -256,6 +278,38 @@ mod tests {
         let m = NodeMatrix::from_rows(&[vec![1.0f32, -2.0], vec![3.0, 4.0]]);
         assert_eq!(m.mean_rows_f64().unwrap(), vec![2.0, 1.0]);
         assert_eq!(NodeMatrix::new(0, 5).mean_rows_f64(), None);
+    }
+
+    #[test]
+    fn mean_rows_streaming_and_column_paths_agree_bitwise() {
+        // One arena straddling the width threshold from below and one
+        // from above, same deterministic contents column-for-column: the
+        // narrow (row-major streaming) and wide (column-partitioned)
+        // paths must produce bit-identical column means, because both
+        // accumulate each column in ascending-row order.
+        let n = 513; // odd, not a multiple of any worker count
+        let narrow_d = COL_PAR_MIN_WIDTH - 1;
+        let wide_d = COL_PAR_MIN_WIDTH;
+        let val = |i: usize, c: usize| ((i * 31 + c * 7) % 97) as f32 * 0.25 - 11.5;
+        let mut narrow = NodeMatrix::new(n, narrow_d);
+        let mut wide = NodeMatrix::new(n, wide_d);
+        for i in 0..n {
+            for c in 0..narrow_d {
+                narrow.row_mut(i)[c] = val(i, c);
+            }
+            for c in 0..wide_d {
+                wide.row_mut(i)[c] = val(i, c);
+            }
+        }
+        let a = narrow.mean_rows_f64().unwrap();
+        let b = wide.mean_rows_f64().unwrap();
+        for c in 0..narrow_d {
+            assert_eq!(
+                a[c].to_bits(),
+                b[c].to_bits(),
+                "column {c}: streaming and column-split means diverged"
+            );
+        }
     }
 
     #[test]

@@ -93,6 +93,9 @@ fn mode_label(m: &ConsensusMode) -> String {
         ConsensusMode::Exact => "exact".into(),
         ConsensusMode::Gossip { rounds } => format!("gossip{rounds}"),
         ConsensusMode::GossipJitter { mean, jitter } => format!("jitter{mean}±{jitter}"),
+        ConsensusMode::Hierarchical { shards, intra_rounds, inter_rounds } => {
+            format!("hier{shards}-{intra_rounds}-{inter_rounds}")
+        }
     }
 }
 
@@ -147,6 +150,13 @@ fn all_traces() -> Vec<String> {
         let out = run_sim(&spec);
         lines.push(format!("{} × {}: {}", scheme_label(&amb), label, trace_content(&out)));
     }
+    // ISSUE 7: one hierarchical-consensus pin (sim-only mode, so it rides
+    // outside the scheme × mode grid; appended last to keep every
+    // hard-coded trace index above stable).
+    let hier = ConsensusMode::Hierarchical { shards: 3, intra_rounds: 4, inter_rounds: 3 };
+    let spec = RunSpec::new(amb.name(), amb, 5, 13).with_consensus(hier);
+    let out = run_sim(&spec);
+    lines.push(format!("{} × {}: {}", scheme_label(&amb), mode_label(&hier), trace_content(&out)));
     lines
 }
 
