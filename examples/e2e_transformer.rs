@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         )
     };
     let t0 = std::time::Instant::now();
-    let out = anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, None);
+    let out = anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, None)?;
     let elapsed = t0.elapsed().as_secs_f64();
 
     // loss column is summed-sequence-loss / sequences; convert to

@@ -42,7 +42,7 @@ fn main() {
         ("AMB (fixed time)", RunSpec::amb("amb", 2.5, 0.5, 5, epochs, 1)),
         ("FMB (fixed batch)", RunSpec::fmb("fmb", 600, 0.5, 5, epochs, 1)),
     ] {
-        let out = anytime_mb::run(&SimRuntime::new(&strag), &spec, &topo, &mk, f_star);
+        let out = anytime_mb::run(&SimRuntime::new(&strag), &spec, &topo, &mk, f_star).unwrap();
         println!("\n=== {label}, simulated ===");
         println!("{:<6} {:>10} {:>8} {:>12}", "epoch", "wall(s)", "b(t)", "‖w−w*‖²/2");
         for e in out.record.epochs.iter().step_by(3) {
@@ -70,7 +70,7 @@ fn main() {
         .with_time_scale(0.01)
         .with_slowdown(slowdown)
         .with_node_log();
-    let out = anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, f_star);
+    let out = anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, f_star).unwrap();
     let log = out.node_log.as_ref().unwrap();
     let sum = |node: usize| -> usize { log.batches[node].iter().sum() };
     println!("\n=== AMB on 10 real threads (25 ms windows) ===");

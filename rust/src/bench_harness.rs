@@ -159,6 +159,7 @@ impl Bencher {
     ) -> &Summary {
         self.bench(name, || {
             crate::run(runtime, spec, topo, make_engine, f_star)
+                .expect("bench spec must be runnable")
                 .record
                 .total_samples()
         })

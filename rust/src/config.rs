@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::churn::ChurnSpec;
 use crate::coordinator::{ConsensusMode, RunSpec, Scheme};
+use crate::fault::{CrashWindow, FaultSpec, Flap};
 use crate::net::{FabricSpec, NetworkModel};
 use crate::util::json::Json;
 
@@ -120,12 +121,47 @@ impl ExperimentConfig {
                 ("min_gap", Json::num(f.min_gap)),
             ]),
         };
+        let faults = {
+            let f = &self.run.faults;
+            let mut fields = vec![
+                ("loss", Json::num(f.loss)),
+                ("timeout", Json::num(f.round_timeout)),
+                ("seed", Json::num(f.seed as f64)),
+            ];
+            if let Some(fl) = f.flap {
+                fields.push((
+                    "flap",
+                    Json::obj(vec![
+                        ("p_down", Json::num(fl.p_down)),
+                        ("p_up", Json::num(fl.p_up)),
+                    ]),
+                ));
+            }
+            // A permanent window (`to = usize::MAX`) is encoded by
+            // omitting "to" (util::json numbers are f64 — MAX would
+            // not survive the round trip).
+            fields.push((
+                "crashes",
+                Json::arr(f.crashes.iter().map(|c| {
+                    let mut cf = vec![
+                        ("node", Json::num(c.node as f64)),
+                        ("from", Json::num(c.from as f64)),
+                    ];
+                    if c.to != usize::MAX {
+                        cf.push(("to", Json::num(c.to as f64)));
+                    }
+                    Json::obj(cf)
+                })),
+            ));
+            Json::obj(fields)
+        };
         Json::obj(vec![
             ("name", Json::str(&self.run.name)),
             ("scheme", scheme),
             ("consensus", consensus),
             ("churn", churn),
             ("network", network),
+            ("faults", faults),
             ("epochs", Json::num(self.run.epochs as f64)),
             ("seed", Json::num(self.run.seed as f64)),
             ("exact_bt", Json::Bool(self.run.exact_bt)),
@@ -346,6 +382,71 @@ impl ExperimentConfig {
                 other => bail!("unknown network kind {other:?}"),
             },
         };
+        // Optional faults block; absent (pre-fault configs) means the
+        // all-clear spec, so old config files keep loading unchanged.
+        let faults = match j.get("faults") {
+            None => FaultSpec::none(),
+            Some(fj) => {
+                let num = |k: &str, default: f64| -> Result<f64> {
+                    match fj.get(k) {
+                        None => Ok(default),
+                        Some(v) => {
+                            v.as_f64().with_context(|| format!("faults.{k} must be a number"))
+                        }
+                    }
+                };
+                let flap = match fj.get("flap") {
+                    None => None,
+                    Some(flj) => Some(Flap {
+                        p_down: flj
+                            .get("p_down")
+                            .and_then(|v| v.as_f64())
+                            .context("faults.flap.p_down")?,
+                        p_up: flj
+                            .get("p_up")
+                            .and_then(|v| v.as_f64())
+                            .context("faults.flap.p_up")?,
+                    }),
+                };
+                let crashes = match fj.get("crashes") {
+                    None => Vec::new(),
+                    Some(Json::Arr(items)) => items
+                        .iter()
+                        .map(|c| {
+                            let cnum = |k: &str| {
+                                c.get(k)
+                                    .and_then(|v| v.as_usize())
+                                    .with_context(|| format!("faults.crashes[].{k}"))
+                            };
+                            Ok(CrashWindow {
+                                node: cnum("node")?,
+                                from: cnum("from")?,
+                                // omitted "to" = permanent
+                                to: match c.get("to") {
+                                    None => usize::MAX,
+                                    Some(v) => {
+                                        v.as_usize().context("faults.crashes[].to")?
+                                    }
+                                },
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                    Some(_) => bail!("faults.crashes must be an array"),
+                };
+                let spec = FaultSpec {
+                    loss: num("loss", 0.0)?,
+                    flap,
+                    crashes,
+                    round_timeout: num("timeout", 0.0)?,
+                    seed: num("seed", 0.0)? as u64,
+                };
+                // Range checks at load time, like churn/network (the
+                // node-vs-cluster-size check re-runs with the real n
+                // inside the runtimes).
+                spec.validate(usize::MAX)?;
+                spec
+            }
+        };
         Ok(ExperimentConfig {
             run: RunSpec {
                 name: req_str("name")?.to_string(),
@@ -383,6 +484,7 @@ impl ExperimentConfig {
                 },
                 churn,
                 network,
+                faults,
             },
             workload: req_str("workload")?.to_string(),
             straggler: req_str("straggler")?.to_string(),
@@ -570,6 +672,50 @@ mod tests {
             active: vec![Vec::new(); cfg.nodes],
         });
         assert!(ExperimentConfig::from_json(&cfg.to_json().to_string()).is_err());
+    }
+
+    #[test]
+    fn faults_roundtrip_all_kinds() {
+        let mut cfg = preset("fig1a_amb").unwrap();
+        for faults in [
+            FaultSpec::none(),
+            FaultSpec { loss: 0.25, seed: 7, ..FaultSpec::none() },
+            FaultSpec { flap: Some(Flap { p_down: 0.1, p_up: 0.5 }), ..FaultSpec::none() },
+            FaultSpec {
+                loss: 0.05,
+                crashes: vec![
+                    CrashWindow { node: 2, from: 3, to: 5 },
+                    // permanent window survives the omitted-"to" encoding
+                    CrashWindow { node: 0, from: 10, to: usize::MAX },
+                ],
+                round_timeout: 0.125,
+                seed: 42,
+                ..FaultSpec::none()
+            },
+        ] {
+            cfg.run = cfg.run.clone().with_faults(faults.clone());
+            let back = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+            assert_eq!(back.run.faults, faults);
+        }
+        // configs written before the faults field load as all-clear
+        let pre_faults = preset("fig1a_amb").unwrap().to_json().to_string();
+        assert!(pre_faults.contains("\"faults\":{\"loss\":0,\"timeout\":0,\"seed\":0,\"crashes\":[]}"));
+        let stripped = pre_faults
+            .replace(",\"faults\":{\"loss\":0,\"timeout\":0,\"seed\":0,\"crashes\":[]}", "");
+        let back = ExperimentConfig::from_json(&stripped).unwrap();
+        assert!(back.run.faults.is_none());
+        assert_eq!(back.run.faults, FaultSpec::none());
+        // invalid values rejected at load time, not run time
+        cfg.run =
+            cfg.run.clone().with_faults(FaultSpec { loss: 0.25, ..FaultSpec::none() });
+        let text = cfg.to_json().to_string();
+        assert!(
+            ExperimentConfig::from_json(&text.replace("\"loss\":0.25", "\"loss\":1.5")).is_err()
+        );
+        assert!(
+            ExperimentConfig::from_json(&text.replace("\"loss\":0.25", "\"loss\":\"all\""))
+                .is_err()
+        );
     }
 
     #[test]

@@ -24,9 +24,24 @@
 //! CSR kernel (row-partitioned across the worker pool, per-row op order
 //! fixed), so every bitwise pin from PR 2/3 — and the threads=1 ≡
 //! threads=k contract — holds for churn runs unchanged.
+//!
+//! **Fault degradation** (`run_faulty`/`run_per_node_faulty`): when the
+//! fault plane drops a round's message `j → i`, receiver `i` absorbs
+//! the missing Metropolis weight into its self-weight by mixing its OWN
+//! pre-round row in `j`'s place (the substitute-self trick):
+//!   out_i = Σ_j P_ij · (dropped(i←j) ? m_i : m_j).
+//! The effective row weights are unchanged as a multiset, so each row
+//! stays exactly as stochastic as the underlying matrix — node values
+//! remain convex combinations and cannot blow up — but the mix is no
+//! longer doubly stochastic, so the active-set mean is conserved only
+//! approximately; the epoch loop MEASURES that drift
+//! (`EpochStats::conservation_drift`).  Rounds with an empty drop mask
+//! take the stock kernel byte-for-byte, so an all-clear fault spec
+//! reproduces fault-free runs bitwise.
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::fault::DropMask;
 use crate::topology::{MixMatrix, Topology};
 use crate::util::matrix::NodeMatrix;
 
@@ -172,6 +187,75 @@ impl InducedConsensus {
         }
     }
 
+    /// [`Self::run`] under a fault plane: `masks[k]` is round `k`'s drop
+    /// set of `(dst, src)` pairs (missing/short `masks` mean clean
+    /// rounds).  A dropped in-edge is absorbed into the receiver's
+    /// self-weight (see the module docs), so rows stay stochastic but
+    /// mean conservation becomes approximate.  Returns the number of
+    /// substitute-self applications actually fired — 0 means the run was
+    /// bitwise the clean path and the caller may pin
+    /// `conservation_drift == 0.0`.
+    pub fn run_faulty(
+        &mut self,
+        msgs: &mut NodeMatrix,
+        rounds: usize,
+        active: &[bool],
+        masks: &[DropMask],
+    ) -> usize {
+        let n = self.topo.n();
+        assert_eq!(msgs.n(), n);
+        self.ensure_scratch(n, msgs.d());
+        let all = self.ensure_cached(active);
+        let p = if all { &self.base } else { self.cache.get(active).unwrap() };
+        let mut drops = 0;
+        for k in 0..rounds {
+            match masks.get(k).filter(|m| !m.is_empty()) {
+                None => p.mix_into(msgs, &mut self.scratch),
+                Some(mask) => drops += mix_into_masked(p, msgs, &mut self.scratch, mask),
+            }
+            msgs.swap(&mut self.scratch);
+        }
+        drops
+    }
+
+    /// [`Self::run_per_node`] under a fault plane — per-node budgets
+    /// (freeze semantics) with `masks[k]` dropping round `k`'s edges, as
+    /// in [`Self::run_faulty`].  A substitution landing on an
+    /// already-frozen receiver still counts as a fired drop (the message
+    /// WAS lost on the wire) even though the freeze then discards the
+    /// round for that row.
+    pub fn run_per_node_faulty(
+        &mut self,
+        msgs: &mut NodeMatrix,
+        rounds: &[usize],
+        active: &[bool],
+        masks: &[DropMask],
+    ) -> usize {
+        let n = self.topo.n();
+        assert_eq!(msgs.n(), n);
+        assert_eq!(rounds.len(), n);
+        let rmax = rounds.iter().copied().max().unwrap_or(0);
+        self.ensure_scratch(n, msgs.d());
+        let all = self.ensure_cached(active);
+        let p = if all { &self.base } else { self.cache.get(active).unwrap() };
+        let mut drops = 0;
+        for k in 0..rmax {
+            match masks.get(k).filter(|m| !m.is_empty()) {
+                None => p.mix_into(msgs, &mut self.scratch),
+                Some(mask) => drops += mix_into_masked(p, msgs, &mut self.scratch, mask),
+            }
+            msgs.swap(&mut self.scratch);
+            // post-swap, scratch holds the pre-mix values: un-mix the
+            // rows whose budget is spent
+            for i in 0..n {
+                if rounds[i] <= k {
+                    msgs.row_mut(i).copy_from_slice(self.scratch.row(i));
+                }
+            }
+        }
+        drops
+    }
+
     /// Mean of the ACTIVE rows, accumulated in f64 in ascending-node
     /// order — what ε-perfect consensus over the active subgraph would
     /// deliver to every active node.  `None` when no node is active.
@@ -194,6 +278,40 @@ impl InducedConsensus {
         }
         Some(avg)
     }
+}
+
+/// One degraded mixing round: `out[i] = Σ_e w_e · src_e` where entry
+/// `e = (i ← j)` sources the receiver's OWN pre-round row when the mask
+/// drops it.  Per-row the weights are applied sequentially in ascending
+/// CSR-entry order — `MixMatrix::mix_into`'s tiled axpy4 kernel is
+/// documented bit-identical to exactly this order, so rows without a
+/// dropped in-edge produce the same bits either way (and whole rounds
+/// with an empty mask never reach this function at all).  Returns the
+/// number of substitutions applied.
+fn mix_into_masked(
+    p: &MixMatrix,
+    msgs: &NodeMatrix,
+    out: &mut NodeMatrix,
+    mask: &DropMask,
+) -> usize {
+    let n = msgs.n();
+    let mut drops = 0;
+    for i in 0..n {
+        let (cols, ws) = p.row_entries(i);
+        let row = out.row_mut(i);
+        row.fill(0.0);
+        for (&c, &w) in cols.iter().zip(ws) {
+            let j = c as usize;
+            let src = if j != i && mask.contains(&(i as u32, c)) {
+                drops += 1;
+                i // absorb the lost edge's weight into self
+            } else {
+                j
+            };
+            crate::util::axpy(w, msgs.row(src), row);
+        }
+    }
+    drops
 }
 
 #[cfg(test)]
@@ -378,6 +496,137 @@ mod tests {
         }
         // the sweep really did exceed the cap, so eviction was exercised
         assert!(seen.len() > InducedConsensus::MAX_CACHED_SETS, "distinct sets: {}", seen.len());
+    }
+
+    /// A mask of random (dst, src) pairs over n nodes (may name
+    /// non-edges; those are no-ops by construction).
+    fn random_mask(g: &mut crate::prop::Gen, n: usize) -> DropMask {
+        let mut m = DropMask::new();
+        for _ in 0..g.usize_in(0, 2 * n) {
+            let dst = g.usize_in(0, n - 1) as u32;
+            let src = g.usize_in(0, n - 1) as u32;
+            if dst != src {
+                m.insert((dst, src));
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn empty_masks_are_bitwise_the_clean_path() {
+        forall(15, 0xFA_01, |g| {
+            let n = g.usize_in(2, 12);
+            let d = g.usize_in(1, 8);
+            let topo = Topology::erdos_connected(n, 0.5, g.u64());
+            let active = random_active(g, n);
+            let rounds = g.usize_in(1, 5);
+            let msgs0 = random_msgs(g, n, d);
+
+            let mut ind = InducedConsensus::new(topo.clone());
+            let mut clean = msgs0.clone();
+            ind.run(&mut clean, rounds, &active);
+
+            // all-empty masks, short masks, and no masks at all must all
+            // take the stock kernel and report zero fired drops
+            for masks in [vec![], vec![DropMask::new(); rounds]] {
+                let mut ind2 = InducedConsensus::new(topo.clone());
+                let mut m = msgs0.clone();
+                let drops = ind2.run_faulty(&mut m, rounds, &active, &masks);
+                crate::prop_assert!(drops == 0, "clean masks fired {drops} drops");
+                for i in 0..n {
+                    crate::prop_assert!(m.row(i) == clean.row(i), "row {i} diverged");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masked_rows_stay_stochastic_constant_fixed_point() {
+        // Substitution permutes which SOURCE each weight multiplies but
+        // never the weights themselves, so on a constant matrix (every
+        // row identical) a masked round is bitwise the unmasked round —
+        // for ANY drop mask.  This is the row-stochasticity property at
+        // kernel level: had substitution gained or lost weight, the
+        // constant fixed point would move.
+        forall(20, 0xFA_02, |g| {
+            let n = g.usize_in(2, 12);
+            let d = g.usize_in(1, 8);
+            let topo = Topology::erdos_connected(n, 0.6, g.u64());
+            let active = random_active(g, n);
+            let row: Vec<f32> = g.vec_normal_f32(d, 2.0);
+            let msgs0 = NodeMatrix::from_rows(&vec![row; n]);
+            let masks: Vec<DropMask> = (0..3).map(|_| random_mask(g, n)).collect();
+
+            let mut a = InducedConsensus::new(topo.clone());
+            let mut clean = msgs0.clone();
+            a.run(&mut clean, 3, &active);
+
+            let mut b = InducedConsensus::new(topo);
+            let mut masked = msgs0;
+            b.run_faulty(&mut masked, 3, &active, &masks);
+
+            for i in 0..n {
+                for k in 0..d {
+                    crate::prop_assert!(
+                        clean.row(i)[k].to_bits() == masked.row(i)[k].to_bits(),
+                        "({i},{k}): clean={} masked={}",
+                        clean.row(i)[k],
+                        masked.row(i)[k]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn drops_are_local_to_the_receiver() {
+        // Drop edges INTO node 0 only: every other row must come back
+        // bitwise identical to the unmasked round, and the drop count
+        // must equal the number of masked entries that are real edges.
+        let n = 6;
+        let topo = Topology::complete(n);
+        let mut g = crate::prop::Gen::new(0xFA_03);
+        let msgs0 = random_msgs(&mut g, n, 4);
+        let all = vec![true; n];
+        let mut mask = DropMask::new();
+        mask.insert((0, 1));
+        mask.insert((0, 3));
+
+        let mut a = InducedConsensus::new(topo.clone());
+        let mut clean = msgs0.clone();
+        a.run(&mut clean, 1, &all);
+
+        let mut b = InducedConsensus::new(topo);
+        let mut masked = msgs0.clone();
+        let drops = b.run_faulty(&mut masked, 1, &all, std::slice::from_ref(&mask));
+        assert_eq!(drops, 2, "complete graph: both masked pairs are edges");
+        for i in 1..n {
+            assert_eq!(masked.row(i), clean.row(i), "undropped row {i} diverged");
+        }
+        assert_ne!(masked.row(0), clean.row(0), "dropped receiver must differ");
+    }
+
+    #[test]
+    fn per_node_faulty_with_empty_masks_matches_per_node() {
+        let topo = Topology::complete(5);
+        let mut g = crate::prop::Gen::new(0xFA_04);
+        let msgs0 = random_msgs(&mut g, 5, 3);
+        let active = vec![true, true, false, true, true];
+        let budgets = [4usize, 4, 0, 1, 4];
+
+        let mut a = InducedConsensus::new(Topology::complete(5));
+        let mut want = msgs0.clone();
+        a.run_per_node(&mut want, &budgets, &active);
+
+        let mut b = InducedConsensus::new(topo);
+        let mut got = msgs0;
+        let drops = b.run_per_node_faulty(&mut got, &budgets, &active, &[]);
+        assert_eq!(drops, 0);
+        for i in 0..5 {
+            assert_eq!(got.row(i), want.row(i), "row {i}");
+        }
     }
 
     #[test]

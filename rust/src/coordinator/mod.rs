@@ -35,6 +35,7 @@ pub mod threaded;
 
 use crate::churn::ChurnSpec;
 use crate::exec::ExecEngine;
+use crate::fault::FaultSpec;
 use crate::net::NetworkModel;
 use crate::metrics::RunRecord;
 use crate::topology::Topology;
@@ -239,6 +240,12 @@ pub struct RunSpec {
     /// only; the configured rounds become the per-epoch cap).  See
     /// DESIGN.md §network-fabric.
     pub network: NetworkModel,
+    /// Fault-injection plane (`FaultSpec::none()` = today's reliable
+    /// communication, bit-for-bit): deterministic per-edge packet loss,
+    /// Markov link flaps, and unplanned crash/restart windows — all
+    /// pure functions of `(faults.seed, epoch, round, edge)`.  See
+    /// DESIGN.md §fault-injection.
+    pub faults: FaultSpec,
 }
 
 impl RunSpec {
@@ -259,6 +266,7 @@ impl RunSpec {
             time_scale: 1.0,
             churn: ChurnSpec::None,
             network: NetworkModel::Abstract,
+            faults: FaultSpec::none(),
         }
     }
 
@@ -345,6 +353,11 @@ impl RunSpec {
         self.network = network;
         self
     }
+
+    pub fn with_faults(mut self, faults: FaultSpec) -> RunSpec {
+        self.faults = faults;
+        self
+    }
 }
 
 /// Per-(node, epoch) raw log for straggler histograms.
@@ -394,6 +407,10 @@ pub type EngineFactory<'a> = &'a (dyn Fn(usize) -> Box<dyn ExecEngine> + Send + 
 ///
 /// `f_star` is the per-sample optimal loss used for regret accounting
 /// when known (see [`crate::exec::DataSource::f_star`]).
+///
+/// Errors on spec combinations the runtime cannot execute (unsupported
+/// consensus mode × network model × fault plane pairings) so the CLI
+/// surfaces a clean message instead of a panic.
 pub trait Runtime {
     fn kind(&self) -> RuntimeKind;
 
@@ -403,7 +420,7 @@ pub trait Runtime {
         topo: &Topology,
         make_engine: EngineFactory<'_>,
         f_star: Option<f64>,
-    ) -> RunOutput;
+    ) -> anyhow::Result<RunOutput>;
 }
 
 #[cfg(test)]
@@ -480,6 +497,11 @@ mod tests {
         // the network model defaults to the paper's abstract budget and
         // is opt-in per spec
         assert!(c.network.is_abstract() && dg.network.is_abstract());
+        // the fault plane defaults to all-clear and is opt-in per spec
+        assert!(c.faults.is_none() && dg.faults.is_none());
+        let fz = RunSpec::amb("z", 1.0, 0.2, 5, 10, 1)
+            .with_faults(FaultSpec { loss: 0.05, ..FaultSpec::none() });
+        assert!(!fz.faults.is_none() && fz.faults.has_link_faults());
         let nf = RunSpec::amb("n", 1.0, 0.2, 5, 10, 1)
             .with_network(NetworkModel::Fabric(crate::net::FabricSpec::uniform(0.005, 2.0e5)));
         assert_eq!(

@@ -32,6 +32,8 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
+use anyhow::{bail, ensure, Result};
+
 use crate::churn::ChurnSchedule;
 use crate::consensus::churn::InducedConsensus;
 use crate::consensus::hierarchical::HierarchicalConsensus;
@@ -77,7 +79,7 @@ impl Runtime for SimRuntime<'_> {
         topo: &Topology,
         make_engine: EngineFactory<'_>,
         f_star: Option<f64>,
-    ) -> RunOutput {
+    ) -> Result<RunOutput> {
         run_sim(spec, topo, self.straggler, make_engine, f_star)
     }
 }
@@ -254,6 +256,13 @@ trait NodeBlocks {
         update: &[bool],
     ) -> f64;
 
+    /// Crash-onset state reset for the nodes `which` selects: dual,
+    /// primal, gradient accumulator, and (AMB-DG) the pipeline ring are
+    /// rebuilt from scratch — the node forgets everything, unlike a
+    /// churn absence which freezes and resumes.  Called once at the
+    /// FIRST epoch of each crash window (`FaultSpec::crash_onset`).
+    fn reset_nodes(&mut self, which: &[bool]);
+
     /// Final primal arena (one row per node).
     fn final_w(&mut self) -> NodeMatrix;
 }
@@ -272,6 +281,8 @@ struct SerialBlocks {
     engines: Vec<Box<dyn ExecEngine>>,
     states: Vec<NodeState>,
     rings: Option<Vec<DelayedGradients>>,
+    /// AMB-DG pipeline depth, kept for crash-onset ring rebuilds.
+    delay: Option<usize>,
     metric_rng: Pcg64,
 }
 
@@ -289,7 +300,29 @@ impl SerialBlocks {
             engines,
             states,
             rings: build_rings(delay, n),
+            delay,
             metric_rng: epoch::metric_rng(seed, 0),
+        }
+    }
+}
+
+/// The ONE crash-reset body, shared by both executors (and the pool
+/// workers) so the paths cannot drift: rebuild state from the engine's
+/// initial workload and empty the AMB-DG ring.
+fn reset_block(
+    engines: &[Box<dyn ExecEngine>],
+    states: &mut [NodeState],
+    rings: &mut Option<Vec<DelayedGradients>>,
+    delay: Option<usize>,
+    which: &[bool],
+) {
+    for li in 0..states.len() {
+        if !which[li] {
+            continue;
+        }
+        states[li] = NodeState::new(&*engines[li]);
+        if let (Some(rings), Some(d)) = (rings.as_mut(), delay) {
+            rings[li] = DelayedGradients::new(d);
         }
     }
 }
@@ -342,6 +375,10 @@ impl NodeBlocks for SerialBlocks {
         self.engines[0].error_metric(&self.states[0].w, &mut self.metric_rng)
     }
 
+    fn reset_nodes(&mut self, which: &[bool]) {
+        reset_block(&self.engines, &mut self.states, &mut self.rings, self.delay, which);
+    }
+
     fn final_w(&mut self) -> NodeMatrix {
         let mut final_w = NodeMatrix::new(self.states.len(), self.dim);
         write_primals(&self.states, self.dim, final_w.as_mut_slice());
@@ -360,6 +397,8 @@ enum Cmd {
     /// `update` masks the worker's nodes (node order within the block);
     /// `rows`/`b_hats` are empty when no node in the block updates.
     Update { t_next: usize, rows: Vec<f32>, b_hats: Vec<f32>, update: Vec<bool> },
+    /// Crash-onset reset for the masked nodes of the worker's block.
+    Reset { which: Vec<bool> },
     Finish,
 }
 
@@ -368,6 +407,7 @@ enum Reply {
     Ready { dim: usize },
     Computed { worker: usize, applied: Vec<NodeApplied>, rows: Vec<f32> },
     Updated { worker: usize, error: f64 },
+    ResetDone,
     Finished { worker: usize, w_rows: Vec<f32> },
 }
 
@@ -461,6 +501,18 @@ impl NodeBlocks for PooledBlocks {
         error
     }
 
+    fn reset_nodes(&mut self, which: &[bool]) {
+        for (w, &(lo, hi)) in self.spans.iter().enumerate() {
+            self.send(w, Cmd::Reset { which: which[lo..hi].to_vec() });
+        }
+        for _ in 0..self.spans.len() {
+            match self.recv() {
+                Reply::ResetDone => {}
+                _ => unreachable!("sim pool protocol violation (expected ResetDone)"),
+            }
+        }
+    }
+
     fn final_w(&mut self) -> NodeMatrix {
         for w in 0..self.spans.len() {
             self.send(w, Cmd::Finish);
@@ -543,6 +595,12 @@ fn sim_worker(ctx: WorkerCtx, make_engine: EngineFactory<'_>) {
                     break;
                 }
             }
+            Cmd::Reset { which } => {
+                reset_block(&engines, &mut states, &mut rings, delay, &which);
+                if tx.send(Reply::ResetDone).is_err() {
+                    break;
+                }
+            }
             Cmd::Finish => {
                 let mut w_rows = vec![0.0f32; (hi - lo) * dim];
                 write_primals(&states, dim, &mut w_rows);
@@ -563,8 +621,24 @@ fn run_sim(
     straggler: &dyn StragglerModel,
     make_engine: EngineFactory<'_>,
     f_star: Option<f64>,
-) -> RunOutput {
+) -> Result<RunOutput> {
     let n = topo.n();
+    spec.faults.validate(n)?;
+    if spec.faults.has_link_faults() {
+        match spec.consensus {
+            ConsensusMode::Exact => bail!(
+                "link faults (loss/flap) require a gossip consensus mode: Exact consensus \
+                 models a lossless master aggregation with no per-link messages to drop — \
+                 use crashes only, or switch to Gossip/GossipJitter"
+            ),
+            ConsensusMode::Hierarchical { .. } => bail!(
+                "link faults (loss/flap) are not modeled for Hierarchical consensus (the \
+                 aggregator exchange has no per-edge rounds); crashes compose with every \
+                 mode via membership"
+            ),
+            ConsensusMode::Gossip { .. } | ConsensusMode::GossipJitter { .. } => {}
+        }
+    }
     // AMB-DG runs through the pipeline ring at EVERY delay, including 0:
     // the `AmbDg { delay: 0 } ≡ Amb` bitwise contract is then a test of
     // the pipeline code itself, not of a bypass around it.
@@ -632,9 +706,19 @@ fn epoch_loop<B: NodeBlocks>(
     straggler: &dyn StragglerModel,
     f_star: Option<f64>,
     nodes: &mut B,
-) -> RunOutput {
+) -> Result<RunOutput> {
     let n = topo.n();
     let dim = nodes.dim();
+
+    // Fault plane (ISSUE 8): crashes compose with churn through the
+    // effective active mask; link faults thread drop masks through the
+    // consensus kernels and the fabric.  All-clear specs skip every
+    // fault branch, reproducing the no-fault run bit-for-bit.
+    let faults = &spec.faults;
+    let has_crashes = faults.has_crashes();
+    let has_link = faults.has_link_faults();
+    let mut eff_active = vec![false; n];
+    let mut reset_buf = vec![false; n];
 
     // Canonical per-purpose RNG streams (shared with the threaded
     // runtime so one spec replays the same data everywhere).
@@ -678,16 +762,16 @@ fn epoch_loop<B: NodeBlocks>(
             spec.scheme.t_consensus(),
             rounds,
         )),
-        (NetworkModel::Fabric(_), ConsensusMode::Exact) => panic!(
+        (NetworkModel::Fabric(_), ConsensusMode::Exact) => bail!(
             "NetworkModel::Fabric requires ConsensusMode::Gossip: Exact consensus models a \
              master aggregation with no per-link gossip rounds to measure"
         ),
-        (NetworkModel::Fabric(_), ConsensusMode::GossipJitter { .. }) => panic!(
+        (NetworkModel::Fabric(_), ConsensusMode::GossipJitter { .. }) => bail!(
             "NetworkModel::Fabric requires ConsensusMode::Gossip: GossipJitter is the abstract \
              stand-in for the per-node round variability the fabric measures — use one or the \
              other"
         ),
-        (NetworkModel::Fabric(_), ConsensusMode::Hierarchical { .. }) => panic!(
+        (NetworkModel::Fabric(_), ConsensusMode::Hierarchical { .. }) => bail!(
             "NetworkModel::Fabric requires ConsensusMode::Gossip: the hierarchical scheme's \
              aggregator exchange has no per-link fabric model (only flat gossip rounds are \
              measured)"
@@ -708,13 +792,49 @@ fn epoch_loop<B: NodeBlocks>(
     let mut wall = 0.0f64;
 
     for t in 1..=spec.epochs {
-        let active = churn.active(t);
-        let act = churn.active_count(t);
+        // Effective membership: churn ∧ not-crashed.  A crashed epoch
+        // looks like an absence to every phase (plan draws for everyone
+        // — stream invariance — but attributes zero batches), EXCEPT
+        // that state is reset at onset instead of frozen.
+        let active: &[bool] = if has_crashes {
+            let churn_active = churn.active(t);
+            for i in 0..n {
+                eff_active[i] = churn_active[i] && !faults.crashed(i, t);
+            }
+            &eff_active
+        } else {
+            churn.active(t)
+        };
+        let act = active.iter().filter(|&&a| a).count();
         let all_active = act == n;
         active_counts.push(act);
 
+        if has_crashes {
+            let mut any = false;
+            for i in 0..n {
+                reset_buf[i] = faults.crash_onset(i, t);
+                any |= reset_buf[i];
+            }
+            if any {
+                nodes.reset_nodes(&reset_buf);
+            }
+        }
+
         // ---- compute phase -------------------------------------------------
-        let plan = epoch::plan_compute(&spec.scheme, n, t, straggler, &mut strag_rng, active);
+        let mut plan =
+            epoch::plan_compute(&spec.scheme, n, t, straggler, &mut strag_rng, active);
+        // A rejoining node spends its first alive epoch re-syncing: it
+        // computes nothing (batch forced to 0 AFTER the plan drew its
+        // straggler times, keeping the RNG stream invariant), so its
+        // zero-mass row picks up the neighborhood average and the update
+        // gate applies the peer re-sync exactly once.
+        if has_crashes {
+            for i in 0..n {
+                if active[i] && faults.rejoining(i, t) {
+                    plan.batches[i] = 0;
+                }
+            }
+        }
         let c_t: usize = plan.potentials.iter().sum();
 
         let applied = nodes.compute_and_encode(t, &plan.batches, active, &mut msgs);
@@ -739,6 +859,9 @@ fn epoch_loop<B: NodeBlocks>(
         } else {
             InducedConsensus::active_mean_f64(&msgs, active)
         };
+        // Substitute-self applications fired by this epoch's mixing
+        // (always 0 on the clean path — the gate for drift measurement).
+        let mut drops_fired = 0usize;
         match spec.consensus {
             ConsensusMode::Exact => {
                 if let Some(avg) = &exact_avg {
@@ -757,7 +880,7 @@ fn epoch_loop<B: NodeBlocks>(
                 // values are the threaded-only "as many rounds as fit in
                 // T_c" idiom and would loop for years here — fail loudly
                 // instead of hanging.
-                assert!(
+                ensure!(
                     rounds <= MAX_SIM_GOSSIP_ROUNDS,
                     "Gossip {{ rounds: {rounds} }} on the simulator: this looks like the \
                      threaded-only GOSSIP_UNTIL_DEADLINE sentinel; the sim has no per-round \
@@ -766,7 +889,13 @@ fn epoch_loop<B: NodeBlocks>(
                 match fabric.as_mut() {
                     None => {
                         if act > 0 {
-                            cons.run(&mut msgs, rounds, active);
+                            if has_link {
+                                let masks = faults.epoch_masks(topo, active, t, rounds);
+                                drops_fired =
+                                    cons.run_faulty(&mut msgs, rounds, active, &masks);
+                            } else {
+                                cons.run(&mut msgs, rounds, active);
+                            }
                         }
                         // Churn-isolated nodes (active, every neighbour
                         // down) log 0 rounds — they had nobody to gossip
@@ -790,9 +919,30 @@ fn epoch_loop<B: NodeBlocks>(
                         // measures the cap everywhere, making
                         // run_per_node's uniform-budget path bitwise
                         // identical to cons.run above.
-                        rounds_buf.copy_from_slice(f.rounds(topo, active));
-                        if act > 0 {
-                            cons.run_per_node(&mut msgs, &rounds_buf, active);
+                        if has_link {
+                            // Fresh measurement per epoch (no memo: the
+                            // SAME active set measures differently under
+                            // a per-epoch loss pattern), with lost
+                            // packets never arriving and a per-round
+                            // timeout completing rounds with whatever
+                            // neighborhood made it.  The measured masks
+                            // then degrade the mixing consistently.
+                            let masks = faults.epoch_masks(topo, active, t, f.cap());
+                            rounds_buf
+                                .copy_from_slice(f.rounds_faulty(topo, active, &masks, faults.round_timeout));
+                            if act > 0 {
+                                drops_fired = cons.run_per_node_faulty(
+                                    &mut msgs,
+                                    &rounds_buf,
+                                    active,
+                                    &masks,
+                                );
+                            }
+                        } else {
+                            rounds_buf.copy_from_slice(f.rounds(topo, active));
+                            if act > 0 {
+                                cons.run_per_node(&mut msgs, &rounds_buf, active);
+                            }
                         }
                     }
                 }
@@ -807,10 +957,17 @@ fn epoch_loop<B: NodeBlocks>(
                         0
                     };
                 }
-                cons.run_per_node(&mut msgs, &rounds_buf, active);
+                if has_link {
+                    let rmax = rounds_buf.iter().copied().max().unwrap_or(0);
+                    let masks = faults.epoch_masks(topo, active, t, rmax);
+                    drops_fired =
+                        cons.run_per_node_faulty(&mut msgs, &rounds_buf, active, &masks);
+                } else {
+                    cons.run_per_node(&mut msgs, &rounds_buf, active);
+                }
             }
             ConsensusMode::Hierarchical { intra_rounds, inter_rounds, .. } => {
-                assert!(
+                ensure!(
                     intra_rounds <= MAX_SIM_GOSSIP_ROUNDS
                         && inter_rounds <= MAX_SIM_GOSSIP_ROUNDS,
                     "Hierarchical {{ intra_rounds: {intra_rounds}, inter_rounds: \
@@ -833,6 +990,24 @@ fn epoch_loop<B: NodeBlocks>(
         for i in 0..n {
             rounds_log[i].push(rounds_buf[i]);
         }
+
+        // Conservation drift: lost messages make the degraded mix only
+        // approximately mean-conserving — MEASURE the violation (L2
+        // between the active-set mean before and after consensus, f64)
+        // instead of pretending it away.  Exactly 0.0 whenever no drop
+        // fired (clean epochs of a faulty run included).
+        let conservation_drift = if drops_fired > 0 {
+            let before = exact_avg.as_ref().expect("drops imply an active node");
+            let after = InducedConsensus::active_mean_f64(&msgs, active)
+                .expect("active set unchanged by consensus");
+            let mut sq = 0.0f64;
+            for (a, b) in after.iter().zip(before) {
+                sq += (a - b) * (a - b);
+            }
+            sq.sqrt()
+        } else {
+            0.0
+        };
 
         // ---- update phase ----------------------------------------------------
         // Undelayed schemes serialize compute + consensus; a pipelined
@@ -908,16 +1083,17 @@ fn epoch_loop<B: NodeBlocks>(
             max_node_batch: plan.batches.iter().copied().max().unwrap_or(0),
             max_staleness,
             mean_staleness: if b_t > 0 { staleness_wsum / b_t as f64 } else { f64::NAN },
+            conservation_drift,
         });
     }
 
-    RunOutput {
+    Ok(RunOutput {
         record,
         node_log,
         final_w: nodes.final_w(),
         rounds: rounds_log,
         active_counts,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -936,6 +1112,20 @@ mod tests {
         (src, opt)
     }
 
+    fn try_run_on(
+        spec: &RunSpec,
+        topo: &Topology,
+        strag: &dyn StragglerModel,
+        src: Arc<DataSource>,
+        opt: DualAveraging,
+    ) -> Result<RunOutput> {
+        let f_star = src.f_star();
+        let mk = move |_i: usize| -> Box<dyn ExecEngine> {
+            Box::new(NativeExec::new(src.clone(), opt.clone()))
+        };
+        SimRuntime::new(strag).run(spec, topo, &mk, f_star)
+    }
+
     fn run_on(
         spec: &RunSpec,
         topo: &Topology,
@@ -943,11 +1133,7 @@ mod tests {
         src: Arc<DataSource>,
         opt: DualAveraging,
     ) -> RunOutput {
-        let f_star = src.f_star();
-        let mk = move |_i: usize| -> Box<dyn ExecEngine> {
-            Box::new(NativeExec::new(src.clone(), opt.clone()))
-        };
-        SimRuntime::new(strag).run(spec, topo, &mk, f_star)
+        try_run_on(spec, topo, strag, src, opt).expect("spec should be runnable")
     }
 
     fn run_amb(epochs: usize, rounds: usize, seed: u64) -> RunOutput {
@@ -1352,43 +1538,197 @@ mod tests {
         assert!(out.active_counts.iter().any(|&a| a < 24), "churn never bit");
     }
 
+    /// The unsupported-combination specs must come back as clean `Err`s
+    /// (CLI-printable), not panics — and the message must say why.
+    fn assert_rejected(spec: RunSpec, needle: &str) {
+        let topo = Topology::ring(4);
+        let (src, opt) = linreg_setup(8, 7);
+        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
+        let err = try_run_on(&spec, &topo, &strag, src, opt)
+            .expect_err("spec should be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "error '{msg}' missing '{needle}'");
+    }
+
     #[test]
-    #[should_panic(expected = "requires ConsensusMode::Gossip")]
     fn fabric_with_hierarchical_consensus_is_rejected() {
-        let topo = Topology::ring(4);
-        let (src, opt) = linreg_setup(8, 7);
-        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
-        let spec = RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
-            .with_consensus(ConsensusMode::Hierarchical {
-                shards: 2,
-                intra_rounds: 3,
-                inter_rounds: 2,
-            })
-            .with_network(NetworkModel::Fabric(crate::net::FabricSpec::ideal()));
-        let _ = run_on(&spec, &topo, &strag, src, opt);
+        assert_rejected(
+            RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
+                .with_consensus(ConsensusMode::Hierarchical {
+                    shards: 2,
+                    intra_rounds: 3,
+                    inter_rounds: 2,
+                })
+                .with_network(NetworkModel::Fabric(crate::net::FabricSpec::ideal())),
+            "requires ConsensusMode::Gossip",
+        );
     }
 
     #[test]
-    #[should_panic(expected = "requires ConsensusMode::Gossip")]
     fn fabric_with_exact_consensus_is_rejected() {
-        let topo = Topology::ring(4);
-        let (src, opt) = linreg_setup(8, 7);
-        let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
-        let spec = RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
-            .with_consensus(ConsensusMode::Exact)
-            .with_network(NetworkModel::Fabric(crate::net::FabricSpec::ideal()));
-        let _ = run_on(&spec, &topo, &strag, src, opt);
+        assert_rejected(
+            RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
+                .with_consensus(ConsensusMode::Exact)
+                .with_network(NetworkModel::Fabric(crate::net::FabricSpec::ideal())),
+            "requires ConsensusMode::Gossip",
+        );
     }
 
     #[test]
-    #[should_panic(expected = "requires ConsensusMode::Gossip")]
     fn fabric_with_jitter_consensus_is_rejected() {
+        assert_rejected(
+            RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
+                .with_consensus(ConsensusMode::GossipJitter { mean: 5, jitter: 2 })
+                .with_network(NetworkModel::Fabric(crate::net::FabricSpec::ideal())),
+            "requires ConsensusMode::Gossip",
+        );
+    }
+
+    #[test]
+    fn link_faults_with_exact_or_hierarchical_are_rejected() {
+        use crate::fault::FaultSpec;
+        let faults = FaultSpec { loss: 0.1, ..FaultSpec::none() };
+        assert_rejected(
+            RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
+                .with_consensus(ConsensusMode::Exact)
+                .with_faults(faults.clone()),
+            "require a gossip consensus mode",
+        );
+        assert_rejected(
+            RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
+                .with_consensus(ConsensusMode::Hierarchical {
+                    shards: 2,
+                    intra_rounds: 3,
+                    inter_rounds: 2,
+                })
+                .with_faults(faults),
+            "not modeled for Hierarchical",
+        );
+        // and validate() failures surface the same way
+        assert_rejected(
+            RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
+                .with_faults(FaultSpec { loss: 2.0, ..FaultSpec::none() }),
+            "not in [0, 1]",
+        );
+    }
+
+    #[test]
+    fn allclear_faultspec_reproduces_baseline_bitwise() {
+        use crate::fault::FaultSpec;
+        // A spec whose fault plane is present but all-clear (seed and
+        // timeout set, no loss/flap/crash) must take the stock code
+        // paths everywhere: bit-identical record, rounds log, and final
+        // primals — including under churn.
+        let go = |faulted: bool| {
+            let topo = Topology::paper_fig2();
+            let (src, opt) = linreg_setup(16, 4);
+            let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+            let mut spec = RunSpec::amb("clear", 2.0, 0.5, 5, 6, 17)
+                .with_churn(crate::churn::ChurnSpec::IidDropout { p: 0.2, seed: 3 });
+            if faulted {
+                spec = spec
+                    .with_faults(FaultSpec { seed: 99, round_timeout: 0.25, ..FaultSpec::none() });
+            }
+            run_on(&spec, &topo, &strag, src, opt)
+        };
+        let base = go(false);
+        let clear = go(true);
+        assert_eq!(base.rounds, clear.rounds);
+        for (a, b) in base.final_w.as_slice().iter().zip(clear.final_w.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in base.record.epochs.iter().zip(&clear.record.epochs) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+            assert_eq!(a.conservation_drift.to_bits(), 0.0f64.to_bits());
+            assert_eq!(b.conservation_drift.to_bits(), 0.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn loss_produces_measured_drift_and_still_converges() {
+        use crate::fault::FaultSpec;
+        let topo = Topology::paper_fig2();
+        let (src, opt) = linreg_setup(16, 4);
+        let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 60 };
+        let spec = RunSpec::amb("lossy", 2.5, 0.5, 8, 20, 7)
+            .with_faults(FaultSpec { loss: 0.05, seed: 1, ..FaultSpec::none() });
+        let out = run_on(&spec, &topo, &strag, src, opt);
+        // drift is measured (finite), and at 5% loss over 8 rounds some
+        // epoch must actually drop something
+        assert!(out.record.epochs.iter().all(|e| e.conservation_drift.is_finite()));
+        assert!(
+            out.record.epochs.iter().any(|e| e.conservation_drift > 0.0),
+            "5% loss never fired a drop"
+        );
+        // degraded consensus still makes optimization progress
+        let first = out.record.epochs[0].error;
+        let last = out.record.epochs.last().unwrap().error;
+        assert!(last < first * 0.5, "no progress under loss: {first} -> {last}");
+        // and the run is bit-reproducible
+        let (src2, opt2) = linreg_setup(16, 4);
+        let again = run_on(&spec, &topo, &strag, src2, opt2);
+        for (a, b) in out.record.epochs.iter().zip(&again.record.epochs) {
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+            assert_eq!(a.conservation_drift.to_bits(), b.conservation_drift.to_bits());
+        }
+    }
+
+    #[test]
+    fn crash_resets_state_and_resyncs_from_peers_exactly_once() {
+        use crate::fault::{CrashWindow, FaultSpec};
         let topo = Topology::ring(4);
         let (src, opt) = linreg_setup(8, 7);
         let strag = Deterministic { unit_time: 1.0, unit_batch: 40 };
-        let spec = RunSpec::amb("bad", 2.0, 0.5, 5, 2, 5)
-            .with_consensus(ConsensusMode::GossipJitter { mean: 5, jitter: 2 })
-            .with_network(NetworkModel::Fabric(crate::net::FabricSpec::ideal()));
-        let _ = run_on(&spec, &topo, &strag, src, opt);
+        // node 1 dies during epochs 2..=3, rejoins at 4
+        let faults = FaultSpec {
+            crashes: vec![CrashWindow { node: 1, from: 2, to: 3 }],
+            ..FaultSpec::none()
+        };
+        let spec = RunSpec::amb("crash", 2.0, 0.5, 6, 6, 5)
+            .with_consensus(ConsensusMode::Exact)
+            .with_node_log()
+            .with_faults(faults);
+        let out = run_on(&spec, &topo, &strag, src, opt);
+        // membership: everyone, then 3 while dead, then everyone again
+        assert_eq!(out.active_counts, vec![4, 3, 3, 4, 4, 4]);
+        // epoch batches: dead epochs AND the rejoin epoch contribute 0
+        // from node 1 (the rejoin epoch is the peer re-sync, compute
+        // suppressed exactly once), full batches afterwards
+        let batches: Vec<usize> = out.record.epochs.iter().map(|e| e.batch).collect();
+        assert_eq!(batches, vec![4 * 80, 3 * 80, 3 * 80, 3 * 80, 4 * 80, 4 * 80]);
+        // under Exact consensus the re-synced node lands bitwise on the
+        // shared average — same primal as its peers from epoch 4 on
+        for k in 0..out.final_w.d() {
+            assert_eq!(
+                out.final_w.row(1)[k].to_bits(),
+                out.final_w.row(0)[k].to_bits(),
+                "re-synced node drifted from peers at col {k}"
+            );
+        }
+        // crashes alone never fire link drops: drift identically zero
+        assert!(out.record.epochs.iter().all(|e| e.conservation_drift == 0.0));
+    }
+
+    #[test]
+    fn permanent_crash_completes_with_gossip() {
+        use crate::fault::{CrashWindow, FaultSpec};
+        let topo = Topology::paper_fig2();
+        let (src, opt) = linreg_setup(16, 4);
+        let strag = ShiftedExp { zeta: 1.0, lambda: 1.0, unit_batch: 40 };
+        let faults = FaultSpec {
+            crashes: vec![CrashWindow { node: 3, from: 2, to: usize::MAX }],
+            ..FaultSpec::none()
+        };
+        let spec = RunSpec::amb("perma", 2.0, 0.5, 5, 8, 11).with_faults(faults);
+        let out = run_on(&spec, &topo, &strag, src, opt);
+        assert_eq!(out.record.epochs.len(), 8);
+        assert_eq!(out.active_counts[0], 10);
+        assert!(out.active_counts[1..].iter().all(|&a| a == 9));
+        // the dead node gossips no rounds after the onset
+        assert!(out.rounds[3][1..].iter().all(|&r| r == 0));
+        let first = out.record.epochs[0].error;
+        let last = out.record.epochs.last().unwrap().error;
+        assert!(last < first, "survivors made no progress: {first} -> {last}");
     }
 }

@@ -32,9 +32,11 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier, OnceLock};
 use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
 
 use crate::churn::ChurnSchedule;
 use crate::coordinator::epoch::{self, NodeState};
@@ -62,7 +64,7 @@ impl Runtime for ThreadedRuntime {
         topo: &Topology,
         make_engine: EngineFactory<'_>,
         f_star: Option<f64>,
-    ) -> RunOutput {
+    ) -> Result<RunOutput> {
         run_threaded(spec, topo, make_engine, f_star)
     }
 }
@@ -131,7 +133,7 @@ fn run_threaded(
     topo: &Topology,
     make_engine: EngineFactory<'_>,
     f_star: Option<f64>,
-) -> RunOutput {
+) -> Result<RunOutput> {
     // `AmbDg { delay: 0 }` IS the paper's AMB; executing it through the
     // stock AMB path keeps "D = 0 degenerates to today's AMB" true by
     // construction on real threads (the pipelined arm below requires
@@ -144,22 +146,37 @@ fn run_threaded(
     };
     let spec = &spec_norm;
     let n = topo.n();
-    assert!(n >= 2, "threaded runtime needs at least 2 nodes");
-    assert!(
-        spec.slowdown.is_empty() || spec.slowdown.len() == n,
-        "slowdown must be empty or one factor per node"
-    );
-    assert!(
-        spec.network.is_abstract(),
-        "NetworkModel::Fabric is sim-only: the threaded runtime's channels ARE its network, \
-         so measured rounds come from real wall-clock deadlines, not the event fabric — run \
-         fabric specs with --runtime sim"
-    );
-    assert!(
-        !matches!(spec.consensus, ConsensusMode::Hierarchical { .. }),
-        "ConsensusMode::Hierarchical is sim-only: the threaded runtime has no \
-         shard-aggregator wire protocol — run this spec on --runtime sim"
-    );
+    if n < 2 {
+        bail!("threaded runtime needs at least 2 nodes (got {n})");
+    }
+    if !(spec.slowdown.is_empty() || spec.slowdown.len() == n) {
+        bail!(
+            "slowdown must be empty or one factor per node (got {} factors for {n} nodes)",
+            spec.slowdown.len()
+        );
+    }
+    if !spec.network.is_abstract() {
+        bail!(
+            "NetworkModel::Fabric is sim-only: the threaded runtime's channels ARE its network, \
+             so measured rounds come from real wall-clock deadlines, not the event fabric — run \
+             fabric specs with --runtime sim"
+        );
+    }
+    if matches!(spec.consensus, ConsensusMode::Hierarchical { .. }) {
+        bail!(
+            "ConsensusMode::Hierarchical is sim-only: the threaded runtime has no \
+             shard-aggregator wire protocol — run this spec on --runtime sim"
+        );
+    }
+    spec.faults.validate(n)?;
+    if spec.faults.has_link_faults() && spec.consensus == ConsensusMode::Exact {
+        // Same policy (and wording) as the simulator's dispatch.
+        bail!(
+            "link faults (loss/flap) require a gossip consensus mode: Exact consensus \
+             models a lossless master aggregation with no per-link messages to drop — \
+             use crashes only, or switch to Gossip/GossipJitter"
+        );
+    }
     let p = Arc::new(topo.metropolis().lazy());
 
     // Under Exact consensus the communication graph is all-to-all
@@ -220,7 +237,7 @@ fn run_threaded(
         handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect()
     });
 
-    assemble(spec, n, results, f_star, &churn)
+    Ok(assemble(spec, n, results, f_star, &churn))
 }
 
 /// Leader-side assembly of the per-node reports into the common
@@ -247,8 +264,12 @@ fn assemble(
     let mut active_counts = Vec::with_capacity(spec.epochs);
     let mut wall = 0.0f64;
     for t in 1..=spec.epochs {
-        let active = churn.active(t);
-        let act_count = churn.active_count(t);
+        // The epoch's effective membership: churn minus crashed nodes
+        // (the same pure schedule every node thread evaluated).
+        let churn_active = churn.active(t);
+        let active: Vec<bool> =
+            (0..n).map(|j| churn_active[j] && !spec.faults.crashed(j, t)).collect();
+        let act_count = active.iter().filter(|&&a| a).count();
         active_counts.push(act_count);
         // Per-epoch quota over the ACTIVE cluster (None for AMB/AMB-DG).
         let quota = epoch::work_quota(&spec.scheme, act_count);
@@ -326,6 +347,10 @@ fn assemble(
             max_node_batch: max_b,
             max_staleness,
             mean_staleness: if b_t > 0 { staleness_wsum / b_t as f64 } else { f64::NAN },
+            // No global observer on real threads: under active faults
+            // the drift exists but is not measurable here (the sim
+            // reports it); all-clear runs are exactly conservative.
+            conservation_drift: if spec.faults.is_none() { 0.0 } else { f64::NAN },
         });
     }
     let mut final_w = NodeMatrix::new(n, dim);
@@ -433,23 +458,15 @@ fn consensus_phase(
                 }
             }
             while missing > 0 {
-                let now = Instant::now();
-                if now >= consensus_deadline {
-                    break;
-                }
-                match ctx.rx.recv_timeout(consensus_deadline - now) {
-                    Ok(msg) => {
-                        if msg.epoch == t && msg.round == 0 && msg.from != i
-                            && active[msg.from]
-                            && have[msg.from].is_none()
-                        {
-                            have[msg.from] = Some(msg.payload);
-                            missing -= 1;
-                        } else {
-                            inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
-                        }
-                    }
-                    Err(_) => break,
+                let Some(msg) = recv_backoff(&ctx.rx, consensus_deadline) else { break };
+                if msg.epoch == t && msg.round == 0 && msg.from != i
+                    && active[msg.from]
+                    && have[msg.from].is_none()
+                {
+                    have[msg.from] = Some(msg.payload);
+                    missing -= 1;
+                } else {
+                    inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
                 }
             }
             if missing == 0 {
@@ -498,6 +515,16 @@ fn consensus_phase(
             // lists + the shared schedule, matching the simulator's
             // `Topology::induced(..).metropolis().lazy()` weights —
             // when somebody churned.
+            // Link faults are decided at the RECEIVER: `dropped` is a
+            // pure function of (spec, epoch, round, edge), the very
+            // function the sim's per-epoch masks are built from, so
+            // both runtimes lose the identical messages for a spec.
+            // Senders stay oblivious (a real network's sender cannot
+            // know a packet will be lost); receivers discard doomed
+            // payloads on arrival and mix their own pre-mix row in the
+            // lost peer's slot, keeping the mixing row stochastic.
+            let faults = &spec.faults;
+            let has_link = faults.has_link_faults();
             let epeers: Vec<usize> =
                 (0..ctx.peers.len()).filter(|&idx| active[ctx.peers[idx]]).collect();
             let (pii, pw): (f32, Vec<f32>) = if act_count == n {
@@ -555,6 +582,16 @@ fn consensus_phase(
             let mut have: Vec<Option<Arc<[f32]>>> = vec![None; epeers.len()];
             let mut round = 0usize;
             'rounds: while round < max_rounds {
+                // This round's losses (receiver-side, pure): a dropped
+                // peer is satisfied immediately — its slot mixes our
+                // own pre-mix row below, never a payload.  The drop
+                // verdict outranks the frozen fallback: the sim's
+                // masked kernel substitutes the receiver's row even
+                // when the source is a frozen (budget-exhausted) node.
+                let drop_from: Vec<bool> = epeers
+                    .iter()
+                    .map(|&idx| has_link && faults.dropped(t, round, ctx.peers[idx], i))
+                    .collect();
                 // collect all active peers' round-`round` messages
                 for h in have.iter_mut() {
                     *h = None;
@@ -564,7 +601,9 @@ fn consensus_phase(
                 // for peers whose budget is exhausted
                 for (e, &idx) in epeers.iter().enumerate() {
                     let j = ctx.peers[idx];
-                    if let Some(pl) = inbox.remove(&(t, round, j)) {
+                    if drop_from[e] {
+                        missing -= 1;
+                    } else if let Some(pl) = inbox.remove(&(t, round, j)) {
                         if track_frozen {
                             latest[e] = Some(pl.clone());
                         }
@@ -580,58 +619,67 @@ fn consensus_phase(
                     }
                 }
                 while missing > 0 {
-                    let now = Instant::now();
-                    if now >= consensus_deadline {
-                        break 'rounds; // T_c exhausted mid-round: keep m as-is
+                    // T_c exhausted mid-round: keep m as-is
+                    let Some(msg) = recv_backoff(&ctx.rx, consensus_deadline) else {
+                        break 'rounds;
+                    };
+                    if has_link && faults.dropped(msg.epoch, msg.round, msg.from, i) {
+                        // Lost on the wire: never buffered, never
+                        // frozen — the channel delivered it, the
+                        // modeled link did not.
+                        continue;
                     }
-                    match ctx.rx.recv_timeout(consensus_deadline - now) {
-                        Ok(msg) => {
-                            let peer_e = (msg.epoch == t)
-                                .then(|| {
-                                    epeers
-                                        .iter()
-                                        .position(|&idx| ctx.peers[idx] == msg.from)
-                                })
-                                .flatten();
-                            if let Some(e) = peer_e {
-                                if track_frozen {
-                                    latest[e] = Some(msg.payload.clone());
-                                }
-                                if msg.round == round && have[e].is_none() {
-                                    have[e] = Some(msg.payload);
-                                    missing -= 1;
-                                    // a frozen-eligible peer may have
-                                    // just delivered its round 0
-                                    continue;
-                                }
-                            }
-                            // stale/early message: buffer for later rounds
-                            inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
-                            // re-check frozen fallbacks now that
-                            // `latest` may have been filled
-                            for (e, &idx) in epeers.iter().enumerate() {
-                                let j = ctx.peers[idx];
-                                if have[e].is_none() && !peer_sends(j, round) {
-                                    if let Some(frozen) = latest[e].clone() {
-                                        have[e] = Some(frozen);
-                                        missing -= 1;
-                                    }
-                                }
+                    let peer_e = (msg.epoch == t)
+                        .then(|| {
+                            epeers
+                                .iter()
+                                .position(|&idx| ctx.peers[idx] == msg.from)
+                        })
+                        .flatten();
+                    if let Some(e) = peer_e {
+                        if track_frozen {
+                            latest[e] = Some(msg.payload.clone());
+                        }
+                        if msg.round == round && have[e].is_none() && !drop_from[e] {
+                            have[e] = Some(msg.payload);
+                            missing -= 1;
+                            // a frozen-eligible peer may have
+                            // just delivered its round 0
+                            continue;
+                        }
+                    }
+                    // stale/early message: buffer for later rounds
+                    inbox.insert((msg.epoch, msg.round, msg.from), msg.payload);
+                    // re-check frozen fallbacks now that
+                    // `latest` may have been filled
+                    for (e, &idx) in epeers.iter().enumerate() {
+                        let j = ctx.peers[idx];
+                        if have[e].is_none() && !drop_from[e] && !peer_sends(j, round) {
+                            if let Some(frozen) = latest[e].clone() {
+                                have[e] = Some(frozen);
+                                missing -= 1;
                             }
                         }
-                        Err(_) => break 'rounds,
                     }
                 }
                 if missing > 0 {
                     break 'rounds;
                 }
-                // m ← P_ii m + Σ_{j ∈ A ∩ N(i)} P_ij m_j
+                // m ← P_ii m + Σ_{j ∈ A ∩ N(i)} P_ij (dropped(i←j) ? m : m_j)
+                // — the substitution reads the PRE-mix row, so snapshot
+                // it before scaling by P_ii (sim's `mix_into_masked`).
+                let m_pre: Option<Vec<f32>> =
+                    drop_from.iter().any(|&d| d).then(|| m.to_vec());
                 for v in m.iter_mut() {
                     *v *= pii;
                 }
                 for (e, _) in epeers.iter().enumerate() {
                     let pij = pw[e];
-                    let mj = have[e].as_ref().unwrap();
+                    let mj: &[f32] = if drop_from[e] {
+                        m_pre.as_deref().expect("drop implies snapshot")
+                    } else {
+                        have[e].as_deref().expect("missing == 0")
+                    };
                     for k in 0..=dim {
                         m[k] += pij * mj[k];
                     }
@@ -661,10 +709,11 @@ fn consensus_phase(
             }
             rounds_done = round;
         }
-        ConsensusMode::Hierarchical { .. } => panic!(
-            "ConsensusMode::Hierarchical is sim-only: the threaded runtime has no \
-             shard-aggregator wire protocol — run this spec on `--runtime sim`"
-        ),
+        // Rejected with a clean error before any thread spawned
+        // (run_threaded's upfront validation).
+        ConsensusMode::Hierarchical { .. } => {
+            unreachable!("Hierarchical is rejected by run_threaded before node_main runs")
+        }
     }
     rounds_done
 }
@@ -734,15 +783,42 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
     ctx.ready.wait();
     let start = *ctx.start_cell.get_or_init(|| Instant::now() + Duration::from_millis(20));
 
+    let has_crashes = spec.faults.has_crashes();
+
     for t in 1..=spec.epochs {
         st.begin_epoch();
         // Per-(node, epoch) stream, identical to the simulator's.
         let mut data_rng = epoch::data_rng(spec.seed, i, t);
         // Membership is a pure function of the spec: every node reads
-        // the same table, so nobody waits on an absent peer.
-        let active = ctx.churn.active(t);
+        // the same table, so nobody waits on an absent peer.  Crashes
+        // compose with churn via membership — a crashed node is simply
+        // absent — but unlike churn's frozen absence the node LOSES its
+        // state at onset and re-syncs from peers on rejoin.
+        let churn_active = ctx.churn.active(t);
+        let eff_active: Vec<bool>;
+        let active: &[bool] = if has_crashes {
+            eff_active =
+                (0..n).map(|j| churn_active[j] && !spec.faults.crashed(j, t)).collect();
+            &eff_active
+        } else {
+            churn_active
+        };
         let on = active[i];
-        let act_count = ctx.churn.active_count(t);
+        let act_count = active.iter().filter(|&&a| a).count();
+        if has_crashes && spec.faults.crash_onset(i, t) {
+            // The crash forgets everything: fresh optimizer state,
+            // empty pipeline ring, cleared wire row.  (`est_chunk`
+            // survives — it estimates the hardware, not the model.)
+            st = NodeState::new(&*engine);
+            if let Scheme::AmbDg { delay, .. } = spec.scheme {
+                ring = Some(DelayedGradients::new(delay));
+            }
+            m.fill(0.0);
+        }
+        // First epoch back: join consensus with a zero-mass row (no
+        // compute), so the update gate hands this node the
+        // neighborhood average — the re-sync happens exactly once.
+        let rejoin = has_crashes && on && spec.faults.rejoining(i, t);
         let mut b_i = 0usize;
         let mut loss_i = 0.0f64;
         let compute_secs;
@@ -814,7 +890,7 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 // so the gradients the ring records were evaluated at
                 // the pre-update iterate, exactly the sim's delay model.
                 // An absent node idles the window out (absolute schedule).
-                if on {
+                if on && !rejoin {
                     let compute_t0 = Instant::now();
                     let (b, l) = anytime_compute(
                         &mut *engine,
@@ -829,6 +905,12 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     loss_i = l;
                     ring.as_mut().unwrap().push(t, b_i, loss_i, &st.grad_sum);
                     compute_secs = compute_t0.elapsed().as_secs_f64();
+                } else if on {
+                    // Rejoin: no compute, but the pipeline cadence must
+                    // hold — push the empty batch so pops stay aligned
+                    // with epochs.
+                    ring.as_mut().unwrap().push(t, 0, 0.0, &st.grad_sum);
+                    compute_secs = 0.0;
                 } else {
                     compute_secs = 0.0;
                 }
@@ -844,8 +926,9 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 let epoch_deadline = epoch_start + Duration::from_secs_f64(epoch_len);
                 sleep_until(epoch_start);
                 // An absent node idles the window out (the absolute
-                // schedule ticks on regardless — DESIGN.md §churn).
-                if on {
+                // schedule ticks on regardless — DESIGN.md §churn); a
+                // rejoining node idles too (zero-mass re-sync epoch).
+                if on && !rejoin {
                     let (b, l) = anytime_compute(
                         &mut *engine,
                         &mut st,
@@ -859,7 +942,7 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     loss_i = l;
                 }
                 sleep_until(compute_deadline);
-                compute_secs = if on { t_compute * scale } else { 0.0 };
+                compute_secs = if on && !rejoin { t_compute * scale } else { 0.0 };
                 if on {
                     st.encode_into(n, b_i, &mut m);
                 }
@@ -897,7 +980,7 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 // lateness it didn't have (the sim drops the `ignore`
                 // slowest by compute time, never by consensus luck).
                 ctx.phase_barrier.wait();
-                if on {
+                if on && !rejoin {
                     let compute_t0 = Instant::now();
                     let mut done = 0usize;
                     let mut abandoned = false;
@@ -959,8 +1042,9 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     }
                     compute_secs = compute_t0.elapsed().as_secs_f64();
                 } else {
-                    // Absent: no compute, no finish-counter entry; the
-                    // barrier below keeps the cluster in phase.
+                    // Absent (or rejoining with nothing to race for):
+                    // no compute, no finish-counter entry; the barrier
+                    // below keeps the cluster in phase.
                     compute_secs = 0.0;
                 }
                 // The epoch's compute phase ends for everyone together.
@@ -1027,6 +1111,27 @@ fn sleep_until(t: Instant) {
     }
 }
 
+/// Bounded receive with exponential backoff: waits in growing slices
+/// (1 ms doubling to a 16 ms cap) instead of one blocking receive
+/// pinned to the deadline, so a node waiting on a faulty or crashed
+/// peer re-checks the clock at bounded intervals — a wakeup lost with a
+/// dropped message can cost at most one slice, never the whole window.
+/// Returns `None` once `deadline` passes or every sender hung up.
+fn recv_backoff(rx: &Receiver<WireMsg>, deadline: Instant) -> Option<WireMsg> {
+    let mut slice = Duration::from_millis(1);
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            return None;
+        }
+        match rx.recv_timeout(slice.min(deadline - now)) {
+            Ok(msg) => return Some(msg),
+            Err(RecvTimeoutError::Timeout) => slice = (slice * 2).min(Duration::from_millis(16)),
+            Err(RecvTimeoutError::Disconnected) => return None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1060,7 +1165,7 @@ mod tests {
     fn run_small(epochs: usize, slowdown: Vec<f64>) -> RunOutput {
         let topo = Topology::ring(4);
         let (mk, f_star) = linreg_factory(16, 2);
-        ThreadedRuntime.run(&small_spec(epochs, slowdown), &topo, &mk, f_star)
+        ThreadedRuntime.run(&small_spec(epochs, slowdown), &topo, &mk, f_star).unwrap()
     }
 
     #[test]
@@ -1105,7 +1210,7 @@ mod tests {
             active: vec![vec![true], vec![true], vec![true], vec![true, false]],
         };
         let spec = small_spec(4, vec![]).with_churn(trace);
-        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
         assert_eq!(out.record.epochs.len(), 4);
         assert_eq!(out.active_counts, vec![4, 3, 4, 3]);
         let log = out.node_log.as_ref().unwrap();
@@ -1135,7 +1240,7 @@ mod tests {
         let spec = RunSpec::fmb("fmb-churn-threaded", 32, 0.04, 2, 4, 11)
             .with_grad_chunk(8)
             .with_churn(trace);
-        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
         let batches: Vec<usize> = out.record.epochs.iter().map(|e| e.batch).collect();
         // epochs with node 1 absent lose exactly its quota
         assert_eq!(batches, vec![4 * 32, 3 * 32, 4 * 32, 3 * 32]);
@@ -1154,7 +1259,7 @@ mod tests {
         let spec = RunSpec::amb_dg("dg-threaded", 0.06, 0.04, 1, 4, 6, 5)
             .with_grad_chunk(16)
             .with_node_log();
-        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
         assert_eq!(out.record.epochs.len(), 6);
         // warm-up: the first epoch applies nothing
         assert_eq!(out.record.epochs[0].batch, 0);
@@ -1195,7 +1300,7 @@ mod tests {
             5,
         )
         .with_grad_chunk(16);
-        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
         for (i, e) in out.record.epochs.iter().enumerate() {
             assert!(e.batch > 0, "no warm-up gap at D = 0");
             assert_eq!(e.max_staleness, 0);
@@ -1211,7 +1316,7 @@ mod tests {
         let spec = RunSpec::fmb("fmb-threaded", 48, 0.04, 2, 4, 7)
             .with_grad_chunk(16)
             .with_node_log();
-        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
         for e in &out.record.epochs {
             assert_eq!(e.min_node_batch, 48);
             assert_eq!(e.max_node_batch, 48);
@@ -1231,7 +1336,7 @@ mod tests {
         )
         .with_grad_chunk(8)
         .with_slowdown(vec![4.0, 1.0, 1.0, 1.0]);
-        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
         for e in &out.record.epochs {
             // 3 survivors × 64; the straggler's work is dropped
             assert_eq!(e.batch, 3 * 64, "b(t)={}", e.batch);
@@ -1252,10 +1357,136 @@ mod tests {
         )
         .with_grad_chunk(10)
         .with_slowdown(vec![4.0, 1.0, 1.0, 1.0]);
-        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
         for e in &out.record.epochs {
             // survivors are charged b/(n-ignore) = 30·4/3 = 40 each
             assert_eq!(e.batch, 3 * 40, "b(t)={}", e.batch);
+        }
+    }
+
+    #[test]
+    fn unsupported_specs_are_rejected_with_clean_errors() {
+        use crate::fault::FaultSpec;
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(8, 1);
+        let reject = |spec: RunSpec, needle: &str| {
+            let err = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "error {msg:?} missing {needle:?}");
+        };
+        reject(
+            small_spec(2, vec![]).with_consensus(ConsensusMode::Hierarchical {
+                shards: 2,
+                intra_rounds: 2,
+                inter_rounds: 1,
+            }),
+            "sim-only",
+        );
+        reject(
+            small_spec(2, vec![])
+                .with_network(crate::net::NetworkModel::Fabric(crate::net::FabricSpec::ideal())),
+            "sim-only",
+        );
+        reject(
+            small_spec(2, vec![])
+                .with_consensus(ConsensusMode::Exact)
+                .with_faults(FaultSpec { loss: 0.1, ..FaultSpec::none() }),
+            "require a gossip consensus mode",
+        );
+        reject(
+            small_spec(2, vec![]).with_faults(FaultSpec { loss: 1.5, ..FaultSpec::none() }),
+            "not in [0, 1]",
+        );
+    }
+
+    #[test]
+    fn crashed_node_rejoins_with_zero_mass_on_real_threads() {
+        use crate::fault::{CrashWindow, FaultSpec};
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 12);
+        // node 1 dead in epochs 2–3, rejoins (zero-mass) in epoch 4
+        let faults = FaultSpec {
+            crashes: vec![CrashWindow { node: 1, from: 2, to: 3 }],
+            ..FaultSpec::none()
+        };
+        let out = ThreadedRuntime
+            .run(&small_spec(6, vec![]).with_faults(faults), &topo, &mk, f_star)
+            .unwrap();
+        assert_eq!(out.active_counts, vec![4, 3, 3, 4, 4, 4]);
+        let log = out.node_log.as_ref().unwrap();
+        // dead epochs: no work, no rounds; the rejoin epoch computes
+        // nothing either (its row is the zero-mass re-sync message)
+        assert_eq!(log.batches[1][1], 0);
+        assert_eq!(log.batches[1][2], 0);
+        assert_eq!(log.batches[1][3], 0);
+        assert_eq!(out.rounds[1][1], 0);
+        assert_eq!(out.rounds[1][2], 0);
+        // back to real work the epoch after the re-sync
+        assert!(log.batches[1][4] > 0, "node 1 idle after rejoin");
+        // crashes are faults: the drift column reports "not measured"
+        for e in &out.record.epochs {
+            assert!(e.conservation_drift.is_nan());
+        }
+    }
+
+    #[test]
+    fn permanently_crashed_node_does_not_stall_the_cluster() {
+        use crate::fault::{CrashWindow, FaultSpec};
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 9);
+        // node 3 dies at epoch 2 and never returns; the surviving ring
+        // keeps its absolute schedule (the test finishing at all IS the
+        // wall-clock bound: every window is deadline-closed).
+        let faults = FaultSpec {
+            crashes: vec![CrashWindow { node: 3, from: 2, to: usize::MAX }],
+            ..FaultSpec::none()
+        };
+        let out = ThreadedRuntime
+            .run(&small_spec(5, vec![]).with_faults(faults), &topo, &mk, f_star)
+            .unwrap();
+        assert_eq!(out.active_counts, vec![4, 3, 3, 3, 3]);
+        let log = out.node_log.as_ref().unwrap();
+        for t in 1..5 {
+            assert_eq!(log.batches[3][t], 0, "dead node computed in epoch {}", t + 1);
+            for node in 0..3 {
+                assert!(log.batches[node][t] > 0, "node {node} idle in epoch {}", t + 1);
+            }
+        }
+        assert!(out.record.epochs.last().unwrap().error.is_finite());
+    }
+
+    #[test]
+    fn packet_loss_on_real_threads_still_makes_progress() {
+        use crate::fault::FaultSpec;
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 4);
+        // Finite budget so dropped rounds cost substitution, not the
+        // whole T_c window.
+        let spec = RunSpec::amb("amb-lossy-threaded", 0.06, 0.04, 4, 8, 5)
+            .with_grad_chunk(16)
+            .with_faults(FaultSpec { loss: 0.15, seed: 7, ..FaultSpec::none() });
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
+        assert_eq!(out.record.epochs.len(), 8);
+        let first = out.record.epochs[0].error;
+        let last = out.record.epochs.last().unwrap().error;
+        assert!(last < first, "no progress under loss: {first} -> {last}");
+        for e in &out.record.epochs {
+            assert!(e.conservation_drift.is_nan(), "threaded drift is unmeasured");
+        }
+    }
+
+    #[test]
+    fn allclear_faultspec_keeps_drift_column_exact() {
+        use crate::fault::FaultSpec;
+        // A seed/timeout-only spec is all-clear: the run must report
+        // exactly zero drift (the structural no-fault path).
+        let topo = Topology::ring(4);
+        let (mk, f_star) = linreg_factory(16, 2);
+        let spec = small_spec(3, vec![])
+            .with_faults(FaultSpec { seed: 123, round_timeout: 0.5, ..FaultSpec::none() });
+        let out = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
+        for e in &out.record.epochs {
+            assert_eq!(e.conservation_drift, 0.0);
         }
     }
 }

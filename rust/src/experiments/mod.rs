@@ -22,6 +22,7 @@
 pub mod ablations;
 pub mod churn;
 pub mod dg;
+pub mod faults;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
@@ -189,7 +190,7 @@ impl Ctx {
         let f_star = source.f_star();
         match self.runtime {
             RuntimeKind::Sim => {
-                Ok(crate::run(&SimRuntime::new(straggler), spec, topo, &*mk, f_star))
+                crate::run(&SimRuntime::new(straggler), spec, topo, &*mk, f_star)
             }
             RuntimeKind::Threaded => {
                 // Context values fill in only where the spec kept its
@@ -218,7 +219,7 @@ impl Ctx {
                         );
                     }
                 }
-                Ok(crate::run(&ThreadedRuntime, &spec, topo, &*mk, f_star))
+                crate::run(&ThreadedRuntime, &spec, topo, &*mk, f_star)
             }
         }
     }
@@ -328,10 +329,12 @@ pub fn run_one(ctx: &Ctx, id: &str) -> Result<FigReport> {
         "f9" => fig8::fig9(ctx),
         "thm7" => thm7::thm7(ctx),
         "churn" => churn::churn(ctx),
+        "faults" => faults::faults(ctx),
         "dg" => dg::dg(ctx),
         "scale" => scale::scale(ctx),
         other => anyhow::bail!(
-            "unknown figure id '{other}' (try f1a f1b f3 f3n f4 f5 f5n f6 f7 f8 f9 thm7 churn dg scale)"
+            "unknown figure id '{other}' (try f1a f1b f3 f3n f4 f5 f5n f6 f7 f8 f9 thm7 churn \
+             faults dg scale)"
         ),
     }
 }
@@ -374,6 +377,7 @@ mod tests {
             max_node_batch: 1,
             max_staleness: 0,
             mean_staleness: 0.0,
+            conservation_drift: 0.0,
         });
         assert_eq!(final_error(&one).unwrap(), 0.25);
     }

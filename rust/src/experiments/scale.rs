@@ -83,7 +83,7 @@ pub fn scale_point(
     .with_churn(ChurnSpec::IidDropout { p: 0.1, seed: seed ^ 0xC4 });
 
     let t0 = Instant::now();
-    let out = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star);
+    let out = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star)?;
     let wall_secs = t0.elapsed().as_secs_f64();
 
     let last = out

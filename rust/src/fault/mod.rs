@@ -1,0 +1,600 @@
+//! Deterministic fault-injection plane (ISSUE 8 tentpole).
+//!
+//! A [`FaultSpec`] on `RunSpec` describes three failure processes the
+//! reliable baseline never exercises:
+//!
+//! * **iid packet loss** — every directed gossip message `(src → dst)`
+//!   at consensus round `r` of epoch `t` is lost independently with
+//!   probability `loss`;
+//! * **Markov link flaps** — every undirected edge carries a two-state
+//!   up/down chain stepped once per consensus round (fresh chain per
+//!   epoch, started from the stationary distribution
+//!   `π_down = p_down / (p_down + p_up)`), and a down link loses BOTH
+//!   directions of that round's exchange;
+//! * **crash windows** — a node is dead for an inclusive epoch range
+//!   `[from, to]`.  Unlike planned churn (which freezes state and
+//!   resumes it on rejoin), a crash LOSES the node's state: it is reset
+//!   at onset, and the first post-crash epoch contributes zero mass to
+//!   consensus so the update gate pulls the node back onto the
+//!   neighborhood average (peer re-sync) before it computes again.
+//!
+//! Everything is a pure function of `(spec.seed, epoch, round, edge)`
+//! evaluated through a fresh [`Pcg64`] stream per query — no draw-order
+//! coupling, so fault runs join the threads=1 ≡ threads=k bitwise
+//! contract, and the threaded runtime's receivers can recompute the
+//! exact drop decisions the simulator made without any coordination.
+//!
+//! An all-clear spec ([`FaultSpec::none`], or any spec with zero loss,
+//! no flap chain, and no crash windows) routes every consumer through
+//! the stock fault-free code paths, so it reproduces the no-fault run
+//! bit-for-bit by construction (DESIGN.md §fault-injection).
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::topology::Topology;
+use crate::util::rng::Pcg64;
+
+/// Stream-namespace tag for iid per-message loss draws.
+const LOSS_NS: u64 = 0xFA17_1055;
+/// Stream-namespace tag for per-edge flap chains.
+const FLAP_NS: u64 = 0xFA17_F1A9;
+
+/// SplitMix64 finalizer: avalanche a word so structured inputs
+/// (small epoch/round/node indices) land on uncorrelated tags.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Collapse (namespace, epoch, round, src, dst) into one split tag.
+/// Chained finalizers (not a single xor of shifted fields) so that no
+/// two distinct coordinate tuples can collide by field overlap.
+fn tag(ns: u64, epoch: usize, round: usize, src: usize, dst: usize) -> u64 {
+    let a = mix64(ns.wrapping_add(epoch as u64));
+    let b = mix64(a.wrapping_add(round as u64));
+    mix64(b.wrapping_add(((src as u64) << 32) | dst as u64))
+}
+
+/// Markov link-flap parameters: per-round transition probabilities of
+/// the undirected edge's up/down chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Flap {
+    /// P(up → down) per consensus round.
+    pub p_down: f64,
+    /// P(down → up) per consensus round.
+    pub p_up: f64,
+}
+
+impl Flap {
+    /// Stationary probability of the down state — the chain's start
+    /// distribution, so round 0 is already in steady state.
+    pub fn pi_down(&self) -> f64 {
+        if self.p_down + self.p_up <= 0.0 {
+            0.0
+        } else {
+            self.p_down / (self.p_down + self.p_up)
+        }
+    }
+}
+
+/// One unplanned crash: `node` is dead for epochs `from..=to`
+/// (`to == usize::MAX` never recovers).  Distinct from churn: state is
+/// LOST at onset and rebuilt from peers at rejoin, not frozen/resumed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashWindow {
+    pub node: usize,
+    /// First dead epoch (1-based, like the epoch loop).
+    pub from: usize,
+    /// Last dead epoch, inclusive; `usize::MAX` = permanent.
+    pub to: usize,
+}
+
+/// Directed drop set for one consensus round: `(dst, src)` pairs whose
+/// round message was lost.  Keyed receiver-first because the mixing
+/// kernel walks receivers' CSR rows.
+pub type DropMask = HashSet<(u32, u32)>;
+
+/// The fault plane: per-edge loss + flaps + crash windows, all derived
+/// from `seed` (see module docs for semantics and determinism).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// iid loss probability per directed message, in `[0, 1]`.
+    pub loss: f64,
+    /// Optional Markov up/down chain per undirected edge.
+    pub flap: Option<Flap>,
+    /// Unplanned crash/restart windows.
+    pub crashes: Vec<CrashWindow>,
+    /// Fabric-only: seconds after a measured round STARTS before the
+    /// receiver completes it with whatever neighborhood arrived
+    /// (lost packets must not stall the event loop).  `0.0` = auto
+    /// (`t_c / cap`, one fair share of the budget per round).
+    pub round_timeout: f64,
+    /// Dedicated fault seed (decoupled from the run seed so fault
+    /// patterns can be varied against a fixed data/straggler draw).
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// The all-clear plane: no losses, no flaps, no crashes.  Every
+    /// consumer short-circuits on [`FaultSpec::is_none`], so this spec
+    /// reproduces the fault-free run bit-for-bit.
+    pub fn none() -> FaultSpec {
+        FaultSpec { loss: 0.0, flap: None, crashes: Vec::new(), round_timeout: 0.0, seed: 0 }
+    }
+
+    /// True when the spec cannot produce any fault — the gate for the
+    /// stock code paths (seed/timeout alone change nothing).
+    pub fn is_none(&self) -> bool {
+        self.loss <= 0.0 && self.flap.is_none() && self.crashes.is_empty()
+    }
+
+    /// True when messages can be lost (loss or flaps) — the part of the
+    /// plane that degrades mixing rows and fabric rounds.
+    pub fn has_link_faults(&self) -> bool {
+        self.loss > 0.0 || self.flap.is_some()
+    }
+
+    pub fn has_crashes(&self) -> bool {
+        !self.crashes.is_empty()
+    }
+
+    /// Shape/range validation against an `n`-node run (parse accepts
+    /// any node id; the run knows the cluster size).
+    pub fn validate(&self, n: usize) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.loss) {
+            bail!("fault loss = {} not in [0, 1]", self.loss);
+        }
+        if let Some(f) = self.flap {
+            for (name, p) in [("flap p_down", f.p_down), ("flap p_up", f.p_up)] {
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("{name} = {p} not in [0, 1]");
+                }
+            }
+        }
+        if !(self.round_timeout.is_finite() && self.round_timeout >= 0.0) {
+            bail!("fault round timeout must be finite and >= 0 (got {})", self.round_timeout);
+        }
+        for c in &self.crashes {
+            if c.node >= n {
+                bail!("crash window names node {} but the run has {n} nodes", c.node);
+            }
+            if c.from == 0 || c.from > c.to {
+                bail!(
+                    "crash window {}@{}..{} is empty or starts before epoch 1",
+                    c.node,
+                    c.from,
+                    c.to
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // ---- crash schedule (pure per (node, epoch)) ----
+
+    /// Is `node` dead at epoch `t`?
+    pub fn crashed(&self, node: usize, t: usize) -> bool {
+        self.crashes.iter().any(|c| c.node == node && c.from <= t && t <= c.to)
+    }
+
+    /// Epoch `t` is the FIRST dead epoch of a window: the node's state
+    /// (dual/primal/gradient ring) is reset exactly here.
+    pub fn crash_onset(&self, node: usize, t: usize) -> bool {
+        self.crashed(node, t) && (t == 0 || !self.crashed(node, t - 1))
+    }
+
+    /// Epoch `t` is the first ALIVE epoch after a window: the node
+    /// participates in consensus with zero mass (no compute), so the
+    /// update gate re-syncs it onto the neighborhood average.
+    pub fn rejoining(&self, node: usize, t: usize) -> bool {
+        t > 0 && !self.crashed(node, t) && self.crashed(node, t - 1)
+    }
+
+    /// Any node crashed at epoch `t`?
+    pub fn any_crashed(&self, t: usize) -> bool {
+        self.crashes.iter().any(|c| c.from <= t && t <= c.to)
+    }
+
+    // ---- link faults (pure per (epoch, round, edge)) ----
+
+    /// Is the directed round-`round` message `src → dst` of epoch
+    /// `epoch` lost?  Rounds are 0-based within the epoch's consensus
+    /// phase.  This is THE canonical decision — the sim's per-epoch
+    /// masks and the threaded receivers both evaluate it.
+    pub fn dropped(&self, epoch: usize, round: usize, src: usize, dst: usize) -> bool {
+        self.iid_dropped(epoch, round, src, dst) || self.flap_down(epoch, round, src, dst)
+    }
+
+    fn iid_dropped(&self, epoch: usize, round: usize, src: usize, dst: usize) -> bool {
+        self.loss > 0.0
+            && Pcg64::new(self.seed).split(tag(LOSS_NS, epoch, round, src, dst)).f64() < self.loss
+    }
+
+    /// Flap-chain state of the undirected edge `{a, b}` at round
+    /// `round` of epoch `epoch` (true = down, both directions lost).
+    /// Steps the chain from its stationary round-0 draw, so the cost is
+    /// O(round) — fine for per-epoch round budgets; the sim batches
+    /// whole epochs through [`FaultSpec::epoch_masks`] instead.
+    pub fn flap_down(&self, epoch: usize, round: usize, a: usize, b: usize) -> bool {
+        let Some(f) = self.flap else { return false };
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let mut rng = Pcg64::new(self.seed).split(tag(FLAP_NS, epoch, 0, lo, hi));
+        let mut down = rng.f64() < f.pi_down();
+        for _ in 0..round {
+            down = if down { rng.f64() >= f.p_up } else { rng.f64() < f.p_down };
+        }
+        down
+    }
+
+    /// Materialize one epoch's drop masks for `rounds` consensus rounds
+    /// over the ACTIVE edges of `topo` — the batched (edge-major) walk
+    /// of [`FaultSpec::dropped`], stepping each flap chain once.
+    /// `masks[r]` holds the `(dst, src)` pairs lost at round `r`.
+    pub fn epoch_masks(
+        &self,
+        topo: &Topology,
+        active: &[bool],
+        epoch: usize,
+        rounds: usize,
+    ) -> Vec<DropMask> {
+        let mut masks = vec![DropMask::new(); rounds];
+        if !self.has_link_faults() || rounds == 0 {
+            return masks;
+        }
+        let n = topo.n();
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            for &j in topo.neighbors(i) {
+                // undirected edges once (i < j), active endpoints only
+                if j <= i || !active[j] {
+                    continue;
+                }
+                // one sequential chain walk per (edge, epoch)
+                if let Some(f) = self.flap {
+                    let mut rng = Pcg64::new(self.seed).split(tag(FLAP_NS, epoch, 0, i, j));
+                    let mut down = rng.f64() < f.pi_down();
+                    for mask in masks.iter_mut() {
+                        if down {
+                            mask.insert((i as u32, j as u32));
+                            mask.insert((j as u32, i as u32));
+                        }
+                        down = if down { rng.f64() >= f.p_up } else { rng.f64() < f.p_down };
+                    }
+                }
+                if self.loss > 0.0 {
+                    for (r, mask) in masks.iter_mut().enumerate() {
+                        if self.iid_dropped(epoch, r, i, j) {
+                            mask.insert((j as u32, i as u32));
+                        }
+                        if self.iid_dropped(epoch, r, j, i) {
+                            mask.insert((i as u32, j as u32));
+                        }
+                    }
+                }
+            }
+        }
+        masks
+    }
+
+    // ---- CLI / display ----
+
+    /// Parse the `--faults` grammar: comma-separated `key=value` items
+    /// (`crash=` may repeat).
+    ///
+    /// ```text
+    /// loss=0.05,flap=0.1:0.5,crash=2@5..8,crash=3@4..,timeout=0.1,seed=7
+    /// ```
+    ///
+    /// `flap=P_DOWN:P_UP`; `crash=NODE@FROM..TO` (inclusive epochs,
+    /// `TO` omitted = permanent).  `default_seed` applies when no
+    /// `seed=` item is given.
+    pub fn parse(s: &str, default_seed: u64) -> Result<FaultSpec> {
+        let mut spec = FaultSpec { seed: default_seed, ..FaultSpec::none() };
+        for item in s.split(',').map(str::trim).filter(|it| !it.is_empty()) {
+            let (key, val) = item
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault item '{item}' is not key=value"))?;
+            match key {
+                "loss" => {
+                    spec.loss = val
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("fault loss '{val}' is not a number"))?;
+                }
+                "flap" => {
+                    let (pd, pu) = val.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("flap '{val}' must be P_DOWN:P_UP")
+                    })?;
+                    let parse_p = |name: &str, s: &str| -> Result<f64> {
+                        s.parse::<f64>()
+                            .map_err(|_| anyhow::anyhow!("flap {name} '{s}' is not a number"))
+                    };
+                    spec.flap = Some(Flap {
+                        p_down: parse_p("p_down", pd)?,
+                        p_up: parse_p("p_up", pu)?,
+                    });
+                }
+                "crash" => {
+                    let (node, range) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("crash '{val}' must be NODE@FROM..TO")
+                    })?;
+                    let node = node
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("crash node '{node}' is not an index"))?;
+                    let (from, to) = range.split_once("..").ok_or_else(|| {
+                        anyhow::anyhow!("crash range '{range}' must be FROM..TO (or FROM..)")
+                    })?;
+                    let from = from
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("crash from '{from}' is not an epoch"))?;
+                    let to = if to.is_empty() {
+                        usize::MAX
+                    } else {
+                        to.parse::<usize>()
+                            .map_err(|_| anyhow::anyhow!("crash to '{to}' is not an epoch"))?
+                    };
+                    spec.crashes.push(CrashWindow { node, from, to });
+                }
+                "timeout" => {
+                    spec.round_timeout = val.parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("fault timeout '{val}' is not a number")
+                    })?;
+                }
+                "seed" => {
+                    spec.seed = val
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("fault seed '{val}' is not an integer"))?;
+                }
+                other => bail!(
+                    "unknown fault key '{other}' (expected loss/flap/crash/timeout/seed)"
+                ),
+            }
+        }
+        // Grammar-level range checks (node-count checks wait for the run).
+        if !(0.0..=1.0).contains(&spec.loss) {
+            bail!("fault loss = {} not in [0, 1]", spec.loss);
+        }
+        Ok(spec)
+    }
+
+    /// Short human label for run headers and CSV rows.
+    pub fn label(&self) -> String {
+        if self.is_none() {
+            return "none".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.loss > 0.0 {
+            parts.push(format!("loss={}", self.loss));
+        }
+        if let Some(f) = self.flap {
+            parts.push(format!("flap={}:{}", f.p_down, f.p_up));
+        }
+        for c in &self.crashes {
+            if c.to == usize::MAX {
+                parts.push(format!("crash={}@{}..", c.node, c.from));
+            } else {
+                parts.push(format!("crash={}@{}..{}", c.node, c.from, c.to));
+            }
+        }
+        parts.join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_none_and_all_clear() {
+        let f = FaultSpec::none();
+        assert!(f.is_none());
+        assert!(!f.has_link_faults());
+        assert!(!f.has_crashes());
+        assert!(!f.dropped(3, 2, 0, 1));
+        assert!(!f.crashed(0, 5));
+        assert_eq!(f.label(), "none");
+        // seed/timeout alone keep the spec all-clear
+        let g = FaultSpec { seed: 99, round_timeout: 0.5, ..FaultSpec::none() };
+        assert!(g.is_none());
+        f.validate(4).unwrap();
+    }
+
+    #[test]
+    fn drops_are_deterministic_pure_functions() {
+        let f = FaultSpec { loss: 0.3, ..FaultSpec::none() };
+        for (e, r, s, d) in [(1, 0, 0, 1), (1, 1, 0, 1), (2, 0, 1, 0), (7, 3, 4, 2)] {
+            assert_eq!(f.dropped(e, r, s, d), f.dropped(e, r, s, d));
+        }
+        // directed: src→dst and dst→src are independent draws — over
+        // many edges they must disagree somewhere at 30% loss
+        let mut asym = false;
+        for e in 1..40 {
+            if f.dropped(e, 0, 0, 1) != f.dropped(e, 0, 1, 0) {
+                asym = true;
+            }
+        }
+        assert!(asym, "iid loss should be per-direction");
+        // a different fault seed changes the pattern
+        let g = FaultSpec { seed: 1, ..f.clone() };
+        let diff = (1..60).any(|e| f.dropped(e, 0, 0, 1) != g.dropped(e, 0, 0, 1));
+        assert!(diff, "fault seed must matter");
+    }
+
+    #[test]
+    fn loss_rate_is_roughly_honored() {
+        let f = FaultSpec { loss: 0.25, ..FaultSpec::none() };
+        let mut hits = 0usize;
+        let total = 4000usize;
+        for k in 0..total {
+            if f.dropped(k / 10, k % 10, 0, 1) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / total as f64;
+        assert!((rate - 0.25).abs() < 0.03, "empirical loss {rate}");
+    }
+
+    #[test]
+    fn flap_is_symmetric_and_markov() {
+        let f = FaultSpec {
+            flap: Some(Flap { p_down: 0.2, p_up: 0.4 }),
+            ..FaultSpec::none()
+        };
+        // undirected: both orientations read the same chain
+        for e in 1..20 {
+            for r in 0..6 {
+                assert_eq!(f.flap_down(e, r, 2, 5), f.flap_down(e, r, 5, 2));
+            }
+        }
+        // persistence: a down round is more often followed by down than
+        // the stationary rate would give (p_up = 0.4 ⇒ P(down→down)=0.6
+        // vs π_down = 1/3)
+        let (mut down_then_down, mut downs) = (0usize, 0usize);
+        for e in 1..400 {
+            if f.flap_down(e, 0, 0, 1) {
+                downs += 1;
+                if f.flap_down(e, 1, 0, 1) {
+                    down_then_down += 1;
+                }
+            }
+        }
+        assert!(downs > 50, "stationary start should produce downs");
+        let persist = down_then_down as f64 / downs as f64;
+        assert!(persist > 0.45, "flap chain not persistent: {persist}");
+        // degenerate chains
+        let up_only = FaultSpec {
+            flap: Some(Flap { p_down: 0.0, p_up: 0.5 }),
+            ..FaultSpec::none()
+        };
+        for r in 0..8 {
+            assert!(!up_only.flap_down(1, r, 0, 1), "p_down=0 can never go down");
+        }
+    }
+
+    #[test]
+    fn epoch_masks_match_pointwise_queries() {
+        let topo = Topology::ring(6);
+        let f = FaultSpec {
+            loss: 0.2,
+            flap: Some(Flap { p_down: 0.15, p_up: 0.5 }),
+            ..FaultSpec::none()
+        };
+        let active = vec![true, true, false, true, true, true];
+        let rounds = 5;
+        for epoch in 1..=4 {
+            let masks = f.epoch_masks(&topo, &active, epoch, rounds);
+            assert_eq!(masks.len(), rounds);
+            for (r, mask) in masks.iter().enumerate() {
+                for i in 0..topo.n() {
+                    for &j in topo.neighbors(i) {
+                        let expect = active[i] && active[j] && f.dropped(epoch, r, j, i);
+                        assert_eq!(
+                            mask.contains(&(i as u32, j as u32)),
+                            expect,
+                            "epoch {epoch} round {r} edge {j}->{i}"
+                        );
+                    }
+                }
+                // masks never name inactive endpoints
+                for &(d, s) in mask {
+                    assert!(active[d as usize] && active[s as usize]);
+                }
+            }
+        }
+        // all-clear spec: every mask empty
+        for mask in FaultSpec::none().epoch_masks(&topo, &active, 1, rounds) {
+            assert!(mask.is_empty());
+        }
+    }
+
+    #[test]
+    fn crash_schedule_onset_and_rejoin() {
+        let f = FaultSpec {
+            crashes: vec![
+                CrashWindow { node: 2, from: 3, to: 5 },
+                CrashWindow { node: 0, from: 7, to: usize::MAX },
+            ],
+            ..FaultSpec::none()
+        };
+        assert!(!f.crashed(2, 2));
+        assert!(f.crashed(2, 3) && f.crashed(2, 4) && f.crashed(2, 5));
+        assert!(!f.crashed(2, 6));
+        assert!(f.crash_onset(2, 3) && !f.crash_onset(2, 4));
+        assert!(f.rejoining(2, 6) && !f.rejoining(2, 7) && !f.rejoining(2, 5));
+        // permanent crash never rejoins
+        assert!(f.crashed(0, 7) && f.crashed(0, 1_000_000));
+        assert!(f.crash_onset(0, 7));
+        assert!(!f.rejoining(0, 1_000_000));
+        // other nodes untouched
+        assert!(!f.crashed(1, 4));
+        assert!(f.any_crashed(4) && !f.any_crashed(2));
+        f.validate(3).unwrap();
+        assert!(f.validate(2).is_err(), "node 2 out of range for n=2");
+    }
+
+    #[test]
+    fn parse_grammar_roundtrips() {
+        let f = FaultSpec::parse("loss=0.05", 42).unwrap();
+        assert_eq!(f.loss, 0.05);
+        assert_eq!(f.seed, 42);
+        assert!(f.flap.is_none() && f.crashes.is_empty());
+
+        let f = FaultSpec::parse("loss=0.1,flap=0.2:0.5,crash=2@5..8,crash=3@4..,seed=7", 0)
+            .unwrap();
+        assert_eq!(f.loss, 0.1);
+        assert_eq!(f.flap, Some(Flap { p_down: 0.2, p_up: 0.5 }));
+        assert_eq!(
+            f.crashes,
+            vec![
+                CrashWindow { node: 2, from: 5, to: 8 },
+                CrashWindow { node: 3, from: 4, to: usize::MAX },
+            ]
+        );
+        assert_eq!(f.seed, 7);
+        assert_eq!(f.label(), "loss=0.1,flap=0.2:0.5,crash=2@5..8,crash=3@4..");
+
+        let f = FaultSpec::parse("timeout=0.25", 0).unwrap();
+        assert!(f.is_none());
+        assert_eq!(f.round_timeout, 0.25);
+
+        for bad in [
+            "loss=2",        // out of range
+            "loss=abc",      // not a number
+            "flap=0.5",      // missing p_up
+            "crash=2",       // missing window
+            "crash=2@5",     // missing range
+            "wat=1",         // unknown key
+            "loss",          // not key=value
+        ] {
+            assert!(FaultSpec::parse(bad, 0).is_err(), "'{bad}' should fail");
+        }
+        // validate catches empty/0-based windows
+        let f = FaultSpec::parse("crash=1@0..3", 0).unwrap();
+        assert!(f.validate(4).is_err());
+        let f = FaultSpec::parse("crash=1@5..3", 0).unwrap();
+        assert!(f.validate(4).is_err());
+    }
+
+    #[test]
+    fn tags_do_not_collide_across_coordinates() {
+        // smoke: distinct (epoch, round, src, dst) tuples map to
+        // distinct tags over a small grid (collisions here would couple
+        // supposedly independent drop decisions)
+        let mut seen = HashSet::new();
+        for e in 0..6 {
+            for r in 0..6 {
+                for s in 0..6 {
+                    for d in 0..6 {
+                        assert!(seen.insert(tag(LOSS_NS, e, r, s, d)));
+                    }
+                }
+            }
+        }
+    }
+}

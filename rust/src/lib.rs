@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod experiments;
+pub mod fault;
 pub mod metrics;
 pub mod model;
 pub mod net;
@@ -43,6 +44,7 @@ pub use coordinator::threaded::ThreadedRuntime;
 pub use coordinator::{
     ConsensusMode, EngineFactory, RunOutput, RunSpec, Runtime, RuntimeKind, Scheme,
 };
+pub use fault::{CrashWindow, FaultSpec, Flap};
 pub use net::{FabricSpec, NetworkModel};
 
 /// THE entry point: execute one [`RunSpec`] on any [`Runtime`].
@@ -64,17 +66,21 @@ pub use net::{FabricSpec, NetworkModel};
 ///     Box::new(NativeExec::new(src.clone(), opt.clone()))
 /// };
 /// // same spec, either runtime:
-/// let sim_out = anytime_mb::run(&SimRuntime::new(&strag), &spec, &topo, &mk, f_star);
-/// let thr_out = anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, f_star);
+/// let sim_out = anytime_mb::run(&SimRuntime::new(&strag), &spec, &topo, &mk, f_star).unwrap();
+/// let thr_out = anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, f_star).unwrap();
 /// # let _ = (sim_out, thr_out);
 /// ```
+///
+/// Errors on unsupported spec combinations (e.g. the packet fabric with
+/// a non-gossip consensus mode, or link faults under exact averaging) —
+/// surfaced as clean CLI messages rather than panics.
 pub fn run(
     runtime: &dyn Runtime,
     spec: &RunSpec,
     topo: &topology::Topology,
     make_engine: EngineFactory<'_>,
     f_star: Option<f64>,
-) -> RunOutput {
+) -> anyhow::Result<RunOutput> {
     runtime.run(spec, topo, make_engine, f_star)
 }
 

@@ -48,6 +48,7 @@ fn main() -> ExitCode {
         Some("figures") => cmd_figures(&args),
         Some("ablations") => cmd_ablations(&args),
         Some("churn") => cmd_churn(&args),
+        Some("faults") => cmd_faults(&args),
         Some("dg") => cmd_dg(&args),
         Some("run") => cmd_run(&args),
         Some("train") => cmd_train(&args),
@@ -70,12 +71,14 @@ fn print_usage() {
     eprintln!(
         "amb — Anytime Minibatch (ICLR 2019) reproduction\n\
          \n\
-         usage: amb <figures|ablations|churn|dg|run|train|info> [options]\n\
+         usage: amb <figures|ablations|churn|faults|dg|run|train|info> [options]\n\
          \n\
          figures --fig <id|all> [--out-dir results] [--pjrt] [--quick] [--seed N]\n\
          \u{20}       [--runtime sim|threaded] [--time-scale S] [--threads N]\n\
          churn   elastic-membership sweep (dropout x topology x scheme);\n\
          \u{20}       same options as figures\n\
+         faults  resilience sweep (packet loss x link flaps x scheme):\n\
+         \u{20}       time-to-target + conservation drift; same options as figures\n\
          dg      pipelined delayed-gradient sweep: wall-time AMB vs AMB-DG vs FMB\n\
          \u{20}       under the fig-6 straggler profile, delay D in {0,1,2,4};\n\
          \u{20}       same options as figures\n\
@@ -89,6 +92,7 @@ fn print_usage() {
          \u{20}       [--straggler <shiftedexp|induced|pause|none>]\n\
          \u{20}       [--churn <none|iid:P[:SEED]|markov:PDOWN:PUP[:SEED]>]\n\
          \u{20}       [--net <abstract|ideal|lat=S,bw=B[,wan-lat=S,wan-bw=B,groups=G,gap=S]>]\n\
+         \u{20}       [--faults <loss=P,flap=PD:PU,crash=N@F..T,timeout=S,seed=N>]\n\
          \u{20}       [--grad-chunk C] [--slowdown f1,f2,...] [--time-scale S]\n\
          \u{20}       [--pjrt] [--seed N] [--threads N] [--out FILE.csv]\n\
          train   [--workload <transformer|linreg>] [--nodes N] [--epochs N]\n\
@@ -164,6 +168,14 @@ fn cmd_churn(args: &Args) -> anyhow::Result<()> {
     let report = experiments::churn::churn(&ctx)?;
     println!("{report}");
     anyhow::ensure!(report.shape_holds, "churn harness diverged");
+    Ok(())
+}
+
+fn cmd_faults(args: &Args) -> anyhow::Result<()> {
+    let ctx = harness_ctx(args)?;
+    let report = experiments::faults::faults(&ctx)?;
+    println!("{report}");
+    anyhow::ensure!(report.shape_holds, "fault harness diverged");
     Ok(())
 }
 
@@ -331,12 +343,17 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         None => anytime_mb::NetworkModel::Abstract,
         Some(s) => anytime_mb::NetworkModel::parse(s)?,
     };
+    let faults = match args.get("faults") {
+        None => anytime_mb::FaultSpec::none(),
+        Some(s) => anytime_mb::FaultSpec::parse(s, seed)?,
+    };
     let spec = RunSpec::new(scheme.name(), scheme, epochs, seed)
         .with_consensus(consensus)
         .with_grad_chunk(args.usize_or("grad-chunk", 16)?)
         .with_slowdown(parse_slowdown(args)?)
         .with_churn(churn)
-        .with_network(network);
+        .with_network(network)
+        .with_faults(faults);
 
     let expected_batch = (nodes * per_node_batch) as f64;
     let opt = experiments::optimizer_for(&source, expected_batch);
@@ -352,12 +369,13 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let out = ctx.run(&spec, &topo, &*strag, &source, &opt)?;
 
     println!(
-        "# runtime={} scheme={} consensus={:?} churn={} net={}",
+        "# runtime={} scheme={} consensus={:?} churn={} net={} faults={}",
         ctx.runtime.name(),
         spec.scheme.name(),
         spec.consensus,
         spec.churn.name(),
-        spec.network.name()
+        spec.network.name(),
+        spec.faults.label()
     );
     println!(
         "{:<6} {:>10} {:>8} {:>12} {:>12} {:>12}",
@@ -429,7 +447,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                         .expect("transformer exec"),
                 )
             };
-            anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, None)
+            anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, None)?
         }
         "linreg" => {
             use anytime_mb::exec::NativeExec;
@@ -440,7 +458,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             let mk = move |_i: usize| -> Box<dyn anytime_mb::exec::ExecEngine> {
                 Box::new(NativeExec::new(src.clone(), opt.clone()))
             };
-            anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, f_star)
+            anytime_mb::run(&ThreadedRuntime, &spec, &topo, &mk, f_star)?
         }
         other => anyhow::bail!("unknown train workload '{other}'"),
     };

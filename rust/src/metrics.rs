@@ -39,6 +39,14 @@ pub struct EpochStats {
     /// (Σ b_i·D_i / b(t)); NaN when the epoch applied nothing (AMB-DG
     /// warm-up, or b(t) = 0).
     pub mean_staleness: f64,
+    /// Mean-conservation drift under fault injection: L2 distance
+    /// between the active-set mean message row before and after the
+    /// consensus phase.  Gossip conserves the mean exactly; a dropped
+    /// message absorbed into a receiver's self-weight does not, and
+    /// this column measures by how much.  Exactly 0.0 on epochs where
+    /// no drop fired (and always 0.0 under `FaultSpec::none()`); NaN on
+    /// the threaded runtime under active faults (no global observer).
+    pub conservation_drift: f64,
 }
 
 /// A complete run: scheme label + epoch series.
@@ -124,7 +132,7 @@ impl RunRecord {
         let mut csv = Csv::new(&[
             "epoch", "wall_time", "batch", "potential", "loss", "error",
             "consensus_err", "min_node_batch", "max_node_batch",
-            "max_staleness", "mean_staleness", "regret",
+            "max_staleness", "mean_staleness", "conservation_drift", "regret",
         ]);
         let regret = self
             .regret_series()
@@ -142,6 +150,7 @@ impl RunRecord {
                 e.max_node_batch as f64,
                 e.max_staleness as f64,
                 e.mean_staleness,
+                e.conservation_drift,
                 r,
             ]);
         }
@@ -236,6 +245,7 @@ mod tests {
             max_node_batch: batch,
             max_staleness: 0,
             mean_staleness: if batch > 0 { 0.0 } else { f64::NAN },
+            conservation_drift: 0.0,
         }
     }
 
@@ -319,6 +329,7 @@ mod tests {
         assert_eq!(csv.len(), 2);
         assert!(csv.to_string().contains("regret"));
         assert!(csv.to_string().contains("mean_staleness"));
+        assert!(csv.to_string().contains("conservation_drift"));
     }
 
     #[test]

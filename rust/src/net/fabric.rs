@@ -24,6 +24,7 @@
 
 use std::collections::HashMap;
 
+use crate::fault::DropMask;
 use crate::net::event::EventQueue;
 use crate::net::link::{LinkClass, Port};
 use crate::topology::Topology;
@@ -99,16 +100,22 @@ impl FabricSpec {
 
 /// Fabric events.  `Arrive` = the message's last bit reaches `dst`'s
 /// ingress (after egress serialization + propagation); `Deliver` = the
-/// ingress port finished serializing it to `dst`.
+/// ingress port finished serializing it to `dst`; `Timeout` = `node`
+/// gives up waiting for round `round` and completes it with whatever
+/// neighborhood arrived (fault runs only — a lost packet must not stall
+/// the protocol forever).
 #[derive(Debug, Clone, Copy)]
 enum Ev {
     Arrive { src: usize, dst: usize, round: usize },
     Deliver { src: usize, dst: usize, round: usize },
+    Timeout { node: usize, round: usize },
 }
 
 /// Queue node `src`'s round-`round` transmissions to all its active
 /// neighbors at time `t` (free function: `egress` is borrowed per-node
-/// while the event queue is borrowed whole).
+/// while the event queue is borrowed whole).  A message the fault plane
+/// drops (`drops` holds the round's `(dst, src)` losses) still occupies
+/// the egress port — the sender spent the wire time — but never arrives.
 #[allow(clippy::too_many_arguments)]
 fn send_round(
     q: &mut EventQueue<Ev>,
@@ -120,6 +127,7 @@ fn send_round(
     round: usize,
     t: f64,
     msg_bytes: usize,
+    drops: Option<&DropMask>,
 ) {
     let n = topo.n();
     for &dst in topo.neighbors(src) {
@@ -128,7 +136,10 @@ fn send_round(
         }
         let c = fab.class(src, dst, n);
         let (_start, end) = egress.occupy(t, c.tx_time(msg_bytes));
-        q.push(end + c.latency, Ev::Arrive { src, dst, round });
+        let lost = drops.is_some_and(|m| m.contains(&(dst as u32, src as u32)));
+        if !lost {
+            q.push(end + c.latency, Ev::Arrive { src, dst, round });
+        }
     }
 }
 
@@ -149,6 +160,45 @@ pub fn measure_rounds(
     cap: usize,
     out: &mut [usize],
 ) {
+    measure_rounds_inner(fab, topo, active, msg_bytes, t_c, cap, None, out);
+}
+
+/// [`measure_rounds`] under a fault plane: `masks[k-1]` lists round
+/// `k`'s lost `(dst, src)` messages (they occupy the sender's egress but
+/// never arrive), and each round a node starts also starts a timeout
+/// clock — at `round_timeout` seconds (`0` = auto: `t_c / cap`, one
+/// fair share of the budget per round) the node completes the round
+/// with whatever neighborhood arrived, so a dead edge costs mixing
+/// weight, not the rest of the window.  The clean path above never
+/// schedules timeouts and never consults masks, so all-clear fault
+/// specs reproduce it bitwise.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_rounds_faulty(
+    fab: &FabricSpec,
+    topo: &Topology,
+    active: &[bool],
+    msg_bytes: usize,
+    t_c: f64,
+    cap: usize,
+    masks: &[DropMask],
+    round_timeout: f64,
+    out: &mut [usize],
+) {
+    let timeout = if round_timeout > 0.0 { round_timeout } else { t_c / cap.max(1) as f64 };
+    measure_rounds_inner(fab, topo, active, msg_bytes, t_c, cap, Some((masks, timeout)), out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn measure_rounds_inner(
+    fab: &FabricSpec,
+    topo: &Topology,
+    active: &[bool],
+    msg_bytes: usize,
+    t_c: f64,
+    cap: usize,
+    faults: Option<(&[DropMask], f64)>,
+    out: &mut [usize],
+) {
     let n = topo.n();
     assert_eq!(active.len(), n, "active mask shape");
     assert_eq!(out.len(), n, "output shape");
@@ -157,6 +207,12 @@ pub fn measure_rounds(
     if cap == 0 {
         return;
     }
+
+    // Round-k drop mask (1-based round; None on the clean path AND for
+    // rounds past the supplied masks).
+    let drops_for = |round: usize| -> Option<&DropMask> {
+        faults.and_then(|(masks, _)| masks.get(round - 1)).filter(|m| !m.is_empty())
+    };
 
     // A node participates iff active with at least one active neighbor
     // — the same rule `coordinator::sim` uses for its rounds log.
@@ -180,7 +236,10 @@ pub fn measure_rounds(
     // Round 1 starts at t = 0 on every participant.
     for i in 0..n {
         if need[i] > 0 {
-            send_round(&mut q, &mut egress[i], fab, topo, active, i, 1, 0.0, msg_bytes);
+            send_round(&mut q, &mut egress[i], fab, topo, active, i, 1, 0.0, msg_bytes, drops_for(1));
+            if let Some((_, timeout)) = faults {
+                q.push(timeout, Ev::Timeout { node: i, round: 1 });
+            }
         }
     }
 
@@ -212,7 +271,47 @@ pub fn measure_rounds(
                             next,
                             t,
                             msg_bytes,
+                            drops_for(next),
                         );
+                        if let Some((_, timeout)) = faults {
+                            q.push(t + timeout, Ev::Timeout { node: dst, round: next });
+                        }
+                    }
+                }
+            }
+            Ev::Timeout { node, round } => {
+                // Still waiting on this round?  Complete it with the
+                // partial neighborhood (the mixing kernel absorbs the
+                // missing weight receiver-side); stale timeouts for
+                // rounds that closed on time are no-ops.  The forced
+                // completion can cascade like a closing Deliver: later
+                // rounds may already be fully banked.
+                if done[node] == round - 1 && done[node] < cap {
+                    done[node] = round;
+                    loop {
+                        if done[node] < cap {
+                            let next = done[node] + 1;
+                            send_round(
+                                &mut q,
+                                &mut egress[node],
+                                fab,
+                                topo,
+                                active,
+                                node,
+                                next,
+                                t,
+                                msg_bytes,
+                                drops_for(next),
+                            );
+                            if let Some((_, timeout)) = faults {
+                                q.push(t + timeout, Ev::Timeout { node, round: next });
+                            }
+                        }
+                        if done[node] < cap && got[node][done[node]] == need[node] {
+                            done[node] += 1;
+                        } else {
+                            break;
+                        }
                     }
                 }
             }
@@ -237,13 +336,24 @@ pub struct FabricRounds {
     t_c: f64,
     cap: usize,
     cache: HashMap<Vec<bool>, Vec<usize>>,
+    /// Scratch for fault-run measurements, which NEVER hit the memo:
+    /// the cache key is the active set alone, but under link faults the
+    /// SAME active set measures differently every epoch (per-epoch drop
+    /// masks), so memoizing would silently replay epoch 1's losses
+    /// forever.
+    faulty_buf: Vec<usize>,
 }
 
 impl FabricRounds {
     const MAX_CACHED_SETS: usize = 64;
 
     pub fn new(spec: FabricSpec, msg_bytes: usize, t_c: f64, cap: usize) -> FabricRounds {
-        FabricRounds { spec, msg_bytes, t_c, cap, cache: HashMap::new() }
+        FabricRounds { spec, msg_bytes, t_c, cap, cache: HashMap::new(), faulty_buf: Vec::new() }
+    }
+
+    /// The configured round budget (mask length for fault runs).
+    pub fn cap(&self) -> usize {
+        self.cap
     }
 
     /// Measured rounds for this active set (computed on first sight).
@@ -265,6 +375,30 @@ impl FabricRounds {
             self.cache.insert(active.to_vec(), out);
         }
         &self.cache[active]
+    }
+
+    /// Fresh (uncached) measurement under this epoch's drop masks — see
+    /// `faulty_buf` for why the memo must be bypassed.
+    pub fn rounds_faulty(
+        &mut self,
+        topo: &Topology,
+        active: &[bool],
+        masks: &[DropMask],
+        round_timeout: f64,
+    ) -> &[usize] {
+        self.faulty_buf.resize(topo.n(), 0);
+        measure_rounds_faulty(
+            &self.spec,
+            topo,
+            active,
+            self.msg_bytes,
+            self.t_c,
+            self.cap,
+            masks,
+            round_timeout,
+            &mut self.faulty_buf,
+        );
+        &self.faulty_buf
     }
 }
 
@@ -399,6 +533,65 @@ mod tests {
         measure_rounds(&fab, &topo, &all_active(10), 4100, 0.5, 20, &mut a);
         measure_rounds(&fab, &topo, &all_active(10), 4100, 0.5, 20, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dropped_packets_time_out_instead_of_stalling() {
+        // complete(2) pair maths (see serialization_math_on_a_pair): a
+        // round costs 0.05, T_c = 0.26 fits 5 clean rounds.  Drop the
+        // round-1 message 1 → 0: without a timeout node 0 would wait the
+        // whole window; with a 0.06 timeout it closes round 1 partial
+        // and keeps gossiping.
+        let topo = Topology::complete(2);
+        let fab = FabricSpec::uniform(0.03, 1.0e5);
+        let mut mask1 = DropMask::new();
+        mask1.insert((0, 1));
+        let masks = vec![mask1, DropMask::new(), DropMask::new()];
+        let mut out = vec![0; 2];
+        measure_rounds_faulty(&fab, &topo, &all_active(2), 1000, 0.26, 10, &masks, 0.06, &mut out);
+        assert!(out[0] >= 3, "timed-out node should keep making rounds: {out:?}");
+        assert!(out[1] >= 3, "unaffected node should keep making rounds: {out:?}");
+        // the lost round costs node 0 some progress vs the clean run
+        let mut clean = vec![0; 2];
+        measure_rounds(&fab, &topo, &all_active(2), 1000, 0.26, 10, &mut clean);
+        assert!(out[0] <= clean[0], "loss cannot speed a node up: {out:?} vs {clean:?}");
+    }
+
+    #[test]
+    fn same_active_set_measures_differently_across_epochs_under_loss() {
+        // The memo-bypass pin (ISSUE 8 satellite): FabricRounds keys its
+        // cache by active set, but per-epoch drop masks make the SAME
+        // set measure differently — rounds_faulty must never serve a
+        // cached measurement.
+        use crate::fault::FaultSpec;
+        let topo = Topology::ring(8);
+        let all = all_active(8);
+        // ring round ≈ 0.05 s (two serialized 0.01 s sends + 0.02 s
+        // latency + ingress), so T_c = 0.3 fits ~6 clean rounds under a
+        // cap of 8 — drops (timeout 0.06 > round time) cost real rounds
+        // instead of disappearing under a slack budget.
+        let fab = FabricSpec::uniform(0.02, 1.0e5);
+        let mut fr = FabricRounds::new(fab, 1000, 0.3, 8);
+        // prime the clean memo for this exact active set
+        let clean = fr.rounds(&topo, &all).to_vec();
+        assert_eq!(fr.cache.len(), 1);
+        let spec = FaultSpec { loss: 0.4, ..FaultSpec::none() };
+        let per_epoch: Vec<Vec<usize>> = (1..=6)
+            .map(|t| {
+                let masks = spec.epoch_masks(&topo, &all, t, fr.cap());
+                fr.rounds_faulty(&topo, &all, &masks, 0.06).to_vec()
+            })
+            .collect();
+        assert_eq!(fr.cache.len(), 1, "fault measurements must not touch the memo");
+        assert!(
+            per_epoch.iter().any(|r| r != &clean),
+            "40% loss never moved a measurement off the clean baseline"
+        );
+        let differs = per_epoch.iter().any(|r| r != &per_epoch[0]);
+        assert!(
+            differs,
+            "two epochs at the same active set must be able to measure differently: {per_epoch:?}"
+        );
     }
 
     #[test]

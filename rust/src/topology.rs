@@ -471,6 +471,16 @@ impl MixMatrix {
         self.nz_cols.len()
     }
 
+    /// Row `i`'s stored pattern: (ascending columns, f32 weights),
+    /// index-aligned.  The degraded-mixing kernel walks this directly
+    /// so it can substitute sources per entry (fault plane) while
+    /// keeping the stock kernel's ascending accumulation order.
+    #[inline]
+    pub fn row_entries(&self, i: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.nz_ptr[i], self.nz_ptr[i + 1]);
+        (&self.nz_cols[lo..hi], &self.nz_w[lo..hi])
+    }
+
     /// Entry (i, j) at f64 precision; structural zeros return 0.0.
     /// Binary search over the row's ascending columns — O(log deg).
     #[inline]

@@ -49,7 +49,7 @@ fn linreg_factory(
 
 fn run_sim(spec: &RunSpec, topo: &Topology, strag: &dyn StragglerModel) -> RunOutput {
     let (mk, f_star) = linreg_factory(24, 5);
-    SimRuntime::new(strag).run(spec, topo, &mk, f_star)
+    SimRuntime::new(strag).run(spec, topo, &mk, f_star).unwrap()
 }
 
 /// Acceptance: `AmbDg { delay: 0 }` ≡ `Amb` bitwise on the simulator,
@@ -111,8 +111,8 @@ fn dg_zero_delay_matches_amb_schedule_on_threaded() {
     let (mk, f_star) = linreg_factory(16, 2);
     let amb = RunSpec::amb("amb-t", 0.06, 0.04, 3, 4, 5).with_grad_chunk(16);
     let dg0 = RunSpec::amb_dg("dg0-t", 0.06, 0.04, 0, 3, 4, 5).with_grad_chunk(16);
-    let a = ThreadedRuntime.run(&amb, &topo, &mk, f_star);
-    let d = ThreadedRuntime.run(&dg0, &topo, &mk, f_star);
+    let a = ThreadedRuntime.run(&amb, &topo, &mk, f_star).unwrap();
+    let d = ThreadedRuntime.run(&dg0, &topo, &mk, f_star).unwrap();
     assert_eq!(a.record.epochs.len(), d.record.epochs.len());
     for (x, y) in a.record.epochs.iter().zip(&d.record.epochs) {
         // the absolute schedule is a pure function of the spec: bitwise
@@ -139,7 +139,7 @@ fn dg_parity_sim_threaded() {
 
     let sim = run_sim(&spec, &topo, &strag);
     let (mk, f_star) = linreg_factory(24, 5);
-    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
 
     assert_eq!(sim.record.epochs.len(), thr.record.epochs.len());
     assert_eq!(sim.active_counts, thr.active_counts);

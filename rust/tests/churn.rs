@@ -61,7 +61,7 @@ fn assert_bitwise_equal(a: &RunOutput, b: &RunOutput, label: &str) {
 fn sim_run(spec: &RunSpec, topo: &Topology) -> RunOutput {
     let (mk, f_star) = linreg_factory(24, 5);
     let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
-    SimRuntime::new(&strag).run(spec, topo, &mk, f_star)
+    SimRuntime::new(&strag).run(spec, topo, &mk, f_star).unwrap()
 }
 
 /// A schedule that never drops a node must reproduce TODAY's outputs
@@ -119,8 +119,8 @@ fn acceptance_ring10_dropout20_amb_vs_fmb_both_runtimes() {
         .with_churn(churn.clone());
 
     for spec in [&amb_spec, &fmb_spec] {
-        let sim = SimRuntime::new(&strag).run(spec, &topo, &mk, f_star);
-        let thr = ThreadedRuntime.run(spec, &topo, &mk, f_star);
+        let sim = SimRuntime::new(&strag).run(spec, &topo, &mk, f_star).unwrap();
+        let thr = ThreadedRuntime.run(spec, &topo, &mk, f_star).unwrap();
         for out in [&sim, &thr] {
             assert_eq!(out.record.epochs.len(), epochs, "{} lost epochs", spec.name);
             assert_eq!(out.active_counts, expected_counts, "{} membership", spec.name);
@@ -134,7 +134,7 @@ fn acceptance_ring10_dropout20_amb_vs_fmb_both_runtimes() {
             }
         }
         // sim runs are bit-reproducible under churn
-        let sim2 = SimRuntime::new(&strag).run(spec, &topo, &mk, f_star);
+        let sim2 = SimRuntime::new(&strag).run(spec, &topo, &mk, f_star).unwrap();
         assert_bitwise_equal(&sim, &sim2, &format!("{} repro", spec.name));
     }
 }
@@ -156,8 +156,8 @@ fn fmb_exact_parity_across_runtimes_under_churn() {
         .with_churn(churn);
     let strag = Deterministic { unit_time: 0.01, unit_batch: 48 };
 
-    let sim = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star);
-    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+    let sim = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star).unwrap();
+    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
 
     assert_eq!(sim.active_counts, thr.active_counts);
     for (es, et) in sim.record.epochs.iter().zip(&thr.record.epochs) {

@@ -53,6 +53,12 @@ pub fn assert_bitwise_equal(a: &RunOutput, b: &RunOutput, label: &str) {
             "{label}: mean_staleness bits @ epoch {}",
             x.epoch
         );
+        assert_eq!(
+            x.conservation_drift.to_bits(),
+            y.conservation_drift.to_bits(),
+            "{label}: conservation_drift bits @ epoch {}",
+            x.epoch
+        );
     }
     assert_eq!(a.rounds, b.rounds, "{label}: per-(node, epoch) gossip rounds");
     assert_eq!(a.active_counts, b.active_counts, "{label}: active counts");

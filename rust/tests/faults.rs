@@ -1,0 +1,229 @@
+//! Fault-injection plane invariants across the whole stack (ISSUE 8):
+//!
+//! * an all-clear `FaultSpec` (every knob zero — a non-default fault
+//!   seed and a round timeout alone do not arm anything) reproduces the
+//!   no-fault run **bit-for-bit** on the simulator, for every
+//!   `Scheme` × `ConsensusMode`, and composed with churn — the same
+//!   pins hold at any `AMB_THREADS`, which CI exercises in both legs;
+//! * faulty runs are themselves bit-reproducible (the fault plane is a
+//!   pure function of (spec, seed, epoch, round, edge));
+//! * the ISSUE-8 acceptance run — 5% iid loss, AMB on the fig-5
+//!   Erdős–Rényi graph — still reaches the no-fault target error, with
+//!   the conservation drift MEASURED (finite, positive somewhere) while
+//!   the clean run's drift column is exactly 0.0;
+//! * crash/recover: a crashed node loses its state and re-syncs from
+//!   the peer average exactly once at rejoin, and crashes alone (no
+//!   link faults) never fire a drop — drift stays identically zero;
+//! * unsupported combinations come back as clean `Err`s, not panics.
+
+use std::sync::Arc;
+
+mod common;
+use common::assert_bitwise_equal;
+
+use anytime_mb::churn::ChurnSpec;
+use anytime_mb::data::LinRegStream;
+use anytime_mb::exec::{DataSource, ExecEngine, NativeExec};
+use anytime_mb::optim::{BetaSchedule, DualAveraging};
+use anytime_mb::straggler::ShiftedExp;
+use anytime_mb::topology::Topology;
+use anytime_mb::{
+    ConsensusMode, CrashWindow, FaultSpec, Flap, RunOutput, RunSpec, Runtime, Scheme, SimRuntime,
+};
+
+fn try_sim_run(spec: &RunSpec, topo: &Topology) -> anyhow::Result<RunOutput> {
+    let (mk, f_star) = linreg_factory(24, 5);
+    let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
+    SimRuntime::new(&strag).run(spec, topo, &mk, f_star)
+}
+
+fn sim_run(spec: &RunSpec, topo: &Topology) -> RunOutput {
+    try_sim_run(spec, topo).unwrap()
+}
+
+fn linreg_factory(
+    d: usize,
+    seed: u64,
+) -> (
+    impl Fn(usize) -> Box<dyn ExecEngine> + Send + Sync,
+    Option<f64>,
+) {
+    let src = Arc::new(DataSource::LinReg(LinRegStream::new(d, seed)));
+    let opt = DualAveraging::new(BetaSchedule::new(1.0, 400.0), 4.0 * (d as f64).sqrt());
+    let f_star = src.f_star();
+    (
+        move |_i: usize| -> Box<dyn ExecEngine> {
+            Box::new(NativeExec::new(src.clone(), opt.clone()))
+        },
+        f_star,
+    )
+}
+
+/// An all-clear spec with deliberately non-default inert knobs: the
+/// fault seed and the round timeout must not arm the fault plane.
+fn all_clear() -> FaultSpec {
+    FaultSpec { seed: 99, round_timeout: 0.125, ..FaultSpec::none() }
+}
+
+/// ISSUE-8 acceptance anchor: the all-clear spec is bit-for-bit the
+/// no-fault run for every scheme × consensus mode that runs on the sim.
+#[test]
+fn all_clear_faultspec_reproduces_baseline_bitwise_everywhere() {
+    let topo = Topology::paper_fig2();
+    let schemes = [
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 },
+        Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 },
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 2 },
+    ];
+    let modes = [
+        ConsensusMode::Exact,
+        ConsensusMode::Gossip { rounds: 5 },
+        ConsensusMode::GossipJitter { mean: 5, jitter: 2 },
+        ConsensusMode::Hierarchical { shards: 2, intra_rounds: 3, inter_rounds: 2 },
+    ];
+    for scheme in schemes {
+        for mode in modes {
+            let base = RunSpec::new(scheme.name(), scheme, 5, 13).with_consensus(mode);
+            let faulted = base.clone().with_faults(all_clear());
+            let a = sim_run(&base, &topo);
+            let b = sim_run(&faulted, &topo);
+            assert_bitwise_equal(&a, &b, &format!("{} × {mode:?}", scheme.name()));
+        }
+    }
+}
+
+/// ... and composed with churn: membership rebuilds must not read the
+/// fault plane when it is all-clear.
+#[test]
+fn all_clear_faultspec_is_bitwise_under_churn() {
+    let topo = Topology::ring(8);
+    let churn = ChurnSpec::IidDropout { p: 0.3, seed: 11 };
+    let base = RunSpec::amb("churned", 2.0, 0.5, 5, 6, 13).with_churn(churn);
+    let faulted = base.clone().with_faults(all_clear());
+    let a = sim_run(&base, &topo);
+    let b = sim_run(&faulted, &topo);
+    assert!(a.active_counts.iter().any(|&c| c < 8), "churn dropped nobody — weak test");
+    assert_bitwise_equal(&a, &b, "all-clear × churn");
+}
+
+/// The fault plane is deterministic: one faulty spec, two runs, bitwise
+/// identical output — including the measured drift column.
+#[test]
+fn faulty_runs_are_bit_reproducible() {
+    let topo = Topology::paper_fig2();
+    let faults = FaultSpec {
+        loss: 0.1,
+        flap: Some(Flap { p_down: 0.1, p_up: 0.5 }),
+        crashes: vec![CrashWindow { node: 2, from: 3, to: 4 }],
+        seed: 21,
+        ..FaultSpec::none()
+    };
+    let spec = RunSpec::amb("faulty-repro", 2.0, 0.5, 5, 6, 13).with_faults(faults);
+    let a = sim_run(&spec, &topo);
+    let b = sim_run(&spec, &topo);
+    assert_bitwise_equal(&a, &b, "faulty repeat run");
+    // and the faults actually bit: some epoch measured nonzero drift
+    assert!(
+        a.record.epochs.iter().any(|e| e.conservation_drift > 0.0),
+        "loss 0.1 + flaps fired no drops — weak test"
+    );
+}
+
+/// ISSUE-8 acceptance: 5% iid loss on the fig-5 topology still reaches
+/// the no-fault run's target error, and the mean-conservation drift is
+/// measured rather than assumed away.
+#[test]
+fn five_percent_loss_on_fig5_reaches_target_with_measured_drift() {
+    let topo = Topology::erdos_connected(20, 0.2, 7);
+    let clean_spec = RunSpec::amb("fig5-clean", 2.5, 0.5, 5, 12, 7);
+    let lossy_spec = clean_spec
+        .clone()
+        .with_faults(FaultSpec { loss: 0.05, seed: 77, ..FaultSpec::none() });
+    let clean = sim_run(&clean_spec, &topo);
+    let lossy = sim_run(&lossy_spec, &topo);
+
+    // the no-drop run's drift column is exactly zero
+    assert!(clean.record.epochs.iter().all(|e| e.conservation_drift == 0.0));
+    // the lossy run measures finite drift and fires somewhere
+    assert!(lossy.record.epochs.iter().all(|e| e.conservation_drift.is_finite()));
+    assert!(
+        lossy.record.epochs.iter().any(|e| e.conservation_drift > 0.0),
+        "5% loss over 5 rounds × ~80 directed edges fired nothing"
+    );
+
+    let target = clean.record.epochs.last().unwrap().error * 1.5;
+    assert!(
+        lossy.record.time_to_error(target).is_some(),
+        "lossy run never reached target {target:e}; final error {:e}",
+        lossy.record.epochs.last().unwrap().error
+    );
+}
+
+/// Crash ≠ churn: the dead node's state is LOST at onset and rebuilt
+/// from the peer average exactly once at rejoin (compute suppressed for
+/// that one epoch), and crashes alone never fire link drops.
+#[test]
+fn crash_rejoin_resyncs_from_peers_exactly_once() {
+    let topo = Topology::ring(4);
+    let faults = FaultSpec {
+        crashes: vec![CrashWindow { node: 1, from: 2, to: 3 }],
+        ..FaultSpec::none()
+    };
+    let spec = RunSpec::amb("crash-integ", 2.0, 0.5, 5, 6, 5)
+        .with_node_log()
+        .with_faults(faults);
+    let out = sim_run(&spec, &topo);
+
+    assert_eq!(out.active_counts, vec![4, 3, 3, 4, 4, 4]);
+    let log = out.node_log.as_ref().unwrap();
+    // dead epochs 2–3 AND the rejoin epoch 4 compute nothing (the
+    // rejoin epoch is the one-shot peer re-sync); epochs 5–6 resume
+    assert_eq!(&log.batches[1][1..=3], &[0, 0, 0], "crash window must suppress compute");
+    assert!(log.batches[1][4] > 0, "node 1 never resumed computing");
+    // dead node gossips no rounds; the rejoining node participates
+    assert_eq!(&out.rounds[1][1..=2], &[0, 0], "dead node gossiped");
+    assert!(out.rounds[1][3] > 0, "rejoining node must join consensus for the re-sync");
+    // crashes alone fire no drops: drift identically zero
+    assert!(out.record.epochs.iter().all(|e| e.conservation_drift == 0.0));
+}
+
+/// Satellite 2: unsupported mode combinations and invalid specs are
+/// surfaced as clean errors, not panics.
+#[test]
+fn unsupported_combinations_error_cleanly() {
+    let topo = Topology::ring(4);
+    let reject = |spec: RunSpec, needle: &str| {
+        let err = try_sim_run(&spec, &topo).expect_err("spec must be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "error {msg:?} missing {needle:?}");
+    };
+    let lossy = FaultSpec { loss: 0.1, ..FaultSpec::none() };
+    reject(
+        RunSpec::amb("loss-exact", 2.0, 0.5, 5, 2, 13)
+            .with_consensus(ConsensusMode::Exact)
+            .with_faults(lossy.clone()),
+        "require a gossip consensus mode",
+    );
+    reject(
+        RunSpec::amb("loss-hier", 2.0, 0.5, 5, 2, 13)
+            .with_consensus(ConsensusMode::Hierarchical {
+                shards: 2,
+                intra_rounds: 3,
+                inter_rounds: 2,
+            })
+            .with_faults(lossy),
+        "Hierarchical",
+    );
+    reject(
+        RunSpec::amb("loss-range", 2.0, 0.5, 5, 2, 13)
+            .with_faults(FaultSpec { loss: 1.5, ..FaultSpec::none() }),
+        "not in [0, 1]",
+    );
+    reject(
+        RunSpec::amb("crash-range", 2.0, 0.5, 5, 2, 13).with_faults(FaultSpec {
+            crashes: vec![CrashWindow { node: 9, from: 1, to: 2 }],
+            ..FaultSpec::none()
+        }),
+        "names node",
+    );
+}

@@ -6,7 +6,6 @@
 //! fabric runs must be bit-reproducible and restricted to the sim
 //! runtime's Gossip mode.
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use anytime_mb::data::LinRegStream;
@@ -19,7 +18,7 @@ use anytime_mb::{
     ChurnSpec, ConsensusMode, NetworkModel, RunOutput, RunSpec, Runtime, Scheme, SimRuntime,
 };
 
-fn run_sim(spec: &RunSpec, topo: &Topology) -> RunOutput {
+fn try_run_sim(spec: &RunSpec, topo: &Topology) -> anyhow::Result<RunOutput> {
     let strag = ShiftedExp { zeta: 1.0, lambda: 2.0 / 3.0, unit_batch: 40 };
     let src = Arc::new(DataSource::LinReg(LinRegStream::new(24, 5)));
     let opt = DualAveraging::new(BetaSchedule::new(1.0, 400.0), 4.0 * 24f64.sqrt());
@@ -28,6 +27,10 @@ fn run_sim(spec: &RunSpec, topo: &Topology) -> RunOutput {
         Box::new(NativeExec::new(src.clone(), opt.clone()))
     };
     SimRuntime::new(&strag).run(spec, topo, &mk, f_star)
+}
+
+fn run_sim(spec: &RunSpec, topo: &Topology) -> RunOutput {
+    try_run_sim(spec, topo).unwrap()
 }
 
 /// Full-output bitwise equality: primal bits, per-epoch stat bits, the
@@ -147,16 +150,12 @@ fn fabric_rejects_non_gossip_modes() {
         let spec = RunSpec::amb("bad", 2.0, 0.5, 5, 2, 13)
             .with_consensus(mode)
             .with_network(ideal());
-        let err = catch_unwind(AssertUnwindSafe(|| run_sim(&spec, &topo)))
+        let err = try_run_sim(&spec, &topo)
             .expect_err("Fabric must reject non-Gossip consensus");
-        let msg = err
-            .downcast_ref::<String>()
-            .cloned()
-            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
-            .unwrap_or_default();
+        let msg = format!("{err:#}");
         assert!(
             msg.contains("requires ConsensusMode::Gossip"),
-            "unexpected panic message: {msg}"
+            "unexpected error message: {msg}"
         );
     }
 }

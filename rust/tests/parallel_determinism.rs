@@ -37,7 +37,7 @@ fn run_sim(spec: &RunSpec) -> RunOutput {
     let mk = move |_i: usize| -> Box<dyn ExecEngine> {
         Box::new(NativeExec::new(src.clone(), opt.clone()))
     };
-    SimRuntime::new(&strag).run(spec, &topo, &mk, f_star)
+    SimRuntime::new(&strag).run(spec, &topo, &mk, f_star).unwrap()
 }
 
 #[test]

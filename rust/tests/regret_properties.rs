@@ -37,7 +37,7 @@ fn sim_run(
     let mk = move |_i: usize| -> Box<dyn ExecEngine> {
         Box::new(NativeExec::new(s.clone(), o.clone()))
     };
-    anytime_mb::run(&SimRuntime::new(strag), spec, topo, &mk, src.f_star())
+    anytime_mb::run(&SimRuntime::new(strag), spec, topo, &mk, src.f_star()).unwrap()
 }
 
 /// AMB epoch wall time is exactly (T + T_c)·τ for ANY straggler draw,

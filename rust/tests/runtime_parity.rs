@@ -58,8 +58,8 @@ fn fmb_exact_same_spec_agrees_across_runtimes() {
     // enters the learning math, only the records' wall clock.
     let strag = Deterministic { unit_time: 0.01, unit_batch: 48 };
 
-    let sim = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star);
-    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star);
+    let sim = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star).unwrap();
+    let thr = ThreadedRuntime.run(&spec, &topo, &mk, f_star).unwrap();
 
     assert_eq!(sim.record.epochs.len(), thr.record.epochs.len());
     for (es, et) in sim.record.epochs.iter().zip(&thr.record.epochs) {
@@ -113,7 +113,7 @@ fn sim_equal_seeds_bitwise_identical() {
     let strag = ShiftedExp { zeta: 0.5, lambda: 1.0, unit_batch: 60 };
     let run = |seed: u64| -> RunOutput {
         let spec = RunSpec::amb("det", 2.0, 0.5, 4, 8, seed);
-        SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star)
+        SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star).unwrap()
     };
     let a = run(77);
     let b = run(77);
@@ -150,7 +150,7 @@ fn every_scheme_runs_on_both_runtimes() {
     for scheme in &schemes {
         for (rt_name, rt) in &runtimes {
             let spec = RunSpec::new(scheme.name(), *scheme, 3, 13).with_grad_chunk(8);
-            let out = anytime_mb::run(*rt, &spec, &topo, &mk, f_star);
+            let out = anytime_mb::run(*rt, &spec, &topo, &mk, f_star).unwrap();
             assert_eq!(
                 out.record.epochs.len(),
                 3,

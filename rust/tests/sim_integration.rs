@@ -33,7 +33,7 @@ fn sim_run(
     opt: &DualAveraging,
 ) -> RunOutput {
     let mk = native_factory(src.clone(), opt.clone());
-    anytime_mb::run(&SimRuntime::new(strag), spec, topo, &mk, src.f_star())
+    anytime_mb::run(&SimRuntime::new(strag), spec, topo, &mk, src.f_star()).unwrap()
 }
 
 fn sim_record(

@@ -40,7 +40,8 @@ fn linreg_factory(
 fn five_node_ring_trains() {
     let topo = Topology::ring(5);
     let (mk, f_star) = linreg_factory(24, 3);
-    let out = anytime_mb::run(&ThreadedRuntime, &spec(8, 0.05, 0.04, vec![]), &topo, &mk, f_star);
+    let out = anytime_mb::run(&ThreadedRuntime, &spec(8, 0.05, 0.04, vec![]), &topo, &mk, f_star)
+        .unwrap();
     assert_eq!(out.record.epochs.len(), 8);
     let first = out.record.epochs[0].error;
     let last = out.record.epochs.last().unwrap().error;
@@ -67,7 +68,7 @@ fn epoch_wall_time_is_fixed_regardless_of_stragglers() {
     let (mk, f_star) = linreg_factory(16, 5);
     let s = spec(6, 0.05, 0.03, vec![4.0, 1.0, 1.0, 1.0]);
     let t0 = std::time::Instant::now();
-    let out = anytime_mb::run(&ThreadedRuntime, &s, &topo, &mk, f_star);
+    let out = anytime_mb::run(&ThreadedRuntime, &s, &topo, &mk, f_star).unwrap();
     let elapsed = t0.elapsed().as_secs_f64();
     let scheduled = 6.0 * (0.05 + 0.03);
     assert!(
@@ -92,7 +93,9 @@ fn nodes_converge_to_similar_models() {
     // exposes every node's primal — the final w's agree across nodes.
     let topo = Topology::complete(4);
     let (mk, f_star) = linreg_factory(16, 7);
-    let out = anytime_mb::run(&ThreadedRuntime, &spec(10, 0.05, 0.04, vec![]), &topo, &mk, f_star);
+    let out =
+        anytime_mb::run(&ThreadedRuntime, &spec(10, 0.05, 0.04, vec![]), &topo, &mk, f_star)
+            .unwrap();
     let last = out.record.epochs.last().unwrap();
     assert!(last.error < out.record.epochs[0].error * 0.5);
     assert!(last.min_node_batch > 0);
@@ -114,7 +117,8 @@ fn single_neighbor_line_topology() {
     // Degenerate connectivity (path graph) still terminates and trains.
     let topo = Topology::from_edges(3, &[(0, 1), (1, 2)]);
     let (mk, f_star) = linreg_factory(8, 11);
-    let out = anytime_mb::run(&ThreadedRuntime, &spec(5, 0.04, 0.03, vec![]), &topo, &mk, f_star);
+    let out = anytime_mb::run(&ThreadedRuntime, &spec(5, 0.04, 0.03, vec![]), &topo, &mk, f_star)
+        .unwrap();
     assert_eq!(out.record.epochs.len(), 5);
     assert!(out.record.epochs.iter().all(|e| e.batch > 0));
 }
