@@ -1,0 +1,15 @@
+// D1 positive: wall-clock reads inside a deterministic module.
+use std::time::{Instant, SystemTime};
+
+pub fn epoch_deadline() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn stamp() -> SystemTime {
+    SystemTime::now()
+}
+
+pub fn width() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

@@ -1,0 +1,13 @@
+// D1 negative: the same reads, each carrying a suppression.
+use std::time::Instant;
+
+pub fn kernel_wall_time() -> f64 {
+    // amb-lint: allow(D1, "host wall-time for the perf column; not simulated time")
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn width() -> usize {
+    // amb-lint: allow(D1, "sizing a host-side scratch pool; result never enters the sim")
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

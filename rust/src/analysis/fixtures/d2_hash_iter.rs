@@ -1,0 +1,19 @@
+// D2 positive: iterating hash containers (order is nondeterministic).
+use std::collections::{HashMap, HashSet};
+
+pub fn sum_values(m: &HashMap<u64, f64>) -> f64 {
+    m.values().sum()
+}
+
+pub fn first_seen(seen: &HashSet<u64>) -> Option<u64> {
+    for &id in seen {
+        return Some(id);
+    }
+    None
+}
+
+pub fn drain_all() {
+    let mut inbox: HashMap<u64, Vec<f32>> = HashMap::new();
+    inbox.insert(1, vec![0.0]);
+    inbox.retain(|_, v| !v.is_empty());
+}

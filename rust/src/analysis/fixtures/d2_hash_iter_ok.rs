@@ -1,0 +1,11 @@
+// D2 negative: point lookups are fine; iteration carries a suppression.
+use std::collections::HashMap;
+
+pub fn lookup(m: &HashMap<u64, f64>, k: u64) -> Option<f64> {
+    m.get(&k).copied()
+}
+
+pub fn purge(inbox: &mut HashMap<u64, Vec<f32>>) {
+    // amb-lint: allow(D2, "retain applies a pure per-key predicate; order-independent")
+    inbox.retain(|_, v| !v.is_empty());
+}

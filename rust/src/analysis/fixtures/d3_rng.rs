@@ -1,0 +1,7 @@
+// D3 positive: raw Pcg64 seeding outside the tag-split helpers.
+use crate::util::rng::Pcg64;
+
+pub fn draw(seed: u64) -> f64 {
+    let mut rng = Pcg64::new(seed);
+    rng.f64()
+}

@@ -1,0 +1,20 @@
+// D3 negative: namespaced constructions and tag-splits pass; a raw
+// stream root carries a suppression.
+use crate::util::rng::Pcg64;
+
+const LOSS_NS: u64 = 0x1A55_0001;
+
+pub fn namespaced(seed: u64) -> f64 {
+    let mut rng = Pcg64::new(seed ^ LOSS_NS);
+    rng.f64()
+}
+
+pub fn split_root(seed: u64, node: u64) -> f64 {
+    let mut root = Pcg64::new(seed ^ LOSS_NS).split(node);
+    root.f64()
+}
+
+pub fn stream_root(seed: u64) -> Pcg64 {
+    // amb-lint: allow(D3, "stream root: caller-supplied seed is this generator's namespace")
+    Pcg64::new(seed)
+}

@@ -1,0 +1,5 @@
+// D4 with a suppression but no justification string: still reported.
+pub fn head(v: &[u64]) -> u64 {
+    // amb-lint: allow(D4)
+    *v.first().unwrap()
+}

@@ -1,0 +1,16 @@
+// D4 positive: unjustified panics in library code.
+pub fn head(v: &[u64]) -> u64 {
+    *v.first().unwrap()
+}
+
+pub fn must(v: Option<u64>) -> u64 {
+    v.expect("always set")
+}
+
+pub fn boom(kind: u8) -> u64 {
+    match kind {
+        0 => 0,
+        1 => panic!("bad kind"),
+        _ => unreachable!(),
+    }
+}

@@ -1,0 +1,13 @@
+// D4 negative: every panic site carries a justification string.
+pub fn head(v: &[u64]) -> u64 {
+    // amb-lint: allow(D4, "caller guarantees v non-empty (checked at spec parse)")
+    *v.first().unwrap()
+}
+
+pub fn boom(kind: u8) -> u64 {
+    match kind {
+        0 => 0,
+        // amb-lint: allow(D4, "kind validated at construction; other values are a bug")
+        _ => unreachable!(),
+    }
+}

@@ -1,0 +1,4 @@
+// D5 positive: an unsafe block (the crate forbids unsafe code).
+pub fn reinterpret(data: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}

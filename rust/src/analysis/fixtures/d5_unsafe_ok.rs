@@ -1,0 +1,4 @@
+// D5 negative: the safe rewrite, no unsafe token anywhere.
+pub fn to_bytes(data: &[f32]) -> Vec<u8> {
+    data.iter().flat_map(|v| v.to_le_bytes()).collect()
+}

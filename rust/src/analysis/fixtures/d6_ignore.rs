@@ -1,0 +1,4 @@
+// D6 positive: #[ignore] without the regen-helper marker.
+#[test]
+#[ignore]
+fn slow_sweep() {}

@@ -1,0 +1,4 @@
+// D6 negative: the golden-pin regen helper is the one sanctioned use.
+#[test]
+#[ignore = "regen helper: run explicitly to rewrite tests/golden/pins.txt"]
+fn regen_pins() {}

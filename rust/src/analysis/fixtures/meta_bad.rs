@@ -1,0 +1,6 @@
+// meta positives: unknown rule, and a suppression nothing fires.
+pub fn quiet() -> u64 {
+    // amb-lint: allow(D9)
+    // amb-lint: allow(D4, "nothing on the next line panics")
+    7
+}

@@ -1,0 +1,386 @@
+//! Comment/string-aware Rust tokenizer for `amb-lint`.
+//!
+//! Hand-rolled in the `util::pool` dependency-free style: no syn, no
+//! proc-macro2, no crates.io.  The lint rules (see [`super::rules`]) only
+//! need a *lexical* view of the source — identifiers, punctuation, and
+//! literals with accurate line/column spans, with comments lexed
+//! separately so suppression directives can be read and so the word
+//! `unsafe` inside a doc comment or a string literal never trips D5.
+//!
+//! Supported surface (everything this repository uses, plus the common
+//! cases): line + nested block comments, string literals with escapes,
+//! raw/byte/C strings (`r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `c"…"`),
+//! char literals vs lifetimes, idents, numbers (including `0x…`, floats,
+//! exponents, suffixes, and `1..n` ranges), and single-char punctuation
+//! (multi-char operators arrive as adjacent `Punct` tokens, which is all
+//! the rules need — `::` is two `:` tokens).
+
+/// Lexical class of a [`Tok`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `HashMap`, `for`, …).
+    Ident,
+    /// Lifetime or loop label (`'a`, `'outer`).
+    Lifetime,
+    /// Numeric literal, suffix included (`42`, `0xFA17`, `1.5e-3f64`).
+    Number,
+    /// String literal of any flavour, delimiters included.
+    Str,
+    /// Char literal, delimiters included.
+    Char,
+    /// One punctuation character (`.`, `:`, `#`, `{`, …).
+    Punct,
+}
+
+/// One code token with its source position (1-based line and column).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// One comment (line or block), delimiters included.  Block comments keep
+/// only their starting line: suppression directives are line comments.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+}
+
+/// Token stream + comment stream for one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek(0)?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn take_while(&mut self, out: &mut String, f: impl Fn(char) -> bool) {
+        while let Some(c) = self.peek(0) {
+            if !f(c) {
+                break;
+            }
+            out.push(c);
+            self.bump();
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Would an ident be a raw/byte/C string prefix given the next char?
+/// (`r"`, `r#`, `b"`, `br#`, `c"`, `cr#`, …)
+fn is_string_prefix(ident: &str, next: Option<char>) -> bool {
+    let prefix_ok = matches!(ident, "r" | "b" | "c" | "br" | "rb" | "cr" | "rc");
+    prefix_ok && matches!(next, Some('"') | Some('#'))
+}
+
+/// Tokenize one source file.  Never panics: unterminated constructs are
+/// closed at end-of-file (the lint keeps whatever it saw up to there).
+pub fn lex(src: &str) -> Lexed {
+    let mut lx = Lexer { chars: src.chars().collect(), i: 0, line: 1, col: 1 };
+    let mut out = Lexed::default();
+
+    while let Some(c) = lx.peek(0) {
+        let (line, col) = (lx.line, lx.col);
+        if c.is_whitespace() {
+            lx.bump();
+            continue;
+        }
+        // Comments.
+        if c == '/' && lx.peek(1) == Some('/') {
+            let mut text = String::new();
+            lx.take_while(&mut text, |c| c != '\n');
+            out.comments.push(Comment { text, line });
+            continue;
+        }
+        if c == '/' && lx.peek(1) == Some('*') {
+            let mut text = String::new();
+            let mut depth = 0usize;
+            while let Some(c) = lx.peek(0) {
+                if c == '/' && lx.peek(1) == Some('*') {
+                    depth += 1;
+                    text.push('/');
+                    text.push('*');
+                    lx.bump();
+                    lx.bump();
+                } else if c == '*' && lx.peek(1) == Some('/') {
+                    depth -= 1;
+                    text.push('*');
+                    text.push('/');
+                    lx.bump();
+                    lx.bump();
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    text.push(c);
+                    lx.bump();
+                }
+            }
+            out.comments.push(Comment { text, line });
+            continue;
+        }
+        // Plain strings.
+        if c == '"' {
+            out.toks.push(lex_escaped_string(&mut lx, String::new(), line, col));
+            continue;
+        }
+        // Lifetimes vs char literals.
+        if c == '\'' {
+            out.toks.push(lex_quote(&mut lx, line, col));
+            continue;
+        }
+        // Idents, which may turn out to be raw/byte-string prefixes.
+        if is_ident_start(c) {
+            let mut text = String::new();
+            lx.take_while(&mut text, is_ident_continue);
+            if is_string_prefix(&text, lx.peek(0)) {
+                let raw = text.contains('r');
+                let tok = if raw {
+                    lex_raw_string(&mut lx, text, line, col)
+                } else {
+                    // b"…" / c"…": escaped body, prefixed.
+                    lx.bump(); // opening quote
+                    let mut head = text;
+                    head.push('"');
+                    lex_escaped_string(&mut lx, head, line, col)
+                };
+                out.toks.push(tok);
+            } else {
+                out.toks.push(Tok { kind: TokKind::Ident, text, line, col });
+            }
+            continue;
+        }
+        // Numbers.
+        if c.is_ascii_digit() {
+            out.toks.push(lex_number(&mut lx, line, col));
+            continue;
+        }
+        // Everything else: one punctuation char.
+        lx.bump();
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, col });
+    }
+    out
+}
+
+/// Body of a `"…"` string (opening quote not yet consumed when `text` is
+/// empty; for `b"`/`c"` prefixes the caller already pushed `prefix"`).
+fn lex_escaped_string(lx: &mut Lexer, mut text: String, line: u32, col: u32) -> Tok {
+    if text.is_empty() {
+        lx.bump();
+        text.push('"');
+    }
+    while let Some(c) = lx.bump() {
+        text.push(c);
+        if c == '\\' {
+            if let Some(esc) = lx.bump() {
+                text.push(esc);
+            }
+        } else if c == '"' {
+            break;
+        }
+    }
+    Tok { kind: TokKind::Str, text, line, col }
+}
+
+/// `r"…"`, `r#"…"#`, `br##"…"##`, … — no escapes, hash-counted close.
+fn lex_raw_string(lx: &mut Lexer, mut text: String, line: u32, col: u32) -> Tok {
+    let mut hashes = 0usize;
+    while lx.peek(0) == Some('#') {
+        hashes += 1;
+        text.push('#');
+        lx.bump();
+    }
+    if lx.peek(0) == Some('"') {
+        text.push('"');
+        lx.bump();
+        'body: while let Some(c) = lx.bump() {
+            text.push(c);
+            if c == '"' {
+                for k in 0..hashes {
+                    if lx.peek(k) != Some('#') {
+                        continue 'body;
+                    }
+                }
+                for _ in 0..hashes {
+                    text.push('#');
+                    lx.bump();
+                }
+                break;
+            }
+        }
+    }
+    Tok { kind: TokKind::Str, text, line, col }
+}
+
+/// A `'` is a lifetime/label when followed by an ident that is NOT then
+/// closed by another `'` (so `'a'` is a char, `'a` a lifetime).
+fn lex_quote(lx: &mut Lexer, line: u32, col: u32) -> Tok {
+    let after = lx.peek(1);
+    let lifetime = match after {
+        Some(c) if is_ident_start(c) => lx.peek(2).map_or(true, |c2| c2 != '\''),
+        _ => false,
+    };
+    let mut text = String::from("'");
+    lx.bump();
+    if lifetime {
+        lx.take_while(&mut text, is_ident_continue);
+        return Tok { kind: TokKind::Lifetime, text, line, col };
+    }
+    // Char literal: handle `'\''`, `'\\'`, `'\u{1F600}'`, `'x'`.
+    while let Some(c) = lx.bump() {
+        text.push(c);
+        if c == '\\' {
+            if let Some(esc) = lx.bump() {
+                text.push(esc);
+            }
+        } else if c == '\'' {
+            break;
+        }
+    }
+    Tok { kind: TokKind::Char, text, line, col }
+}
+
+/// Numeric literal; consumes suffixes (`1.5e-3f64`) but stops before `..`
+/// so ranges like `1..n` stay three tokens.
+fn lex_number(lx: &mut Lexer, line: u32, col: u32) -> Tok {
+    let mut text = String::new();
+    if lx.peek(0) == Some('0') && matches!(lx.peek(1), Some('x') | Some('o') | Some('b')) {
+        text.push('0');
+        lx.bump();
+        if let Some(base) = lx.bump() {
+            text.push(base);
+        }
+        lx.take_while(&mut text, |c| c.is_ascii_hexdigit() || c == '_');
+    } else {
+        lx.take_while(&mut text, |c| c.is_ascii_digit() || c == '_');
+        // Fraction only when `.` is followed by a digit (not `..`, not `.method()`).
+        if lx.peek(0) == Some('.') && lx.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+            text.push('.');
+            lx.bump();
+            lx.take_while(&mut text, |c| c.is_ascii_digit() || c == '_');
+        }
+        // Exponent.
+        if matches!(lx.peek(0), Some('e') | Some('E')) {
+            let sign = matches!(lx.peek(1), Some('+') | Some('-'));
+            let digit_at = if sign { 2 } else { 1 };
+            if lx.peek(digit_at).is_some_and(|c| c.is_ascii_digit()) {
+                text.push('e');
+                lx.bump();
+                if sign {
+                    if let Some(s) = lx.bump() {
+                        text.push(s);
+                    }
+                }
+                lx.take_while(&mut text, |c| c.is_ascii_digit() || c == '_');
+            }
+        }
+    }
+    // Type suffix (`u64`, `f32`, `usize`).
+    lx.take_while(&mut text, is_ident_continue);
+    Tok { kind: TokKind::Number, text, line, col }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_code_words() {
+        let src = r####"
+            // unsafe in a line comment
+            /* unsafe in /* a nested */ block */
+            let a = "unsafe in a string";
+            let b = r#"unsafe in a raw string"#;
+            let c = 'u';
+        "####;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unsafe".to_string()), "{ids:?}");
+        assert_eq!(ids, vec!["let", "a", "let", "b", "let", "c"]);
+        assert_eq!(lex(src).comments.len(), 2);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) { 'outer: loop { break 'outer; } }").toks;
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| t.text.clone()).collect();
+        assert_eq!(lifetimes, vec!["'a", "'a", "'outer", "'outer"]);
+    }
+
+    #[test]
+    fn char_literal_with_escapes() {
+        let toks = lex(r"let q = '\''; let n = '\n'; let p = 'x';").toks;
+        let chars: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Char).map(|t| t.text.clone()).collect();
+        assert_eq!(chars.len(), 3);
+    }
+
+    #[test]
+    fn ranges_stay_split_and_hex_lexes() {
+        let toks = lex("for i in 1..n { let t = 0xFA17_1055 ^ 1.5e-3f64; }").toks;
+        let nums: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Number).map(|t| t.text.clone()).collect();
+        assert_eq!(nums, vec!["1", "0xFA17_1055", "1.5e-3f64"]);
+        let dots = toks.iter().filter(|t| t.text == "." && t.kind == TokKind::Punct).count();
+        assert_eq!(dots, 2, "the `..` of the range");
+    }
+
+    #[test]
+    fn line_and_column_spans_are_accurate() {
+        let toks = lex("ab cd\n  ef").toks;
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (1, 4));
+        assert_eq!((toks[2].line, toks[2].col), (2, 3));
+    }
+
+    #[test]
+    fn method_after_float_free_number() {
+        // `1.max(2)` — integer, then `.`, then ident.
+        let toks = lex("let x = 1.max(2);").toks;
+        assert_eq!(toks[3].text, "1");
+        assert_eq!(toks[4].text, ".");
+        assert_eq!(toks[5].text, "max");
+    }
+}

@@ -1,0 +1,551 @@
+//! `amb-lint` — dependency-free determinism & invariant static analysis.
+//!
+//! Every contract this reproduction rests on — per-node minibatch a pure
+//! function of the compute window, `threads=1 ≡ threads=k` bitwise,
+//! all-clear faults ≡ no-fault bit-for-bit, ideal fabric ≡ abstract — is
+//! otherwise enforced only *dynamically*, by golden pins and test suites.
+//! This subsystem enforces the statically-checkable half of the contract
+//! on every source file, before any test runs (DESIGN.md
+//! §determinism-contract):
+//!
+//! | rule | checks |
+//! |------|--------|
+//! | D1 | no `Instant::now` / `SystemTime` / `available_parallelism` in deterministic modules |
+//! | D2 | no `HashMap`/`HashSet` *iteration* anywhere (point lookups are fine) |
+//! | D3 | every `Pcg64` construction routes through a namespaced tag-split (`LOSS_NS` style) |
+//! | D4 | `unwrap`/`expect`/`panic!`/`unreachable!` in library code carries a justification |
+//! | D5 | `#![forbid(unsafe_code)]` in lib.rs and no `unsafe` token anywhere |
+//! | D6 | no `#[ignore]` without the golden-pin regen-helper marker |
+//!
+//! The deterministic-module set for D1 is [`DETERMINISTIC_MODULES`];
+//! `coordinator::threaded` and `util::pool` are the explicit wall-clock
+//! allowlist ([`WALL_CLOCK_ALLOWLIST`]) — real time IS their contract.
+//!
+//! ## Suppressions
+//!
+//! A violation is silenced by a plain line comment, either trailing on
+//! the flagged line or standing alone on the line(s) directly above it:
+//!
+//! ```text
+//! let first = v.first().unwrap(); // amb-lint: allow(D4, "v checked non-empty above")
+//! ```
+//!
+//! `allow(<rule>)` takes an optional `, "justification"` string; D4
+//! *requires* it.  `allow-file(<rule>, "justification")` suppresses a
+//! rule for the whole file.  Doc comments (`///`, `//!`) are never read
+//! as directives, so the syntax can be quoted in documentation.  Unknown
+//! rule ids, malformed directives, and suppressions that stop matching
+//! any violation are themselves reported (rule id `meta`), so stale
+//! allows cannot rot in place.
+//!
+//! ## Scope model
+//!
+//! Analysis is purely lexical (see [`lexer`]): no type inference, no
+//! macro expansion.  D2 therefore tracks hash-container *names* — local
+//! bindings initialised from `HashMap::new()`-style constructors, any
+//! `name: HashMap<…>`-shaped annotation (fields, params, struct
+//! literals), and file-spanning `type X = HashSet<…>` aliases collected
+//! across the whole scanned set — and flags `.iter()`-family calls and
+//! `for … in &name` loops on those names.  `#[cfg(test)]` / `#[test]`
+//! items are recognised by attribute + brace matching; D3 and D4 do not
+//! apply inside them, nor to `tests/`, `examples/`, or bench sources.
+//! Directories named `fixtures`, `golden`, `vendor`, or `target` are
+//! never walked (the lint's own rule fixtures are deliberate violations).
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use lexer::{Lexed, Tok, TokKind};
+
+/// Rule ids with one-line summaries (`amb-lint --rules`).
+pub const RULES: &[(&str, &str)] = &[
+    ("D1", "wall-clock read in a deterministic module"),
+    ("D2", "HashMap/HashSet iteration: order is nondeterministic (lookups are fine)"),
+    ("D3", "raw Pcg64 seeding outside the namespaced tag-split helpers"),
+    ("D4", "unwrap/expect/panic!/unreachable! in library code without a justification"),
+    ("D5", "unsafe code (crate forbids it), or lib.rs missing #![forbid(unsafe_code)]"),
+    ("D6", "#[ignore] without the golden-pin regen-helper marker"),
+    ("meta", "malformed, unknown, or unused amb-lint suppression"),
+];
+
+/// Modules whose state evolution must be a pure function of (spec, seed).
+/// A module matches if it equals an entry or sits below it (`consensus`
+/// covers `consensus::churn`).
+pub const DETERMINISTIC_MODULES: &[&str] = &[
+    "coordinator::sim",
+    "consensus",
+    "net",
+    "fault",
+    "churn",
+    "optim",
+    "straggler",
+    "experiments",
+];
+
+/// The explicit wall-clock allowlist: the threaded runtime schedules real
+/// deadlines and the worker pool sizes itself off the machine — both are
+/// *outside* the deterministic plane by design (their outputs are pinned
+/// bitwise against the deterministic paths instead).
+pub const WALL_CLOCK_ALLOWLIST: &[&str] = &["coordinator::threaded", "util::pool"];
+
+/// Rules whose suppressions must carry a justification string.
+const JUSTIFICATION_REQUIRED: &[&str] = &["D4"];
+
+/// Where a source file sits in the package layout; decides which rules
+/// apply (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceKind {
+    /// Library source under `src/` (module path known).
+    Lib,
+    /// Binary source (`src/main.rs`, `src/bin/*`).
+    Bin,
+    /// Integration-test source under `tests/`.
+    Test,
+    /// Example under `examples/`.
+    Example,
+    /// Bench under `benches/`.
+    Bench,
+    /// Anything else (e.g. the CI self-test's temp file).
+    Other,
+}
+
+/// One finding, with a span-accurate anchor.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!("{}:{}:{}: {}: {}", self.path, self.line, self.col, self.rule, self.msg)
+    }
+}
+
+/// Scope of one suppression directive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SuppressionTarget {
+    File,
+    Line(u32),
+}
+
+#[derive(Debug)]
+struct Suppression {
+    rule: String,
+    reason: Option<String>,
+    target: SuppressionTarget,
+    comment_line: u32,
+    used: bool,
+}
+
+/// Lexed + classified view of one source file, ready for the rules.
+pub struct FileAnalysis {
+    pub path: String,
+    pub kind: SourceKind,
+    /// Crate-relative module path for `Lib` sources (`""` = lib.rs root,
+    /// `"consensus::churn"`, …); `None` otherwise.
+    pub module: Option<String>,
+    pub lexed: Lexed,
+    /// Inclusive line ranges of `#[cfg(test)]` / `#[test]` items.
+    pub test_regions: Vec<(u32, u32)>,
+    suppressions: Vec<Suppression>,
+    /// Parse-stage problems (malformed directives, unknown rules).
+    directive_issues: Vec<(u32, String)>,
+}
+
+impl FileAnalysis {
+    pub fn in_test_region(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(a, b)| (a..=b).contains(&line))
+    }
+}
+
+/// Result of one lint pass.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files: usize,
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "amb-lint: {} violation(s) across {} file(s) ({} suppressed)\n",
+            self.diagnostics.len(),
+            self.files,
+            self.suppressed
+        ));
+        out
+    }
+}
+
+/// Classify a (normalized, `/`-separated) path into kind + module path.
+fn classify_path(path: &str) -> (SourceKind, Option<String>) {
+    let comps: Vec<&str> = path.split('/').filter(|c| !c.is_empty() && *c != ".").collect();
+    if let Some(src_at) = comps.iter().rposition(|c| *c == "src") {
+        let rel = &comps[src_at + 1..];
+        if rel.first() == Some(&"bin") || rel == ["main.rs"] {
+            return (SourceKind::Bin, None);
+        }
+        let mut parts: Vec<String> =
+            rel.iter().map(|c| c.trim_end_matches(".rs").to_string()).collect();
+        if matches!(parts.last().map(String::as_str), Some("mod") | Some("lib")) {
+            parts.pop();
+        }
+        return (SourceKind::Lib, Some(parts.join("::")));
+    }
+    if comps.contains(&"tests") {
+        (SourceKind::Test, None)
+    } else if comps.contains(&"examples") {
+        (SourceKind::Example, None)
+    } else if comps.contains(&"benches") {
+        (SourceKind::Bench, None)
+    } else {
+        (SourceKind::Other, None)
+    }
+}
+
+/// Is `module` inside the deterministic plane (and not allowlisted)?
+pub fn is_deterministic_module(module: &str) -> bool {
+    let within = |set: &[&str]| {
+        set.iter().any(|m| module == *m || module.starts_with(&format!("{m}::")))
+    };
+    within(DETERMINISTIC_MODULES) && !within(WALL_CLOCK_ALLOWLIST)
+}
+
+fn is_known_rule(rule: &str) -> bool {
+    RULES.iter().any(|(id, _)| *id == rule && *id != "meta")
+}
+
+/// Attribute scan: from the token index just inside `#[`, walk to the
+/// matching `]`.  Returns (index of `]`, attr contains bare ident `test`,
+/// collected ident list is cheap enough not to need).
+fn scan_attr(toks: &[Tok], mut i: usize) -> (usize, bool) {
+    let mut depth = 1usize;
+    let mut has_test = false;
+    while i < toks.len() {
+        let t = &toks[i];
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "[") => depth += 1,
+            (TokKind::Punct, "]") => {
+                depth -= 1;
+                if depth == 0 {
+                    return (i, has_test);
+                }
+            }
+            (TokKind::Ident, "test") => has_test = true,
+            _ => {}
+        }
+        i += 1;
+    }
+    (toks.len().saturating_sub(1), has_test)
+}
+
+/// From a `{` token index, return the index of its matching `}` (or the
+/// last token on unbalanced input).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        match (toks[i].kind, toks[i].text.as_str()) {
+            (TokKind::Punct, "{") => depth += 1,
+            (TokKind::Punct, "}") => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn is_punct(toks: &[Tok], i: usize, c: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == c)
+}
+
+/// Line ranges covered by `#[cfg(test)]` mods / `#[test]` fns: from the
+/// attribute line to the closing brace of the next braced item (or the
+/// terminating `;` for brace-less items).
+fn test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(is_punct(toks, i, "#") && is_punct(toks, i + 1, "[")) {
+            i += 1;
+            continue;
+        }
+        let (attr_end, has_test) = scan_attr(toks, i + 2);
+        if !has_test {
+            i = attr_end + 1;
+            continue;
+        }
+        // Skip any further attributes, then find the item's `{` or `;`.
+        let mut j = attr_end + 1;
+        while is_punct(toks, j, "#") && is_punct(toks, j + 1, "[") {
+            j = scan_attr(toks, j + 2).0 + 1;
+        }
+        while j < toks.len() && !is_punct(toks, j, "{") && !is_punct(toks, j, ";") {
+            j += 1;
+        }
+        if is_punct(toks, j, "{") {
+            let close = match_brace(toks, j);
+            out.push((toks[i].line, toks[close].line));
+        } else if j < toks.len() {
+            out.push((toks[i].line, toks[j].line));
+        }
+        i = attr_end + 1;
+    }
+    out
+}
+
+/// Parse `amb-lint:` directives out of the comment stream.  Doc comments
+/// are documentation, never directives.
+fn parse_suppressions(
+    lexed: &Lexed,
+    issues: &mut Vec<(u32, String)>,
+) -> Vec<Suppression> {
+    let token_lines: BTreeSet<u32> = lexed.toks.iter().map(|t| t.line).collect();
+    let mut out = Vec::new();
+    for c in &lexed.comments {
+        let text = c.text.as_str();
+        let doc = ["///", "//!", "/**", "/*!"];
+        if doc.iter().any(|d| text.starts_with(d)) {
+            continue;
+        }
+        let Some(marker) = text.find("amb-lint:") else { continue };
+        let body = &text[marker + "amb-lint:".len()..];
+        let mut found_any = false;
+        let mut pos = 0usize;
+        while let Some(rel) = body[pos..].find("allow") {
+            let mut at = pos + rel + "allow".len();
+            let target = if body[at..].starts_with("-file(") {
+                at += "-file(".len();
+                SuppressionTarget::File
+            } else if body[at..].starts_with('(') {
+                at += 1;
+                match token_lines.range(c.line..).next() {
+                    Some(&l) => SuppressionTarget::Line(l),
+                    None => {
+                        issues.push((c.line, "suppression below all code: nothing to target".into()));
+                        pos = at;
+                        continue;
+                    }
+                }
+            } else {
+                pos = at;
+                continue;
+            };
+            found_any = true;
+            let rest = &body[at..];
+            let rule: String =
+                rest.chars().take_while(|ch| ch.is_ascii_alphanumeric() || *ch == '_').collect();
+            let mut cur = at + rule.len();
+            while body[cur..].starts_with(' ') {
+                cur += 1;
+            }
+            let mut reason = None;
+            if body[cur..].starts_with(',') {
+                cur += 1;
+                while body[cur..].starts_with(' ') {
+                    cur += 1;
+                }
+                if body[cur..].starts_with('"') {
+                    cur += 1;
+                    match body[cur..].find('"') {
+                        Some(end) => {
+                            reason = Some(body[cur..cur + end].to_string());
+                            cur += end + 1;
+                        }
+                        None => {
+                            issues.push((c.line, "unterminated justification string".into()));
+                            break;
+                        }
+                    }
+                } else {
+                    issues.push((c.line, "expected a quoted justification after `,`".into()));
+                    break;
+                }
+                while body[cur..].starts_with(' ') {
+                    cur += 1;
+                }
+            }
+            if !body[cur..].starts_with(')') {
+                issues.push((c.line, format!("expected `)` to close allow({rule}…)")));
+                pos = cur;
+                continue;
+            }
+            cur += 1;
+            if !is_known_rule(&rule) {
+                issues.push((c.line, format!("unknown rule `{rule}` in amb-lint directive")));
+            } else {
+                out.push(Suppression {
+                    rule,
+                    reason,
+                    target,
+                    comment_line: c.line,
+                    used: false,
+                });
+            }
+            pos = cur;
+        }
+        if !found_any {
+            issues.push((c.line, "amb-lint marker without an allow(...) directive".into()));
+        }
+    }
+    out
+}
+
+/// Lex + classify one (path, source) pair.
+pub fn analyze_source(path: &str, src: &str) -> FileAnalysis {
+    let path = path.replace('\\', "/");
+    let (kind, module) = classify_path(&path);
+    let lexed = lexer::lex(src);
+    let regions = test_regions(&lexed.toks);
+    let mut issues = Vec::new();
+    let sups = parse_suppressions(&lexed, &mut issues);
+    FileAnalysis {
+        path,
+        kind,
+        module,
+        lexed,
+        test_regions: regions,
+        suppressions: sups,
+        directive_issues: issues,
+    }
+}
+
+/// Lint an in-memory file set (the test hook; [`lint_tree`] routes here).
+/// Two passes: hash-alias collection across the whole set, then rules +
+/// suppression accounting per file.
+pub fn lint_sources(files: &[(String, String)]) -> Report {
+    let mut analyses: Vec<FileAnalysis> =
+        files.iter().map(|(p, s)| analyze_source(p, s)).collect();
+    let aliases = rules::hash_aliases(&analyses);
+    let mut report = Report { files: analyses.len(), ..Report::default() };
+    for fa in &mut analyses {
+        let raw = rules::check_file(fa, &aliases);
+        apply_suppressions(fa, raw, &mut report);
+    }
+    report
+        .diagnostics
+        .sort_by(|a, b| (&a.path, a.line, a.col, a.rule).cmp(&(&b.path, b.line, b.col, b.rule)));
+    report
+}
+
+/// Match raw diagnostics against the file's suppressions; emit `meta`
+/// findings for directive issues and unused suppressions.
+fn apply_suppressions(fa: &mut FileAnalysis, raw: Vec<Diagnostic>, report: &mut Report) {
+    for (line, msg) in &fa.directive_issues {
+        report.diagnostics.push(Diagnostic {
+            path: fa.path.clone(),
+            line: *line,
+            col: 1,
+            rule: "meta",
+            msg: msg.clone(),
+        });
+    }
+    for mut d in raw {
+        let hit = fa.suppressions.iter_mut().find(|s| {
+            s.rule == d.rule
+                && match s.target {
+                    SuppressionTarget::File => true,
+                    SuppressionTarget::Line(l) => l == d.line,
+                }
+        });
+        match hit {
+            Some(s) => {
+                s.used = true;
+                if JUSTIFICATION_REQUIRED.contains(&d.rule) && s.reason.is_none() {
+                    d.msg
+                        .push_str(" (suppression present but missing the justification string)");
+                    report.diagnostics.push(d);
+                } else {
+                    report.suppressed += 1;
+                }
+            }
+            None => report.diagnostics.push(d),
+        }
+    }
+    for s in &fa.suppressions {
+        if !s.used {
+            report.diagnostics.push(Diagnostic {
+                path: fa.path.clone(),
+                line: s.comment_line,
+                col: 1,
+                rule: "meta",
+                msg: format!("unused amb-lint suppression for {}: nothing fires it", s.rule),
+            });
+        }
+    }
+}
+
+/// Directory names the walker never descends into: rule fixtures are
+/// deliberate violations, golden pins and vendored crates are not ours
+/// to lint, target is build output.
+const SKIP_DIRS: &[&str] = &["fixtures", "golden", "vendor", "target"];
+
+fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let meta = std::fs::metadata(root)
+        .with_context(|| format!("amb-lint: cannot stat {}", root.display()))?;
+    if meta.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)
+        .with_context(|| format!("amb-lint: cannot read dir {}", root.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for entry in entries {
+        let name = entry.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if entry.is_dir() {
+            if SKIP_DIRS.contains(&name) || name.starts_with('.') {
+                continue;
+            }
+            collect_rs_files(&entry, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}
+
+/// Walk the given roots (files or directories), lint every `.rs` file.
+pub fn lint_tree(roots: &[PathBuf]) -> Result<Report> {
+    let mut paths = Vec::new();
+    for root in roots {
+        collect_rs_files(root, &mut paths)?;
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let src = std::fs::read_to_string(&p)
+            .with_context(|| format!("amb-lint: cannot read {}", p.display()))?;
+        files.push((p.to_string_lossy().into_owned(), src));
+    }
+    Ok(lint_sources(&files))
+}
+
+#[cfg(test)]
+mod tests;

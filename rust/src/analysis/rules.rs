@@ -1,0 +1,395 @@
+//! The amb-lint rules (D1–D6) over the lexical stream.
+//!
+//! Everything here is a pure function of the token/comment streams built
+//! by [`super::lexer`] — no filesystem, no clock, no randomness — so a
+//! lint run is itself bit-reproducible, the same property it enforces.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Tok, TokKind};
+use super::{is_deterministic_module, Diagnostic, FileAnalysis, SourceKind};
+
+/// `.method()` names whose receiver order is the hash map's bucket order.
+const HASH_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Smart-pointer / cell idents skipped when reading a type annotation
+/// down to its first meaningful constructor.
+const TYPE_WRAPPERS: &[&str] =
+    &["Option", "Rc", "Arc", "RefCell", "Mutex", "RwLock", "Box", "Cell", "mut", "dyn"];
+
+fn ident<'t>(toks: &'t [Tok], i: usize) -> Option<&'t str> {
+    toks.get(i).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
+}
+
+fn punct(toks: &[Tok], i: usize, c: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == c)
+}
+
+fn diag(fa: &FileAnalysis, t: &Tok, rule: &'static str, msg: String) -> Diagnostic {
+    Diagnostic { path: fa.path.clone(), line: t.line, col: t.col, rule, msg }
+}
+
+/// Pass 1 over the whole file set: `type X = HashMap<…>;`-style aliases,
+/// so a `DropMask` declared in `fault` is recognised in `net::fabric`.
+pub fn hash_aliases(files: &[FileAnalysis]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for fa in files {
+        let toks = &fa.lexed.toks;
+        for i in 0..toks.len() {
+            if ident(toks, i) != Some("type") {
+                continue;
+            }
+            let Some(name) = ident(toks, i + 1) else { continue };
+            if !punct(toks, i + 2, "=") {
+                continue;
+            }
+            let mut j = i + 3;
+            while j < toks.len() && !punct(toks, j, ";") {
+                if matches!(ident(toks, j), Some("HashMap") | Some("HashSet")) {
+                    out.insert(name.to_string());
+                    break;
+                }
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Pass 2: run every rule that applies to this file's [`SourceKind`].
+pub fn check_file(fa: &FileAnalysis, aliases: &BTreeSet<String>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    match fa.kind {
+        SourceKind::Lib => {
+            d1_wall_clock(fa, &mut out);
+            d2_hash_iteration(fa, aliases, &mut out);
+            d3_rng_discipline(fa, &mut out);
+            d4_panic_audit(fa, &mut out);
+            d5_unsafe(fa, &mut out);
+            d6_ignore_audit(fa, &mut out);
+        }
+        SourceKind::Bin => {
+            d2_hash_iteration(fa, aliases, &mut out);
+            d3_rng_discipline(fa, &mut out);
+            d4_panic_audit(fa, &mut out);
+            d5_unsafe(fa, &mut out);
+            d6_ignore_audit(fa, &mut out);
+        }
+        SourceKind::Test | SourceKind::Example | SourceKind::Bench | SourceKind::Other => {
+            d2_hash_iteration(fa, aliases, &mut out);
+            d5_unsafe(fa, &mut out);
+            d6_ignore_audit(fa, &mut out);
+        }
+    }
+    out
+}
+
+/// D1 — wall-clock reads in deterministic modules.  Simulated time comes
+/// from the spec; reading the host clock or core count inside the
+/// deterministic plane breaks `threads=1 ≡ threads=k` and run replay.
+fn d1_wall_clock(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    let Some(module) = fa.module.as_deref() else { return };
+    if !is_deterministic_module(module) {
+        return;
+    }
+    let toks = &fa.lexed.toks;
+    for i in 0..toks.len() {
+        let Some(name) = ident(toks, i) else { continue };
+        let flagged = match name {
+            "SystemTime" | "available_parallelism" => Some(name),
+            "Instant" => {
+                let is_now = punct(toks, i + 1, ":")
+                    && punct(toks, i + 2, ":")
+                    && ident(toks, i + 3) == Some("now");
+                is_now.then_some("Instant::now")
+            }
+            _ => None,
+        };
+        if let Some(what) = flagged {
+            out.push(diag(
+                fa,
+                &toks[i],
+                "D1",
+                format!("wall-clock source `{what}` in deterministic module `{module}`"),
+            ));
+        }
+    }
+}
+
+/// Read a type annotation / initialiser from `start`, returning true if
+/// it resolves to a hash container: wrappers and path segments are
+/// skipped, the first meaningful ident decides.
+fn type_is_hash(toks: &[Tok], start: usize, aliases: &BTreeSet<String>) -> bool {
+    let mut j = start;
+    let limit = toks.len().min(start + 24);
+    while j < limit {
+        let t = &toks[j];
+        match t.kind {
+            TokKind::Punct if t.text == "&" || t.text == "<" => j += 1,
+            TokKind::Lifetime => j += 1,
+            TokKind::Ident => {
+                let name = t.text.as_str();
+                if name == "HashMap" || name == "HashSet" || aliases.contains(name) {
+                    return true;
+                }
+                if TYPE_WRAPPERS.contains(&name) {
+                    j += 1;
+                } else if punct(toks, j + 1, ":") && punct(toks, j + 2, ":") {
+                    // Path segment (`std::collections::HashMap`).
+                    j += 3;
+                } else {
+                    return false;
+                }
+            }
+            _ => return false,
+        }
+    }
+    false
+}
+
+/// Names bound to hash containers in this file: `name: HashMap<…>`
+/// annotations (fields, params, struct literals) and
+/// `let [mut] name = HashMap::new()`-style initialisers.
+fn hash_names(toks: &[Tok], aliases: &BTreeSet<String>) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for i in 0..toks.len() {
+        // `name: <type-or-value resolving to a hash container>` — skip
+        // `::` path separators so `std::x` is not read as an annotation.
+        if let Some(name) = ident(toks, i) {
+            if punct(toks, i + 1, ":")
+                && !punct(toks, i + 2, ":")
+                && !punct(toks, i.wrapping_sub(1), ":")
+                && type_is_hash(toks, i + 2, aliases)
+            {
+                names.insert(name.to_string());
+            }
+        }
+        // `let [mut] name = … HashMap … ( …` — scan the initialiser head.
+        if ident(toks, i) == Some("let") {
+            let mut j = i + 1;
+            if ident(toks, j) == Some("mut") {
+                j += 1;
+            }
+            let Some(name) = ident(toks, j) else { continue };
+            if !punct(toks, j + 1, "=") || punct(toks, j + 2, "=") {
+                continue;
+            }
+            // Scan the initialiser head; stop at `(`/`;` and at `[` so a
+            // `vec![DropMask::new(); n]` element type never marks the Vec.
+            let mut k = j + 2;
+            let limit = toks.len().min(k + 16);
+            while k < limit && !punct(toks, k, "(") && !punct(toks, k, ";") && !punct(toks, k, "[")
+            {
+                if let Some(id) = ident(toks, k) {
+                    if id == "HashMap" || id == "HashSet" || aliases.contains(id) {
+                        names.insert(name.to_string());
+                        break;
+                    }
+                }
+                k += 1;
+            }
+        }
+    }
+    names
+}
+
+/// D2 — hash-container iteration.  Bucket order is a function of the
+/// hasher's per-process random state; any fold over it is
+/// run-to-run-nondeterministic.  Point lookups stay fine (the threaded
+/// inboxes keep theirs); iterate a BTreeMap or sorted keys instead.
+fn d2_hash_iteration(fa: &FileAnalysis, aliases: &BTreeSet<String>, out: &mut Vec<Diagnostic>) {
+    let toks = &fa.lexed.toks;
+    let names = hash_names(toks, aliases);
+    if names.is_empty() {
+        return;
+    }
+    for i in 0..toks.len() {
+        // `name.iter()` family.
+        if let Some(m) = ident(toks, i) {
+            let call = punct(toks, i + 1, "(") && punct(toks, i.wrapping_sub(1), ".");
+            if call && HASH_ITER_METHODS.contains(&m) {
+                if let Some(recv) = ident(toks, i.wrapping_sub(2)) {
+                    if names.contains(recv) {
+                        let msg =
+                            format!("`{recv}.{m}()` iterates a hash container: order is random");
+                        out.push(diag(fa, &toks[i], "D2", msg));
+                    }
+                }
+            }
+        }
+        // `for pat in [&[mut]] name {`.
+        if ident(toks, i) == Some("for") {
+            let limit = toks.len().min(i + 24);
+            for j in i + 1..limit {
+                if ident(toks, j) != Some("in") {
+                    continue;
+                }
+                let mut k = j + 1;
+                if punct(toks, k, "&") {
+                    k += 1;
+                }
+                if ident(toks, k) == Some("mut") {
+                    k += 1;
+                }
+                if let Some(name) = ident(toks, k) {
+                    if names.contains(name) && punct(toks, k + 1, "{") {
+                        let msg =
+                            format!("`for … in {name}` iterates a hash container: order is random");
+                        out.push(diag(fa, &toks[k], "D2", msg));
+                    }
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// D3 — RNG discipline.  Every stream must be namespaced off its seed
+/// the way the fault plane does (`Pcg64::new(seed).split(LOSS_NS-style
+/// tag)` or `Pcg64::new(seed ^ NS)`), so two subsystems sharing one run
+/// seed can never consume the same draw sequence.
+fn d3_rng_discipline(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    if fa.module.as_deref() == Some("util::rng") {
+        return; // the constructors themselves live here
+    }
+    let toks = &fa.lexed.toks;
+    for i in 0..toks.len() {
+        if ident(toks, i) != Some("Pcg64")
+            || !punct(toks, i + 1, ":")
+            || !punct(toks, i + 2, ":")
+            || ident(toks, i + 3) != Some("new")
+            || !punct(toks, i + 4, "(")
+        {
+            continue;
+        }
+        if fa.in_test_region(toks[i].line) {
+            continue;
+        }
+        // Scan the argument list for a `^` namespace tag.
+        let mut depth = 0usize;
+        let mut j = i + 4;
+        let mut namespaced = false;
+        while j < toks.len() {
+            if punct(toks, j, "(") {
+                depth += 1;
+            } else if punct(toks, j, ")") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if punct(toks, j, "^") {
+                namespaced = true;
+            }
+            j += 1;
+        }
+        // `.split(tag)` directly on the construction also namespaces it.
+        if punct(toks, j + 1, ".") && ident(toks, j + 2) == Some("split") {
+            namespaced = true;
+        }
+        if !namespaced {
+            out.push(diag(
+                fa,
+                &toks[i],
+                "D3",
+                "raw `Pcg64::new(seed)`: tag-split it (`.split(NS)`) or xor a namespace constant"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// D4 — panic audit.  Library panic paths must either be routed through
+/// `anyhow::Result` or carry a written justification at the site.
+fn d4_panic_audit(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    let toks = &fa.lexed.toks;
+    for i in 0..toks.len() {
+        let Some(name) = ident(toks, i) else { continue };
+        if fa.in_test_region(toks[i].line) {
+            continue;
+        }
+        let method = punct(toks, i + 1, "(") && punct(toks, i.wrapping_sub(1), ".");
+        let what = match name {
+            "unwrap" | "expect" if method => format!(".{name}()"),
+            "panic" | "unreachable" if punct(toks, i + 1, "!") => format!("{name}!"),
+            _ => continue,
+        };
+        out.push(diag(
+            fa,
+            &toks[i],
+            "D4",
+            format!("`{what}` in library code: route a Result or justify the panic path"),
+        ));
+    }
+}
+
+/// D5 — no unsafe code, and lib.rs must carry `#![forbid(unsafe_code)]`
+/// so the compiler enforces the same thing from the inside.
+fn d5_unsafe(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    let toks = &fa.lexed.toks;
+    for t in toks {
+        if t.kind == TokKind::Ident && t.text == "unsafe" {
+            out.push(diag(fa, t, "D5", "`unsafe` token: the crate forbids unsafe code".into()));
+        }
+    }
+    if fa.kind == SourceKind::Lib && fa.module.as_deref() == Some("") {
+        let mut found = false;
+        for i in 0..toks.len() {
+            if punct(toks, i, "#")
+                && punct(toks, i + 1, "!")
+                && punct(toks, i + 2, "[")
+                && ident(toks, i + 3) == Some("forbid")
+                && punct(toks, i + 4, "(")
+                && ident(toks, i + 5) == Some("unsafe_code")
+            {
+                found = true;
+                break;
+            }
+        }
+        if !found {
+            out.push(Diagnostic {
+                path: fa.path.clone(),
+                line: 1,
+                col: 1,
+                rule: "D5",
+                msg: "lib.rs is missing `#![forbid(unsafe_code)]`".into(),
+            });
+        }
+    }
+}
+
+/// D6 — `#[ignore]` audit (the structured replacement for the old
+/// grep-based CI step): only the golden-pin regen helpers may be
+/// ignored, and they are recognised by their exact reason marker.
+fn d6_ignore_audit(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    let toks = &fa.lexed.toks;
+    for i in 0..toks.len() {
+        let attr =
+            punct(toks, i, "#") && punct(toks, i + 1, "[") && ident(toks, i + 2) == Some("ignore");
+        if !attr {
+            continue;
+        }
+        let ok = punct(toks, i + 3, "=")
+            && toks
+                .get(i + 4)
+                .is_some_and(|t| t.kind == TokKind::Str && t.text.starts_with("\"regen helper"));
+        if !ok {
+            out.push(diag(
+                fa,
+                &toks[i + 2],
+                "D6",
+                "`#[ignore]` without the `regen helper` marker hides a test from the suite".into(),
+            ));
+        }
+    }
+}

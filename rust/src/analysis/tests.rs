@@ -1,0 +1,197 @@
+//! Fixture suite for the amb-lint rules: every rule fires on its
+//! positive snippet and stays silent on the suppressed twin, plus the
+//! `lints_clean_on_live_tree` meta-test the CI gate rides on.
+//!
+//! Fixtures live under `fixtures/` (a directory the tree walker skips,
+//! because they are deliberate violations) and are linted here under
+//! *virtual* paths so each lands in the [`SourceKind`]/module scope its
+//! rule targets.
+
+use std::path::Path;
+
+use super::{lint_sources, lint_tree, Report};
+
+const D1: &str = include_str!("fixtures/d1_wall_clock.rs");
+const D1_OK: &str = include_str!("fixtures/d1_wall_clock_ok.rs");
+const D2: &str = include_str!("fixtures/d2_hash_iter.rs");
+const D2_OK: &str = include_str!("fixtures/d2_hash_iter_ok.rs");
+const D3: &str = include_str!("fixtures/d3_rng.rs");
+const D3_OK: &str = include_str!("fixtures/d3_rng_ok.rs");
+const D4: &str = include_str!("fixtures/d4_panics.rs");
+const D4_OK: &str = include_str!("fixtures/d4_panics_ok.rs");
+const D4_BARE: &str = include_str!("fixtures/d4_bare_allow.rs");
+const D5: &str = include_str!("fixtures/d5_unsafe.rs");
+const D5_OK: &str = include_str!("fixtures/d5_unsafe_ok.rs");
+const D6: &str = include_str!("fixtures/d6_ignore.rs");
+const D6_OK: &str = include_str!("fixtures/d6_ignore_ok.rs");
+const META_BAD: &str = include_str!("fixtures/meta_bad.rs");
+
+/// Lint one fixture at a virtual path (so path classification applies).
+fn lint_at(path: &str, src: &str) -> Report {
+    lint_sources(&[(path.to_string(), src.to_string())])
+}
+
+fn rules_fired(report: &Report) -> Vec<&'static str> {
+    report.diagnostics.iter().map(|d| d.rule).collect()
+}
+
+#[test]
+fn d1_fires_in_deterministic_module() {
+    let r = lint_at("rust/src/consensus/fix.rs", D1);
+    assert_eq!(rules_fired(&r), ["D1"; 5], "{}", r.render());
+    // Span accuracy: the Instant::now read sits at 5:14.
+    let instant = r.diagnostics.iter().find(|d| d.msg.contains("Instant::now"));
+    let instant = instant.unwrap_or_else(|| panic!("no Instant::now diag in {}", r.render()));
+    assert_eq!((instant.line, instant.col), (5, 14));
+}
+
+#[test]
+fn d1_silent_on_wall_clock_allowlist() {
+    // Same source, but under coordinator::threaded — real time IS its
+    // contract, so the allowlist swallows every read.
+    let r = lint_at("rust/src/coordinator/threaded/fix.rs", D1);
+    assert!(r.is_clean(), "{}", r.render());
+    let r = lint_at("rust/src/util/pool/fix.rs", D1);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn d1_suppressed_twin_is_silent() {
+    let r = lint_at("rust/src/consensus/fix.rs", D1_OK);
+    assert!(r.is_clean(), "{}", r.render());
+    assert_eq!(r.suppressed, 2);
+}
+
+#[test]
+fn d2_fires_on_iteration_not_lookup() {
+    let r = lint_at("rust/src/consensus/fix.rs", D2);
+    assert_eq!(rules_fired(&r), ["D2"; 3], "{}", r.render());
+    let lines: Vec<u32> = r.diagnostics.iter().map(|d| d.line).collect();
+    assert_eq!(lines, [5, 9, 18]); // .values(), for-loop, .retain()
+    let r = lint_at("rust/src/consensus/fix.rs", D2_OK);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn d2_sees_type_aliases_across_files() {
+    // The alias prepass is global: a HashSet alias declared in `fault`
+    // marks receivers annotated with it in `net`.
+    let alias = "pub type DropMask = std::collections::HashSet<u64>;\n";
+    let user = "pub fn live(mask: &DropMask) -> usize { mask.iter().count() }\n";
+    let r = lint_sources(&[
+        ("rust/src/fault/fix.rs".to_string(), alias.to_string()),
+        ("rust/src/net/fix.rs".to_string(), user.to_string()),
+    ]);
+    assert_eq!(rules_fired(&r), ["D2"], "{}", r.render());
+    assert_eq!(r.diagnostics[0].path, "rust/src/net/fix.rs");
+}
+
+#[test]
+fn d3_fires_on_raw_seed_and_accepts_namespacing() {
+    let r = lint_at("rust/src/consensus/fix.rs", D3);
+    assert_eq!(rules_fired(&r), ["D3"], "{}", r.render());
+    // The twin holds an xor construction, a `.split()` chain, and one
+    // justified stream root — all silent.
+    let r = lint_at("rust/src/consensus/fix.rs", D3_OK);
+    assert!(r.is_clean(), "{}", r.render());
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn d3_exempt_in_test_regions_and_test_sources() {
+    let src = "#[cfg(test)]\nmod tests {\n    use crate::util::rng::Pcg64;\n    #[test]\n    \
+               fn draws() { let mut r = Pcg64::new(7); assert!(r.f64() < 1.0); }\n}\n";
+    let r = lint_at("rust/src/consensus/fix.rs", src);
+    assert!(r.is_clean(), "{}", r.render());
+    let r = lint_at("rust/tests/fix.rs", D3);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn d4_fires_on_each_panic_form() {
+    let r = lint_at("rust/src/consensus/fix.rs", D4);
+    assert_eq!(rules_fired(&r), ["D4"; 4], "{}", r.render());
+    let msgs: String = r.diagnostics.iter().map(|d| d.msg.as_str()).collect();
+    for form in [".unwrap()", ".expect()", "panic!", "unreachable!"] {
+        assert!(msgs.contains(form), "missing {form} in {msgs}");
+    }
+}
+
+#[test]
+fn d4_justified_twin_is_silent_but_bare_allow_still_fires() {
+    let r = lint_at("rust/src/consensus/fix.rs", D4_OK);
+    assert!(r.is_clean(), "{}", r.render());
+    assert_eq!(r.suppressed, 2);
+    // A bare allow(D4) is used (no meta-unused) but does NOT silence.
+    let r = lint_at("rust/src/consensus/fix.rs", D4_BARE);
+    assert_eq!(rules_fired(&r), ["D4"], "{}", r.render());
+    assert!(r.diagnostics[0].msg.contains("missing the justification"), "{}", r.render());
+}
+
+#[test]
+fn d4_not_applied_to_test_sources() {
+    for path in ["rust/tests/fix.rs", "examples/fix.rs", "rust/benches/fix.rs"] {
+        let r = lint_at(path, D4);
+        assert!(r.is_clean(), "{path}: {}", r.render());
+    }
+}
+
+#[test]
+fn d5_fires_everywhere_even_scratch_files() {
+    let r = lint_at("scratch/seeded.rs", D5);
+    assert_eq!(rules_fired(&r), ["D5"], "{}", r.render());
+    let r = lint_at("scratch/seeded.rs", D5_OK);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn d5_lib_rs_must_carry_the_forbid() {
+    let r = lint_at("rust/src/lib.rs", "pub mod consensus;\n");
+    assert_eq!(rules_fired(&r), ["D5"], "{}", r.render());
+    assert!(r.diagnostics[0].msg.contains("forbid(unsafe_code)"), "{}", r.render());
+    let r = lint_at("rust/src/lib.rs", "#![forbid(unsafe_code)]\npub mod consensus;\n");
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn d6_ignore_requires_the_regen_marker() {
+    let r = lint_at("rust/tests/fix.rs", D6);
+    assert_eq!(rules_fired(&r), ["D6"], "{}", r.render());
+    let r = lint_at("rust/tests/fix.rs", D6_OK);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn meta_reports_unknown_rules_and_unused_suppressions() {
+    let r = lint_at("rust/src/consensus/fix.rs", META_BAD);
+    assert_eq!(rules_fired(&r), ["meta", "meta"], "{}", r.render());
+    let msgs: String = r.diagnostics.iter().map(|d| d.msg.as_str()).collect();
+    assert!(msgs.contains("unknown rule `D9`"), "{msgs}");
+    assert!(msgs.contains("unused amb-lint suppression for D4"), "{msgs}");
+}
+
+#[test]
+fn doc_comments_are_never_directives() {
+    // The suppression syntax quoted in docs (as in this module's own
+    // header) must not parse as a directive.
+    let src = "/// Use `// amb-lint: allow(D4, \"why\")` at the site.\npub fn f() {}\n";
+    let r = lint_at("rust/src/consensus/fix.rs", src);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn lints_clean_on_live_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots = [
+        root.join("src"),
+        root.join("tests"),
+        root.join("benches"),
+        root.join("../examples"),
+    ];
+    let report = match lint_tree(&roots) {
+        Ok(r) => r,
+        Err(e) => panic!("lint_tree failed: {e:#}"),
+    };
+    assert!(report.files > 50, "walker found only {} files", report.files);
+    assert!(report.is_clean(), "live tree has violations:\n{}", report.render());
+}

@@ -143,6 +143,7 @@ impl Bencher {
             min: stats::min(&samples),
         };
         self.results.push(summary);
+        // amb-lint: allow(D4, "run() pushes a result before this accessor is reachable")
         self.results.last().unwrap()
     }
 
@@ -159,6 +160,7 @@ impl Bencher {
     ) -> &Summary {
         self.bench(name, || {
             crate::run(runtime, spec, topo, make_engine, f_star)
+                // amb-lint: allow(D4, "bench harness: an unrunnable spec is fatal by design")
                 .expect("bench spec must be runnable")
                 .record
                 .total_samples()

@@ -1,0 +1,61 @@
+//! `amb-lint` CLI — walk the given roots and enforce the determinism
+//! contract (DESIGN.md §determinism-contract).
+//!
+//! ```text
+//! cargo run --bin amb-lint -- rust/src rust/tests examples
+//! cargo run --bin amb-lint -- --rules
+//! ```
+//!
+//! Exit status: 0 when the tree is clean, 1 on any violation (including
+//! `meta` findings for malformed or stale suppressions), 2 on I/O errors.
+
+#![forbid(unsafe_code)]
+#![deny(clippy::dbg_macro, clippy::todo, clippy::unimplemented, clippy::mem_forget)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anytime_mb::analysis::{lint_tree, RULES};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("usage: amb-lint [--rules] <root>...");
+        println!("lints every .rs file under the given files/directories");
+        return ExitCode::SUCCESS;
+    }
+    if args.iter().any(|a| a == "--rules") {
+        for (id, what) in RULES {
+            println!("{id:5} {what}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        // Repo-root default, mirroring the CI invocation.
+        ["rust/src", "rust/tests", "rust/benches", "examples"]
+            .iter()
+            .map(PathBuf::from)
+            .filter(|p| p.exists())
+            .collect()
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+    if roots.is_empty() {
+        eprintln!("amb-lint: no roots to lint (run from the repo root or pass paths)");
+        return ExitCode::from(2);
+    }
+    match lint_tree(&roots) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.is_clean() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("amb-lint: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}

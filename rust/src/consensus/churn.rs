@@ -113,11 +113,13 @@ impl InducedConsensus {
         if self.cache.contains_key(active) {
             // refresh recency (cap is tiny, the scan is cheap)
             if let Some(pos) = self.lru.iter().position(|k| k == active) {
+                // amb-lint: allow(D4, "pos was found by position() over this same deque")
                 let k = self.lru.remove(pos).unwrap();
                 self.lru.push_back(k);
             }
         } else {
             if self.cache.len() >= Self::MAX_CACHED_SETS {
+                // amb-lint: allow(D4, "cache at capacity implies a non-empty lru deque")
                 let oldest = self.lru.pop_front().expect("cache non-empty at cap");
                 self.cache.remove(&oldest);
             }
@@ -134,6 +136,7 @@ impl InducedConsensus {
         if self.ensure_cached(active) {
             &self.base
         } else {
+            // amb-lint: allow(D4, "entry inserted by the ensure() call just above")
             self.cache.get(active).unwrap()
         }
     }
@@ -154,6 +157,7 @@ impl InducedConsensus {
         // Field-disjoint borrows: the matrix ref (base/cache) and the
         // scratch arena live in different fields.
         let all = self.ensure_cached(active);
+        // amb-lint: allow(D4, "plan cached by ensure() at method entry")
         let p = if all { &self.base } else { self.cache.get(active).unwrap() };
         for _ in 0..rounds {
             p.mix_into(msgs, &mut self.scratch);
@@ -173,6 +177,7 @@ impl InducedConsensus {
         let rmax = rounds.iter().copied().max().unwrap_or(0);
         self.ensure_scratch(n, msgs.d());
         let all = self.ensure_cached(active);
+        // amb-lint: allow(D4, "plan cached by ensure() at method entry")
         let p = if all { &self.base } else { self.cache.get(active).unwrap() };
         for k in 0..rmax {
             p.mix_into(msgs, &mut self.scratch);
@@ -206,6 +211,7 @@ impl InducedConsensus {
         assert_eq!(msgs.n(), n);
         self.ensure_scratch(n, msgs.d());
         let all = self.ensure_cached(active);
+        // amb-lint: allow(D4, "plan cached by ensure() at method entry")
         let p = if all { &self.base } else { self.cache.get(active).unwrap() };
         let mut drops = 0;
         for k in 0..rounds {
@@ -237,6 +243,7 @@ impl InducedConsensus {
         let rmax = rounds.iter().copied().max().unwrap_or(0);
         self.ensure_scratch(n, msgs.d());
         let all = self.ensure_cached(active);
+        // amb-lint: allow(D4, "plan cached by ensure() at method entry")
         let p = if all { &self.base } else { self.cache.get(active).unwrap() };
         let mut drops = 0;
         for k in 0..rmax {

@@ -247,6 +247,7 @@ pub fn plan_compute(
             // would mark everyone on-time and coded attribution would
             // exceed the recoverable batch).
             let ignore = ignore.min(act.saturating_sub(1));
+            // amb-lint: allow(D4, "scheme validated at RunSpec construction; quota exists for every scheme")
             let work = work_quota(scheme, act).unwrap();
             for i in 0..n {
                 let mut prof = straggler.draw(i, epoch, rng);
@@ -262,6 +263,7 @@ pub fn plan_compute(
                 order.sort_by(|&a, &b| {
                     compute_times[a]
                         .partial_cmp(&compute_times[b])
+                        // amb-lint: allow(D4, "scheme validated at RunSpec construction; quota exists for every scheme")
                         .unwrap()
                         .then(a.cmp(&b))
                 });

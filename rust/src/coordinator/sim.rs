@@ -424,10 +424,12 @@ struct PooledBlocks {
 
 impl PooledBlocks {
     fn send(&self, worker: usize, cmd: Cmd) {
+        // amb-lint: allow(D4, "pool workers outlive the coordinator; a dead worker is a crashed run")
         self.cmd_txs[worker].send(cmd).expect("sim pool worker exited early");
     }
 
     fn recv(&self) -> Reply {
+        // amb-lint: allow(D4, "pool workers outlive the coordinator; a dead worker is a crashed run")
         self.reply_rx.recv().expect("sim pool worker died")
     }
 }
@@ -464,6 +466,7 @@ impl NodeBlocks for PooledBlocks {
                     msgs.as_mut_slice()[lo * width..hi * width].copy_from_slice(&rows);
                     applied[lo..hi].copy_from_slice(&ap);
                 }
+                // amb-lint: allow(D4, "pool reply protocol: each request gets its matching reply variant")
                 _ => unreachable!("sim pool protocol violation (expected Computed)"),
             }
         }
@@ -495,6 +498,7 @@ impl NodeBlocks for PooledBlocks {
                         error = e;
                     }
                 }
+                // amb-lint: allow(D4, "pool reply protocol: each request gets its matching reply variant")
                 _ => unreachable!("sim pool protocol violation (expected Updated)"),
             }
         }
@@ -508,6 +512,7 @@ impl NodeBlocks for PooledBlocks {
         for _ in 0..self.spans.len() {
             match self.recv() {
                 Reply::ResetDone => {}
+                // amb-lint: allow(D4, "pool reply protocol: each request gets its matching reply variant")
                 _ => unreachable!("sim pool protocol violation (expected ResetDone)"),
             }
         }
@@ -525,6 +530,7 @@ impl NodeBlocks for PooledBlocks {
                     final_w.as_mut_slice()[lo * self.dim..hi * self.dim]
                         .copy_from_slice(&w_rows);
                 }
+                // amb-lint: allow(D4, "pool reply protocol: each request gets its matching reply variant")
                 _ => unreachable!("sim pool protocol violation (expected Finished)"),
             }
         }
@@ -679,16 +685,19 @@ fn run_sim(
         drop(reply_tx);
         let mut dim: Option<usize> = None;
         for _ in 0..threads {
+            // amb-lint: allow(D4, "pool workers outlive the coordinator; a dead worker is a crashed run")
             match reply_rx.recv().expect("sim pool worker died during engine construction") {
                 Reply::Ready { dim: d } => match dim {
                     None => dim = Some(d),
                     Some(dd) => assert_eq!(dd, d, "engines must share a workload"),
                 },
+                // amb-lint: allow(D4, "pool reply protocol: each request gets its matching reply variant")
                 _ => unreachable!("sim pool protocol violation (expected Ready)"),
             }
         }
         let mut nodes = PooledBlocks {
             n,
+            // amb-lint: allow(D4, "pool construction rejects zero workers")
             dim: dim.expect("at least one worker"),
             spans,
             cmd_txs,
@@ -855,6 +864,7 @@ fn epoch_loop<B: NodeBlocks>(
         // isolated and must not dilute the target).  None ⇔ nobody is
         // present, in which case the epoch is a membership no-op.
         let exact_avg: Option<Vec<f64>> = if all_active {
+            // amb-lint: allow(D4, "RunSpec validation rejects empty topologies")
             Some(Consensus::exact_average(&msgs).expect("topology guarantees n > 0 nodes"))
         } else {
             InducedConsensus::active_mean_f64(&msgs, active)
@@ -976,6 +986,7 @@ fn epoch_loop<B: NodeBlocks>(
                 );
                 if act > 0 {
                     hier.as_mut()
+                        // amb-lint: allow(D4, "engine built for Hierarchical mode in the arm above")
                         .expect("hierarchical engine built for Hierarchical mode")
                         .run(&mut msgs, intra_rounds, inter_rounds, active);
                 }
@@ -997,8 +1008,10 @@ fn epoch_loop<B: NodeBlocks>(
         // instead of pretending it away.  Exactly 0.0 whenever no drop
         // fired (clean epochs of a faulty run included).
         let conservation_drift = if drops_fired > 0 {
+            // amb-lint: allow(D4, "a dropped message implies its sender was active this epoch")
             let before = exact_avg.as_ref().expect("drops imply an active node");
             let after = InducedConsensus::active_mean_f64(&msgs, active)
+                // amb-lint: allow(D4, "consensus preserves the active-node key set")
                 .expect("active set unchanged by consensus");
             let mut sq = 0.0f64;
             for (a, b) in after.iter().zip(before) {
@@ -1017,6 +1030,7 @@ fn epoch_loop<B: NodeBlocks>(
         let mut consensus_err = 0.0f64;
         let do_update = b_t > 0;
         if do_update {
+            // amb-lint: allow(D4, "b_t > 0 implies at least one active node contributed")
             let avg = exact_avg.as_ref().expect("b_t > 0 requires an active node");
             consensus_err = if all_active {
                 epoch::consensus_error(&msgs, avg, dim, b_t, spec.exact_bt)

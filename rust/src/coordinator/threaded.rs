@@ -223,6 +223,7 @@ fn run_threaded(
                 ready: ready.clone(),
                 phase_barrier: phase_barrier.clone(),
                 start_cell: start_cell.clone(),
+                // amb-lint: allow(D4, "each node thread takes its own rx exactly once")
                 rx: rxs[i].take().unwrap(),
                 peer_txs: peer_ids[i].iter().map(|&j| txs[j].clone()).collect(),
                 peers: peer_ids[i].clone(),
@@ -234,6 +235,7 @@ fn run_threaded(
             handles.push(scope.spawn(move || node_main(ctx, make_engine)));
         }
         drop(txs);
+        // amb-lint: allow(D4, "join propagates a node-thread panic to the caller")
         handles.into_iter().map(|h| h.join().expect("node thread panicked")).collect()
     });
 
@@ -476,6 +478,7 @@ fn consensus_phase(
                         continue;
                     }
                     let pj: &[f32] =
+                        // amb-lint: allow(D4, "missing == 0 checked above: every peer snapshot is present")
                         if j == i { &*m } else { have[j].as_deref().expect("missing == 0") };
                     for k in 0..=dim {
                         sum[k] += pj[k] as f64;
@@ -503,6 +506,7 @@ fn consensus_phase(
                         epoch::gossip_jitter_rounds(spec.seed, node, t, mean, jitter)
                     }
                     ConsensusMode::Exact | ConsensusMode::Hierarchical { .. } => {
+                        // amb-lint: allow(D4, "loop exits only via the returns above")
                         unreachable!()
                     }
                 }
@@ -676,8 +680,10 @@ fn consensus_phase(
                 for (e, _) in epeers.iter().enumerate() {
                     let pij = pw[e];
                     let mj: &[f32] = if drop_from[e] {
+                        // amb-lint: allow(D4, "a drop recorded for e implies its snapshot was taken")
                         m_pre.as_deref().expect("drop implies snapshot")
                     } else {
+                        // amb-lint: allow(D4, "missing == 0 checked above: every peer snapshot is present")
                         have[e].as_deref().expect("missing == 0")
                     };
                     for k in 0..=dim {
@@ -712,6 +718,7 @@ fn consensus_phase(
         // Rejected with a clean error before any thread spawned
         // (run_threaded's upfront validation).
         ConsensusMode::Hierarchical { .. } => {
+            // amb-lint: allow(D4, "Hierarchical is rejected by run_threaded before node_main runs")
             unreachable!("Hierarchical is rejected by run_threaded before node_main runs")
         }
     }
@@ -858,10 +865,12 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 // weight is today's z — the sim's `encode_msg_into`
                 // call, same kernel).
                 if on {
+                    // amb-lint: allow(D4, "AmbDg scheme always carries a delay ring")
                     match ring.as_mut().expect("AmbDg carries a ring").pop_ready_pre_push() {
                         Some(p) => {
                             epoch::encode_msg_into(&st.z, &p.grad_sum, n, p.batch, &mut m);
                             applied = (p.batch, p.loss, t - p.epoch);
+                            // amb-lint: allow(D4, "AmbDg scheme always carries a delay ring")
                             ring.as_mut().unwrap().recycle(p);
                         }
                         None => {
@@ -903,12 +912,14 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                     );
                     b_i = b;
                     loss_i = l;
+                    // amb-lint: allow(D4, "AmbDg scheme always carries a delay ring")
                     ring.as_mut().unwrap().push(t, b_i, loss_i, &st.grad_sum);
                     compute_secs = compute_t0.elapsed().as_secs_f64();
                 } else if on {
                     // Rejoin: no compute, but the pipeline cadence must
                     // hold — push the empty batch so pops stay aligned
                     // with epochs.
+                    // amb-lint: allow(D4, "AmbDg scheme always carries a delay ring")
                     ring.as_mut().unwrap().push(t, 0, 0.0, &st.grad_sum);
                     compute_secs = 0.0;
                 } else {
@@ -967,6 +978,7 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
                 // helpers in `epoch`).  Absent nodes skip the race but
                 // still hit both barriers, so phases stay aligned.
                 let ignore_eff = ignore.min(act_count.saturating_sub(1));
+                // amb-lint: allow(D4, "scheme validated at RunSpec construction; quota exists for every scheme")
                 let work = epoch::work_quota(&spec.scheme, act_count).unwrap();
                 // Gradients beyond this count are pure redundancy (coded):
                 // they cost real time but their sums are never used.
@@ -1069,6 +1081,7 @@ fn node_main(ctx: NodeCtx, make_engine: EngineFactory<'_>) -> NodeResult {
             }
         }
         // purge stale buffered messages from this epoch
+        // amb-lint: allow(D2, "retain applies a pure per-key predicate; iteration order cannot affect the result")
         inbox.retain(|&(e, _, _), _| e > t);
 
         // ---- update phase (shared state machine; absent nodes hold) ----

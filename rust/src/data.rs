@@ -167,7 +167,7 @@ impl TokenStream {
     pub fn sample_batch(&self, rng: &mut Pcg64, batch: usize, len: usize, out: &mut Vec<i32>) {
         out.resize(batch * len, 0);
         for s in 0..batch {
-            let (a, b) = *self.pairs.get(rng.below(self.pairs.len() as u64) as usize).unwrap();
+            let (a, b) = self.pairs[rng.below(self.pairs.len() as u64) as usize];
             let mut x = rng.below(self.vocab as u64) as u32;
             let row = &mut out[s * len..(s + 1) * len];
             for t in row.iter_mut() {

@@ -14,7 +14,7 @@
 //! active fractions track 1 − p, and AMB still makes progress at 30%
 //! dropout — "absent nodes never block progress".
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use super::{sweep, Ctx, FigReport};
 use crate::churn::ChurnSpec;
@@ -148,7 +148,7 @@ pub fn churn(ctx: &Ctx) -> Result<FigReport> {
     let heavy = items
         .iter()
         .position(|it| it.topo == 0 && it.p == 0.3 && it.spec.name.contains("-amb-"))
-        .expect("grid contains ring10 amb p=0.3");
+        .context("grid contains ring10 amb p=0.3")?;
     let heavy_rec = &outs[heavy].record;
     let amb_progress_under_churn = heavy_rec
         .epochs

@@ -21,7 +21,7 @@
 //! D = 1 reaches the common error target no later than AMB in wall
 //! time.
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use super::{final_error, sweep, Ctx, FigReport};
 use crate::coordinator::{RunOutput, RunSpec, RuntimeKind};
@@ -179,7 +179,7 @@ pub fn dg(ctx: &Ctx) -> Result<FigReport> {
 
     let amb_t = amb.record.total_time();
     let fmb_t = fmb.record.total_time();
-    let d_last = dg_outs.last().expect("at least one delay");
+    let d_last = dg_outs.last().context("dg grid sweeps at least one delay")?;
     Ok(FigReport {
         id: "dg",
         title: "pipelined delayed gradients: wall-time AMB vs AMB-DG vs FMB (fig-6 stragglers)",

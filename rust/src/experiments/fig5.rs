@@ -5,7 +5,7 @@
 //! construction); per *wall time* AMB reaches 1e-3 in less than half the
 //! time (5b, 2.24× exactly); r = 5 tracks r = ∞ closely for both.
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use super::{sweep, Ctx, FigReport};
 use crate::coordinator::{ConsensusMode, RunSpec};
@@ -42,10 +42,10 @@ pub fn fig5(ctx: &Ctx) -> Result<FigReport> {
     ];
     let mut outs =
         sweep::run_specs(ctx, &topo, &strag, &source, &opt, &specs)?.into_iter();
-    let amb_r5 = outs.next().unwrap().record;
-    let amb_inf = outs.next().unwrap().record;
-    let fmb_r5 = outs.next().unwrap().record;
-    let fmb_inf = outs.next().unwrap().record;
+    let amb_r5 = outs.next().context("fig5 sweep yields 4 runs")?.record;
+    let amb_inf = outs.next().context("fig5 sweep yields 4 runs")?.record;
+    let fmb_r5 = outs.next().context("fig5 sweep yields 4 runs")?.record;
+    let fmb_inf = outs.next().context("fig5 sweep yields 4 runs")?.record;
 
     let mut outputs = Vec::new();
     for rec in [&amb_r5, &amb_inf, &fmb_r5, &fmb_inf] {

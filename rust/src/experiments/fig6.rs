@@ -6,7 +6,7 @@
 //! cluster near 234/351/702 (bad/mid/fast — "first cluster centered
 //! around batch size of 230" in the paper).
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use super::{Ctx, FigReport};
 use crate::coordinator::{RunOutput, RunSpec};
@@ -36,7 +36,7 @@ pub fn fig6(ctx: &Ctx) -> Result<FigReport> {
     let (amb, fmb) = run_induced(ctx, epochs)?;
 
     // 6a: FMB per-(node, epoch) compute times.
-    let fmb_log = fmb.node_log.as_ref().unwrap();
+    let fmb_log = fmb.node_log.as_ref().context("node_log recorded for fig6 runs")?;
     let mut h_times = Histogram::new(0.0, 45.0, 45);
     for node in 0..10 {
         for &t in &fmb_log.compute_times[node] {
@@ -44,7 +44,7 @@ pub fn fig6(ctx: &Ctx) -> Result<FigReport> {
         }
     }
     // 6b: AMB per-(node, epoch) batch sizes.
-    let amb_log = amb.node_log.as_ref().unwrap();
+    let amb_log = amb.node_log.as_ref().context("node_log recorded for fig6 runs")?;
     let mut h_batches = Histogram::new(0.0, 900.0, 45);
     for node in 0..10 {
         for &b in &amb_log.batches[node] {

@@ -5,7 +5,7 @@
 //! (vs ≈1.5-1.7× in the clean Fig. 1b run) — the gap *grows* with
 //! straggler variability.
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use super::{Ctx, FigReport};
 
@@ -18,8 +18,8 @@ pub fn fig7(ctx: &Ctx) -> Result<FigReport> {
     amb.record.save_csv(&p_amb)?;
     fmb.record.save_csv(&p_fmb)?;
 
-    let ea = amb.record.epochs.last().unwrap().error;
-    let ef = fmb.record.epochs.last().unwrap().error;
+    let ea = amb.record.epochs.last().context("runs record at least one epoch")?.error;
+    let ef = fmb.record.epochs.last().context("runs record at least one epoch")?.error;
     let target = ea.max(ef) * 1.5;
     let speedup = crate::metrics::speedup_at(&amb.record, &fmb.record, target)
         .map(|(_, _, s)| s)

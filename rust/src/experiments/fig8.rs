@@ -9,7 +9,7 @@
 //! histograms.  Fig 9: AMB reaches its floor cost ≈5× sooner
 //! (2.45 s vs 12.7 s in the paper).
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use super::{Ctx, FigReport};
 use crate::coordinator::{ConsensusMode, RunOutput, RunSpec};
@@ -41,14 +41,14 @@ pub fn fig8(ctx: &Ctx) -> Result<FigReport> {
     let epochs = ctx.scaled(60);
     let (amb, fmb) = run_hpc(ctx, epochs)?;
 
-    let fmb_log = fmb.node_log.as_ref().unwrap();
+    let fmb_log = fmb.node_log.as_ref().context("node_log recorded for fig8 runs")?;
     let mut h_times = Histogram::new(0.0, 800.0, 80);
     for node in 0..50 {
         for &t in &fmb_log.compute_times[node] {
             h_times.push(t);
         }
     }
-    let amb_log = amb.node_log.as_ref().unwrap();
+    let amb_log = amb.node_log.as_ref().context("node_log recorded for fig8 runs")?;
     let mut h_batches = Histogram::new(0.0, 30.0, 30);
     for node in 0..50 {
         for &b in &amb_log.batches[node] {
@@ -115,8 +115,8 @@ pub fn fig9(ctx: &Ctx) -> Result<FigReport> {
     amb.record.save_csv(&p_amb)?;
     fmb.record.save_csv(&p_fmb)?;
 
-    let ea = amb.record.epochs.last().unwrap().error;
-    let ef = fmb.record.epochs.last().unwrap().error;
+    let ea = amb.record.epochs.last().context("runs record at least one epoch")?.error;
+    let ef = fmb.record.epochs.last().context("runs record at least one epoch")?.error;
     let target = ea.max(ef) * 1.5;
     let speedup = crate::metrics::speedup_at(&amb.record, &fmb.record, target)
         .map(|(_, _, s)| s)

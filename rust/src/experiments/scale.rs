@@ -21,7 +21,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use super::{Ctx, FigReport};
 use crate::churn::ChurnSpec;
@@ -82,6 +82,7 @@ pub fn scale_point(
     .with_consensus(consensus)
     .with_churn(ChurnSpec::IidDropout { p: 0.1, seed: seed ^ 0xC4 });
 
+    // amb-lint: allow(D1, "host wall-time of the whole run for the perf column; not simulated time")
     let t0 = Instant::now();
     let out = SimRuntime::new(&strag).run(&spec, &topo, &mk, f_star)?;
     let wall_secs = t0.elapsed().as_secs_f64();
@@ -161,7 +162,7 @@ pub fn scale(ctx: &Ctx) -> Result<FigReport> {
         .all(|p| p.final_loss.is_finite() && p.final_error.is_finite());
     let fast = points.iter().all(|p| p.wall_secs < 600.0);
 
-    let big = points.iter().max_by_key(|p| p.n).expect("non-empty grid");
+    let big = points.iter().max_by_key(|p| p.n).context("non-empty scale grid")?;
     Ok(FigReport {
         id: "scale",
         title: "consensus plane at n up to 1e5 (sparse-first mixing + hierarchy)",

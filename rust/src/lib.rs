@@ -19,6 +19,10 @@
 //! API, including the migration table from the old two-API surface) and
 //! EXPERIMENTS.md for the paper-vs-measured results.
 
+#![forbid(unsafe_code)]
+#![deny(clippy::dbg_macro, clippy::todo, clippy::unimplemented, clippy::mem_forget)]
+
+pub mod analysis;
 pub mod bench_harness;
 pub mod churn;
 pub mod config;

@@ -21,6 +21,9 @@
 //!   amb train --epochs 40 --t-compute 0.5 --t-consensus 0.2
 //!   amb info
 
+#![forbid(unsafe_code)]
+#![deny(clippy::dbg_macro, clippy::todo, clippy::unimplemented, clippy::mem_forget)]
+
 use std::path::Path;
 use std::process::ExitCode;
 
@@ -189,6 +192,7 @@ fn cmd_dg(args: &Args) -> anyhow::Result<()> {
 
 /// Parse the compact AMB-DG scheme syntax `amb-dg:T:Tc:D`.
 fn parse_amb_dg(s: &str) -> anyhow::Result<Scheme> {
+    // amb-lint: allow(D4, "caller matched the amb-dg: prefix before dispatching here")
     let rest = s.strip_prefix("amb-dg:").expect("caller matched the prefix");
     let parts: Vec<&str> = rest.split(':').collect();
     anyhow::ensure!(
@@ -441,9 +445,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 args.f64_or("radius", 1000.0)?,
             );
             let mk = move |_i: usize| -> Box<dyn anytime_mb::exec::ExecEngine> {
+                // amb-lint: allow(D4, "CLI startup: missing artifacts are fatal with an actionable message")
                 let rt = PjrtRuntime::load_shared(&dir).expect("load artifacts");
                 Box::new(
                     TransformerExec::new(rt, tokens.clone(), opt.clone())
+                        // amb-lint: allow(D4, "CLI startup: missing artifacts are fatal with an actionable message")
                         .expect("transformer exec"),
                 )
             };
@@ -509,6 +515,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
                     "  {name}: {} inputs, {} outputs, file {}",
                     e.inputs.len(),
                     e.outputs.len(),
+                    // amb-lint: allow(D4, "walked directory entries always carry a file name")
                     e.file.file_name().unwrap().to_string_lossy()
                 );
             }

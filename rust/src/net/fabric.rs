@@ -244,6 +244,7 @@ fn measure_rounds_inner(
     }
 
     while q.next_time().map(|t| t <= t_c).unwrap_or(false) {
+        // amb-lint: allow(D4, "pop follows the successful peek above")
         let (t, ev) = q.pop().expect("peeked");
         match ev {
             Ev::Arrive { src, dst, round } => {

@@ -23,6 +23,7 @@ pub struct Gen {
 
 impl Gen {
     pub fn new(seed: u64) -> Gen {
+        // amb-lint: allow(D3, "stream root: the prop case seed is the namespace; printed for replay")
         Gen { rng: Pcg64::new(seed), seed }
     }
 
@@ -109,6 +110,7 @@ where
             .wrapping_add(case as u64 + 1);
         let mut g = Gen::new(seed);
         if let Err(msg) = prop(&mut g) {
+            // amb-lint: allow(D4, "prop harness reports failures by panicking, assert-style")
             panic!("{}", PropFailure { case, seed, msg });
         }
     }
@@ -121,6 +123,7 @@ where
 {
     let mut g = Gen::new(seed);
     if let Err(msg) = prop(&mut g) {
+        // amb-lint: allow(D4, "prop harness reports failures by panicking, assert-style")
         panic!("{}", PropFailure { case: 0, seed, msg });
     }
 }

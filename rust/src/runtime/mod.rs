@@ -9,6 +9,7 @@
 //! Thread-locality: `PjRtClient` is Rc-based (not Send); the threaded
 //! cluster creates one runtime per node thread via a factory.
 
+// amb-lint: allow-file(D4, "PJRT bridge: literals and decodes on shapes validated at exec setup")
 pub mod manifest;
 
 use std::cell::RefCell;
@@ -112,9 +113,8 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     if n != data.len() {
         bail!("lit_f32 shape {:?} != data len {}", shape, data.len());
     }
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, &bytes)
         .map_err(|e| anyhow::anyhow!("lit_f32: {e:?}"))
 }
 
@@ -124,9 +124,8 @@ pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
     if n != data.len() {
         bail!("lit_i32 shape {:?} != data len {}", shape, data.len());
     }
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)
         .map_err(|e| anyhow::anyhow!("lit_i32: {e:?}"))
 }
 

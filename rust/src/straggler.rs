@@ -46,6 +46,7 @@ impl EpochProfile {
         match self {
             EpochProfile::Linear { sec_per_grad } => {
                 if *sec_per_grad <= 0.0 {
+                    // amb-lint: allow(D4, "spec validation: a non-positive rate is a programming error")
                     panic!("sec_per_grad must be positive");
                 }
                 // A RELATIVE epsilon before the floor: when t was itself
@@ -73,6 +74,7 @@ impl EpochProfile {
                     elapsed += step;
                     k += 1;
                     if k > 100_000_000 {
+                        // amb-lint: allow(D4, "spec validation: degenerate timing params are a programming error")
                         panic!("grads_in_time runaway (base+pause ~ 0)");
                     }
                 }
@@ -268,6 +270,7 @@ impl PauseModel {
             }
             off += cnt;
         }
+        // amb-lint: allow(D4, "spec validation: out-of-range node is a programming error")
         panic!("node {node} out of range for PauseModel with n={}", self.n());
     }
 }
@@ -366,6 +369,7 @@ impl MarkovModulated {
     /// chain extends forward only as far as the highest epoch queried,
     /// drawing the identical sequence the legacy from-zero replay drew.
     pub fn bursting(&self, node: usize, epoch: usize) -> bool {
+        // amb-lint: allow(D4, "lock poisoning propagates the original worker panic")
         let mut chains = self.chains.lock().unwrap();
         let chain = chains.entry(node).or_insert_with(|| NodeChain {
             rng: Pcg64::new(self.chain_seed ^ ((node as u64) << 20) ^ 0xB00),
@@ -478,6 +482,7 @@ pub fn estimate_unit_moments<M: StragglerModel + ?Sized>(
     samples: usize,
     seed: u64,
 ) -> Moments {
+    // amb-lint: allow(D3, "stream root: caller-supplied seed is this generator's namespace")
     let mut rng = Pcg64::new(seed);
     let mut w = crate::util::stats::Welford::new();
     let unit = model.unit_batch();

@@ -146,6 +146,7 @@ impl Topology {
     /// Connected Erdős–Rényi: G(n, p) plus a ring to guarantee
     /// connectivity (deterministic given the seed).
     pub fn erdos_connected(n: usize, p: f64, seed: u64) -> Topology {
+        // amb-lint: allow(D3, "stream root: caller-supplied seed is this generator's namespace")
         let mut rng = Pcg64::new(seed);
         let mut edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
         for i in 0..n {
@@ -227,6 +228,7 @@ impl Topology {
                     }
                 }
             }
+            // amb-lint: allow(D4, "BFS distance vector is non-empty for n >= 1")
             diam = diam.max(dist.iter().copied().max().unwrap());
         }
         diam

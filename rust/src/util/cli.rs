@@ -54,8 +54,7 @@ impl Args {
                     args.options.insert(k.to_string(), v.to_string());
                 } else if known.contains(&rest) {
                     args.flags.push(rest.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     args.options.insert(rest.to_string(), v);
                 } else {
                     args.flags.push(rest.to_string());

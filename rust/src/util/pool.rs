@@ -194,6 +194,7 @@ where
     });
     slots
         .into_iter()
+        // amb-lint: allow(D4, "a worker that died without replying already panicked the pool")
         .map(|o| o.expect("pool worker died before returning its result"))
         .collect()
 }
