@@ -1,0 +1,56 @@
+"""The static-verification tools must stay green on the live tree.
+
+These wrap python/tools/{rustcheck,amb_lint_mirror}.py as pytest cases
+so the best-effort python CI job (and any local pytest run) exercises
+them alongside the kernel tests.  Stdlib-only: no jax required.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+TOOLS = os.path.join(REPO, "python", "tools")
+
+
+def _run(*argv):
+    return subprocess.run(
+        [sys.executable, *argv], cwd=REPO, capture_output=True, text=True, timeout=300
+    )
+
+
+def test_rustcheck_clean_on_live_tree():
+    r = _run(os.path.join(TOOLS, "rustcheck.py"), "--repo", REPO)
+    assert r.returncode == 0, f"rustcheck found issues:\n{r.stdout}{r.stderr}"
+    assert "clean" in r.stdout
+
+
+def test_amb_lint_mirror_selftest():
+    r = _run(os.path.join(TOOLS, "amb_lint_mirror.py"), "--repo", REPO, "--selftest")
+    assert r.returncode == 0, f"mirror selftest failed:\n{r.stdout}{r.stderr}"
+    assert "FAIL" not in r.stdout
+
+
+def test_amb_lint_mirror_live_tree_clean():
+    r = _run(os.path.join(TOOLS, "amb_lint_mirror.py"), "--repo", REPO)
+    assert r.returncode == 0, f"live tree has lint violations:\n{r.stdout}{r.stderr}"
+    assert "0 violation(s)" in r.stdout
+
+
+def test_rustcheck_detects_seeded_break(tmp_path):
+    """The gate must FAIL on a seeded inconsistency, or green is meaningless
+    (same philosophy as CI's amb-lint seeded-violation self-test)."""
+    import shutil
+
+    mut = tmp_path / "repo"
+    shutil.copytree(
+        REPO,
+        mut,
+        ignore=shutil.ignore_patterns(".git", "target", "__pycache__", "results"),
+    )
+    lib = mut / "rust" / "src" / "lib.rs"
+    text = lib.read_text()
+    lib.write_text(text + "\npub use crate::consensus::DoesNotExist9000;\n")
+    r = _run(str(mut / "python" / "tools" / "rustcheck.py"), "--repo", str(mut))
+    assert r.returncode == 1, f"rustcheck passed a seeded broken reexport:\n{r.stdout}"
+    assert "DoesNotExist9000" in r.stdout

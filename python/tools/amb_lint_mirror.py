@@ -1,0 +1,1094 @@
+#!/usr/bin/env python3
+"""amb_lint_mirror — a line-for-line Python port of the `amb-lint` static
+analysis (rust/src/analysis/{lexer,mod,rules}.rs), for containers with no
+Rust toolchain.
+
+The Rust implementation is the product; this mirror exists to EXECUTE its
+semantics where `cargo run --bin amb-lint` cannot.  It must track the Rust
+source exactly — same token stream, same rule logic, same suppression
+accounting, same render format — so that a divergence between "what the
+mirror reports" and "what the fixture suite in analysis/tests.rs asserts"
+is evidence of a bug in the Rust source (authored blind, Open item 0).
+
+Usage:
+    python3 python/tools/amb_lint_mirror.py [--selftest] [ROOT...]
+
+With no roots: lints rust/src rust/tests rust/benches examples (the CI
+invocation).  --selftest replays every assertion from analysis/tests.rs
+(fixtures included) against this mirror plus the lexer unit tests.
+
+Exit status: 0 clean / selftest pass, 1 violations / selftest fail,
+2 I/O error.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Lexer (port of rust/src/analysis/lexer.rs)
+# ---------------------------------------------------------------------------
+
+IDENT_K = "Ident"
+LIFETIME_K = "Lifetime"
+NUMBER_K = "Number"
+STR_K = "Str"
+CHAR_K = "Char"
+PUNCT_K = "Punct"
+
+
+@dataclass
+class Tok:
+    kind: str
+    text: str
+    line: int
+    col: int
+
+
+@dataclass
+class Comment:
+    text: str
+    line: int
+
+
+@dataclass
+class Lexed:
+    toks: list = field(default_factory=list)
+    comments: list = field(default_factory=list)
+
+
+class Lexer:
+    def __init__(self, src: str):
+        self.chars = list(src)
+        self.i = 0
+        self.line = 1
+        self.col = 1
+
+    def peek(self, ahead: int):
+        j = self.i + ahead
+        return self.chars[j] if j < len(self.chars) else None
+
+    def bump(self):
+        c = self.peek(0)
+        if c is None:
+            return None
+        self.i += 1
+        if c == "\n":
+            self.line += 1
+            self.col = 1
+        else:
+            self.col += 1
+        return c
+
+    def take_while(self, out: list, f):
+        while True:
+            c = self.peek(0)
+            if c is None or not f(c):
+                break
+            out.append(c)
+            self.bump()
+
+
+def is_ident_start(c: str) -> bool:
+    return c == "_" or (c.isascii() and c.isalpha())
+
+
+def is_ident_continue(c: str) -> bool:
+    return c == "_" or (c.isascii() and c.isalnum())
+
+
+def is_string_prefix(ident: str, nxt) -> bool:
+    prefix_ok = ident in ("r", "b", "c", "br", "rb", "cr", "rc")
+    return prefix_ok and nxt in ('"', "#")
+
+
+def raw_quote_follows(lx: Lexer, ident: str) -> bool:
+    """For `r`-flavoured prefixes, `#*"` must follow — `r#foo` is a raw
+    identifier, not a raw string."""
+    if "r" not in ident:
+        return True
+    k = 0
+    while lx.peek(k) == "#":
+        k += 1
+    return lx.peek(k) == '"'
+
+
+def lex(src: str) -> Lexed:
+    lx = Lexer(src)
+    out = Lexed()
+    while True:
+        c = lx.peek(0)
+        if c is None:
+            break
+        line, col = lx.line, lx.col
+        if c.isspace():
+            lx.bump()
+            continue
+        # Comments.
+        if c == "/" and lx.peek(1) == "/":
+            buf = []
+            lx.take_while(buf, lambda ch: ch != "\n")
+            out.comments.append(Comment("".join(buf), line))
+            continue
+        if c == "/" and lx.peek(1) == "*":
+            buf = []
+            depth = 0
+            while True:
+                c2 = lx.peek(0)
+                if c2 is None:
+                    break
+                if c2 == "/" and lx.peek(1) == "*":
+                    depth += 1
+                    buf.append("/*")
+                    lx.bump()
+                    lx.bump()
+                elif c2 == "*" and lx.peek(1) == "/":
+                    depth -= 1
+                    buf.append("*/")
+                    lx.bump()
+                    lx.bump()
+                    if depth == 0:
+                        break
+                else:
+                    buf.append(c2)
+                    lx.bump()
+            out.comments.append(Comment("".join(buf), line))
+            continue
+        # Plain strings.
+        if c == '"':
+            out.toks.append(lex_escaped_string(lx, "", line, col))
+            continue
+        # Lifetimes vs char literals.
+        if c == "'":
+            out.toks.append(lex_quote(lx, line, col))
+            continue
+        # Idents, which may turn out to be raw/byte-string prefixes.
+        if is_ident_start(c):
+            buf = []
+            lx.take_while(buf, is_ident_continue)
+            text = "".join(buf)
+            if is_string_prefix(text, lx.peek(0)) and raw_quote_follows(lx, text):
+                if "r" in text:
+                    tok = lex_raw_string(lx, text, line, col)
+                else:
+                    lx.bump()  # opening quote
+                    tok = lex_escaped_string(lx, text + '"', line, col)
+                out.toks.append(tok)
+            elif text == "r" and lx.peek(0) == "#" and (
+                lx.peek(1) is not None and is_ident_start(lx.peek(1))
+            ):
+                # Raw identifier `r#foo`: one Ident token, `r#` kept in the
+                # text so `r#unsafe` never matches the `unsafe` keyword.
+                buf = [text, "#"]
+                lx.bump()
+                lx.take_while(buf, is_ident_continue)
+                out.toks.append(Tok(IDENT_K, "".join(buf), line, col))
+            else:
+                out.toks.append(Tok(IDENT_K, text, line, col))
+            continue
+        # Numbers.
+        if c.isascii() and c.isdigit():
+            out.toks.append(lex_number(lx, line, col))
+            continue
+        lx.bump()
+        out.toks.append(Tok(PUNCT_K, c, line, col))
+    return out
+
+
+def lex_escaped_string(lx: Lexer, text: str, line: int, col: int) -> Tok:
+    buf = list(text)
+    if not buf:
+        lx.bump()
+        buf.append('"')
+    while True:
+        c = lx.bump()
+        if c is None:
+            break
+        buf.append(c)
+        if c == "\\":
+            esc = lx.bump()
+            if esc is not None:
+                buf.append(esc)
+        elif c == '"':
+            break
+    return Tok(STR_K, "".join(buf), line, col)
+
+
+def lex_raw_string(lx: Lexer, text: str, line: int, col: int) -> Tok:
+    buf = list(text)
+    hashes = 0
+    while lx.peek(0) == "#":
+        hashes += 1
+        buf.append("#")
+        lx.bump()
+    if lx.peek(0) == '"':
+        buf.append('"')
+        lx.bump()
+        while True:
+            c = lx.bump()
+            if c is None:
+                break
+            buf.append(c)
+            if c == '"':
+                if all(lx.peek(k) == "#" for k in range(hashes)):
+                    for _ in range(hashes):
+                        buf.append("#")
+                        lx.bump()
+                    break
+    return Tok(STR_K, "".join(buf), line, col)
+
+
+def lex_quote(lx: Lexer, line: int, col: int) -> Tok:
+    after = lx.peek(1)
+    if after is not None and is_ident_start(after):
+        nxt2 = lx.peek(2)
+        lifetime = nxt2 is None or nxt2 != "'"
+    else:
+        lifetime = False
+    buf = ["'"]
+    lx.bump()
+    if lifetime:
+        lx.take_while(buf, is_ident_continue)
+        return Tok(LIFETIME_K, "".join(buf), line, col)
+    while True:
+        c = lx.bump()
+        if c is None:
+            break
+        buf.append(c)
+        if c == "\\":
+            esc = lx.bump()
+            if esc is not None:
+                buf.append(esc)
+        elif c == "'":
+            break
+    return Tok(CHAR_K, "".join(buf), line, col)
+
+
+def lex_number(lx: Lexer, line: int, col: int) -> Tok:
+    buf = []
+    if lx.peek(0) == "0" and lx.peek(1) in ("x", "o", "b"):
+        buf.append("0")
+        lx.bump()
+        base = lx.bump()
+        if base is not None:
+            buf.append(base)
+        lx.take_while(buf, lambda c: c in "0123456789abcdefABCDEF_")
+    else:
+        lx.take_while(buf, lambda c: c.isascii() and c.isdigit() or c == "_")
+        nxt1 = lx.peek(1)
+        if lx.peek(0) == "." and nxt1 is not None and nxt1.isascii() and nxt1.isdigit():
+            buf.append(".")
+            lx.bump()
+            lx.take_while(buf, lambda c: c.isascii() and c.isdigit() or c == "_")
+        if lx.peek(0) in ("e", "E"):
+            sign = lx.peek(1) in ("+", "-")
+            digit_at = 2 if sign else 1
+            d = lx.peek(digit_at)
+            if d is not None and d.isascii() and d.isdigit():
+                buf.append(lx.peek(0))  # keep the source's own `e`/`E`
+                lx.bump()
+                if sign:
+                    s = lx.bump()
+                    if s is not None:
+                        buf.append(s)
+                lx.take_while(buf, lambda c: c.isascii() and c.isdigit() or c == "_")
+    lx.take_while(buf, is_ident_continue)
+    return Tok(NUMBER_K, "".join(buf), line, col)
+
+
+# ---------------------------------------------------------------------------
+# Classification + regions + suppressions (port of analysis/mod.rs)
+# ---------------------------------------------------------------------------
+
+RULES = [
+    ("D1", "wall-clock read in a deterministic module"),
+    ("D2", "HashMap/HashSet iteration: order is nondeterministic (lookups are fine)"),
+    ("D3", "raw Pcg64 seeding outside the namespaced tag-split helpers"),
+    ("D4", "unwrap/expect/panic!/unreachable! in library code without a justification"),
+    ("D5", "unsafe code (crate forbids it), or lib.rs missing #![forbid(unsafe_code)]"),
+    ("D6", "#[ignore] without the golden-pin regen-helper marker"),
+    ("meta", "malformed, unknown, or unused amb-lint suppression"),
+]
+
+DETERMINISTIC_MODULES = [
+    "coordinator::sim",
+    "consensus",
+    "net",
+    "fault",
+    "churn",
+    "optim",
+    "straggler",
+    "experiments",
+]
+
+WALL_CLOCK_ALLOWLIST = ["coordinator::threaded", "util::pool"]
+
+JUSTIFICATION_REQUIRED = ["D4"]
+
+LIB, BIN, TEST, EXAMPLE, BENCH, OTHER = "Lib", "Bin", "Test", "Example", "Bench", "Other"
+
+
+@dataclass
+class Diagnostic:
+    path: str
+    line: int
+    col: int
+    rule: str
+    msg: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: {self.msg}"
+
+
+@dataclass
+class Suppression:
+    rule: str
+    reason: object       # str | None
+    target: object       # ("file",) | ("line", n)
+    comment_line: int
+    used: bool = False
+
+
+@dataclass
+class FileAnalysis:
+    path: str
+    kind: str
+    module: object       # str | None ("" = lib.rs root)
+    lexed: Lexed
+    test_regions: list
+    suppressions: list
+    directive_issues: list
+
+    def in_test_region(self, line: int) -> bool:
+        return any(a <= line <= b for a, b in self.test_regions)
+
+
+@dataclass
+class Report:
+    diagnostics: list = field(default_factory=list)
+    files: int = 0
+    suppressed: int = 0
+
+    def is_clean(self) -> bool:
+        return not self.diagnostics
+
+    def render(self) -> str:
+        out = "".join(d.render() + "\n" for d in self.diagnostics)
+        out += (
+            f"amb-lint: {len(self.diagnostics)} violation(s) across "
+            f"{self.files} file(s) ({self.suppressed} suppressed)\n"
+        )
+        return out
+
+
+def classify_path(path: str):
+    comps = [c for c in path.split("/") if c and c != "."]
+    src_at = None
+    for idx in range(len(comps) - 1, -1, -1):
+        if comps[idx] == "src":
+            src_at = idx
+            break
+    if src_at is not None:
+        rel = comps[src_at + 1:]
+        if (rel and rel[0] == "bin") or rel == ["main.rs"]:
+            return BIN, None
+        parts = [c[:-3] if c.endswith(".rs") else c for c in rel]
+        if parts and parts[-1] in ("mod", "lib"):
+            parts.pop()
+        return LIB, "::".join(parts)
+    if "tests" in comps:
+        return TEST, None
+    if "examples" in comps:
+        return EXAMPLE, None
+    if "benches" in comps:
+        return BENCH, None
+    return OTHER, None
+
+
+def is_deterministic_module(module: str) -> bool:
+    def within(ms):
+        return any(module == m or module.startswith(m + "::") for m in ms)
+
+    return within(DETERMINISTIC_MODULES) and not within(WALL_CLOCK_ALLOWLIST)
+
+
+def is_known_rule(rule: str) -> bool:
+    return any(rid == rule and rid != "meta" for rid, _ in RULES)
+
+
+def _is_punct(toks, i, c):
+    return 0 <= i < len(toks) and toks[i].kind == PUNCT_K and toks[i].text == c
+
+
+def scan_attr(toks, i):
+    """Returns (index of closing `]`, attr marks a test item).  `test`
+    inside a `not(...)` (e.g. `#[cfg(not(test))]`) is NOT a test marker."""
+    depth = 1
+    has_test = False
+    has_not = False
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == PUNCT_K and t.text == "[":
+            depth += 1
+        elif t.kind == PUNCT_K and t.text == "]":
+            depth -= 1
+            if depth == 0:
+                return i, has_test and not has_not
+        elif t.kind == IDENT_K and t.text == "test":
+            has_test = True
+        elif t.kind == IDENT_K and t.text == "not":
+            has_not = True
+        i += 1
+    return max(len(toks) - 1, 0), has_test and not has_not
+
+
+def match_brace(toks, open_i):
+    depth = 0
+    i = open_i
+    while i < len(toks):
+        if toks[i].kind == PUNCT_K and toks[i].text == "{":
+            depth += 1
+        elif toks[i].kind == PUNCT_K and toks[i].text == "}":
+            depth -= 1
+            if depth == 0:
+                return i
+        i += 1
+    return max(len(toks) - 1, 0)
+
+
+def test_regions(toks):
+    out = []
+    i = 0
+    while i < len(toks):
+        if not (_is_punct(toks, i, "#") and _is_punct(toks, i + 1, "[")):
+            i += 1
+            continue
+        attr_end, has_test = scan_attr(toks, i + 2)
+        if not has_test:
+            i = attr_end + 1
+            continue
+        j = attr_end + 1
+        while _is_punct(toks, j, "#") and _is_punct(toks, j + 1, "["):
+            j = scan_attr(toks, j + 2)[0] + 1
+        while j < len(toks) and not _is_punct(toks, j, "{") and not _is_punct(toks, j, ";"):
+            j += 1
+        if _is_punct(toks, j, "{"):
+            close = match_brace(toks, j)
+            out.append((toks[i].line, toks[close].line))
+        elif j < len(toks):
+            out.append((toks[i].line, toks[j].line))
+        i = attr_end + 1
+    return out
+
+
+def parse_suppressions(lexed: Lexed, issues: list):
+    token_lines = sorted({t.line for t in lexed.toks})
+    out = []
+    for c in lexed.comments:
+        text = c.text
+        if any(text.startswith(d) for d in ("///", "//!", "/**", "/*!")):
+            continue
+        marker = text.find("amb-lint:")
+        if marker == -1:
+            continue
+        body = text[marker + len("amb-lint:"):]
+        found_any = False
+        pos = 0
+        while True:
+            rel = body.find("allow", pos)
+            if rel == -1:
+                break
+            at = rel + len("allow")
+            if body[at:].startswith("-file("):
+                at += len("-file(")
+                target = ("file",)
+            elif body[at:].startswith("("):
+                at += 1
+                nxt = next((l for l in token_lines if l >= c.line), None)
+                if nxt is None:
+                    issues.append((c.line, "suppression below all code: nothing to target"))
+                    pos = at
+                    continue
+                target = ("line", nxt)
+            else:
+                pos = at
+                continue
+            found_any = True
+            rest = body[at:]
+            rule = ""
+            for ch in rest:
+                if ch.isascii() and (ch.isalnum() or ch == "_"):
+                    rule += ch
+                else:
+                    break
+            cur = at + len(rule)
+            while body[cur:].startswith(" "):
+                cur += 1
+            reason = None
+            if body[cur:].startswith(","):
+                cur += 1
+                while body[cur:].startswith(" "):
+                    cur += 1
+                if body[cur:].startswith('"'):
+                    cur += 1
+                    end = body.find('"', cur)
+                    if end == -1:
+                        issues.append((c.line, "unterminated justification string"))
+                        break
+                    reason = body[cur:end]
+                    cur = end + 1
+                else:
+                    issues.append((c.line, "expected a quoted justification after `,`"))
+                    break
+                while body[cur:].startswith(" "):
+                    cur += 1
+            if not body[cur:].startswith(")"):
+                issues.append((c.line, f"expected `)` to close allow({rule}…)"))
+                pos = cur
+                continue
+            cur += 1
+            if not is_known_rule(rule):
+                issues.append((c.line, f"unknown rule `{rule}` in amb-lint directive"))
+            else:
+                out.append(Suppression(rule, reason, target, c.line))
+            pos = cur
+        if not found_any:
+            issues.append((c.line, "amb-lint marker without an allow(...) directive"))
+    return out
+
+
+def analyze_source(path: str, src: str) -> FileAnalysis:
+    path = path.replace("\\", "/")
+    kind, module = classify_path(path)
+    lexed = lex(src)
+    regions = test_regions(lexed.toks)
+    issues = []
+    sups = parse_suppressions(lexed, issues)
+    return FileAnalysis(path, kind, module, lexed, regions, sups, issues)
+
+
+# ---------------------------------------------------------------------------
+# Rules (port of analysis/rules.rs)
+# ---------------------------------------------------------------------------
+
+HASH_ITER_METHODS = [
+    "iter", "iter_mut", "keys", "values", "values_mut",
+    "into_iter", "into_keys", "into_values", "drain", "retain",
+]
+
+TYPE_WRAPPERS = ["Option", "Rc", "Arc", "RefCell", "Mutex", "RwLock", "Box", "Cell", "mut", "dyn"]
+
+
+def _ident(toks, i):
+    if 0 <= i < len(toks) and toks[i].kind == IDENT_K:
+        return toks[i].text
+    return None
+
+
+def _diag(fa, t, rule, msg):
+    return Diagnostic(fa.path, t.line, t.col, rule, msg)
+
+
+def hash_aliases(files):
+    out = set()
+    for fa in files:
+        toks = fa.lexed.toks
+        for i in range(len(toks)):
+            if _ident(toks, i) != "type":
+                continue
+            name = _ident(toks, i + 1)
+            if name is None or not _is_punct(toks, i + 2, "="):
+                continue
+            j = i + 3
+            while j < len(toks) and not _is_punct(toks, j, ";"):
+                if _ident(toks, j) in ("HashMap", "HashSet"):
+                    out.add(name)
+                    break
+                j += 1
+    return out
+
+
+def check_file(fa, aliases):
+    out = []
+    if fa.kind == LIB:
+        d1_wall_clock(fa, out)
+        d2_hash_iteration(fa, aliases, out)
+        d3_rng_discipline(fa, out)
+        d4_panic_audit(fa, out)
+        d5_unsafe(fa, out)
+        d6_ignore_audit(fa, out)
+    elif fa.kind == BIN:
+        d2_hash_iteration(fa, aliases, out)
+        d3_rng_discipline(fa, out)
+        d4_panic_audit(fa, out)
+        d5_unsafe(fa, out)
+        d6_ignore_audit(fa, out)
+    else:
+        d2_hash_iteration(fa, aliases, out)
+        d5_unsafe(fa, out)
+        d6_ignore_audit(fa, out)
+    return out
+
+
+def d1_wall_clock(fa, out):
+    module = fa.module
+    if module is None or not is_deterministic_module(module):
+        return
+    toks = fa.lexed.toks
+    for i in range(len(toks)):
+        name = _ident(toks, i)
+        if name is None:
+            continue
+        flagged = None
+        if name in ("SystemTime", "available_parallelism"):
+            flagged = name
+        elif name == "Instant":
+            if (_is_punct(toks, i + 1, ":") and _is_punct(toks, i + 2, ":")
+                    and _ident(toks, i + 3) == "now"):
+                flagged = "Instant::now"
+        if flagged is not None:
+            out.append(_diag(
+                fa, toks[i], "D1",
+                f"wall-clock source `{flagged}` in deterministic module `{module}`"))
+
+
+def type_is_hash(toks, start, aliases):
+    j = start
+    limit = min(len(toks), start + 24)
+    while j < limit:
+        t = toks[j]
+        if t.kind == PUNCT_K and t.text in ("&", "<"):
+            j += 1
+        elif t.kind == LIFETIME_K:
+            j += 1
+        elif t.kind == IDENT_K:
+            name = t.text
+            if name in ("HashMap", "HashSet") or name in aliases:
+                return True
+            if name in TYPE_WRAPPERS:
+                j += 1
+            elif _is_punct(toks, j + 1, ":") and _is_punct(toks, j + 2, ":"):
+                j += 3
+            else:
+                return False
+        else:
+            return False
+    return False
+
+
+def hash_names(toks, aliases):
+    names = set()
+    for i in range(len(toks)):
+        name = _ident(toks, i)
+        if name is not None:
+            if (_is_punct(toks, i + 1, ":") and not _is_punct(toks, i + 2, ":")
+                    and not _is_punct(toks, i - 1, ":")
+                    and type_is_hash(toks, i + 2, aliases)):
+                names.add(name)
+        if _ident(toks, i) == "let":
+            j = i + 1
+            if _ident(toks, j) == "mut":
+                j += 1
+            nm = _ident(toks, j)
+            if nm is None:
+                continue
+            if not _is_punct(toks, j + 1, "=") or _is_punct(toks, j + 2, "="):
+                continue
+            k = j + 2
+            limit = min(len(toks), k + 16)
+            while (k < limit and not _is_punct(toks, k, "(")
+                   and not _is_punct(toks, k, ";") and not _is_punct(toks, k, "[")):
+                tid = _ident(toks, k)
+                if tid is not None and (tid in ("HashMap", "HashSet") or tid in aliases):
+                    names.add(nm)
+                    break
+                k += 1
+    return names
+
+
+def d2_hash_iteration(fa, aliases, out):
+    toks = fa.lexed.toks
+    names = hash_names(toks, aliases)
+    if not names:
+        return
+    for i in range(len(toks)):
+        m = _ident(toks, i)
+        if m is not None:
+            call = _is_punct(toks, i + 1, "(") and _is_punct(toks, i - 1, ".")
+            if call and m in HASH_ITER_METHODS:
+                recv = _ident(toks, i - 2)
+                if recv is not None and recv in names:
+                    out.append(_diag(
+                        fa, toks[i], "D2",
+                        f"`{recv}.{m}()` iterates a hash container: order is random"))
+        if _ident(toks, i) == "for":
+            limit = min(len(toks), i + 24)
+            for j in range(i + 1, limit):
+                if _ident(toks, j) != "in":
+                    continue
+                k = j + 1
+                if _is_punct(toks, k, "&"):
+                    k += 1
+                if _ident(toks, k) == "mut":
+                    k += 1
+                nm = _ident(toks, k)
+                if nm is not None and nm in names and _is_punct(toks, k + 1, "{"):
+                    out.append(_diag(
+                        fa, toks[k], "D2",
+                        f"`for … in {nm}` iterates a hash container: order is random"))
+                break
+
+
+def d3_rng_discipline(fa, out):
+    if fa.module == "util::rng":
+        return
+    toks = fa.lexed.toks
+    for i in range(len(toks)):
+        if (_ident(toks, i) != "Pcg64" or not _is_punct(toks, i + 1, ":")
+                or not _is_punct(toks, i + 2, ":") or _ident(toks, i + 3) != "new"
+                or not _is_punct(toks, i + 4, "(")):
+            continue
+        if fa.in_test_region(toks[i].line):
+            continue
+        depth = 0
+        j = i + 4
+        namespaced = False
+        while j < len(toks):
+            if _is_punct(toks, j, "("):
+                depth += 1
+            elif _is_punct(toks, j, ")"):
+                depth -= 1
+                if depth == 0:
+                    break
+            elif _is_punct(toks, j, "^"):
+                namespaced = True
+            j += 1
+        if _is_punct(toks, j + 1, ".") and _ident(toks, j + 2) == "split":
+            namespaced = True
+        if not namespaced:
+            out.append(_diag(
+                fa, toks[i], "D3",
+                "raw `Pcg64::new(seed)`: tag-split it (`.split(NS)`) or xor a "
+                "namespace constant"))
+
+
+def d4_panic_audit(fa, out):
+    toks = fa.lexed.toks
+    for i in range(len(toks)):
+        name = _ident(toks, i)
+        if name is None:
+            continue
+        if fa.in_test_region(toks[i].line):
+            continue
+        method = _is_punct(toks, i + 1, "(") and _is_punct(toks, i - 1, ".")
+        if name in ("unwrap", "expect") and method:
+            what = f".{name}()"
+        elif name in ("panic", "unreachable") and _is_punct(toks, i + 1, "!"):
+            what = f"{name}!"
+        else:
+            continue
+        out.append(_diag(
+            fa, toks[i], "D4",
+            f"`{what}` in library code: route a Result or justify the panic path"))
+
+
+def d5_unsafe(fa, out):
+    toks = fa.lexed.toks
+    for t in toks:
+        if t.kind == IDENT_K and t.text == "unsafe":
+            out.append(_diag(fa, t, "D5", "`unsafe` token: the crate forbids unsafe code"))
+    if fa.kind == LIB and fa.module == "":
+        found = False
+        for i in range(len(toks)):
+            if (_is_punct(toks, i, "#") and _is_punct(toks, i + 1, "!")
+                    and _is_punct(toks, i + 2, "[") and _ident(toks, i + 3) == "forbid"
+                    and _is_punct(toks, i + 4, "(")
+                    and _ident(toks, i + 5) == "unsafe_code"):
+                found = True
+                break
+        if not found:
+            out.append(Diagnostic(
+                fa.path, 1, 1, "D5", "lib.rs is missing `#![forbid(unsafe_code)]`"))
+
+
+def d6_ignore_audit(fa, out):
+    toks = fa.lexed.toks
+    for i in range(len(toks)):
+        attr = (_is_punct(toks, i, "#") and _is_punct(toks, i + 1, "[")
+                and _ident(toks, i + 2) == "ignore")
+        if not attr:
+            continue
+        ok = (_is_punct(toks, i + 3, "=")
+              and i + 4 < len(toks) and toks[i + 4].kind == STR_K
+              and toks[i + 4].text.startswith('"regen helper'))
+        if not ok:
+            out.append(_diag(
+                fa, toks[i + 2], "D6",
+                "`#[ignore]` without the `regen helper` marker hides a test from the suite"))
+
+
+# ---------------------------------------------------------------------------
+# Driver (port of lint_sources / apply_suppressions / lint_tree)
+# ---------------------------------------------------------------------------
+
+
+def lint_sources(files):
+    analyses = [analyze_source(p, s) for p, s in files]
+    aliases = hash_aliases(analyses)
+    report = Report(files=len(analyses))
+    for fa in analyses:
+        raw = check_file(fa, aliases)
+        apply_suppressions(fa, raw, report)
+    report.diagnostics.sort(key=lambda d: (d.path, d.line, d.col, d.rule))
+    return report
+
+
+def apply_suppressions(fa, raw, report):
+    for line, msg in fa.directive_issues:
+        report.diagnostics.append(Diagnostic(fa.path, line, 1, "meta", msg))
+    for d in raw:
+        hit = None
+        for s in fa.suppressions:
+            if s.rule != d.rule:
+                continue
+            if s.target == ("file",) or s.target == ("line", d.line):
+                hit = s
+                break
+        if hit is not None:
+            hit.used = True
+            if d.rule in JUSTIFICATION_REQUIRED and hit.reason is None:
+                d.msg += " (suppression present but missing the justification string)"
+                report.diagnostics.append(d)
+            else:
+                report.suppressed += 1
+        else:
+            report.diagnostics.append(d)
+    for s in fa.suppressions:
+        if not s.used:
+            report.diagnostics.append(Diagnostic(
+                fa.path, s.comment_line, 1, "meta",
+                f"unused amb-lint suppression for {s.rule}: nothing fires it"))
+
+
+SKIP_DIRS = ["fixtures", "golden", "vendor", "target"]
+
+
+def collect_rs_files(root, out):
+    if os.path.isfile(root):
+        if root.endswith(".rs"):
+            out.append(root)
+        return
+    entries = sorted(os.listdir(root))
+    for name in entries:
+        p = os.path.join(root, name)
+        if os.path.isdir(p):
+            if name in SKIP_DIRS or name.startswith("."):
+                continue
+            collect_rs_files(p, out)
+        elif name.endswith(".rs"):
+            out.append(p)
+
+
+def lint_tree(roots):
+    paths = []
+    for root in roots:
+        if not os.path.exists(root):
+            raise OSError(f"amb-lint: cannot stat {root}")
+        collect_rs_files(root, paths)
+    files = []
+    for p in paths:
+        with open(p, encoding="utf-8") as f:
+            files.append((p, f.read()))
+    return lint_sources(files)
+
+
+# ---------------------------------------------------------------------------
+# Self-test: replay rust/src/analysis/tests.rs + lexer.rs unit tests.
+# ---------------------------------------------------------------------------
+
+FAILURES = []
+
+
+def check(cond, label, detail=""):
+    if not cond:
+        FAILURES.append(f"{label}: {detail}")
+        print(f"FAIL {label}: {detail}")
+    else:
+        print(f"ok   {label}")
+
+
+def selftest(repo_root):
+    fx = os.path.join(repo_root, "rust/src/analysis/fixtures")
+
+    def fixture(name):
+        with open(os.path.join(fx, name), encoding="utf-8") as f:
+            return f.read()
+
+    def lint_at(path, src):
+        return lint_sources([(path, src)])
+
+    def fired(r):
+        return [d.rule for d in r.diagnostics]
+
+    # ----- lexer unit tests (lexer.rs #[cfg(test)] mod) -----
+    src = (
+        "\n            // unsafe in a line comment\n"
+        "            /* unsafe in /* a nested */ block */\n"
+        '            let a = "unsafe in a string";\n'
+        '            let b = r#"unsafe in a raw string"#;\n'
+        "            let c = 'u';\n        "
+    )
+    lxd = lex(src)
+    ids = [t.text for t in lxd.toks if t.kind == IDENT_K]
+    check("unsafe" not in ids and ids == ["let", "a", "let", "b", "let", "c"]
+          and len(lxd.comments) == 2, "lexer.comments_and_strings_hide_code_words", str(ids))
+
+    toks = lex("fn f<'a>(x: &'a str) { 'outer: loop { break 'outer; } }").toks
+    lts = [t.text for t in toks if t.kind == LIFETIME_K]
+    check(lts == ["'a", "'a", "'outer", "'outer"], "lexer.lifetimes", str(lts))
+
+    toks = lex(r"let q = '\''; let n = '\n'; let p = 'x';").toks
+    check(sum(1 for t in toks if t.kind == CHAR_K) == 3, "lexer.char_escapes")
+
+    toks = lex("for i in 1..n { let t = 0xFA17_1055 ^ 1.5e-3f64; }").toks
+    nums = [t.text for t in toks if t.kind == NUMBER_K]
+    dots = sum(1 for t in toks if t.kind == PUNCT_K and t.text == ".")
+    check(nums == ["1", "0xFA17_1055", "1.5e-3f64"] and dots == 2,
+          "lexer.ranges_and_hex", str(nums))
+
+    toks = lex("ab cd\n  ef").toks
+    check([(t.line, t.col) for t in toks] == [(1, 1), (1, 4), (2, 3)], "lexer.spans")
+
+    toks = lex("let x = 1.max(2);").toks
+    check((toks[3].text, toks[4].text, toks[5].text) == ("1", ".", "max"),
+          "lexer.method_after_int")
+
+    # ----- regression tests for the three PR-10 lexer/rule fixes -----
+    toks = lex("let t = 2E10 + 1.5E-3;").toks
+    nums = [t.text for t in toks if t.kind == NUMBER_K]
+    check(nums == ["2E10", "1.5E-3"], "lexer.uppercase_exponent_text", str(nums))
+
+    toks = lex("let r#type = r#fn + 1; let s = r#\"raw\"#;").toks
+    ids = [t.text for t in toks if t.kind == IDENT_K]
+    strs = [t.text for t in toks if t.kind == STR_K]
+    check("r#type" in ids and "r#fn" in ids and strs == ['r#"raw"#'],
+          "lexer.raw_idents_vs_raw_strings", f"{ids} {strs}")
+
+    not_test = ("#[cfg(not(test))]\nmod shim {\n"
+                "    pub fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() }\n}\n")
+    r = lint_at("rust/src/consensus/fix.rs", not_test)
+    check(fired(r) == ["D4"], "rules.cfg_not_test_is_not_a_test_region", r.render())
+
+    # ----- tests.rs fixture assertions -----
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d1_wall_clock.rs"))
+    inst = [d for d in r.diagnostics if "Instant::now" in d.msg]
+    check(fired(r) == ["D1"] * 5 and inst and (inst[0].line, inst[0].col) == (5, 14),
+          "d1_fires_in_deterministic_module", r.render())
+    for p in ("rust/src/coordinator/threaded/fix.rs", "rust/src/util/pool/fix.rs"):
+        r = lint_at(p, fixture("d1_wall_clock.rs"))
+        check(r.is_clean(), f"d1_allowlist:{p}", r.render())
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d1_wall_clock_ok.rs"))
+    check(r.is_clean() and r.suppressed == 2, "d1_suppressed_twin", r.render())
+
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d2_hash_iter.rs"))
+    lines = [d.line for d in r.diagnostics]
+    check(fired(r) == ["D2"] * 3 and lines == [5, 9, 18], "d2_fires", r.render())
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d2_hash_iter_ok.rs"))
+    check(r.is_clean(), "d2_ok_twin", r.render())
+
+    alias = "pub type DropMask = std::collections::HashSet<u64>;\n"
+    user = "pub fn live(mask: &DropMask) -> usize { mask.iter().count() }\n"
+    r = lint_sources([("rust/src/fault/fix.rs", alias), ("rust/src/net/fix.rs", user)])
+    check(fired(r) == ["D2"] and r.diagnostics[0].path == "rust/src/net/fix.rs",
+          "d2_alias_cross_file", r.render())
+
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d3_rng.rs"))
+    check(fired(r) == ["D3"], "d3_fires", r.render())
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d3_rng_ok.rs"))
+    check(r.is_clean() and r.suppressed == 1, "d3_ok_twin", r.render())
+
+    src = ("#[cfg(test)]\nmod tests {\n    use crate::util::rng::Pcg64;\n    #[test]\n    "
+           "fn draws() { let mut r = Pcg64::new(7); assert!(r.f64() < 1.0); }\n}\n")
+    r = lint_at("rust/src/consensus/fix.rs", src)
+    check(r.is_clean(), "d3_test_region_exempt", r.render())
+    r = lint_at("rust/tests/fix.rs", fixture("d3_rng.rs"))
+    check(r.is_clean(), "d3_test_source_exempt", r.render())
+
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d4_panics.rs"))
+    msgs = "".join(d.msg for d in r.diagnostics)
+    check(fired(r) == ["D4"] * 4
+          and all(f in msgs for f in (".unwrap()", ".expect()", "panic!", "unreachable!")),
+          "d4_fires", r.render())
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d4_panics_ok.rs"))
+    check(r.is_clean() and r.suppressed == 2, "d4_ok_twin", r.render())
+    r = lint_at("rust/src/consensus/fix.rs", fixture("d4_bare_allow.rs"))
+    check(fired(r) == ["D4"] and "missing the justification" in r.diagnostics[0].msg,
+          "d4_bare_allow", r.render())
+    for p in ("rust/tests/fix.rs", "examples/fix.rs", "rust/benches/fix.rs"):
+        r = lint_at(p, fixture("d4_panics.rs"))
+        check(r.is_clean(), f"d4_exempt:{p}", r.render())
+
+    r = lint_at("scratch/seeded.rs", fixture("d5_unsafe.rs"))
+    check(fired(r) == ["D5"], "d5_fires", r.render())
+    r = lint_at("scratch/seeded.rs", fixture("d5_unsafe_ok.rs"))
+    check(r.is_clean(), "d5_ok_twin", r.render())
+    r = lint_at("rust/src/lib.rs", "pub mod consensus;\n")
+    check(fired(r) == ["D5"] and "forbid(unsafe_code)" in r.diagnostics[0].msg,
+          "d5_lib_forbid_missing", r.render())
+    r = lint_at("rust/src/lib.rs", "#![forbid(unsafe_code)]\npub mod consensus;\n")
+    check(r.is_clean(), "d5_lib_forbid_present", r.render())
+
+    r = lint_at("rust/tests/fix.rs", fixture("d6_ignore.rs"))
+    check(fired(r) == ["D6"], "d6_fires", r.render())
+    r = lint_at("rust/tests/fix.rs", fixture("d6_ignore_ok.rs"))
+    check(r.is_clean(), "d6_ok_twin", r.render())
+
+    r = lint_at("rust/src/consensus/fix.rs", fixture("meta_bad.rs"))
+    msgs = "".join(d.msg for d in r.diagnostics)
+    check(fired(r) == ["meta", "meta"] and "unknown rule `D9`" in msgs
+          and "unused amb-lint suppression for D4" in msgs, "meta_bad", r.render())
+
+    src = '/// Use `// amb-lint: allow(D4, "why")` at the site.\npub fn f() {}\n'
+    r = lint_at("rust/src/consensus/fix.rs", src)
+    check(r.is_clean(), "doc_comments_not_directives", r.render())
+
+    # ----- lints_clean_on_live_tree -----
+    roots = [os.path.join(repo_root, p)
+             for p in ("rust/src", "rust/tests", "rust/benches", "examples")]
+    report = lint_tree(roots)
+    check(report.files > 50, "live_tree_walker_found_files", f"only {report.files}")
+    check(report.is_clean(), "lints_clean_on_live_tree", "\n" + report.render())
+    print(f"live tree: {report.files} files, {report.suppressed} suppressions in use")
+
+    return 1 if FAILURES else 0
+
+
+def main():
+    args = sys.argv[1:]
+    repo_root = os.getcwd()
+    if args and args[0] == "--repo":
+        repo_root = args[1]
+        args = args[2:]
+    if args and args[0] == "--selftest":
+        return selftest(repo_root)
+    roots = args or [
+        p for p in ("rust/src", "rust/tests", "rust/benches", "examples")
+        if os.path.exists(os.path.join(repo_root, p))
+    ]
+    roots = [os.path.join(repo_root, r) for r in roots]
+    if not roots:
+        print("amb-lint-mirror: no roots to lint", file=sys.stderr)
+        return 2
+    try:
+        report = lint_tree(roots)
+    except OSError as e:
+        print(f"amb-lint-mirror: {e}", file=sys.stderr)
+        return 2
+    sys.stdout.write(report.render())
+    return 0 if report.is_clean() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -106,6 +106,19 @@ fn is_string_prefix(ident: &str, next: Option<char>) -> bool {
     prefix_ok && matches!(next, Some('"') | Some('#'))
 }
 
+/// For `r`-flavoured prefixes, `#*"` must actually follow — `r#foo` is a
+/// raw identifier, not a raw string.
+fn raw_quote_follows(lx: &Lexer, ident: &str) -> bool {
+    if !ident.contains('r') {
+        return true;
+    }
+    let mut k = 0usize;
+    while lx.peek(k) == Some('#') {
+        k += 1;
+    }
+    lx.peek(k) == Some('"')
+}
+
 /// Tokenize one source file.  Never panics: unterminated constructs are
 /// closed at end-of-file (the lint keeps whatever it saw up to there).
 pub fn lex(src: &str) -> Lexed {
@@ -166,7 +179,7 @@ pub fn lex(src: &str) -> Lexed {
         if is_ident_start(c) {
             let mut text = String::new();
             lx.take_while(&mut text, is_ident_continue);
-            if is_string_prefix(&text, lx.peek(0)) {
+            if is_string_prefix(&text, lx.peek(0)) && raw_quote_follows(&lx, &text) {
                 let raw = text.contains('r');
                 let tok = if raw {
                     lex_raw_string(&mut lx, text, line, col)
@@ -178,6 +191,17 @@ pub fn lex(src: &str) -> Lexed {
                     lex_escaped_string(&mut lx, head, line, col)
                 };
                 out.toks.push(tok);
+            } else if text == "r"
+                && lx.peek(0) == Some('#')
+                && lx.peek(1).is_some_and(is_ident_start)
+            {
+                // Raw identifier `r#foo`: one Ident token, `r#` kept in the
+                // text so `r#unsafe` never matches the `unsafe` keyword.
+                let mut text = text;
+                text.push('#');
+                lx.bump();
+                lx.take_while(&mut text, is_ident_continue);
+                out.toks.push(Tok { kind: TokKind::Ident, text, line, col });
             } else {
                 out.toks.push(Tok { kind: TokKind::Ident, text, line, col });
             }
@@ -293,11 +317,11 @@ fn lex_number(lx: &mut Lexer, line: u32, col: u32) -> Tok {
             lx.take_while(&mut text, |c| c.is_ascii_digit() || c == '_');
         }
         // Exponent.
-        if matches!(lx.peek(0), Some('e') | Some('E')) {
+        if let Some(e @ ('e' | 'E')) = lx.peek(0) {
             let sign = matches!(lx.peek(1), Some('+') | Some('-'));
             let digit_at = if sign { 2 } else { 1 };
             if lx.peek(digit_at).is_some_and(|c| c.is_ascii_digit()) {
-                text.push('e');
+                text.push(e);
                 lx.bump();
                 if sign {
                     if let Some(s) = lx.bump() {
@@ -382,5 +406,26 @@ mod tests {
         assert_eq!(toks[3].text, "1");
         assert_eq!(toks[4].text, ".");
         assert_eq!(toks[5].text, "max");
+    }
+
+    #[test]
+    fn uppercase_exponent_keeps_source_text() {
+        let toks = lex("let t = 2E10 + 1.5E-3;").toks;
+        let nums: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Number).map(|t| t.text.clone()).collect();
+        assert_eq!(nums, vec!["2E10", "1.5E-3"]);
+    }
+
+    #[test]
+    fn raw_identifiers_are_not_raw_strings() {
+        let toks = lex("let r#type = r#fn + 1; let s = r#\"raw\"#;").toks;
+        let ids = idents("let r#type = r#fn + 1; let s = r#\"raw\"#;");
+        assert!(ids.contains(&"r#type".to_string()), "{ids:?}");
+        assert!(ids.contains(&"r#fn".to_string()), "{ids:?}");
+        let strs: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.clone()).collect();
+        assert_eq!(strs, vec!["r#\"raw\"#"]);
+        // `r#unsafe` must never read as the `unsafe` keyword.
+        assert!(!idents("let r#unsafe = 1;").contains(&"unsafe".to_string()));
     }
 }

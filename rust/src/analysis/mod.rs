@@ -235,11 +235,13 @@ fn is_known_rule(rule: &str) -> bool {
 }
 
 /// Attribute scan: from the token index just inside `#[`, walk to the
-/// matching `]`.  Returns (index of `]`, attr contains bare ident `test`,
-/// collected ident list is cheap enough not to need).
+/// matching `]`.  Returns (index of `]`, attr marks a test item).  `test`
+/// under a `not(…)` (`#[cfg(not(test))]`) is NOT a test marker — that
+/// attribute selects the production build, which the rules must cover.
 fn scan_attr(toks: &[Tok], mut i: usize) -> (usize, bool) {
     let mut depth = 1usize;
     let mut has_test = false;
+    let mut has_not = false;
     while i < toks.len() {
         let t = &toks[i];
         match (t.kind, t.text.as_str()) {
@@ -247,15 +249,16 @@ fn scan_attr(toks: &[Tok], mut i: usize) -> (usize, bool) {
             (TokKind::Punct, "]") => {
                 depth -= 1;
                 if depth == 0 {
-                    return (i, has_test);
+                    return (i, has_test && !has_not);
                 }
             }
             (TokKind::Ident, "test") => has_test = true,
+            (TokKind::Ident, "not") => has_not = true,
             _ => {}
         }
         i += 1;
     }
-    (toks.len().saturating_sub(1), has_test)
+    (toks.len().saturating_sub(1), has_test && !has_not)
 }
 
 /// From a `{` token index, return the index of its matching `}` (or the

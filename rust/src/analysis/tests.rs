@@ -171,6 +171,17 @@ fn meta_reports_unknown_rules_and_unused_suppressions() {
 }
 
 #[test]
+fn cfg_not_test_is_not_a_test_region() {
+    // `#[cfg(not(test))]` selects the PRODUCTION build: code under it
+    // must stay inside D3/D4's jurisdiction, not be exempted like a
+    // `#[cfg(test)]` module would be.
+    let src = "#[cfg(not(test))]\nmod shim {\n    \
+               pub fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() }\n}\n";
+    let r = lint_at("rust/src/consensus/fix.rs", src);
+    assert_eq!(rules_fired(&r), ["D4"], "{}", r.render());
+}
+
+#[test]
 fn doc_comments_are_never_directives() {
     // The suppression syntax quoted in docs (as in this module's own
     // header) must not parse as a directive.

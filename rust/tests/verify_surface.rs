@@ -1,0 +1,173 @@
+//! Smoke tests for the verify surface itself (ISSUE 10): the golden pin
+//! file and the bench baseline are *artifacts* the rest of the repo's
+//! claims hang off, so their shape is tested like any other contract.
+//!
+//! * `BENCH_hotpath.json` (workspace root, written by
+//!   `cargo bench --bench hotpath`) must parse with the crate's own JSON
+//!   parser and carry the `n_scaling` grid the ROADMAP's perf items
+//!   baseline against.
+//! * `tests/golden/pins.txt` must be non-empty and cover every
+//!   `Scheme` × `ConsensusMode` named in `golden_traces.rs` — a pin file
+//!   that silently lost a scheme would let that scheme's numerics drift
+//!   unpinned.
+//!
+//! Neither artifact can be generated without a toolchain, so absence is
+//! reported-but-green by default; CI sets `AMB_REQUIRE_PINS=1` in the
+//! test legs (which run after the pin regen step) to make pin coverage a
+//! hard gate there.
+
+use anytime_mb::util::json::Json;
+use anytime_mb::{ConsensusMode, Scheme};
+
+const PINS_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/pins.txt");
+const TRACES_SRC: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_traces.rs");
+const BENCH_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+
+fn require(var: &str) -> bool {
+    std::env::var(var).map(|v| v == "1").unwrap_or(false)
+}
+
+#[test]
+fn bench_baseline_parses_with_n_scaling_grid() {
+    let text = match std::fs::read_to_string(BENCH_PATH) {
+        Ok(t) => t,
+        Err(_) => {
+            assert!(
+                !require("AMB_REQUIRE_BENCH"),
+                "AMB_REQUIRE_BENCH=1 but {BENCH_PATH} is missing — run \
+                 `cargo bench --bench hotpath` first"
+            );
+            eprintln!(
+                "verify_surface: no {BENCH_PATH}; run `cargo bench --bench hotpath` to \
+                 commit the first baseline (ROADMAP Open item 0)"
+            );
+            return;
+        }
+    };
+    let doc = Json::parse(&text).expect("BENCH_hotpath.json must parse");
+    assert_eq!(doc.path("bench").and_then(Json::as_str), Some("hotpath"));
+
+    let results = doc.path("results").and_then(Json::as_arr).expect("results array");
+    assert!(!results.is_empty(), "bench baseline has no timed rows");
+    for row in results {
+        assert!(row.path("name").and_then(Json::as_str).is_some(), "row missing name");
+        let mean = row.path("mean_s").and_then(Json::as_f64).expect("row missing mean_s");
+        assert!(mean.is_finite() && mean >= 0.0, "non-finite mean_s");
+    }
+
+    // The n-scaling grid: every row carries the CSR footprint and kernel
+    // timings, and the grid spans more than one n (otherwise it is a
+    // point, not a scaling baseline).
+    let nscale = doc.path("n_scaling").and_then(Json::as_arr).expect("n_scaling array");
+    assert!(!nscale.is_empty(), "n_scaling grid is empty");
+    let mut ns = Vec::new();
+    for row in nscale {
+        let n = row.path("n").and_then(Json::as_usize).expect("n_scaling row missing n");
+        let nnz = row.path("nnz").and_then(Json::as_usize).expect("missing nnz");
+        assert!(n >= 1 && nnz >= 1, "degenerate n_scaling row");
+        for key in ["csr_build_s", "sparse_mix5_s"] {
+            let t = row.path(key).and_then(Json::as_f64);
+            assert!(t.is_some_and(|t| t.is_finite() && t >= 0.0), "bad {key}");
+        }
+        ns.push(n);
+    }
+    ns.sort_unstable();
+    ns.dedup();
+    assert!(ns.len() >= 2, "n_scaling grid covers only n={ns:?} — not a scaling axis");
+}
+
+/// The scheme labels the pin grid must carry, built from the library's
+/// own `Scheme::name()` so a rename updates this test automatically.
+fn expected_scheme_labels() -> Vec<&'static str> {
+    vec![
+        Scheme::Amb { t_compute: 2.0, t_consensus: 0.5 }.name(),
+        Scheme::Fmb { per_node_batch: 40, t_consensus: 0.5 }.name(),
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: false }.name(),
+        Scheme::FmbBackup { per_node_batch: 40, t_consensus: 0.5, ignore: 2, coded: true }.name(),
+        Scheme::AmbDg { t_compute: 2.0, t_consensus: 0.5, delay: 0 }.name(),
+    ]
+}
+
+/// Mode-label *prefixes* (the pin format appends parameters: `gossip5`,
+/// `jitter5±2`, `hier3-4-3`), keyed by the `ConsensusMode` variant ident
+/// as it appears in golden_traces.rs source.
+fn mode_prefixes() -> Vec<(&'static str, &'static str)> {
+    // Constructed once so the variants stay type-checked against the
+    // library — a removed variant breaks this test at compile time.
+    let _grid = [
+        ConsensusMode::Exact,
+        ConsensusMode::Gossip { rounds: 5 },
+        ConsensusMode::GossipJitter { mean: 5, jitter: 2 },
+        ConsensusMode::Hierarchical { shards: 3, intra_rounds: 4, inter_rounds: 3 },
+    ];
+    vec![
+        ("Exact", "exact"),
+        ("Gossip", "gossip"),
+        ("GossipJitter", "jitter"),
+        ("Hierarchical", "hier"),
+    ]
+}
+
+#[test]
+fn golden_pins_cover_every_scheme_and_mode_named_in_golden_traces() {
+    let pins = match std::fs::read_to_string(PINS_PATH) {
+        Ok(t) => t,
+        Err(_) => {
+            assert!(
+                !require("AMB_REQUIRE_PINS"),
+                "AMB_REQUIRE_PINS=1 but {PINS_PATH} is missing — the regen step must \
+                 run before the test legs (see .github/workflows/ci.yml)"
+            );
+            eprintln!(
+                "verify_surface: no {PINS_PATH}; generate with `cargo test --test \
+                 golden_traces regen_golden_pins -- --ignored` (ROADMAP Open item 0)"
+            );
+            return;
+        }
+    };
+    let lines: Vec<&str> =
+        pins.lines().filter(|l| !l.is_empty() && !l.starts_with('#')).collect();
+    assert!(!lines.is_empty(), "pins.txt exists but pins no traces");
+
+    // Structural sanity: every pin line is `<scheme> d=<D> × <mode>: …`.
+    for line in &lines {
+        let (label, content) = line.split_once(": ").expect("pin line has `label: content`");
+        assert!(label.contains(" × "), "pin label `{label}` missing the scheme × mode split");
+        assert!(content.starts_with("batches="), "pin content for `{label}` lost its shape");
+    }
+
+    // Coverage is driven by what golden_traces.rs NAMES, read from its
+    // source: a variant dropped from the grid there must fail here, not
+    // silently shrink the pinned surface.
+    let src = std::fs::read_to_string(TRACES_SRC).expect("golden_traces.rs is a sibling test");
+    let named = |needle: &str| src.contains(needle);
+
+    let labels: Vec<&str> =
+        lines.iter().map(|l| l.split_once(": ").expect("checked above").0).collect();
+    let grid_modes = ["exact", "gossip", "jitter"];
+    for scheme in expected_scheme_labels() {
+        for mode in grid_modes {
+            let hit = labels
+                .iter()
+                .any(|l| l.starts_with(&format!("{scheme} ")) && l.contains(mode));
+            assert!(hit, "pins.txt has no trace for {scheme} × {mode}*");
+        }
+    }
+    for (variant, prefix) in mode_prefixes() {
+        if !named(&format!("ConsensusMode::{variant}")) {
+            continue;
+        }
+        assert!(
+            labels.iter().any(|l| l.contains(prefix)),
+            "ConsensusMode::{variant} is named in golden_traces.rs but no pin label \
+             contains `{prefix}`"
+        );
+    }
+    // The fabric pins (ideal + constrained) ride outside the grid.
+    for fabric in ["ideal-fabric", "fabric"] {
+        assert!(
+            labels.iter().any(|l| l.contains(fabric)),
+            "pins.txt lost the network-fabric pin `{fabric}`"
+        );
+    }
+}
